@@ -1,0 +1,53 @@
+//! SynGLUE suite (Table 5 style): sequence classification across the
+//! eight GLUE-analog tasks, comparing Full / MLorc / LoRA.
+//!
+//!     cargo run --release --example glue_suite [-- --steps 80 --tasks 4]
+
+use anyhow::Result;
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::Trainer;
+use mlorc::data::SYNGLUE_NAMES;
+use mlorc::runtime::{Manifest, Runtime};
+use mlorc::util::{cli::Args, fsutil, logger};
+
+fn main() -> Result<()> {
+    logger::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.get_usize("steps", 80)?;
+    let n_tasks = args.get_usize("tasks", 4)?.min(8);
+    let dir = fsutil::artifacts_dir()?;
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu(&dir)?;
+    let preset = manifest.preset("tiny")?;
+
+    let methods = [
+        (Method::FullAdamW, 2e-3f32),
+        (Method::MlorcAdamW, 2e-3),
+        (Method::LoraAdamW, 4e-3),
+    ];
+
+    print!("{:<14}", "method");
+    for i in 0..n_tasks {
+        print!(" {:>7}", SYNGLUE_NAMES[i]);
+    }
+    println!(" {:>7}", "Avg");
+
+    for (method, lr) in methods {
+        print!("{:<14}", method.name());
+        let mut accs = Vec::new();
+        for i in 0..n_tasks {
+            let mut cfg =
+                RunConfig::new("tiny", method, TaskKind::SynGlue(i as u8), steps).with_lr(lr);
+            cfg.eval_batches = 16;
+            cfg.log_every = 0;
+            let mut tr = Trainer::new(&rt, preset, cfg)?;
+            let out = tr.train()?;
+            let acc = out.eval.unwrap().accuracy * 100.0;
+            print!(" {acc:>7.1}");
+            accs.push(acc);
+        }
+        println!(" {:>7.1}", accs.iter().sum::<f32>() / accs.len() as f32);
+    }
+    println!("\n(accuracy %, {steps} steps per task; see `mlorc bench --experiment table5` for the full table)");
+    Ok(())
+}

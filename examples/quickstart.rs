@@ -1,0 +1,51 @@
+//! Quickstart: fine-tune the `tiny` preset on the math-chain task with
+//! MLorc-AdamW, report loss, accuracy, and the memory split.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::Trainer;
+use mlorc::runtime::{Manifest, Runtime};
+use mlorc::util::{fsutil, logger};
+
+fn main() -> Result<()> {
+    logger::init();
+    let dir = fsutil::artifacts_dir()?;
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu(&dir)?;
+    let preset = manifest.preset("tiny")?;
+
+    let mut cfg = RunConfig::new("tiny", Method::MlorcAdamW, TaskKind::MathChain, 120);
+    cfg.peak_lr = 2e-3;
+    cfg.eval_every = 40;
+    cfg.eval_batches = 8;
+
+    println!(
+        "MLorc quickstart: {} params, rank {} (compressed momentum = {:.1}% of AdamW's)",
+        preset.model.n_params(),
+        preset.model.rank,
+        100.0 * (2 * preset.model.rank * (preset.model.d_model + preset.model.d_ff)) as f64
+            / (2 * preset.model.d_model * preset.model.d_ff) as f64,
+    );
+
+    let mut trainer = Trainer::new(&rt, preset, cfg)?;
+    let outcome = trainer.train()?;
+
+    let ev = outcome.eval.as_ref().unwrap();
+    println!("\n=== quickstart results ===");
+    println!("final training loss : {:.4}", outcome.final_loss);
+    println!("eval loss           : {:.4}", ev.loss);
+    println!("answer token acc    : {:.1}%", ev.accuracy * 100.0);
+    println!("exact match         : {:.1}%", ev.exact_match * 100.0);
+    let mem = &outcome.memory_measured;
+    println!(
+        "memory              : weights {:.1} MB + optimizer state {:.2} MB + grads(peak) {:.2} MB",
+        mem.weights_bytes as f64 / 1e6,
+        mem.opt_state_bytes as f64 / 1e6,
+        mem.grads_peak_bytes as f64 / 1e6
+    );
+    println!("wall clock          : {:.1}s ({:.0} ms/step)", outcome.wall_secs,
+        outcome.wall_secs * 1e3 / 120.0);
+    Ok(())
+}

@@ -1,0 +1,277 @@
+# AOT lowering: every Layer-2 graph -> artifacts/*.hlo.txt + manifest.json.
+#
+# Interchange is HLO *text*, never `.serialize()`: jax >= 0.5 emits protos
+# with 64-bit instruction ids that the pinned xla_extension 0.5.1 rejects
+# (`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+# cleanly (see /opt/xla-example/README.md). Python runs exactly once per
+# artifact build — the rust coordinator never imports it.
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as mdl
+from . import optim_steps as opt
+from .configs import HPARAMS, MATRIX_METHODS, PRESETS, ModelConfig
+
+SCALAR_LAYOUT = ["lr", "c1", "c2", "wd", "eps", "beta", "zeta", "unused"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype="float32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _check_pure(text: str, name: str):
+    """Artifact-path graphs must be custom-call-free: LAPACK/Mosaic calls
+    cannot execute on the pinned CPU PJRT client."""
+    if "custom-call" in text:
+        lines = [l.strip() for l in text.splitlines() if "custom-call" in l][:3]
+        raise RuntimeError(f"graph {name} contains custom-call(s): {lines}")
+
+
+def _write(out_dir: str, rel: str, text: str, name: str) -> dict:
+    _check_pure(text, name)
+    path = os.path.join(out_dir, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "file": rel,
+        "bytes": len(text),
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def lower_model_graphs(cfg: ModelConfig, out_dir: str, graphs: list, log) -> dict:
+    """Lower the model-level graphs for one preset."""
+    B, T = cfg.batch, cfg.seq
+    spec = mdl.param_spec(cfg)
+    spec_cls = mdl.param_spec(cfg, cls_head=True)
+    aspec = mdl.lora_spec(cfg)
+    alpha = HPARAMS["lora_adamw"].lora_alpha
+    tok = _sds((B, T), "int32")
+    tgt = _sds((B, T), "int32")
+    lbl = _sds((B,), "int32")
+
+    def params_sds(s):
+        return [_sds(shape) for _, shape, _ in s]
+
+    def adapters_sds():
+        return [_sds(shape) for _, shape in aspec]
+
+    defs = {
+        "fwd_bwd": (
+            mdl.make_fwd_bwd(cfg),
+            [tok, tgt, *params_sds(spec)],
+            ["tokens", "targets", *[n for n, _, _ in spec]],
+            ["loss", *[f"g:{n}" for n, _, _ in spec]],
+        ),
+        "eval": (
+            mdl.make_eval(cfg),
+            [tok, tgt, *params_sds(spec)],
+            ["tokens", "targets", *[n for n, _, _ in spec]],
+            ["loss", "correct_mask"],
+        ),
+        "lora_fwd_bwd": (
+            mdl.make_lora_fwd_bwd(cfg, alpha),
+            [tok, tgt, *params_sds(spec), *adapters_sds()],
+            ["tokens", "targets", *[n for n, _, _ in spec], *[n for n, _ in aspec]],
+            ["loss", *[f"g:{n}" for n, _ in aspec]],
+        ),
+        "lora_eval": (
+            mdl.make_lora_eval(cfg, alpha),
+            [tok, tgt, *params_sds(spec), *adapters_sds()],
+            ["tokens", "targets", *[n for n, _, _ in spec], *[n for n, _ in aspec]],
+            ["loss", "correct_mask"],
+        ),
+        "cls_fwd_bwd": (
+            mdl.make_cls_fwd_bwd(cfg),
+            [tok, lbl, *params_sds(spec_cls)],
+            ["tokens", "labels", *[n for n, _, _ in spec_cls]],
+            ["loss", *[f"g:{n}" for n, _, _ in spec_cls]],
+        ),
+        "cls_eval": (
+            mdl.make_cls_eval(cfg),
+            [tok, lbl, *params_sds(spec_cls)],
+            ["tokens", "labels", *[n for n, _, _ in spec_cls]],
+            ["loss", "correct"],
+        ),
+        "cls_lora_fwd_bwd": (
+            mdl.make_cls_lora_fwd_bwd(cfg, alpha),
+            [tok, lbl, *params_sds(spec_cls), *adapters_sds()],
+            ["tokens", "labels", *[n for n, _, _ in spec_cls], *[n for n, _ in aspec]],
+            ["loss", "g:cls_head", *[f"g:{n}" for n, _ in aspec]],
+        ),
+        "cls_lora_eval": (
+            mdl.make_cls_lora_eval(cfg, alpha),
+            [tok, lbl, *params_sds(spec_cls), *adapters_sds()],
+            ["tokens", "labels", *[n for n, _, _ in spec_cls], *[n for n, _ in aspec]],
+            ["loss", "correct"],
+        ),
+    }
+
+    out = {}
+    for gname in graphs:
+        fn, args, in_names, out_names = defs[gname]
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        entry = _write(out_dir, f"{cfg.name}/{gname}.hlo.txt", text, f"{cfg.name}/{gname}")
+        entry["inputs"] = [
+            {"name": nm, "shape": list(a.shape), "dtype": str(a.dtype)}
+            for nm, a in zip(in_names, args)
+        ]
+        entry["outputs"] = out_names
+        out[gname] = entry
+        log(f"  [{cfg.name}] {gname}: {entry['bytes']/1e3:.0f} kB ({time.time()-t0:.1f}s)")
+    return out
+
+
+def matrix_shapes(cfg: ModelConfig) -> list:
+    """Distinct compressed-matrix shapes for a preset."""
+    d, ff = cfg.d_model, cfg.d_ff
+    return sorted({(d, d), (d, ff), (ff, d)})
+
+
+def uncompressed_shapes(cfg: ModelConfig) -> list:
+    """2-D shapes updated by the plain optimizers: embeddings, cls head,
+    LoRA adapter factors."""
+    d, ff, r = cfg.d_model, cfg.d_ff, cfg.rank
+    shapes = {(cfg.vocab, d), (cfg.seq, d), (d, cfg.n_cls)}
+    shapes |= {(d, r), (r, d), (r, ff), (ff, r)}  # LoRA A/B factors
+    return sorted(shapes)
+
+
+def lower_opt_steps(cfg: ModelConfig, out_dir: str, methods: list, log) -> dict:
+    """Lower optimizer step graphs for every (method, shape) this preset
+    needs. Files are named by method/shape/rank so presets that share
+    shapes share artifacts (identical content, idempotent overwrite)."""
+    out = {}
+    rank, p_over = cfg.rank, cfg.oversample
+
+    def add(method, shape, sg: opt.StepGraph):
+        key = "x".join(str(s) for s in shape)
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(sg.fn).lower(*sg.example_args()))
+        rel = f"opt/{method}_{key}_r{sg.rank}.hlo.txt"
+        entry = _write(out_dir, rel, text, rel)
+        entry.update(
+            inputs=sg.inputs,
+            outputs=sg.outputs,
+            rank=sg.rank,
+            l=sg.l,
+            hparams=sg.hparams,
+        )
+        out.setdefault(method, {})[key] = entry
+        log(f"  [opt] {method} {key}: {entry['bytes']/1e3:.0f} kB ({time.time()-t0:.1f}s)")
+
+    for shape in matrix_shapes(cfg):
+        for method in methods:
+            hp = HPARAMS.get(method, HPARAMS["adamw"])
+            add(method, shape, opt.build_step(method, shape, rank, p_over, hp))
+        if "galore" in methods:
+            add(
+                "galore_project",
+                shape,
+                opt.build_step("galore_project", shape, rank, p_over, HPARAMS["galore"]),
+            )
+
+    # Plain AdamW/Lion serve embeddings, heads, LoRA factors and vectors
+    # regardless of which compressed methods were requested.
+    for shape in uncompressed_shapes(cfg):
+        for method in ("adamw", "lion"):
+            add(method, shape, opt.build_step(method, shape, 0, 0, HPARAMS[method]))
+    for shape in [(cfg.d_model,)]:
+        for method in ("adamw", "lion"):
+            add(method, shape, opt.build_step(method, shape, 0, 0, HPARAMS[method]))
+    return out
+
+
+def preset_manifest(cfg: ModelConfig, graphs: dict, opt_steps: dict) -> dict:
+    return {
+        "model": {
+            "name": cfg.name,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "rank": cfg.rank,
+            "oversample": cfg.oversample,
+            "d_ff": cfg.d_ff,
+            "n_cls": cfg.n_cls,
+        },
+        "params": [
+            {"name": n, "shape": list(s), "kind": k, "compressed": k == "matrix"}
+            for n, s, k in mdl.param_spec(cfg, cls_head=True)
+        ],
+        "lora_params": [{"name": n, "shape": list(s)} for n, s in mdl.lora_spec(cfg)],
+        "hparams": {k: v.to_json() for k, v in HPARAMS.items()},
+        "graphs": graphs,
+        "opt_steps": opt_steps,
+    }
+
+
+ALL_GRAPHS = [
+    "fwd_bwd",
+    "eval",
+    "lora_fwd_bwd",
+    "lora_eval",
+    "cls_fwd_bwd",
+    "cls_eval",
+    "cls_lora_fwd_bwd",
+    "cls_lora_eval",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="MLorc AOT artifact builder")
+    ap.add_argument("--presets", default="nano,tiny,small")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--methods", default=",".join(MATRIX_METHODS))
+    ap.add_argument(
+        "--graphs",
+        default=",".join(ALL_GRAPHS),
+        help="model graphs to lower (lm-only presets can drop cls_*/lora_*)",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    log = (lambda *a: None) if args.quiet else (lambda *a: print(*a, flush=True))
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "scalar_layout": SCALAR_LAYOUT, "presets": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    methods = [m for m in args.methods.split(",") if m]
+    graphs = [g for g in args.graphs.split(",") if g]
+    t0 = time.time()
+    for name in args.presets.split(","):
+        cfg = PRESETS[name]
+        log(f"preset {name}: lowering {len(graphs)} model graphs + opt steps")
+        g = lower_model_graphs(cfg, out_dir, graphs, log)
+        steps = lower_opt_steps(cfg, out_dir, methods, log)
+        manifest["presets"][name] = preset_manifest(cfg, g, steps)
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+    log(f"manifest: {manifest_path} ({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Model presets and optimizer hyper-parameter defaults shared by the AOT
+pipeline and (via artifacts/manifest.json) the rust coordinator.
+
+These are the single source of truth: `aot.py` embeds the full resolved
+config into the manifest, and the rust side never re-declares dimensions.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer LM (pre-LN, tanh-GELU MLP, tied LM head)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    vocab: int
+    seq: int
+    batch: int
+    rank: int  # compression rank r for MLorc/GaLore/LoRA/LDAdamW
+    oversample: int = 0  # RSVD oversampling p (paper uses p=0 everywhere)
+    d_ff: int = 0  # defaults to 4*d_model
+    n_cls: int = 2  # classification-head classes (SynGLUE)
+    eval_batch: int = 0  # defaults to batch
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            object.__setattr__(self, "d_ff", 4 * self.d_model)
+        if self.eval_batch == 0:
+            object.__setattr__(self, "eval_batch", self.batch)
+        assert self.d_model % self.n_heads == 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def l(self) -> int:
+        """Stored factor width: rank + oversampling."""
+        return self.rank + self.oversample
+
+
+# Presets. `base100m` is the end-to-end target (~100M params); the smaller
+# ones keep artifact builds and CI-style tests fast.
+PRESETS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("nano", d_model=64, n_layers=2, n_heads=2, vocab=256, seq=32, batch=4, rank=4),
+        ModelConfig("tiny", d_model=128, n_layers=4, n_heads=4, vocab=512, seq=64, batch=8, rank=4),
+        ModelConfig("small", d_model=256, n_layers=6, n_heads=8, vocab=1024, seq=128, batch=8, rank=8),
+        ModelConfig(
+            "base100m",
+            d_model=768,
+            n_layers=12,
+            n_heads=12,
+            vocab=16384,
+            seq=256,
+            batch=2,
+            rank=4,
+        ),
+    ]
+}
+
+
+@dataclass(frozen=True)
+class OptHParams:
+    """Optimizer hyper-parameters baked into the lowered step graphs.
+
+    Learning rate and Adam bias corrections are *runtime inputs* (the rust
+    coordinator owns the schedule); everything here is a lowering-time
+    constant, recorded in the manifest.
+    """
+
+    beta1: float
+    beta2: float
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    galore_scale: float = 0.25
+    lora_alpha: float = 16.0
+
+    def to_json(self):
+        return asdict(self)
+
+
+# Paper defaults: MLorc-AdamW uses beta1=0.8 (Section 4.1), AdamW otherwise
+# 0.9/0.999; Lion uses 0.9/0.99 (Chen et al., 2023).
+HPARAMS: Dict[str, OptHParams] = {
+    "adamw": OptHParams(beta1=0.9, beta2=0.999),
+    "mlorc_adamw": OptHParams(beta1=0.8, beta2=0.999),
+    "mlorc_m": OptHParams(beta1=0.8, beta2=0.999),
+    "mlorc_v": OptHParams(beta1=0.8, beta2=0.999),
+    "lion": OptHParams(beta1=0.9, beta2=0.99, weight_decay=0.0),
+    "mlorc_lion": OptHParams(beta1=0.9, beta2=0.99, weight_decay=0.0),
+    "galore": OptHParams(beta1=0.9, beta2=0.999),
+    "ldadamw": OptHParams(beta1=0.9, beta2=0.999),
+    "lora_adamw": OptHParams(beta1=0.9, beta2=0.999),
+    "lora_lion": OptHParams(beta1=0.9, beta2=0.99),
+}
+
+# Matrix-parameter optimizer methods and the per-shape state they carry.
+# Used by aot.py to enumerate step graphs and by tests.
+MATRIX_METHODS: List[str] = [
+    "adamw",
+    "lion",
+    "mlorc_adamw",
+    "mlorc_lion",
+    "mlorc_m",
+    "mlorc_v",
+    "galore",
+    "ldadamw",
+]
+
+# Vector (1-D) parameters always take the uncompressed path.
+VECTOR_METHODS: List[str] = ["adamw", "lion"]
+
+
+def pallas_tiles(m: int, n: int) -> Tuple[int, int]:
+    """Block sizes for the Pallas kernels: largest power-of-two tiles that
+    divide the operand (capped at 256) so interpret-mode grids stay small
+    while the BlockSpec still expresses a real HBM->VMEM schedule."""
+
+    def tile(x: int, cap: int = 256) -> int:
+        t = 1
+        while t * 2 <= min(x, cap) and x % (t * 2) == 0:
+            t *= 2
+        return t
+
+    return tile(m), tile(n)

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernels for the MLorc compression hot path: the two
+tall-skinny matmuls of the QB randomized range finder.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the skinny dimension
+``l = r + p`` is at most ~16, so one VMEM tile always holds the full skinny
+operand and each kernel is a *single sweep* over the large momentum matrix —
+every HBM element of ``A`` is read exactly once per RSVD. On the MXU this is
+a (bm x n) @ (n x l) systolic pass per tile.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls that the CPU PJRT plugin cannot execute. Correctness against
+the pure-jnp oracles in ``ref.py`` is enforced by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import pallas_tiles
+
+INTERPRET = True  # CPU-PJRT requirement; flip for real-TPU compile targets.
+
+
+def _a_omega_kernel(a_ref, om_ref, y_ref):
+    """Y tile = A tile @ Omega (full skinny operand resident in VMEM)."""
+    y_ref[...] = jnp.dot(a_ref[...], om_ref[...], preferred_element_type=jnp.float32)
+
+
+def a_omega(a: jax.Array, omega: jax.Array) -> jax.Array:
+    """Random projection ``Y = A @ Omega`` — (m, n) @ (n, l) -> (m, l).
+
+    Grid sweeps the m dimension; Omega (n x l) is broadcast to every step.
+    """
+    m, n = a.shape
+    n2, l = omega.shape
+    assert n == n2, (a.shape, omega.shape)
+    bm, _ = pallas_tiles(m, n)
+    return pl.pallas_call(
+        _a_omega_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, l), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, l), jnp.float32),
+        interpret=INTERPRET,
+    )(a, omega)
+
+
+def _qt_a_kernel(q_ref, a_ref, b_ref):
+    """B tile = Q^T @ A tile (Q resident; contraction over the long m dim)."""
+    b_ref[...] = jnp.dot(q_ref[...].T, a_ref[...], preferred_element_type=jnp.float32)
+
+
+def qt_a(q: jax.Array, a: jax.Array) -> jax.Array:
+    """Second RSVD factor ``B = Q^T A`` — (m, l)^T @ (m, n) -> (l, n)."""
+    m, l = q.shape
+    m2, n = a.shape
+    assert m == m2, (q.shape, a.shape)
+    _, bn = pallas_tiles(m, n)
+    return pl.pallas_call(
+        _qt_a_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, l), lambda j: (0, 0)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((l, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.float32),
+        interpret=INTERPRET,
+    )(q, a)
+
+
+def _qb_kernel(q_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(q_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def qb_matmul(q: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense reconstruction ``Q @ B`` — (m, l) @ (l, n) -> (m, n).
+
+    Used where a full reconstruction must materialize (GaLore back-projection,
+    Lion's shared reconstruction); the MLorc-AdamW path prefers the fused
+    kernels in ``update.py`` that never write the reconstruction to HBM.
+    """
+    m, l = q.shape
+    l2, n = b.shape
+    assert l == l2
+    bm, bn = pallas_tiles(m, n)
+    return pl.pallas_call(
+        _qb_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((l, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(q, b)

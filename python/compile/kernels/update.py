@@ -1,0 +1,186 @@
+"""Layer-1 Pallas kernels for the momentum update / weight apply hot path.
+
+The MLorc step touches every matrix entry a handful of times; these kernels
+fuse the reconstruction matmul with the exponential-average update so the
+full-size reconstructed momentum is never written back to HBM:
+
+  * ``recon_axpy``      : ``out = beta * (Q @ B) + (1 - beta) * g``
+  * ``recon_neg_stats`` : per-tile negative mass/count of ``Q @ B`` (pass 1
+                          of Eq. (2)'s zeta repair)
+  * ``recon_v_update``  : ``v = beta2 * fix(Q @ B, zeta) + (1-beta2) * g^2``
+                          where ``fix(x) = x if x >= 0 else zeta`` (pass 2)
+  * ``adamw_apply``     : fused bias-corrected AdamW weight update
+  * ``lion_apply``      : fused sign update
+
+Runtime scalars (lr, bias corrections, zeta) arrive as a single (1, 8) f32
+operand broadcast to every tile, so one lowered graph serves the whole
+schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import pallas_tiles
+from .rsvd import INTERPRET
+
+# Scalar-pack layout (keep in sync with rust coordinator::trainer and the
+# manifest "scalar_layout" field).
+S_LR, S_C1, S_C2, S_WD, S_EPS, S_BETA, S_ZETA, S_UNUSED = range(8)
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 8), lambda i, j: (0, 0))
+
+
+def pack_scalars(lr=0.0, c1=1.0, c2=1.0, wd=0.0, eps=1e-8, beta=0.0, zeta=0.0):
+    return jnp.array([[lr, c1, c2, wd, eps, beta, zeta, 0.0]], dtype=jnp.float32)
+
+
+def _recon_axpy_kernel(q_ref, b_ref, g_ref, s_ref, o_ref):
+    beta = s_ref[0, S_BETA]
+    recon = jnp.dot(q_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = beta * recon + (1.0 - beta) * g_ref[...]
+
+
+def recon_axpy(q: jax.Array, b: jax.Array, g: jax.Array, beta: float | jax.Array) -> jax.Array:
+    """Fused ``beta * (Q @ B) + (1 - beta) * g`` over (bm, bn) tiles."""
+    m, n = g.shape
+    l = q.shape[1]
+    bm, bn = pallas_tiles(m, n)
+    s = pack_scalars(beta=beta)
+    return pl.pallas_call(
+        _recon_axpy_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((l, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(q, b, g, s)
+
+
+def _recon_neg_stats_kernel(q_ref, b_ref, neg_ref, cnt_ref):
+    recon = jnp.dot(q_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    negpart = jnp.where(recon < 0.0, -recon, 0.0)
+    neg_ref[0, 0] = jnp.sum(negpart)
+    cnt_ref[0, 0] = jnp.sum(jnp.where(recon < 0.0, 1.0, 0.0))
+
+
+def recon_neg_stats(q: jax.Array, b: jax.Array, n_cols: int):
+    """Pass 1 of Eq. (2): per-tile (negative mass, negative count) of Q @ B.
+
+    Returns two (grid_m, grid_n) partial grids; the caller reduces them to
+    the scalar zeta = sum(negmass) / max(sum(negcount), 1).
+    """
+    m = q.shape[0]
+    l = q.shape[1]
+    n = n_cols
+    bm, bn = pallas_tiles(m, n)
+    gm, gn = m // bm, n // bn
+    neg, cnt = pl.pallas_call(
+        _recon_neg_stats_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((l, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((gm, gn), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gn), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, b)
+    return neg, cnt
+
+
+def _recon_v_update_kernel(q_ref, b_ref, g_ref, s_ref, o_ref):
+    beta2 = s_ref[0, S_BETA]
+    zeta = s_ref[0, S_ZETA]
+    recon = jnp.dot(q_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    # Eq. (2): ReLU(recon) + zeta * 1{recon < 0}  ==  where(recon < 0, zeta, recon)
+    fixed = jnp.where(recon < 0.0, zeta, recon)
+    g = g_ref[...]
+    o_ref[...] = beta2 * fixed + (1.0 - beta2) * g * g
+
+
+def recon_v_update(
+    q: jax.Array, b: jax.Array, g: jax.Array, zeta: jax.Array, beta2: float
+) -> jax.Array:
+    """Pass 2 of Eq. (2) fused with the second-moment EMA update."""
+    m, n = g.shape
+    l = q.shape[1]
+    bm, bn = pallas_tiles(m, n)
+    s = pack_scalars(beta=beta2, zeta=zeta)
+    return pl.pallas_call(
+        _recon_v_update_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((l, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(q, b, g, s)
+
+
+def _adamw_apply_kernel(w_ref, m_ref, v_ref, s_ref, o_ref):
+    lr = s_ref[0, S_LR]
+    c1 = s_ref[0, S_C1]
+    c2 = s_ref[0, S_C2]
+    wd = s_ref[0, S_WD]
+    eps = s_ref[0, S_EPS]
+    mhat = m_ref[...] * c1
+    vhat = v_ref[...] * c2
+    w = w_ref[...]
+    o_ref[...] = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w)
+
+
+def adamw_apply(w, m, v, lr, c1, c2, wd, eps) -> jax.Array:
+    """W' = W - lr * (mhat / (sqrt(vhat) + eps) + wd * W), tiled VPU pass."""
+    mm, nn = w.shape
+    bm, bn = pallas_tiles(mm, nn)
+    s = pack_scalars(lr=lr, c1=c1, c2=c2, wd=wd, eps=eps)
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _adamw_apply_kernel,
+        grid=(mm // bm, nn // bn),
+        in_specs=[tile, tile, tile, _scalar_spec()],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=INTERPRET,
+    )(w, m, v, s)
+
+
+def _lion_apply_kernel(w_ref, c_ref, s_ref, o_ref):
+    lr = s_ref[0, S_LR]
+    wd = s_ref[0, S_WD]
+    w = w_ref[...]
+    o_ref[...] = w - lr * (jnp.sign(c_ref[...]) + wd * w)
+
+
+def lion_apply(w, c, lr, wd) -> jax.Array:
+    """W' = W - lr * (sign(c) + wd * W) (Lion / Algorithm 2 line 10)."""
+    mm, nn = w.shape
+    bm, bn = pallas_tiles(mm, nn)
+    s = pack_scalars(lr=lr, wd=wd)
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _lion_apply_kernel,
+        grid=(mm // bm, nn // bn),
+        in_specs=[tile, tile, _scalar_spec()],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=INTERPRET,
+    )(w, c, s)

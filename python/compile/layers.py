@@ -1,0 +1,55 @@
+"""Transformer building blocks (Layer-2, plain jnp).
+
+Everything here must lower to pure HLO parseable by xla_extension 0.5.1:
+no ``jnp.linalg``, no erf (tanh-GELU only), no jax.random on the graph path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu(x):
+    """tanh-approximate GELU — avoids the erf HLO op, which the pinned
+    xla_extension text parser predates."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def causal_attention(x, wq, wk, wv, wo, n_heads: int):
+    """Multi-head causal self-attention; weights are (d, d) matrices."""
+    B, T, D = x.shape
+    H = n_heads
+    dh = D // H
+
+    def split(w):
+        return (x @ w).reshape(B, T, H, dh).transpose(0, 2, 1, 3)  # B,H,T,dh
+
+    q, k, v = split(wq), split(wk), split(wv)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.asarray(-1e9, x.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B, T, D)
+    return ctx @ wo
+
+
+def mlp(x, w1, w2):
+    return gelu(x @ w1) @ w2
+
+
+def block(x, p, i: int, n_heads: int):
+    """Pre-LN transformer block; `p` is the params dict, `i` the layer idx."""
+    h = layer_norm(x, p[f"blk{i}.ln1_g"], p[f"blk{i}.ln1_b"])
+    x = x + causal_attention(
+        h, p[f"blk{i}.wq"], p[f"blk{i}.wk"], p[f"blk{i}.wv"], p[f"blk{i}.wo"], n_heads
+    )
+    h = layer_norm(x, p[f"blk{i}.ln2_g"], p[f"blk{i}.ln2_b"])
+    x = x + mlp(h, p[f"blk{i}.w1"], p[f"blk{i}.w2"])
+    return x

@@ -1,0 +1,290 @@
+# L2: the paper's compute graphs — decoder-only transformer LM (fwd/bwd,
+# eval), LoRA variant, and a sequence-classification head for SynGLUE.
+#
+# Graphs are flat-argument functions (tokens/targets first, then parameters
+# in `param_spec` order) so the rust coordinator's IO stays table-driven via
+# the manifest. Losses mask padding with target id -1.
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+
+PAD_TARGET = -1  # masked-out position in `targets` / ignore label
+
+# Matrix kinds inside a block, in spec order. All are momentum-compressed;
+# vectors (LN gains/biases) and embeddings take the uncompressed path, and
+# LoRA adapters attach to exactly these six matrices (alpha/r scaling).
+BLOCK_MATS = ["wq", "wk", "wv", "wo", "w1", "w2"]
+
+
+def param_spec(cfg: ModelConfig, cls_head: bool = False):
+    """Ordered parameter table: (name, shape, kind) with kind in
+    {"matrix", "vector", "embed"}. The manifest serializes this verbatim."""
+    d, V, T = cfg.d_model, cfg.vocab, cfg.seq
+    spec = [("tok_emb", (V, d), "embed"), ("pos_emb", (T, d), "embed")]
+    for i in range(cfg.n_layers):
+        for nm in ("ln1_g", "ln1_b"):
+            spec.append((f"blk{i}.{nm}", (d,), "vector"))
+        for nm in ("wq", "wk", "wv", "wo"):
+            spec.append((f"blk{i}.{nm}", (d, d), "matrix"))
+        for nm in ("ln2_g", "ln2_b"):
+            spec.append((f"blk{i}.{nm}", (d,), "vector"))
+        spec.append((f"blk{i}.w1", (d, cfg.d_ff), "matrix"))
+        spec.append((f"blk{i}.w2", (cfg.d_ff, d), "matrix"))
+    spec.append(("lnf_g", (d,), "vector"))
+    spec.append(("lnf_b", (d,), "vector"))
+    if cls_head:
+        # kind "head": 2-D but never momentum-compressed (r would exceed n).
+        spec.append(("cls_head", (d, cfg.n_cls), "head"))
+    return spec
+
+
+def lora_spec(cfg: ModelConfig):
+    """Adapter table for the LoRA variant: (name, shape) — A is (r, n),
+    B is (m, r), B zero-initialized (Hu et al., 2022)."""
+    r = cfg.rank
+    out = []
+    shapes = {
+        "wq": (cfg.d_model, cfg.d_model),
+        "wk": (cfg.d_model, cfg.d_model),
+        "wv": (cfg.d_model, cfg.d_model),
+        "wo": (cfg.d_model, cfg.d_model),
+        "w1": (cfg.d_model, cfg.d_ff),
+        "w2": (cfg.d_ff, cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        for nm in BLOCK_MATS:
+            m, n = shapes[nm]
+            out.append((f"blk{i}.{nm}.lora_B", (m, r)))
+            out.append((f"blk{i}.{nm}.lora_A", (r, n)))
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, cls_head: bool = False):
+    """Test/build-time initializer (numpy); the production initializer is
+    rust-side (linalg::rng) with the same scheme: N(0, 0.02), residual
+    projections scaled by 1/sqrt(2L), LN gains 1, biases 0."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape, kind in param_spec(cfg, cls_head):
+        if kind == "vector":
+            out[name] = np.ones(shape, np.float32) if name.endswith("_g") else np.zeros(shape, np.float32)
+        else:
+            scale = 0.02
+            if name.endswith(".wo") or name.endswith(".w2"):
+                scale = 0.02 / np.sqrt(2.0 * cfg.n_layers)
+            out[name] = (rng.standard_normal(shape) * scale).astype(np.float32)
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
+def _params_dict(cfg, flat, cls_head=False):
+    spec = param_spec(cfg, cls_head)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    return {name: x for (name, _, _), x in zip(spec, flat)}
+
+
+def forward(p, tokens, cfg: ModelConfig):
+    """Token logits (B, T, V); LM head tied to tok_emb."""
+    B, T = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :T, :]
+    for i in range(cfg.n_layers):
+        x = layers.block(x, p, i, cfg.n_heads)
+    x = layers.layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T
+
+
+def hidden(p, tokens, cfg: ModelConfig):
+    B, T = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :T, :]
+    for i in range(cfg.n_layers):
+        x = layers.block(x, p, i, cfg.n_heads)
+    return layers.layer_norm(x, p["lnf_g"], p["lnf_b"])
+
+
+def _masked_ce(logits, targets):
+    """Mean cross-entropy over positions with target != PAD_TARGET."""
+    mask = (targets != PAD_TARGET).astype(jnp.float32)
+    safe = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def lm_loss(p, tokens, targets, cfg: ModelConfig):
+    return _masked_ce(forward(p, tokens, cfg), targets)
+
+
+def make_fwd_bwd(cfg: ModelConfig):
+    """(tokens, targets, *params) -> (loss, *grads) in spec order."""
+
+    def f(tokens, targets, *flat):
+        p = _params_dict(cfg, flat)
+        loss, grads = jax.value_and_grad(lambda q: lm_loss(q, tokens, targets, cfg))(p)
+        order = [name for name, _, _ in param_spec(cfg)]
+        return (loss, *[grads[name] for name in order])
+
+    return f
+
+
+def make_eval(cfg: ModelConfig):
+    """(tokens, targets, *params) -> (loss, correct_mask f32[B,T]).
+
+    correct_mask is 1 where argmax(logits) == target and the target is not
+    padding; the rust side aggregates token accuracy and answer-region
+    exact match from it (teacher-forced evaluation, see DESIGN.md §2)."""
+
+    def f(tokens, targets, *flat):
+        p = _params_dict(cfg, flat)
+        logits = forward(p, tokens, cfg)
+        loss = _masked_ce(logits, targets)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = (pred == targets) & (targets != PAD_TARGET)
+        return loss, ok.astype(jnp.float32)
+
+    return f
+
+
+# ---------------------------------------------------------------- LoRA ----
+
+
+def _lora_forward(p, adapters, tokens, cfg: ModelConfig, alpha: float):
+    scale = alpha / cfg.rank
+    q = dict(p)
+    for i in range(cfg.n_layers):
+        for nm in BLOCK_MATS:
+            key = f"blk{i}.{nm}"
+            q[key] = p[key] + scale * (adapters[f"{key}.lora_B"] @ adapters[f"{key}.lora_A"])
+    return forward(q, tokens, cfg)
+
+
+def make_lora_fwd_bwd(cfg: ModelConfig, alpha: float):
+    """(tokens, targets, *base_params, *adapters) -> (loss, *adapter_grads).
+
+    Base weights are frozen inputs; only adapters receive gradients."""
+    aspec = lora_spec(cfg)
+
+    def f(tokens, targets, *flat):
+        nbase = len(param_spec(cfg))
+        p = _params_dict(cfg, flat[:nbase])
+        a = {name: x for (name, _), x in zip(aspec, flat[nbase:])}
+
+        def loss_of(a_):
+            return _masked_ce(_lora_forward(p, a_, tokens, cfg, alpha), targets)
+
+        loss, grads = jax.value_and_grad(loss_of)(a)
+        return (loss, *[grads[name] for name, _ in aspec])
+
+    return f
+
+
+def make_lora_eval(cfg: ModelConfig, alpha: float):
+    aspec = lora_spec(cfg)
+
+    def f(tokens, targets, *flat):
+        nbase = len(param_spec(cfg))
+        p = _params_dict(cfg, flat[:nbase])
+        a = {name: x for (name, _), x in zip(aspec, flat[nbase:])}
+        logits = _lora_forward(p, a, tokens, cfg, alpha)
+        loss = _masked_ce(logits, targets)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = (pred == targets) & (targets != PAD_TARGET)
+        return loss, ok.astype(jnp.float32)
+
+    return f
+
+
+# ------------------------------------------------- classification head ----
+
+
+def cls_logits(p, tokens, cfg: ModelConfig):
+    """Mean-pooled sequence classification (SynGLUE); pad token id 0 is
+    excluded from the pool."""
+    h = hidden(p, tokens, cfg)
+    mask = (tokens != 0).astype(jnp.float32)[..., None]
+    pooled = jnp.sum(h * mask, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    return pooled @ p["cls_head"]
+
+
+def _cls_ce(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def make_cls_fwd_bwd(cfg: ModelConfig):
+    """(tokens, labels, *params_with_head) -> (loss, *grads)."""
+
+    def f(tokens, labels, *flat):
+        p = _params_dict(cfg, flat, cls_head=True)
+        loss, grads = jax.value_and_grad(
+            lambda q: _cls_ce(cls_logits(q, tokens, cfg), labels)
+        )(p)
+        order = [name for name, _, _ in param_spec(cfg, cls_head=True)]
+        return (loss, *[grads[name] for name in order])
+
+    return f
+
+
+def make_cls_eval(cfg: ModelConfig):
+    def f(tokens, labels, *flat):
+        p = _params_dict(cfg, flat, cls_head=True)
+        logits = cls_logits(p, tokens, cfg)
+        loss = _cls_ce(logits, labels)
+        ok = (jnp.argmax(logits, axis=-1).astype(jnp.int32) == labels)
+        return loss, ok.astype(jnp.float32)
+
+    return f
+
+
+def _lora_merged(p, adapters, cfg: ModelConfig, alpha: float):
+    scale = alpha / cfg.rank
+    q = dict(p)
+    for i in range(cfg.n_layers):
+        for nm in BLOCK_MATS:
+            key = f"blk{i}.{nm}"
+            q[key] = p[key] + scale * (adapters[f"{key}.lora_B"] @ adapters[f"{key}.lora_A"])
+    return q
+
+
+def make_cls_lora_fwd_bwd(cfg: ModelConfig, alpha: float):
+    """(tokens, labels, *base_params_with_head, *adapters) ->
+    (loss, cls_head_grad, *adapter_grads). The tiny classification head
+    stays trainable alongside the adapters (standard LoRA practice)."""
+    aspec = lora_spec(cfg)
+
+    def f(tokens, labels, *flat):
+        nbase = len(param_spec(cfg, cls_head=True))
+        p = _params_dict(cfg, flat[:nbase], cls_head=True)
+        a = {name: x for (name, _), x in zip(aspec, flat[nbase:])}
+
+        def loss_of(head, a_):
+            q = _lora_merged(p, a_, cfg, alpha)
+            q["cls_head"] = head
+            return _cls_ce(cls_logits(q, tokens, cfg), labels)
+
+        loss, (ghead, grads) = jax.value_and_grad(loss_of, argnums=(0, 1))(
+            p["cls_head"], a
+        )
+        return (loss, ghead, *[grads[name] for name, _ in aspec])
+
+    return f
+
+
+def make_cls_lora_eval(cfg: ModelConfig, alpha: float):
+    aspec = lora_spec(cfg)
+
+    def f(tokens, labels, *flat):
+        nbase = len(param_spec(cfg, cls_head=True))
+        p = _params_dict(cfg, flat[:nbase], cls_head=True)
+        a = {name: x for (name, _), x in zip(aspec, flat[nbase:])}
+        q = _lora_merged(p, a, cfg, alpha)
+        logits = cls_logits(q, tokens, cfg)
+        loss = _cls_ce(logits, labels)
+        ok = (jnp.argmax(logits, axis=-1).astype(jnp.int32) == labels)
+        return loss, ok.astype(jnp.float32)
+
+    return f

@@ -1,0 +1,367 @@
+"""Layer-2 optimizer step graphs — one pure function per (method, shape).
+
+Every builder returns ``f(*arrays) -> tuple`` plus an IO table that aot.py
+serializes into the manifest, so the rust coordinator drives steps entirely
+table-driven. Conventions:
+
+  * runtime scalars come last, each a rank-0 f32: lr, and for Adam-family
+    the bias corrections c1 = 1/(1-beta1^t), c2 = 1/(1-beta2^t);
+  * Gaussian test matrices ``omega`` are *inputs* (rust owns the RNG);
+  * hyper-parameters (betas, eps, wd, scales) are baked constants recorded
+    in the manifest;
+  * outputs echo the updated weight first, then updated state, in the same
+    order the state appeared in the inputs.
+
+Methods:
+  adamw, lion                          — uncompressed baselines (Alg. refs)
+  mlorc_adamw (Alg. 1), mlorc_lion (Alg. 2)
+  mlorc_m / mlorc_v                    — ablations (Table 7)
+  galore (Zhao et al. 2024)            — projector refresh as its own graph
+  ldadamw (Robert et al. 2024)         — projection-aware + error feedback
+LoRA needs no bespoke step: its adapters run plain adamw/lion at their own
+shapes.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List
+
+import jax.numpy as jnp
+
+from . import rsvd_lib
+from .configs import OptHParams
+from .kernels import ref
+from .kernels import rsvd as kern
+from .kernels import update as upd
+
+
+@dataclass
+class StepGraph:
+    """IO description for one lowered optimizer step graph."""
+
+    method: str
+    shape: tuple
+    fn: Callable
+    inputs: List[dict]  # [{name, shape, dtype}]
+    outputs: List[str]
+    hparams: dict
+    rank: int = 0
+    l: int = 0
+
+    def example_args(self):
+        import numpy as np
+
+        out = []
+        for spec in self.inputs:
+            import jax
+
+            out.append(jax.ShapeDtypeStruct(tuple(spec["shape"]), jnp.dtype(spec["dtype"])))
+        return out
+
+
+def _io(name, shape, dtype="float32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _scalar(name):
+    return {"name": name, "shape": [], "dtype": "float32"}
+
+
+def _zeta(vq, vb, n, use_pallas):
+    if use_pallas:
+        neg, cnt = upd.recon_neg_stats(vq, vb, n)
+        return jnp.sum(neg) / jnp.maximum(jnp.sum(cnt), 1.0)
+    return ref.zeta_of(vq @ vb)
+
+
+# ------------------------------------------------------------ baselines ----
+
+
+def build_adamw(shape, hp: OptHParams, use_pallas=True) -> StepGraph:
+    """Uncompressed AdamW; serves full fine-tuning, vector params, LoRA
+    adapters and the mlorc_m/_v uncompressed halves."""
+
+    def f(w, g, m, v, lr, c1, c2):
+        m2 = hp.beta1 * m + (1.0 - hp.beta1) * g
+        v2 = hp.beta2 * v + (1.0 - hp.beta2) * g * g
+        if use_pallas and len(shape) == 2:
+            w2 = upd.adamw_apply(w, m2, v2, lr, c1, c2, hp.weight_decay, hp.eps)
+        else:
+            w2 = ref.adamw_apply(w, m2, v2, lr, c1, c2, hp.weight_decay, hp.eps)
+        return w2, m2, v2
+
+    ios = [_io("w", shape), _io("g", shape), _io("m", shape), _io("v", shape),
+           _scalar("lr"), _scalar("c1"), _scalar("c2")]
+    return StepGraph("adamw", shape, f, ios, ["w", "m", "v"], hp.to_json())
+
+
+def build_lion(shape, hp: OptHParams, use_pallas=True) -> StepGraph:
+    def f(w, g, m, lr):
+        c = hp.beta1 * m + (1.0 - hp.beta1) * g
+        m2 = hp.beta2 * m + (1.0 - hp.beta2) * g
+        if use_pallas and len(shape) == 2:
+            w2 = upd.lion_apply(w, c, lr, hp.weight_decay)
+        else:
+            w2 = ref.lion_apply(w, c, lr, hp.weight_decay)
+        return w2, m2
+
+    ios = [_io("w", shape), _io("g", shape), _io("m", shape), _scalar("lr")]
+    return StepGraph("lion", shape, f, ios, ["w", "m"], hp.to_json())
+
+
+# ---------------------------------------------------------------- MLorc ----
+
+
+def build_mlorc_adamw(shape, rank, p_over, hp: OptHParams, use_pallas=True) -> StepGraph:
+    """Algorithm 1. State: QB factors of both momenta. Note lines 13-15 use
+    the *exact* updated m_t, v_t; compression only affects the next step."""
+    m, n = shape
+    l = rank + p_over
+
+    def f(w, g, mq, mb, vq, vb, om_m, om_v, lr, c1, c2):
+        if use_pallas:
+            mt = upd.recon_axpy(mq, mb, g, hp.beta1)  # line 6 + 9 fused
+        else:
+            mt = ref.recon_axpy(mq, mb, g, hp.beta1)
+        zeta = _zeta(vq, vb, n, use_pallas)  # lines 7-8 (Eq. 2), pass 1
+        if use_pallas:
+            vt = upd.recon_v_update(vq, vb, g, zeta, hp.beta2)  # pass 2 + line 10
+        else:
+            vt = ref.recon_v_update(vq, vb, g, zeta, hp.beta2)
+        mq2, mb2 = rsvd_lib.rsvd_qb(mt, om_m, use_pallas)  # line 11
+        vq2, vb2 = rsvd_lib.rsvd_qb(vt, om_v, use_pallas)  # line 12
+        if use_pallas:
+            w2 = upd.adamw_apply(w, mt, vt, lr, c1, c2, hp.weight_decay, hp.eps)
+        else:
+            w2 = ref.adamw_apply(w, mt, vt, lr, c1, c2, hp.weight_decay, hp.eps)
+        return w2, mq2, mb2, vq2, vb2
+
+    ios = [
+        _io("w", shape), _io("g", shape),
+        _io("mq", (m, l)), _io("mb", (l, n)),
+        _io("vq", (m, l)), _io("vb", (l, n)),
+        _io("om_m", (n, l)), _io("om_v", (n, l)),
+        _scalar("lr"), _scalar("c1"), _scalar("c2"),
+    ]
+    return StepGraph("mlorc_adamw", shape, f, ios, ["w", "mq", "mb", "vq", "vb"],
+                     hp.to_json(), rank, l)
+
+
+def build_mlorc_lion(shape, rank, p_over, hp: OptHParams, use_pallas=True) -> StepGraph:
+    """Algorithm 2: one momentum, two EMAs of the same reconstruction."""
+    m, n = shape
+    l = rank + p_over
+
+    def f(w, g, mq, mb, om, lr):
+        recon = kern.qb_matmul(mq, mb) if use_pallas else mq @ mb  # line 6 (shared)
+        c = hp.beta1 * recon + (1.0 - hp.beta1) * g  # line 7
+        mt = hp.beta2 * recon + (1.0 - hp.beta2) * g  # line 8
+        mq2, mb2 = rsvd_lib.rsvd_qb(mt, om, use_pallas)  # line 9
+        if use_pallas:
+            w2 = upd.lion_apply(w, c, lr, hp.weight_decay)  # line 10
+        else:
+            w2 = ref.lion_apply(w, c, lr, hp.weight_decay)
+        return w2, mq2, mb2
+
+    ios = [
+        _io("w", shape), _io("g", shape),
+        _io("mq", (m, l)), _io("mb", (l, n)),
+        _io("om", (n, l)), _scalar("lr"),
+    ]
+    return StepGraph("mlorc_lion", shape, f, ios, ["w", "mq", "mb"], hp.to_json(), rank, l)
+
+
+def build_mlorc_m(shape, rank, p_over, hp: OptHParams, use_pallas=True) -> StepGraph:
+    """Ablation (Table 7): compress the first moment only."""
+    m, n = shape
+    l = rank + p_over
+
+    def f(w, g, mq, mb, v, om_m, lr, c1, c2):
+        mt = upd.recon_axpy(mq, mb, g, hp.beta1) if use_pallas else ref.recon_axpy(mq, mb, g, hp.beta1)
+        v2 = hp.beta2 * v + (1.0 - hp.beta2) * g * g
+        mq2, mb2 = rsvd_lib.rsvd_qb(mt, om_m, use_pallas)
+        if use_pallas:
+            w2 = upd.adamw_apply(w, mt, v2, lr, c1, c2, hp.weight_decay, hp.eps)
+        else:
+            w2 = ref.adamw_apply(w, mt, v2, lr, c1, c2, hp.weight_decay, hp.eps)
+        return w2, mq2, mb2, v2
+
+    ios = [
+        _io("w", shape), _io("g", shape),
+        _io("mq", (m, l)), _io("mb", (l, n)), _io("v", shape),
+        _io("om_m", (n, l)),
+        _scalar("lr"), _scalar("c1"), _scalar("c2"),
+    ]
+    return StepGraph("mlorc_m", shape, f, ios, ["w", "mq", "mb", "v"], hp.to_json(), rank, l)
+
+
+def build_mlorc_v(shape, rank, p_over, hp: OptHParams, use_pallas=True) -> StepGraph:
+    """Ablation (Table 7): compress the second moment only."""
+    m, n = shape
+    l = rank + p_over
+
+    def f(w, g, m_, vq, vb, om_v, lr, c1, c2):
+        m2 = hp.beta1 * m_ + (1.0 - hp.beta1) * g
+        zeta = _zeta(vq, vb, n, use_pallas)
+        vt = upd.recon_v_update(vq, vb, g, zeta, hp.beta2) if use_pallas else ref.recon_v_update(vq, vb, g, zeta, hp.beta2)
+        vq2, vb2 = rsvd_lib.rsvd_qb(vt, om_v, use_pallas)
+        if use_pallas:
+            w2 = upd.adamw_apply(w, m2, vt, lr, c1, c2, hp.weight_decay, hp.eps)
+        else:
+            w2 = ref.adamw_apply(w, m2, vt, lr, c1, c2, hp.weight_decay, hp.eps)
+        return w2, m2, vq2, vb2
+
+    ios = [
+        _io("w", shape), _io("g", shape),
+        _io("m", shape), _io("vq", (m, l)), _io("vb", (l, n)),
+        _io("om_v", (n, l)),
+        _scalar("lr"), _scalar("c1"), _scalar("c2"),
+    ]
+    return StepGraph("mlorc_v", shape, f, ios, ["w", "m", "vq", "vb"], hp.to_json(), rank, l)
+
+
+# --------------------------------------------------------------- GaLore ----
+
+
+def galore_left(shape) -> bool:
+    """GaLore projects the shorter side (Zhao et al. 2024, App. A)."""
+    m, n = shape
+    return m <= n
+
+
+def build_galore_project(shape, rank, p_over) -> StepGraph:
+    """Projector refresh graph (every T steps, rust-scheduled): randomized
+    range finder of the current gradient, replacing the paper's exact SVD —
+    same dominant subspace up to the usual RSVD tail bound."""
+    m, n = shape
+    l = rank + p_over
+    left = galore_left(shape)
+
+    if left:
+        def f(g, om):
+            y = kern.a_omega(g, om)
+            return (rsvd_lib.mgs_qr(y),)
+        ios = [_io("g", shape), _io("om", (n, l))]
+        pshape = (m, l)
+    else:
+        def f(g, om):
+            y = jnp.transpose(g) @ om  # (n, l) — row-space range finder
+            return (rsvd_lib.mgs_qr(y),)
+        ios = [_io("g", shape), _io("om", (m, l))]
+        pshape = (n, l)
+
+    sg = StepGraph("galore_project", shape, f, ios, ["p"], {}, rank, l)
+    sg.hparams = {"projector_shape": list(pshape), "left": left}
+    return sg
+
+
+def build_galore(shape, rank, p_over, hp: OptHParams, use_pallas=True) -> StepGraph:
+    """AdamW in the projected subspace; back-projected full-parameter update
+    scaled by galore_scale (the official alpha=0.25)."""
+    m, n = shape
+    l = rank + p_over
+    left = galore_left(shape)
+    pshape = (m, l) if left else (n, l)
+    rshape = (l, n) if left else (m, l)
+
+    def f(w, g, p, M, V, lr, c1, c2):
+        if left:
+            r = kern.qt_a(p, g) if use_pallas else p.T @ g  # (l, n)
+        else:
+            r = kern.a_omega(g, p) if use_pallas else g @ p  # (m, l)
+        M2 = hp.beta1 * M + (1.0 - hp.beta1) * r
+        V2 = hp.beta2 * V + (1.0 - hp.beta2) * r * r
+        nhat = (M2 * c1) / (jnp.sqrt(V2 * c2) + hp.eps)
+        if left:
+            full = kern.qb_matmul(p, nhat) if use_pallas else p @ nhat
+        else:
+            full = nhat @ p.T
+        w2 = w - lr * (hp.galore_scale * full + hp.weight_decay * w)
+        return w2, M2, V2
+
+    ios = [
+        _io("w", shape), _io("g", shape), _io("p", pshape),
+        _io("M", rshape), _io("V", rshape),
+        _scalar("lr"), _scalar("c1"), _scalar("c2"),
+    ]
+    sg = StepGraph("galore", shape, f, ios, ["w", "M", "V"], hp.to_json(), rank, l)
+    sg.hparams = dict(sg.hparams, left=left)
+    return sg
+
+
+# -------------------------------------------------------------- LDAdamW ----
+
+
+def build_ldadamw(shape, rank, p_over, hp: OptHParams, use_pallas=True) -> StepGraph:
+    """LDAdam-style baseline (Robert et al., 2024): per-step projector from
+    the error-compensated gradient, projection-aware rotation of the
+    low-dimensional optimizer state, and a full-size error-feedback buffer
+    (which is exactly why it loses the memory comparison in Table 3)."""
+    m, n = shape
+    l = rank + p_over
+    left = galore_left(shape)
+    pshape = (m, l) if left else (n, l)
+    rshape = (l, n) if left else (m, l)
+
+    def f(w, g, p_old, M, V, e, om, lr, c1, c2):
+        a = g + e
+        if left:
+            y = kern.a_omega(a, om) if use_pallas else a @ om
+            p = rsvd_lib.mgs_qr(y)
+            r = kern.qt_a(p, a) if use_pallas else p.T @ a  # (l, n)
+            rot = p.T @ p_old  # (l, l) basis rotation
+            M2 = hp.beta1 * (rot @ M) + (1.0 - hp.beta1) * r
+            V2 = hp.beta2 * jnp.abs(rot @ V) + (1.0 - hp.beta2) * r * r
+            nhat = (M2 * c1) / (jnp.sqrt(V2 * c2) + hp.eps)
+            full = kern.qb_matmul(p, nhat) if use_pallas else p @ nhat
+            e2 = a - (kern.qb_matmul(p, r) if use_pallas else p @ r)
+        else:
+            y = jnp.transpose(a) @ om
+            p = rsvd_lib.mgs_qr(y)  # (n, l)
+            r = a @ p  # (m, l)
+            rot = p.T @ p_old
+            M2 = hp.beta1 * (M @ rot.T) + (1.0 - hp.beta1) * r
+            V2 = hp.beta2 * jnp.abs(V @ rot.T) + (1.0 - hp.beta2) * r * r
+            nhat = (M2 * c1) / (jnp.sqrt(V2 * c2) + hp.eps)
+            full = nhat @ p.T
+            e2 = a - r @ p.T
+        w2 = w - lr * (full + hp.weight_decay * w)
+        return w2, p, M2, V2, e2
+
+    ios = [
+        _io("w", shape), _io("g", shape), _io("p", pshape),
+        _io("M", rshape), _io("V", rshape), _io("e", shape),
+        _io("om", ((n, l) if left else (m, l))),
+        _scalar("lr"), _scalar("c1"), _scalar("c2"),
+    ]
+    sg = StepGraph("ldadamw", shape, f, ios, ["w", "p", "M", "V", "e"], hp.to_json(), rank, l)
+    sg.hparams = dict(sg.hparams, left=left)
+    return sg
+
+
+# ------------------------------------------------------------- registry ----
+
+
+def build_step(method: str, shape, rank: int, p_over: int, hp: OptHParams,
+               use_pallas=True) -> StepGraph:
+    if len(shape) == 1:
+        # Vector parameters always use the uncompressed path.
+        assert method in ("adamw", "lion"), method
+    if method == "adamw":
+        return build_adamw(shape, hp, use_pallas)
+    if method == "lion":
+        return build_lion(shape, hp, use_pallas)
+    if method == "mlorc_adamw":
+        return build_mlorc_adamw(shape, rank, p_over, hp, use_pallas)
+    if method == "mlorc_lion":
+        return build_mlorc_lion(shape, rank, p_over, hp, use_pallas)
+    if method == "mlorc_m":
+        return build_mlorc_m(shape, rank, p_over, hp, use_pallas)
+    if method == "mlorc_v":
+        return build_mlorc_v(shape, rank, p_over, hp, use_pallas)
+    if method == "galore":
+        return build_galore(shape, rank, p_over, hp, use_pallas)
+    if method == "galore_project":
+        return build_galore_project(shape, rank, p_over)
+    if method == "ldadamw":
+        return build_ldadamw(shape, rank, p_over, hp, use_pallas)
+    raise ValueError(f"unknown method {method}")

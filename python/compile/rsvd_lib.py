@@ -1,0 +1,72 @@
+"""QB-form randomized SVD (Halko et al., 2011, Alg. 4.1) on top of the
+Layer-1 Pallas kernels.
+
+MLorc only ever *reconstructs* the compressed momentum (``m ~= U S V^T``),
+so we store the rank-l approximation in QB form: ``Q`` from a Gram-Schmidt
+QR of ``A @ Omega`` and ``B = Q^T A``; then ``A ~= Q B``. With the paper's
+oversampling p = 0 (Section D.1) this is *exactly* the reconstruction of
+Algorithm 3 — the small SVD of B only rotates factors without changing
+``Q B``. For p > 0, ``svd_truncate`` performs the small-side truncation and
+is validated against numpy in pytest (build-time only; it never reaches an
+artifact, keeping lowered graphs free of LAPACK custom-calls).
+
+The MGS QR is unrolled over the l <= ~16 skinny columns, so it lowers to a
+short chain of dots — no ``jnp.linalg`` on the artifact path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import rsvd as kern
+
+
+def mgs_qr(y: jnp.ndarray) -> jnp.ndarray:
+    """Column-orthonormal Q from modified Gram-Schmidt with one
+    reorthogonalization pass (CGS2-grade stability for skinny Y).
+
+    Zero (or numerically dead) columns yield zero Q columns, which simply
+    drop rank — exactly the behaviour wanted when momentum starts at 0.
+    """
+    m, l = y.shape
+    cols = []
+    for j in range(l):
+        v = y[:, j]
+        for _ in range(2):  # reorthogonalize once: "twice is enough"
+            for qi in cols:
+                v = v - qi * (qi @ v)
+        nrm2 = v @ v
+        inv = jnp.where(nrm2 > 1e-30, 1.0 / jnp.sqrt(jnp.maximum(nrm2, 1e-30)), 0.0)
+        cols.append(v * inv)
+    return jnp.stack(cols, axis=1)
+
+
+def rsvd_qb(a: jnp.ndarray, omega: jnp.ndarray, use_pallas: bool = True):
+    """Rank-l range finder: returns (Q, B) with A ~= Q @ B.
+
+    ``omega`` is a host-supplied Gaussian (n, l) matrix — the rust
+    coordinator owns the RNG, so lowered graphs are pure functions.
+    """
+    if use_pallas:
+        y = kern.a_omega(a, omega)
+        q = mgs_qr(y)
+        b = kern.qt_a(q, a)
+    else:
+        y = ref.a_omega(a, omega)
+        q = mgs_qr(y)
+        b = ref.qt_a(q, a)
+    return q, b
+
+
+def reconstruct(q: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    return kern.qb_matmul(q, b) if use_pallas else q @ b
+
+
+def svd_truncate(q, b, rank: int):
+    """Oversampled (p > 0) path: truncate the QB factorization to `rank`
+    via an SVD of the small (l x n) factor. Build/test-time only."""
+    import numpy as np
+
+    u, s, vt = np.linalg.svd(np.asarray(b), full_matrices=False)
+    u, s, vt = u[:, :rank], s[:rank], vt[:rank, :]
+    q2 = np.asarray(q) @ (u * s)  # absorb the singular values into Q
+    return jnp.asarray(q2), jnp.asarray(vt)

@@ -1,0 +1,124 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-square, tile-boundary and
+tile-interior sizes) and value scales; assert_allclose throughout.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels import rsvd as k
+from compile.kernels import update as u
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 64, 96, 128])
+LS = st.sampled_from([2, 4, 8])
+SCALE = st.sampled_from([1e-3, 1.0, 1e3])
+
+
+def _mat(rng, m, n, scale=1.0):
+    return jnp.asarray(rng.standard_normal((m, n)) * scale, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, l=LS, scale=SCALE, seed=st.integers(0, 2**16))
+def test_a_omega_matches_ref(m, n, l, scale, seed):
+    rng = np.random.default_rng(seed)
+    a, om = _mat(rng, m, n, scale), _mat(rng, n, l)
+    assert_allclose(k.a_omega(a, om), ref.a_omega(a, om), rtol=2e-5, atol=2e-5 * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, l=LS, seed=st.integers(0, 2**16))
+def test_qt_a_matches_ref(m, n, l, seed):
+    rng = np.random.default_rng(seed)
+    q, a = _mat(rng, m, l), _mat(rng, m, n)
+    assert_allclose(k.qt_a(q, a), ref.qt_a(q, a), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, l=LS, seed=st.integers(0, 2**16))
+def test_qb_matmul_matches_ref(m, n, l, seed):
+    rng = np.random.default_rng(seed)
+    q, b = _mat(rng, m, l), _mat(rng, l, n)
+    assert_allclose(k.qb_matmul(q, b), q @ b, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, l=LS, beta=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+def test_recon_axpy_matches_ref(m, n, l, beta, seed):
+    rng = np.random.default_rng(seed)
+    q, b, g = _mat(rng, m, l), _mat(rng, l, n), _mat(rng, m, n)
+    assert_allclose(
+        u.recon_axpy(q, b, g, beta), ref.recon_axpy(q, b, g, beta), rtol=2e-5, atol=2e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, n=DIMS, l=LS, seed=st.integers(0, 2**16))
+def test_recon_neg_stats_matches_ref(m, n, l, seed):
+    rng = np.random.default_rng(seed)
+    q, b = _mat(rng, m, l), _mat(rng, l, n)
+    neg, cnt = u.recon_neg_stats(q, b, n)
+    rneg, rcnt = ref.recon_neg_stats(q, b)
+    assert_allclose(jnp.sum(neg), rneg, rtol=1e-4, atol=1e-4)
+    assert_allclose(jnp.sum(cnt), rcnt, rtol=0, atol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, n=DIMS, l=LS, seed=st.integers(0, 2**16))
+def test_recon_v_update_matches_ref_and_nonneg(m, n, l, seed):
+    rng = np.random.default_rng(seed)
+    q, b, g = _mat(rng, m, l), _mat(rng, l, n), _mat(rng, m, n)
+    zeta = ref.zeta_of(q @ b)
+    got = u.recon_v_update(q, b, g, zeta, 0.999)
+    want = ref.recon_v_update(q, b, g, zeta, 0.999)
+    assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+    # Eq. (2) invariant: the repaired second moment is strictly nonnegative.
+    assert float(jnp.min(got)) >= 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=DIMS,
+    n=DIMS,
+    lr=st.floats(1e-6, 1e-1),
+    wd=st.floats(0.0, 0.2),
+    seed=st.integers(0, 2**16),
+)
+def test_adamw_apply_matches_ref(m, n, lr, wd, seed):
+    rng = np.random.default_rng(seed)
+    w, mm = _mat(rng, m, n), _mat(rng, m, n)
+    v = jnp.abs(_mat(rng, m, n))
+    got = u.adamw_apply(w, mm, v, lr, 1.25, 1.002, wd, 1e-8)
+    want = ref.adamw_apply(w, mm, v, lr, 1.25, 1.002, wd, 1e-8)
+    assert_allclose(got, want, rtol=2e-5, atol=2e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, n=DIMS, lr=st.floats(1e-6, 1e-1), seed=st.integers(0, 2**16))
+def test_lion_apply_matches_ref(m, n, lr, seed):
+    rng = np.random.default_rng(seed)
+    w, c = _mat(rng, m, n), _mat(rng, m, n)
+    got = u.lion_apply(w, c, lr, 0.1)
+    want = ref.lion_apply(w, c, lr, 0.1)
+    assert_allclose(got, want, rtol=2e-5, atol=2e-7)
+
+
+def test_lion_apply_sign_edge_zero():
+    """sign(0) must be 0 — a zero momentum+gradient entry must not move."""
+    w = jnp.ones((8, 8), jnp.float32)
+    c = jnp.zeros((8, 8), jnp.float32)
+    out = u.lion_apply(w, c, 0.1, 0.0)
+    assert_allclose(out, w)
+
+
+def test_scalar_pack_layout_stable():
+    """The (1,8) scalar-pack layout is a cross-language ABI with the rust
+    coordinator; lock the indices."""
+    s = u.pack_scalars(lr=1.0, c1=2.0, c2=3.0, wd=4.0, eps=5.0, beta=6.0, zeta=7.0)
+    assert s.shape == (1, 8)
+    assert_allclose(np.asarray(s)[0], [1, 2, 3, 4, 5, 6, 7, 0])

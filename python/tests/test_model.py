@@ -1,0 +1,179 @@
+"""L2 model graphs: shapes, masking semantics, gradient flow, LoRA
+freezing, classification head — all on the `nano` preset."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as mdl
+from compile.configs import PRESETS
+
+CFG = PRESETS["nano"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return mdl.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def params_cls():
+    return mdl.init_params(CFG, seed=0, cls_head=True)
+
+
+def _flat(p, spec):
+    return [p[name] for name, _, _ in spec]
+
+
+def _batch(rng):
+    toks = rng.integers(1, CFG.vocab, size=(CFG.batch, CFG.seq), dtype=np.int32)
+    tgts = np.roll(toks, -1, axis=1).astype(np.int32)
+    tgts[:, -1] = mdl.PAD_TARGET
+    return jnp.asarray(toks), jnp.asarray(tgts)
+
+
+def test_param_spec_counts():
+    spec = mdl.param_spec(CFG)
+    mats = [s for s in spec if s[2] == "matrix"]
+    vecs = [s for s in spec if s[2] == "vector"]
+    assert len(mats) == 6 * CFG.n_layers
+    assert len(vecs) == 4 * CFG.n_layers + 2
+    n_params = sum(int(np.prod(s)) for _, s, _ in spec)
+    assert n_params > 0
+    # cls variant appends exactly the head
+    assert len(mdl.param_spec(CFG, cls_head=True)) == len(spec) + 1
+
+
+def test_forward_shapes(params):
+    rng = np.random.default_rng(0)
+    toks, _ = _batch(rng)
+    logits = mdl.forward(params, toks, CFG)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(params):
+    """Changing a future token must not affect past logits."""
+    rng = np.random.default_rng(1)
+    toks, _ = _batch(rng)
+    logits1 = mdl.forward(params, toks, CFG)
+    toks2 = np.asarray(toks).copy()
+    toks2[:, -1] = (toks2[:, -1] + 1) % CFG.vocab
+    logits2 = mdl.forward(params, jnp.asarray(toks2), CFG)
+    assert_allclose(logits1[:, :-1], logits2[:, :-1], atol=1e-5)
+
+
+def test_loss_mask_ignores_padding(params):
+    rng = np.random.default_rng(2)
+    toks, tgts = _batch(rng)
+    loss1 = mdl.lm_loss(params, toks, tgts, CFG)
+    # corrupt only padded positions: loss must not change
+    t2 = np.asarray(tgts).copy()
+    assert (t2[:, -1] == mdl.PAD_TARGET).all()
+    loss2 = mdl.lm_loss(params, toks, jnp.asarray(t2), CFG)
+    assert_allclose(loss1, loss2, rtol=1e-6)
+    # fresh model: loss ~ ln(vocab)
+    assert abs(float(loss1) - np.log(CFG.vocab)) < 1.0
+
+
+def test_fwd_bwd_grads_flow(params):
+    rng = np.random.default_rng(3)
+    toks, tgts = _batch(rng)
+    spec = mdl.param_spec(CFG)
+    f = mdl.make_fwd_bwd(CFG)
+    outs = f(toks, tgts, *_flat(params, spec))
+    loss, grads = outs[0], outs[1:]
+    assert len(grads) == len(spec)
+    for (name, shape, _), g in zip(spec, grads):
+        assert g.shape == tuple(shape), name
+        assert bool(jnp.all(jnp.isfinite(g))), name
+    nonzero = sum(float(jnp.linalg.norm(g)) > 0 for g in grads)
+    assert nonzero >= len(spec) - 2  # pos_emb beyond T etc. may be tiny but not zero
+
+
+def test_sgd_on_fwd_bwd_reduces_loss(params):
+    """Three plain-SGD steps on one batch must reduce the loss — the
+    definitive 'gradients point downhill' check for the lowered graph."""
+    rng = np.random.default_rng(4)
+    toks, tgts = _batch(rng)
+    spec = mdl.param_spec(CFG)
+    f = jax.jit(mdl.make_fwd_bwd(CFG))
+    flat = _flat(params, spec)
+    losses = []
+    for _ in range(3):
+        outs = f(toks, tgts, *flat)
+        losses.append(float(outs[0]))
+        flat = [w - 0.5 * g for w, g in zip(flat, outs[1:])]
+    assert losses[-1] < losses[0]
+
+
+def test_eval_graph_correct_mask(params):
+    rng = np.random.default_rng(5)
+    toks, tgts = _batch(rng)
+    spec = mdl.param_spec(CFG)
+    loss, mask = mdl.make_eval(CFG)(toks, tgts, *_flat(params, spec))
+    assert mask.shape == (CFG.batch, CFG.seq)
+    m = np.asarray(mask)
+    assert ((m == 0) | (m == 1)).all()
+    assert m[:, -1].sum() == 0  # padded positions are never "correct"
+
+
+def test_lora_grads_only_adapters(params):
+    rng = np.random.default_rng(6)
+    toks, tgts = _batch(rng)
+    spec = mdl.param_spec(CFG)
+    aspec = mdl.lora_spec(CFG)
+    adapters = []
+    for name, shape in aspec:
+        if name.endswith("lora_B"):
+            adapters.append(jnp.zeros(shape, jnp.float32))
+        else:
+            adapters.append(jnp.asarray(rng.standard_normal(shape) * 0.02, jnp.float32))
+    f = mdl.make_lora_fwd_bwd(CFG, alpha=16.0)
+    outs = f(toks, tgts, *_flat(params, spec), *adapters)
+    assert len(outs) == 1 + len(aspec)
+    # with B = 0, dL/dA = 0 but dL/dB != 0 (standard LoRA init property)
+    for (name, _), g in zip(aspec, outs[1:]):
+        norm = float(jnp.linalg.norm(g))
+        if name.endswith("lora_A"):
+            assert norm < 1e-6, name
+        else:
+            assert norm > 0, name
+
+
+def test_lora_zero_b_matches_base_forward(params):
+    rng = np.random.default_rng(7)
+    toks, tgts = _batch(rng)
+    spec = mdl.param_spec(CFG)
+    aspec = mdl.lora_spec(CFG)
+    adapters = [jnp.zeros(shape, jnp.float32) for _, shape in aspec]
+    loss_lora, _ = mdl.make_lora_eval(CFG, 16.0)(toks, tgts, *_flat(params, spec), *adapters)
+    loss_base, _ = mdl.make_eval(CFG)(toks, tgts, *_flat(params, spec))
+    assert_allclose(loss_lora, loss_base, rtol=1e-6)
+
+
+def test_cls_graph(params_cls):
+    rng = np.random.default_rng(8)
+    toks = jnp.asarray(rng.integers(1, CFG.vocab, size=(CFG.batch, CFG.seq), dtype=np.int32))
+    labels = jnp.asarray(rng.integers(0, CFG.n_cls, size=(CFG.batch,), dtype=np.int32))
+    spec = mdl.param_spec(CFG, cls_head=True)
+    f = mdl.make_cls_fwd_bwd(CFG)
+    outs = f(toks, labels, *_flat(params_cls, spec))
+    assert len(outs) == 1 + len(spec)
+    assert abs(float(outs[0]) - np.log(CFG.n_cls)) < 0.7
+    loss, correct = mdl.make_cls_eval(CFG)(toks, labels, *_flat(params_cls, spec))
+    assert correct.shape == (CFG.batch,)
+
+
+def test_cls_lora_head_trains(params_cls):
+    rng = np.random.default_rng(9)
+    toks = jnp.asarray(rng.integers(1, CFG.vocab, size=(CFG.batch, CFG.seq), dtype=np.int32))
+    labels = jnp.asarray(rng.integers(0, CFG.n_cls, size=(CFG.batch,), dtype=np.int32))
+    spec = mdl.param_spec(CFG, cls_head=True)
+    aspec = mdl.lora_spec(CFG)
+    adapters = [jnp.zeros(shape, jnp.float32) for _, shape in aspec]
+    outs = mdl.make_cls_lora_fwd_bwd(CFG, 16.0)(toks, labels, *_flat(params_cls, spec), *adapters)
+    ghead = outs[1]
+    assert float(jnp.linalg.norm(ghead)) > 0

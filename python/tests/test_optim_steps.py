@@ -1,0 +1,249 @@
+"""Optimizer step graphs vs independent numpy references, plus the
+convergence-critical invariants (second-moment nonnegativity, exactness of
+MLorc at full rank, GaLore/LDAdam projection algebra).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import optim_steps as opt
+from compile import rsvd_lib
+from compile.configs import HPARAMS, OptHParams
+
+
+def _np_mgs(y):
+    m, l = y.shape
+    q = np.zeros((m, l), np.float64)
+    for j in range(l):
+        v = y[:, j].astype(np.float64)
+        for _ in range(2):
+            for i in range(j):
+                v -= q[:, i] * (q[:, i] @ v)
+        n2 = v @ v
+        q[:, j] = v / np.sqrt(n2) if n2 > 1e-30 else 0.0
+    return q
+
+
+def _np_rsvd_qb(a, om):
+    y = a @ om
+    q = _np_mgs(y)
+    return q, q.T @ a
+
+
+def _np_zeta(recon):
+    neg = recon < 0
+    if not neg.any():
+        return 0.0
+    return float(np.abs(recon[neg]).mean())
+
+
+class TestMLorcAdamW:
+    def _numpy_step(self, w, g, mq, mb, vq, vb, om_m, om_v, lr, c1, c2, hp):
+        """Independent Algorithm 1 implementation (float64 numpy)."""
+        m_rec = mq @ mb
+        v_rec = vq @ vb
+        zeta = _np_zeta(v_rec)
+        v_fix = np.where(v_rec < 0, zeta, v_rec)
+        mt = hp.beta1 * m_rec + (1 - hp.beta1) * g
+        vt = hp.beta2 * v_fix + (1 - hp.beta2) * g * g
+        mq2, mb2 = _np_rsvd_qb(mt, om_m)
+        vq2, vb2 = _np_rsvd_qb(vt, om_v)
+        w2 = w - lr * ((mt * c1) / (np.sqrt(vt * c2) + hp.eps) + hp.weight_decay * w)
+        return w2, mq2 @ mb2, vq2 @ vb2
+
+    @pytest.mark.parametrize("shape", [(16, 16), (16, 64), (64, 16)])
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    def test_matches_numpy(self, shape, use_pallas):
+        rng = np.random.default_rng(0)
+        m, n = shape
+        r = 4
+        hp = HPARAMS["mlorc_adamw"]
+        sg = opt.build_mlorc_adamw(shape, r, 0, hp, use_pallas=use_pallas)
+        w = rng.standard_normal(shape).astype(np.float32)
+        g = rng.standard_normal(shape).astype(np.float32)
+        mq = (rng.standard_normal((m, r)) * 0.1).astype(np.float32)
+        mb = (rng.standard_normal((r, n)) * 0.1).astype(np.float32)
+        vq = (rng.standard_normal((m, r)) * 0.01).astype(np.float32)
+        vb = (rng.standard_normal((r, n)) * 0.01).astype(np.float32)
+        om_m = rng.standard_normal((n, r)).astype(np.float32)
+        om_v = rng.standard_normal((n, r)).astype(np.float32)
+        outs = sg.fn(*map(jnp.asarray, (w, g, mq, mb, vq, vb, om_m, om_v)),
+                     jnp.float32(1e-3), jnp.float32(1.2), jnp.float32(1.01))
+        w2, mq2, mb2, vq2, vb2 = map(np.asarray, outs)
+        rw2, rm_rec, rv_rec = self._numpy_step(
+            w, g, mq, mb, vq, vb, om_m, om_v, 1e-3, 1.2, 1.01, hp
+        )
+        assert_allclose(w2, rw2, rtol=1e-4, atol=1e-5)
+        assert_allclose(mq2 @ mb2, rm_rec, rtol=1e-3, atol=1e-4)
+        assert_allclose(vq2 @ vb2, rv_rec, rtol=1e-3, atol=1e-5)
+
+    def test_full_rank_equals_adamw_first_step(self):
+        """With l = min(m, n) the QB compression is lossless, so from zero
+        state one MLorc-AdamW step must equal one AdamW step exactly
+        (with matched betas)."""
+        rng = np.random.default_rng(1)
+        m = n = 12
+        hp = OptHParams(beta1=0.8, beta2=0.999)
+        sg = opt.build_mlorc_adamw((m, n), n, 0, hp, use_pallas=False)
+        ref = opt.build_adamw((m, n), hp, use_pallas=False)
+        w = rng.standard_normal((m, n)).astype(np.float32)
+        g = rng.standard_normal((m, n)).astype(np.float32)
+        z = np.zeros((m, n), np.float32)
+        zf = np.zeros((m, n), np.float32)
+        om = rng.standard_normal((n, n)).astype(np.float32)
+        out_m = sg.fn(*map(jnp.asarray, (w, g, z[:, :n], z[:n, :], z[:, :n], z[:n, :], om, om)),
+                      jnp.float32(1e-2), jnp.float32(5.0), jnp.float32(1000.0))
+        out_a = ref.fn(*map(jnp.asarray, (w, g, zf, zf)),
+                       jnp.float32(1e-2), jnp.float32(5.0), jnp.float32(1000.0))
+        assert_allclose(np.asarray(out_m[0]), np.asarray(out_a[0]), rtol=1e-5, atol=1e-6)
+
+    def test_v_factors_reconstruct_nonneg_dominant(self):
+        """After a step, the v reconstruction error must be small relative
+        to v itself (rank-r momentum hypothesis on a low-rank gradient)."""
+        rng = np.random.default_rng(2)
+        m = n = 32
+        r = 4
+        hp = HPARAMS["mlorc_adamw"]
+        sg = opt.build_mlorc_adamw((m, n), r, 0, hp, use_pallas=False)
+        g = (rng.standard_normal((m, 2)) @ rng.standard_normal((2, n))).astype(np.float32)
+        z = np.zeros((m, r), np.float32)
+        zb = np.zeros((r, n), np.float32)
+        w = rng.standard_normal((m, n)).astype(np.float32)
+        om = rng.standard_normal((n, r)).astype(np.float32)
+        outs = sg.fn(*map(jnp.asarray, (w, g, z, zb, z, zb, om, om)),
+                     jnp.float32(1e-3), jnp.float32(1.0), jnp.float32(1.0))
+        vq2, vb2 = np.asarray(outs[3]), np.asarray(outs[4])
+        vt = (1 - hp.beta2) * g * g  # true v after first step (rank <= 4)
+        assert_allclose(vq2 @ vb2, vt, rtol=1e-3, atol=1e-7)
+
+
+class TestMLorcLion:
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(3)
+        m, n, r = 24, 40, 4
+        hp = HPARAMS["mlorc_lion"]
+        sg = opt.build_mlorc_lion((m, n), r, 0, hp, use_pallas=True)
+        w = rng.standard_normal((m, n)).astype(np.float32)
+        g = rng.standard_normal((m, n)).astype(np.float32)
+        mq = (rng.standard_normal((m, r)) * 0.1).astype(np.float32)
+        mb = (rng.standard_normal((r, n)) * 0.1).astype(np.float32)
+        om = rng.standard_normal((n, r)).astype(np.float32)
+        w2, mq2, mb2 = map(np.asarray, sg.fn(
+            *map(jnp.asarray, (w, g, mq, mb, om)), jnp.float32(1e-3)))
+        recon = mq @ mb
+        c = hp.beta1 * recon + (1 - hp.beta1) * g
+        mt = hp.beta2 * recon + (1 - hp.beta2) * g
+        assert_allclose(w2, w - 1e-3 * np.sign(c), rtol=1e-5, atol=1e-6)
+        q, b = _np_rsvd_qb(mt, om)
+        assert_allclose(mq2 @ mb2, q @ b, rtol=1e-3, atol=1e-5)
+
+
+class TestAblations:
+    def test_mlorc_m_keeps_exact_v(self):
+        rng = np.random.default_rng(4)
+        m = n = 16
+        hp = HPARAMS["mlorc_m"]
+        sg = opt.build_mlorc_m((m, n), 4, 0, hp, use_pallas=False)
+        w, g = (rng.standard_normal((m, n)).astype(np.float32) for _ in range(2))
+        v = np.abs(rng.standard_normal((m, n))).astype(np.float32)
+        mq = np.zeros((m, 4), np.float32)
+        mb = np.zeros((4, n), np.float32)
+        om = rng.standard_normal((n, 4)).astype(np.float32)
+        outs = sg.fn(*map(jnp.asarray, (w, g, mq, mb, v, om)),
+                     jnp.float32(1e-3), jnp.float32(1.0), jnp.float32(1.0))
+        v2 = np.asarray(outs[3])
+        assert_allclose(v2, hp.beta2 * v + (1 - hp.beta2) * g * g, rtol=1e-5, atol=1e-7)
+
+    def test_mlorc_v_keeps_exact_m(self):
+        rng = np.random.default_rng(5)
+        m = n = 16
+        hp = HPARAMS["mlorc_v"]
+        sg = opt.build_mlorc_v((m, n), 4, 0, hp, use_pallas=False)
+        w, g, m_ = (rng.standard_normal((m, n)).astype(np.float32) for _ in range(3))
+        vq = np.zeros((m, 4), np.float32)
+        vb = np.zeros((4, n), np.float32)
+        om = rng.standard_normal((n, 4)).astype(np.float32)
+        outs = sg.fn(*map(jnp.asarray, (w, g, m_, vq, vb, om)),
+                     jnp.float32(1e-3), jnp.float32(1.0), jnp.float32(1.0))
+        m2 = np.asarray(outs[1])
+        assert_allclose(m2, hp.beta1 * m_ + (1 - hp.beta1) * g, rtol=1e-5, atol=1e-7)
+
+
+class TestGaLore:
+    @pytest.mark.parametrize("shape", [(16, 48), (48, 16)])
+    def test_projection_algebra(self, shape):
+        """One GaLore step from zero state equals AdamW on the projected
+        gradient back-projected with scale alpha."""
+        rng = np.random.default_rng(6)
+        m, n = shape
+        r = 4
+        hp = HPARAMS["galore"]
+        proj = opt.build_galore_project(shape, r, 0)
+        sg = opt.build_galore(shape, r, 0, hp, use_pallas=False)
+        g = rng.standard_normal(shape).astype(np.float32)
+        w = rng.standard_normal(shape).astype(np.float32)
+        left = opt.galore_left(shape)
+        om = rng.standard_normal(((n if left else m), r)).astype(np.float32)
+        (p,) = proj.fn(jnp.asarray(g), jnp.asarray(om))
+        p = np.asarray(p)
+        rshape = (r, n) if left else (m, r)
+        M = np.zeros(rshape, np.float32)
+        V = np.zeros(rshape, np.float32)
+        w2, M2, V2 = map(np.asarray, sg.fn(
+            *map(jnp.asarray, (w, g, p, M, V)),
+            jnp.float32(1e-3), jnp.float32(10.0), jnp.float32(1000.0)))
+        rproj = p.T @ g if left else g @ p
+        assert_allclose(M2, 0.1 * rproj, rtol=1e-4, atol=1e-6)
+        nhat = (M2 * 10.0) / (np.sqrt(V2 * 1000.0) + hp.eps)
+        full = p @ nhat if left else nhat @ p.T
+        assert_allclose(w2, w - 1e-3 * hp.galore_scale * full, rtol=1e-4, atol=1e-5)
+
+    def test_projector_orthonormal(self):
+        rng = np.random.default_rng(7)
+        proj = opt.build_galore_project((32, 64), 4, 0)
+        g = rng.standard_normal((32, 64)).astype(np.float32)
+        om = rng.standard_normal((64, 4)).astype(np.float32)
+        (p,) = proj.fn(jnp.asarray(g), jnp.asarray(om))
+        assert_allclose(np.asarray(p.T @ p), np.eye(4), atol=5e-5)
+
+
+class TestLDAdamW:
+    def test_error_feedback_identity(self):
+        """a_t = g_t + e_t must split exactly into P R + e_{t+1}."""
+        rng = np.random.default_rng(8)
+        m, n, r = 32, 24, 4
+        hp = HPARAMS["ldadamw"]
+        sg = opt.build_ldadamw((m, n), r, 0, hp, use_pallas=False)
+        w, g, e = (rng.standard_normal((m, n)).astype(np.float32) for _ in range(3))
+        left = opt.galore_left((m, n))
+        pshape = (m, r) if left else (n, r)
+        rshape = (r, n) if left else (m, r)
+        p_old = _np_mgs(rng.standard_normal(pshape)).astype(np.float32)
+        M = (rng.standard_normal(rshape) * 0.1).astype(np.float32)
+        V = np.abs(rng.standard_normal(rshape) * 0.01).astype(np.float32)
+        om = rng.standard_normal(((n, r) if left else (m, r))).astype(np.float32)
+        w2, p2, M2, V2, e2 = map(np.asarray, sg.fn(
+            *map(jnp.asarray, (w, g, p_old, M, V, e, om)),
+            jnp.float32(1e-3), jnp.float32(1.0), jnp.float32(1.0)))
+        a = g + e
+        r_proj = p2.T @ a if left else a @ p2
+        recon = p2 @ r_proj if left else r_proj @ p2.T
+        assert_allclose(recon + e2, a, rtol=1e-4, atol=1e-5)
+        assert np.all(V2 >= 0)
+
+
+class TestVectorSteps:
+    def test_adamw_vector(self):
+        rng = np.random.default_rng(9)
+        hp = HPARAMS["adamw"]
+        sg = opt.build_adamw((32,), hp, use_pallas=True)  # falls back to ref on 1-D
+        w, g = (rng.standard_normal(32).astype(np.float32) for _ in range(2))
+        m = np.zeros(32, np.float32)
+        v = np.zeros(32, np.float32)
+        w2, m2, v2 = map(np.asarray, sg.fn(
+            *map(jnp.asarray, (w, g, m, v)),
+            jnp.float32(1e-2), jnp.float32(10.0), jnp.float32(1000.0)))
+        assert_allclose(m2, 0.1 * g, rtol=1e-5)
+        assert_allclose(v2, 0.001 * g * g, rtol=1e-4)

@@ -1,0 +1,137 @@
+"""QB-RSVD properties: orthonormality, exactness on low-rank inputs, the
+Halko tail bound (Lemma A.1 / B.1 of the paper), and equivalence of the QB
+form to Algorithm 3's truncated-SVD reconstruction at p = 0.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import rsvd_lib
+
+DIMS = st.sampled_from([16, 32, 48, 64, 128])
+
+
+def _lowrank(rng, m, n, r, noise=0.0):
+    a = rng.standard_normal((m, r)) @ rng.standard_normal((r, n))
+    if noise:
+        a = a + noise * rng.standard_normal((m, n))
+    return jnp.asarray(a, jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, n=DIMS, l=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+def test_mgs_q_orthonormal(m, n, l, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.standard_normal((m, l)), jnp.float32)
+    q = rsvd_lib.mgs_qr(y)
+    assert_allclose(q.T @ q, np.eye(l), atol=5e-5)
+
+
+def test_mgs_zero_column_drops_rank():
+    """An exactly-zero column (the momentum-starts-at-zero case) must yield
+    a zero Q column rather than NaNs; the rest stays orthonormal."""
+    rng = np.random.default_rng(0)
+    y = np.asarray(rng.standard_normal((32, 4)), np.float32)
+    y[:, 2] = 0.0
+    q = np.asarray(rsvd_lib.mgs_qr(jnp.asarray(y)))
+    assert np.isfinite(q).all()
+    assert float(np.linalg.norm(q[:, 2])) == 0.0
+    for j in (0, 1, 3):
+        assert abs(float(q[:, j] @ q[:, j]) - 1.0) < 1e-4
+
+
+def test_mgs_duplicate_column_keeps_orthonormality():
+    """A numerically dependent column re-normalizes to *some* direction in
+    f32; what matters is that Q stays orthonormal so QB is still a valid
+    range projector."""
+    rng = np.random.default_rng(0)
+    y = np.asarray(rng.standard_normal((32, 4)), np.float32)
+    y[:, 2] = y[:, 0]
+    q = rsvd_lib.mgs_qr(jnp.asarray(y))
+    assert_allclose(np.asarray(q.T @ q), np.eye(4), atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, n=DIMS, r=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_rsvd_exact_on_lowrank(m, n, r, seed):
+    """If rank(A) <= l the QB range finder reconstructs A exactly (w.p. 1)."""
+    rng = np.random.default_rng(seed)
+    a = _lowrank(rng, m, n, r)
+    om = jnp.asarray(rng.standard_normal((n, r)), jnp.float32)
+    q, b = rsvd_lib.rsvd_qb(a, om)
+    scale = float(jnp.linalg.norm(a))
+    assert float(jnp.linalg.norm(a - q @ b)) <= 1e-3 * scale
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_halko_tail_bound_statistical(seed):
+    """Lemma A.1: E||A - A_rs||_F <= (1 + r/(p-1))^(1/2) * tail. Checked in
+    expectation over 20 draws with 3x slack (it is an expectation bound)."""
+    rng = np.random.default_rng(seed)
+    m = n = 48
+    r, p = 4, 2
+    a = np.asarray(_lowrank(rng, m, n, r, noise=0.05))
+    s = np.linalg.svd(a, compute_uv=False)
+    tail = np.sqrt(np.sum(s[r:] ** 2))
+    gamma = np.sqrt(1.0 + r / (p - 1))
+    errs = []
+    for _ in range(20):
+        om = jnp.asarray(rng.standard_normal((n, r + p)), jnp.float32)
+        q, b = rsvd_lib.rsvd_qb(jnp.asarray(a), om)
+        errs.append(float(jnp.linalg.norm(jnp.asarray(a) - q @ b)))
+    assert np.mean(errs) <= 3.0 * gamma * tail
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+def test_qb_equals_alg3_at_p0(m, n, seed):
+    """At p = 0 (the paper's experimental setting) the QB reconstruction is
+    identical to Algorithm 3's U S V^T: the small SVD of B is a rotation."""
+    rng = np.random.default_rng(seed)
+    a = _lowrank(rng, m, n, 6, noise=0.1)
+    r = 4
+    om = jnp.asarray(rng.standard_normal((n, r)), jnp.float32)
+    q, b = rsvd_lib.rsvd_qb(a, om)
+    # Algorithm 3: SVD of B = U~ S V^T, U = Q U~; reconstruction U S V^T.
+    u_t, s, vt = np.linalg.svd(np.asarray(b), full_matrices=False)
+    alg3 = (np.asarray(q) @ u_t) @ np.diag(s) @ vt
+    assert_allclose(np.asarray(q @ b), alg3, rtol=1e-4, atol=1e-4)
+
+
+def test_svd_truncate_matches_best_rank_r_of_qb():
+    rng = np.random.default_rng(7)
+    m, n, r, p = 64, 48, 4, 4
+    a = _lowrank(rng, m, n, 8, noise=0.01)
+    om = jnp.asarray(rng.standard_normal((n, r + p)), jnp.float32)
+    q, b = rsvd_lib.rsvd_qb(a, om)
+    q2, b2 = rsvd_lib.svd_truncate(q, b, r)
+    assert q2.shape == (m, r) and b2.shape == (r, n)
+    # truncation error of QB -> rank r is the tail of B's spectrum
+    s = np.linalg.svd(np.asarray(b), compute_uv=False)
+    err = float(jnp.linalg.norm(q @ b - q2 @ b2))
+    assert_allclose(err, np.sqrt(np.sum(s[r:] ** 2)), rtol=1e-3, atol=1e-4)
+
+
+def test_lemma_b1_momentum_error_bound():
+    """Lemma B.1 shape: with m_t = beta2*QB(m_{t-1}) + (1-beta2) g_t, the
+    compression error of m_t is bounded by gamma*(1-beta2)*||g_t||_F since
+    the previous reconstruction is already rank l. Statistical check."""
+    rng = np.random.default_rng(3)
+    m, n, r, p = 48, 32, 4, 2
+    beta2 = 0.99
+    gamma = np.sqrt(1.0 + r / (p - 1))
+    mq = jnp.asarray(rng.standard_normal((m, r + p)), jnp.float32) * 0.1
+    mb = jnp.asarray(rng.standard_normal((r + p, n)), jnp.float32) * 0.1
+    errs, bounds = [], []
+    for i in range(20):
+        g = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        mt = beta2 * (mq @ mb) + (1 - beta2) * g
+        om = jnp.asarray(rng.standard_normal((n, r + p)), jnp.float32)
+        q, b = rsvd_lib.rsvd_qb(mt, om)
+        errs.append(float(jnp.linalg.norm(mt - q @ b)))
+        bounds.append(gamma * (1 - beta2) * float(jnp.linalg.norm(g)))
+    assert np.mean(errs) <= 3.0 * np.mean(bounds)

@@ -1,0 +1,73 @@
+//! Optimizer step-graph latency across every method and matrix shape of
+//! the tiny preset — the per-parameter cost table behind Table 4.
+//!
+//!     cargo bench --bench bench_opt_step
+
+use std::time::Instant;
+
+use mlorc::linalg::Rng;
+use mlorc::runtime::{GraphSpec, HostValue, Manifest, Runtime};
+use mlorc::tensor::Tensor;
+use mlorc::util::fsutil;
+
+/// Build zero/random inputs matching a step graph's IO table.
+fn inputs_for(spec: &GraphSpec, rng: &mut Rng) -> Vec<HostValue> {
+    spec.inputs
+        .iter()
+        .map(|io| {
+            if io.shape.is_empty() {
+                HostValue::scalar_f32(match io.name.as_str() {
+                    "lr" => 1e-3,
+                    _ => 1.0,
+                })
+            } else if io.name.starts_with("om") {
+                rng.gaussian_tensor(&io.shape, 1.0).into()
+            } else if io.name == "w" || io.name == "g" {
+                rng.gaussian_tensor(&io.shape, 0.1).into()
+            } else {
+                Tensor::zeros(&io.shape).into()
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let Ok(dir) = fsutil::artifacts_dir() else { return };
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let preset = manifest.preset("tiny").unwrap();
+    let mut rng = Rng::new(0);
+
+    println!("step-graph latency (us/step), tiny preset:");
+    print!("{:>16}", "method");
+    let shapes = ["128x128", "128x512", "512x128"];
+    for s in &shapes {
+        print!(" {s:>12}");
+    }
+    println!();
+    for (method, by_shape) in &preset.opt_steps {
+        print!("{method:>16}");
+        for key in &shapes {
+            match by_shape.get(*key) {
+                Some(spec) => {
+                    let g = rt.load(spec).unwrap();
+                    let inputs = inputs_for(spec, &mut rng);
+                    // warmup
+                    let _ = rt.execute(&g, &inputs).unwrap();
+                    let iters = 20;
+                    let t0 = Instant::now();
+                    for _ in 0..iters {
+                        let _ = rt.execute(&g, &inputs).unwrap();
+                    }
+                    print!(" {:>10.1}us", t0.elapsed().as_secs_f64() / iters as f64 * 1e6);
+                }
+                None => print!(" {:>12}", "-"),
+            }
+        }
+        println!();
+    }
+}

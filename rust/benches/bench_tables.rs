@@ -1,0 +1,48 @@
+//! Regenerate every paper table/figure at quick scale — the `cargo bench`
+//! entry point for the full experiment suite. Full-scale runs go through
+//! `mlorc bench --experiment <id>`.
+//!
+//!     cargo bench --bench bench_tables            # all, quick scale
+//!     cargo bench --bench bench_tables -- fig2    # one experiment
+
+use mlorc::bench_harness::{run_experiment, Scale, EXPERIMENT_IDS};
+use mlorc::runtime::{Manifest, Runtime};
+use mlorc::util::fsutil;
+
+fn main() {
+    mlorc::util::logger::init();
+    let Ok(dir) = fsutil::artifacts_dir() else { return };
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let out_dir = fsutil::results_dir().unwrap();
+
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let ids: Vec<&str> = if args.is_empty() {
+        EXPERIMENT_IDS.to_vec()
+    } else {
+        EXPERIMENT_IDS
+            .iter()
+            .copied()
+            .filter(|id| args.iter().any(|a| a == id))
+            .collect()
+    };
+
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match run_experiment(id, &manifest, &rt, Scale::Quick, None, None) {
+            Ok(report) => {
+                report.save(&out_dir).unwrap();
+                println!(
+                    "=== {id} ({:.1}s) -> results/{id}.md ===\n{}",
+                    t0.elapsed().as_secs_f64(),
+                    report.to_markdown()
+                );
+            }
+            Err(e) => println!("=== {id} FAILED: {e:#} ==="),
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! End-to-end training-step latency per method (tiny preset) with the
+//! fwd/bwd vs optimizer time split — the whole-stack view of Table 4.
+//!
+//!     cargo bench --bench bench_train_step
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::Trainer;
+use mlorc::runtime::{Manifest, Runtime};
+use mlorc::util::fsutil;
+
+fn main() {
+    let Ok(dir) = fsutil::artifacts_dir() else { return };
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let preset = manifest.preset("tiny").unwrap();
+    let steps = 15usize;
+
+    println!("end-to-end train step, tiny preset ({} steps each):", steps);
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>14}",
+        "method", "ms/step", "fwd/bwd ms", "opt ms", "tokens/s"
+    );
+    for &method in Method::all() {
+        let mut cfg = RunConfig::new("tiny", method, TaskKind::MathChain, steps);
+        cfg.log_every = 0;
+        cfg.eval_batches = 1;
+        let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+        // warmup (includes XLA compile)
+        tr.train_step().unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            tr.train_step().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let per = wall / steps as f64;
+        let toks = (preset.model.batch * preset.model.seq) as f64 / per;
+        // first warmup step included in the split totals; subtract nothing,
+        // report the split proportionally
+        let split = tr.metrics.fwd_bwd_secs + tr.metrics.opt_secs;
+        let f = tr.metrics.fwd_bwd_secs / split;
+        println!(
+            "{:<14} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>12.0}",
+            method.name(),
+            per * 1e3,
+            per * 1e3 * f,
+            per * 1e3 * (1.0 - f),
+            toks
+        );
+    }
+    println!("\npaper expectation (Table 4): mlorc ≈ lora < galore; full fastest per-step but 3x the state memory");
+}

@@ -1,0 +1,14 @@
+//! Bench harness — regenerates every table and figure of the paper
+//! (DESIGN.md §5 experiment index) on the synthetic substrate.
+//!
+//! Entry points: `mlorc bench --experiment <id>` (full scale) and the
+//! `cargo bench` binaries (quick scale).
+
+mod experiments;
+pub mod plot;
+mod report;
+mod theory;
+
+pub use experiments::{run_experiment, Scale, EXPERIMENT_IDS};
+pub use report::Report;
+pub use theory::run_theory;

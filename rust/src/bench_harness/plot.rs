@@ -1,0 +1,126 @@
+//! ASCII line plots for loss curves and σ-ratio series — the repo has no
+//! plotting stack, so figure experiments render directly into the
+//! markdown reports (and the e2e example's console output).
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { name: name.to_string(), points }
+    }
+}
+
+/// Render series into a fixed-size character grid. Each series gets a
+/// distinct glyph; overlapping cells show the later series.
+pub fn ascii_plot(series: &[Series], width: usize, height: usize, title: &str) -> String {
+    const GLYPHS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let pts: Vec<&(f64, f64)> = series.iter().flat_map(|s| &s.points).collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in pts {
+        xmin = xmin.min(*x);
+        xmax = xmax.max(*x);
+        ymin = ymin.min(*y);
+        ymax = ymax.max(*y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for (x, y) in &s.points {
+            let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let row = (((ymax - y) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>10.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:>10.3} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>11}+{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>12}{:<w$.0}{:>8.0}\n", "", xmin, xmax, w = width - 7));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out
+}
+
+/// Downsample a series to at most `n` evenly spaced points (plots stay
+/// legible; loss curves carry thousands of steps).
+pub fn decimate(points: &[(f64, f64)], n: usize) -> Vec<(f64, f64)> {
+    if points.len() <= n || n == 0 {
+        return points.to_vec();
+    }
+    let stride = points.len() as f64 / n as f64;
+    (0..n)
+        .map(|i| points[((i as f64 * stride) as usize).min(points.len() - 1)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_contains_series_glyphs_and_legend() {
+        let s1 = Series::new("full", vec![(0.0, 5.0), (10.0, 1.0)]);
+        let s2 = Series::new("mlorc", vec![(0.0, 5.0), (10.0, 1.2)]);
+        let out = ascii_plot(&[s1, s2], 40, 10, "loss");
+        assert!(out.contains('*') && out.contains('o'));
+        assert!(out.contains("* = full"));
+        assert!(out.contains("o = mlorc"));
+        assert!(out.lines().count() > 10);
+    }
+
+    #[test]
+    fn extremes_map_to_grid_corners() {
+        let s = Series::new("x", vec![(0.0, 0.0), (1.0, 1.0)]);
+        let out = ascii_plot(&[s], 20, 5, "t");
+        let lines: Vec<&str> = out.lines().collect();
+        // max y on the first grid row, min on the last
+        assert!(lines[1].ends_with('*') || lines[1].contains('*'));
+        assert!(lines[5].contains('*'));
+    }
+
+    #[test]
+    fn empty_and_degenerate_input() {
+        assert!(ascii_plot(&[], 10, 5, "t").contains("no data"));
+        let s = Series::new("const", vec![(1.0, 2.0), (2.0, 2.0)]);
+        let out = ascii_plot(&[s], 10, 5, "t");
+        assert!(out.contains('*')); // flat series still renders
+    }
+
+    #[test]
+    fn decimate_preserves_bounds() {
+        let pts: Vec<(f64, f64)> = (0..1000).map(|i| (i as f64, i as f64)).collect();
+        let d = decimate(&pts, 50);
+        assert_eq!(d.len(), 50);
+        assert_eq!(d[0], (0.0, 0.0));
+        assert!(d.last().unwrap().0 > 950.0);
+        assert_eq!(decimate(&pts[..10], 50).len(), 10);
+    }
+}

@@ -1,0 +1,120 @@
+//! Markdown/JSON report writer for experiment outputs.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub paper_ref: String,
+    /// markdown body (tables, series)
+    pub body: String,
+    /// machine-readable payload
+    pub data: Json,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, paper_ref: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            paper_ref: paper_ref.to_string(),
+            body: String::new(),
+            data: Json::Obj(Default::default()),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Append a markdown table: header row + rows.
+    pub fn table(&mut self, headers: &[&str], rows: &[Vec<String>]) {
+        self.body.push_str("\n| ");
+        self.body.push_str(&headers.join(" | "));
+        self.body.push_str(" |\n|");
+        for _ in headers {
+            self.body.push_str("---|");
+        }
+        self.body.push('\n');
+        for row in rows {
+            self.body.push_str("| ");
+            self.body.push_str(&row.join(" | "));
+            self.body.push_str(" |\n");
+        }
+    }
+
+    pub fn line(&mut self, s: &str) {
+        self.body.push_str(s);
+        self.body.push('\n');
+    }
+
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("# {} — {}\n\nreproduces: {}\n", self.id, self.title, self.paper_ref);
+        out.push_str(&self.body);
+        if !self.notes.is_empty() {
+            out.push_str("\nNotes:\n");
+            for n in &self.notes {
+                out.push_str(&format!("- {n}\n"));
+            }
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        fsutil::write_atomic(&dir.join(format!("{}.md", self.id)), self.to_markdown().as_bytes())?;
+        fsutil::write_atomic(
+            &dir.join(format!("{}.json", self.id)),
+            self.data.to_string_pretty().as_bytes(),
+        )
+    }
+}
+
+/// Format bytes as GB/MB with 1 decimal.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.1} MB", b as f64 / (1u64 << 20) as f64)
+    } else {
+        format!("{:.1} kB", b as f64 / 1024.0)
+    }
+}
+
+/// mean ± std over a sample.
+pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    let n = xs.len().max(1) as f32;
+    let mean = xs.iter().sum::<f32>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_table_shape() {
+        let mut r = Report::new("tX", "Test", "Table X");
+        r.table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let md = r.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn stats_and_bytes() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-6);
+        assert!((s - (2.0f32 / 3.0).sqrt()).abs() < 1e-6);
+        assert_eq!(fmt_bytes(2 * 1024 * 1024), "2.0 MB");
+        assert!(fmt_bytes(3 << 30).contains("GB"));
+    }
+}

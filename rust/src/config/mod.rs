@@ -1,0 +1,11 @@
+//! Run configuration: what to train, with which method, for how long.
+//!
+//! Model *dimensions* come from the manifest (single source of truth);
+//! this module owns everything else — method selection, schedule, seeds,
+//! task, eval cadence — loadable from JSON or built in code by examples.
+
+mod run;
+mod schedule;
+
+pub use run::{Method, RunConfig, TaskKind};
+pub use schedule::LrSchedule;

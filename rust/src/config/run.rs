@@ -1,0 +1,289 @@
+//! RunConfig: one training/evaluation run, JSON-serializable so the
+//! launcher, examples and the bench harness share the exact same spec.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::LrSchedule;
+
+/// Optimization method — the rows of the paper's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    FullAdamW,
+    FullLion,
+    MlorcAdamW,
+    MlorcLion,
+    MlorcM, // ablation: compress first moment only (Table 7)
+    MlorcV, // ablation: compress second moment only (Table 7)
+    LoraAdamW,
+    LoraLion,
+    Galore,
+    LdAdamW,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FullAdamW => "full_adamw",
+            Method::FullLion => "full_lion",
+            Method::MlorcAdamW => "mlorc_adamw",
+            Method::MlorcLion => "mlorc_lion",
+            Method::MlorcM => "mlorc_m",
+            Method::MlorcV => "mlorc_v",
+            Method::LoraAdamW => "lora_adamw",
+            Method::LoraLion => "lora_lion",
+            Method::Galore => "galore",
+            Method::LdAdamW => "ldadamw",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "full_adamw" | "full" => Method::FullAdamW,
+            "full_lion" => Method::FullLion,
+            "mlorc_adamw" | "mlorc" => Method::MlorcAdamW,
+            "mlorc_lion" => Method::MlorcLion,
+            "mlorc_m" => Method::MlorcM,
+            "mlorc_v" => Method::MlorcV,
+            "lora_adamw" | "lora" => Method::LoraAdamW,
+            "lora_lion" => Method::LoraLion,
+            "galore" => Method::Galore,
+            "ldadamw" => Method::LdAdamW,
+            _ => bail!("unknown method '{s}'"),
+        })
+    }
+
+    /// Uses the LoRA adapter graphs instead of full fwd/bwd.
+    pub fn is_lora(&self) -> bool {
+        matches!(self, Method::LoraAdamW | Method::LoraLion)
+    }
+
+    /// Step-graph method name for *compressed matrix* parameters.
+    pub fn matrix_step(&self) -> &'static str {
+        match self {
+            Method::FullAdamW => "adamw",
+            Method::FullLion => "lion",
+            Method::MlorcAdamW => "mlorc_adamw",
+            Method::MlorcLion => "mlorc_lion",
+            Method::MlorcM => "mlorc_m",
+            Method::MlorcV => "mlorc_v",
+            Method::LoraAdamW => "adamw", // adapters take the plain path
+            Method::LoraLion => "lion",
+            Method::Galore => "galore",
+            Method::LdAdamW => "ldadamw",
+        }
+    }
+
+    /// Step-graph method for vectors/embeddings/heads (always uncompressed).
+    pub fn plain_step(&self) -> &'static str {
+        match self {
+            Method::FullLion | Method::MlorcLion | Method::LoraLion => "lion",
+            _ => "adamw",
+        }
+    }
+
+    /// Paper-tuned default peak LR for the math-chain-style LM task
+    /// (Table 8 analog; confirmed by our own sweep in `table8`).
+    pub fn default_lr(&self) -> f32 {
+        match self {
+            Method::FullAdamW => 4e-4,
+            Method::FullLion => 5e-5,
+            Method::MlorcAdamW => 7e-4,
+            Method::MlorcLion => 5e-5,
+            Method::MlorcM | Method::MlorcV => 7e-4,
+            Method::LoraAdamW => 2e-3,
+            Method::LoraLion => 2e-4,
+            Method::Galore => 3e-3,
+            Method::LdAdamW => 1e-3,
+        }
+    }
+
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::FullAdamW,
+            Method::FullLion,
+            Method::MlorcAdamW,
+            Method::MlorcLion,
+            Method::MlorcM,
+            Method::MlorcV,
+            Method::LoraAdamW,
+            Method::LoraLion,
+            Method::Galore,
+            Method::LdAdamW,
+        ]
+    }
+}
+
+/// Which synthetic workload to run (DESIGN.md §2 substitutions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// MetaMathQA -> GSM8K analog: arithmetic chains, exact-match eval.
+    MathChain,
+    /// CodeFeedback -> HumanEval analog: typed-bracket closing, exact match.
+    StackCode,
+    /// One of the 8 SynGLUE classification tasks (Table 5).
+    SynGlue(u8),
+}
+
+impl TaskKind {
+    pub fn name(&self) -> String {
+        match self {
+            TaskKind::MathChain => "math_chain".to_string(),
+            TaskKind::StackCode => "stack_code".to_string(),
+            TaskKind::SynGlue(i) => format!("synglue_{}", crate::data::SYNGLUE_NAMES[*i as usize]),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TaskKind> {
+        if s == "math_chain" || s == "math" {
+            return Ok(TaskKind::MathChain);
+        }
+        if s == "stack_code" || s == "code" {
+            return Ok(TaskKind::StackCode);
+        }
+        if let Some(rest) = s.strip_prefix("synglue_") {
+            if let Some(i) = crate::data::SYNGLUE_NAMES.iter().position(|n| *n == rest) {
+                return Ok(TaskKind::SynGlue(i as u8));
+            }
+        }
+        bail!("unknown task '{s}'")
+    }
+
+    pub fn is_classification(&self) -> bool {
+        matches!(self, TaskKind::SynGlue(_))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub preset: String,
+    pub method: Method,
+    pub task: TaskKind,
+    pub steps: usize,
+    pub peak_lr: f32,
+    pub schedule: LrSchedule,
+    pub seed: u64,
+    /// evaluate every N steps (0 = only at the end)
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// GaLore subspace refresh period T (paper: 50-300)
+    pub galore_update_freq: usize,
+    /// spectral probe cadence (0 = off) — Figures 1/4
+    pub spectral_every: usize,
+    /// free gradient buffers eagerly, layer by layer (per-layer updates)
+    pub per_layer_updates: bool,
+    pub log_every: usize,
+}
+
+impl RunConfig {
+    pub fn new(preset: &str, method: Method, task: TaskKind, steps: usize) -> RunConfig {
+        RunConfig {
+            preset: preset.to_string(),
+            method,
+            task,
+            steps,
+            peak_lr: method.default_lr(),
+            schedule: LrSchedule::paper_default(steps),
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            galore_update_freq: 50,
+            spectral_every: 0,
+            per_layer_updates: true,
+            log_every: 10,
+        }
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.peak_lr = lr;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("method", Json::str(self.method.name())),
+            ("task", Json::str(self.task.name())),
+            ("steps", Json::num(self.steps as f64)),
+            ("peak_lr", Json::num(self.peak_lr as f64)),
+            ("schedule", self.schedule.to_json()),
+            ("seed", Json::num(self.seed as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+            ("galore_update_freq", Json::num(self.galore_update_freq as f64)),
+            ("spectral_every", Json::num(self.spectral_every as f64)),
+            ("per_layer_updates", Json::Bool(self.per_layer_updates)),
+            ("log_every", Json::num(self.log_every as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        Ok(RunConfig {
+            preset: j.req("preset")?.as_str()?.to_string(),
+            method: Method::parse(j.req("method")?.as_str()?)?,
+            task: TaskKind::parse(j.req("task")?.as_str()?)?,
+            steps: j.req("steps")?.as_usize()?,
+            peak_lr: j.req("peak_lr")?.as_f64()? as f32,
+            schedule: LrSchedule::from_json(j.req("schedule")?)?,
+            seed: j.req("seed")?.as_f64()? as u64,
+            eval_every: j.req("eval_every")?.as_usize()?,
+            eval_batches: j.req("eval_batches")?.as_usize()?,
+            galore_update_freq: j.req("galore_update_freq")?.as_usize()?,
+            spectral_every: j.req("spectral_every")?.as_usize()?,
+            per_layer_updates: j.req("per_layer_updates")?.as_bool()?,
+            log_every: j.req("log_every")?.as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()).unwrap(), *m);
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn task_parse_roundtrip() {
+        for t in [
+            TaskKind::MathChain,
+            TaskKind::StackCode,
+            TaskKind::SynGlue(0),
+            TaskKind::SynGlue(7),
+        ] {
+            assert_eq!(TaskKind::parse(&t.name()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = RunConfig::new("tiny", Method::MlorcAdamW, TaskKind::MathChain, 100)
+            .with_lr(3e-4)
+            .with_seed(7);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.preset, "tiny");
+        assert_eq!(back.method, Method::MlorcAdamW);
+        assert_eq!(back.peak_lr, 3e-4);
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.schedule, cfg.schedule);
+    }
+
+    #[test]
+    fn lora_routing() {
+        assert!(Method::LoraAdamW.is_lora());
+        assert_eq!(Method::LoraAdamW.matrix_step(), "adamw");
+        assert_eq!(Method::MlorcLion.plain_step(), "lion");
+        assert_eq!(Method::Galore.plain_step(), "adamw");
+    }
+}

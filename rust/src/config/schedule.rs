@@ -1,0 +1,129 @@
+//! Learning-rate schedules. The paper uses linear decay with a 0.03 warmup
+//! ratio for all fine-tuning runs (Section 4.1).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Linear warmup to peak over `warmup` steps, then linear decay to 0
+    /// at `total` steps (the paper's scheduler).
+    LinearWarmupDecay { warmup: usize, total: usize },
+    /// Inverse-sqrt decay after warmup (pre-training style; extension).
+    InverseSqrt { warmup: usize },
+}
+
+impl LrSchedule {
+    /// Paper defaults: warmup_ratio 0.03 of total steps.
+    pub fn paper_default(total_steps: usize) -> LrSchedule {
+        LrSchedule::LinearWarmupDecay {
+            warmup: ((total_steps as f64) * 0.03).ceil() as usize,
+            total: total_steps,
+        }
+    }
+
+    /// Multiplier applied to the peak learning rate at step `t` (0-based).
+    pub fn factor(&self, t: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::LinearWarmupDecay { warmup, total } => {
+                let t1 = t + 1;
+                if warmup > 0 && t1 <= warmup {
+                    t1 as f32 / warmup as f32
+                } else if t1 >= total {
+                    0.0
+                } else {
+                    let rem = (total - t1) as f32;
+                    let span = (total.max(warmup + 1) - warmup) as f32;
+                    rem / span
+                }
+            }
+            LrSchedule::InverseSqrt { warmup } => {
+                let t1 = (t + 1) as f32;
+                let w = warmup.max(1) as f32;
+                if t1 <= w {
+                    t1 / w
+                } else {
+                    (w / t1).sqrt()
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match *self {
+            LrSchedule::Constant => Json::obj(vec![("kind", Json::str("constant"))]),
+            LrSchedule::LinearWarmupDecay { warmup, total } => Json::obj(vec![
+                ("kind", Json::str("linear_warmup_decay")),
+                ("warmup", Json::num(warmup as f64)),
+                ("total", Json::num(total as f64)),
+            ]),
+            LrSchedule::InverseSqrt { warmup } => Json::obj(vec![
+                ("kind", Json::str("inverse_sqrt")),
+                ("warmup", Json::num(warmup as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<LrSchedule> {
+        match j.req("kind")?.as_str()? {
+            "constant" => Ok(LrSchedule::Constant),
+            "linear_warmup_decay" => Ok(LrSchedule::LinearWarmupDecay {
+                warmup: j.req("warmup")?.as_usize()?,
+                total: j.req("total")?.as_usize()?,
+            }),
+            "inverse_sqrt" => Ok(LrSchedule::InverseSqrt { warmup: j.req("warmup")?.as_usize()? }),
+            k => anyhow::bail!("unknown schedule kind '{k}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = LrSchedule::LinearWarmupDecay { warmup: 10, total: 110 };
+        assert!((s.factor(0) - 0.1).abs() < 1e-6);
+        assert!((s.factor(9) - 1.0).abs() < 1e-6);
+        assert!(s.factor(10) < 1.0);
+        assert!(s.factor(50) > s.factor(100));
+        assert_eq!(s.factor(109), 0.0);
+        assert_eq!(s.factor(500), 0.0);
+    }
+
+    #[test]
+    fn paper_default_ratio() {
+        let s = LrSchedule::paper_default(1000);
+        match s {
+            LrSchedule::LinearWarmupDecay { warmup, total } => {
+                assert_eq!(warmup, 30);
+                assert_eq!(total, 1000);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn monotone_during_warmup_nonincreasing_after() {
+        let s = LrSchedule::paper_default(200);
+        let f: Vec<f32> = (0..200).map(|t| s.factor(t)).collect();
+        for t in 1..6 {
+            assert!(f[t] >= f[t - 1]);
+        }
+        for t in 7..200 {
+            assert!(f[t] <= f[t - 1] + 1e-6);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for s in [
+            LrSchedule::Constant,
+            LrSchedule::LinearWarmupDecay { warmup: 5, total: 50 },
+            LrSchedule::InverseSqrt { warmup: 7 },
+        ] {
+            assert_eq!(LrSchedule::from_json(&s.to_json()).unwrap(), s);
+        }
+    }
+}

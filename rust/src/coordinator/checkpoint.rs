@@ -1,0 +1,104 @@
+//! Checkpointing: parameters (and LoRA adapters) to RTEN + a JSON sidecar
+//! with the run config, so a run can resume or be evaluated later.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::util::fsutil;
+use crate::util::json::Json;
+use crate::tensor::write_rten;
+
+use super::params::ParamStore;
+
+pub fn save_checkpoint(
+    dir: &Path,
+    step: usize,
+    cfg: &RunConfig,
+    params: &ParamStore,
+    adapters: Option<&ParamStore>,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut tensors = BTreeMap::new();
+    for (spec, val) in params.specs.iter().zip(&params.values) {
+        tensors.insert(spec.name.clone(), val.clone());
+    }
+    if let Some(a) = adapters {
+        for (spec, val) in a.specs.iter().zip(&a.values) {
+            tensors.insert(spec.name.clone(), val.clone());
+        }
+    }
+    write_rten(&dir.join("params.rten"), &tensors)?;
+    let meta = Json::obj(vec![
+        ("step", Json::num(step as f64)),
+        ("config", cfg.to_json()),
+        ("n_tensors", Json::num(tensors.len() as f64)),
+    ]);
+    fsutil::write_atomic(&dir.join("meta.json"), meta.to_string_pretty().as_bytes())
+}
+
+pub fn load_checkpoint(dir: &Path, params: &mut ParamStore) -> Result<usize> {
+    let meta = Json::from_file(&dir.join("meta.json"))?;
+    let step = meta.req("step")?.as_usize()?;
+    let tensors = crate::tensor::read_rten(&dir.join("params.rten"))
+        .with_context(|| format!("checkpoint at {}", dir.display()))?;
+    for (spec, val) in params.specs.iter().zip(params.values.iter_mut()) {
+        match tensors.get(&spec.name) {
+            Some(t) => {
+                if t.shape != spec.shape {
+                    bail!(
+                        "checkpoint tensor '{}' has shape {:?}, expected {:?}",
+                        spec.name,
+                        t.shape,
+                        spec.shape
+                    );
+                }
+                *val = t.clone();
+            }
+            None => bail!("checkpoint missing tensor '{}'", spec.name),
+        }
+    }
+    Ok(step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, TaskKind};
+    use crate::runtime::ParamSpec;
+    use crate::tensor::Tensor;
+
+    fn store() -> ParamStore {
+        ParamStore {
+            specs: vec![
+                ParamSpec { name: "a".into(), shape: vec![2, 3], kind: "matrix".into(), compressed: true },
+                ParamSpec { name: "b".into(), shape: vec![4], kind: "vector".into(), compressed: false },
+            ],
+            values: vec![
+                Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+                Tensor::full(&[4], 7.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_shape_guard() {
+        let dir = std::env::temp_dir().join(format!("mlorc_ckpt_{}", std::process::id()));
+        let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
+        let orig = store();
+        save_checkpoint(&dir, 42, &cfg, &orig, None).unwrap();
+        let mut loaded = store();
+        loaded.values[0] = Tensor::zeros(&[2, 3]);
+        let step = load_checkpoint(&dir, &mut loaded).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(loaded.values[0], orig.values[0]);
+        // shape mismatch must fail loudly
+        let mut wrong = store();
+        wrong.specs[0].shape = vec![3, 2];
+        wrong.values[0] = Tensor::zeros(&[3, 2]);
+        assert!(load_checkpoint(&dir, &mut wrong).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

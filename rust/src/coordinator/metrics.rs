@@ -1,0 +1,138 @@
+//! Run metrics: loss curve, eval points, spectral records, wall-clock —
+//! serialized to results/<run>.json for the bench harness and plots.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+use super::memory::MemoryReport;
+use super::spectral::SpectralRecord;
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub millis: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub loss: f32,
+    /// token accuracy (LM) or classification accuracy
+    pub accuracy: f32,
+    /// exact-match rate (LM tasks; = accuracy for classification)
+    pub exact_match: f32,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MetricsLog {
+    pub run_name: String,
+    pub config: Option<Json>,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub spectral: Vec<SpectralRecord>,
+    pub memory: Option<MemoryReport>,
+    pub wall_secs: f64,
+    pub opt_secs: f64,
+    pub fwd_bwd_secs: f64,
+}
+
+impl MetricsLog {
+    pub fn new(run_name: &str) -> MetricsLog {
+        MetricsLog { run_name: run_name.to_string(), ..Default::default() }
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.steps.last().map(|s| s.loss)
+    }
+
+    /// Mean loss over the last k steps (smoother than the single final
+    /// minibatch).
+    pub fn smoothed_final_loss(&self, k: usize) -> Option<f32> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(k)..];
+        Some(tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn final_eval(&self) -> Option<&EvalRecord> {
+        self.evals.last()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steps = Json::arr(self.steps.iter().map(|s| {
+            Json::obj(vec![
+                ("step", Json::num(s.step as f64)),
+                ("loss", Json::num(s.loss as f64)),
+                ("lr", Json::num(s.lr as f64)),
+                ("millis", Json::num(s.millis)),
+            ])
+        }));
+        let evals = Json::arr(self.evals.iter().map(|e| {
+            Json::obj(vec![
+                ("step", Json::num(e.step as f64)),
+                ("loss", Json::num(e.loss as f64)),
+                ("accuracy", Json::num(e.accuracy as f64)),
+                ("exact_match", Json::num(e.exact_match as f64)),
+            ])
+        }));
+        let spectral = Json::arr(self.spectral.iter().map(|s| s.to_json()));
+        let mut obj = Json::obj(vec![
+            ("run_name", Json::str(self.run_name.clone())),
+            ("steps", steps),
+            ("evals", evals),
+            ("spectral", spectral),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("opt_secs", Json::num(self.opt_secs)),
+            ("fwd_bwd_secs", Json::num(self.fwd_bwd_secs)),
+        ]);
+        if let Some(cfg) = &self.config {
+            obj.set("config", cfg.clone());
+        }
+        if let Some(mem) = &self.memory {
+            obj.set("memory", mem.to_json());
+        }
+        obj
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        fsutil::write_atomic(path, self.to_json().to_string_pretty().as_bytes())
+    }
+
+    /// Loss curve as CSV (step, loss) — easy plotting.
+    pub fn loss_csv(&self) -> String {
+        let mut out = String::from("step,loss,lr\n");
+        for s in &self.steps {
+            out.push_str(&format!("{},{},{}\n", s.step, s.loss, s.lr));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_and_serialization() {
+        let mut m = MetricsLog::new("t");
+        for i in 0..10 {
+            m.steps.push(StepRecord { step: i, loss: 10.0 - i as f32, lr: 1e-3, millis: 1.0 });
+        }
+        assert_eq!(m.final_loss(), Some(1.0));
+        assert!((m.smoothed_final_loss(4).unwrap() - 2.5).abs() < 1e-6);
+        let j = m.to_json();
+        assert_eq!(j.req("steps").unwrap().as_arr().unwrap().len(), 10);
+        // round-trips through the JSON module
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.req("run_name").unwrap().as_str().unwrap(), "t");
+        let csv = m.loss_csv();
+        assert!(csv.lines().count() == 11);
+    }
+}

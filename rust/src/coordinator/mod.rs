@@ -1,0 +1,21 @@
+//! Layer-3 coordinator — the training orchestrator.
+//!
+//! Owns the loop: batch -> fwd/bwd graph -> per-layer optimizer step
+//! graphs -> metrics/eval/checkpoint. All randomness (init, data, Omega)
+//! derives from the run seed; Python never executes here.
+
+mod checkpoint;
+mod memory;
+mod metrics;
+mod params;
+mod spectral;
+mod state;
+mod trainer;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use memory::{MemoryAccountant, MemoryReport};
+pub use metrics::{EvalRecord, MetricsLog, StepRecord};
+pub use params::ParamStore;
+pub use spectral::{SpectralProbe, SpectralRecord};
+pub use state::OptState;
+pub use trainer::{EvalSummary, TrainOutcome, Trainer};

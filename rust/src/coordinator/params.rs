@@ -1,0 +1,143 @@
+//! Parameter storage and initialization.
+//!
+//! Order always follows the manifest param table — the same order the
+//! fwd/bwd graph inputs and gradient outputs use.
+
+use anyhow::Result;
+
+use crate::linalg::Rng;
+use crate::runtime::{ParamSpec, Preset};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub specs: Vec<ParamSpec>,
+    pub values: Vec<Tensor>,
+}
+
+impl ParamStore {
+    /// Initialize per the documented scheme (mirrors model.init_params):
+    /// N(0, 0.02) for matrices/embeddings, residual-out projections (wo,
+    /// w2) scaled by 1/sqrt(2 L), LN gains 1, LN biases 0.
+    pub fn init(preset: &Preset, with_head: bool, rng: &mut Rng) -> ParamStore {
+        let n_layers = preset.model.n_layers as f32;
+        let mut specs = Vec::new();
+        let mut values = Vec::new();
+        for p in &preset.params {
+            if p.kind == "head" && !with_head {
+                continue;
+            }
+            let t = if p.kind == "vector" {
+                if p.name.ends_with("_g") {
+                    Tensor::full(&p.shape, 1.0)
+                } else {
+                    Tensor::zeros(&p.shape)
+                }
+            } else {
+                let mut scale = 0.02;
+                if p.name.ends_with(".wo") || p.name.ends_with(".w2") {
+                    scale /= (2.0 * n_layers).sqrt();
+                }
+                rng.gaussian_tensor(&p.shape, scale)
+            };
+            specs.push(p.clone());
+            values.push(t);
+        }
+        ParamStore { specs, values }
+    }
+
+    /// LoRA adapters: A ~ N(0, 0.02), B = 0 (Hu et al., 2022).
+    pub fn init_lora(preset: &Preset, rng: &mut Rng) -> ParamStore {
+        let mut specs = Vec::new();
+        let mut values = Vec::new();
+        for p in &preset.lora_params {
+            let t = if p.name.ends_with("lora_B") {
+                Tensor::zeros(&p.shape)
+            } else {
+                rng.gaussian_tensor(&p.shape, 0.02)
+            };
+            specs.push(p.clone());
+            values.push(t);
+        }
+        ParamStore { specs, values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.values.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.values.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        let i = self
+            .specs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no param '{name}'"))?;
+        Ok(&self.values[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::fsutil;
+
+    fn nano_preset() -> Option<Preset> {
+        let dir = fsutil::artifacts_dir().ok()?;
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Manifest::load(&dir).ok()?.preset("nano").ok().cloned()
+    }
+
+    #[test]
+    fn init_matches_manifest_counts() {
+        let Some(preset) = nano_preset() else { return };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init(&preset, false, &mut rng);
+        assert_eq!(store.len(), preset.lm_params().len());
+        assert_eq!(store.n_params(), preset.model.n_params());
+        let with_head = ParamStore::init(&preset, true, &mut Rng::new(0));
+        assert_eq!(with_head.len(), store.len() + 1);
+    }
+
+    #[test]
+    fn ln_gains_one_biases_zero_lora_b_zero() {
+        let Some(preset) = nano_preset() else { return };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init(&preset, false, &mut rng);
+        let g = store.get("blk0.ln1_g").unwrap();
+        assert!(g.data.iter().all(|&x| x == 1.0));
+        let b = store.get("blk0.ln1_b").unwrap();
+        assert!(b.data.iter().all(|&x| x == 0.0));
+        let lora = ParamStore::init_lora(&preset, &mut rng);
+        let bzero = lora.get("blk0.wq.lora_B").unwrap();
+        assert!(bzero.data.iter().all(|&x| x == 0.0));
+        let a = lora.get("blk0.wq.lora_A").unwrap();
+        assert!(a.norm_fro() > 0.0);
+    }
+
+    #[test]
+    fn residual_projections_scaled_down() {
+        let Some(preset) = nano_preset() else { return };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init(&preset, false, &mut rng);
+        let wq = store.get("blk0.wq").unwrap();
+        let wo = store.get("blk0.wo").unwrap();
+        let sq = wq.norm_fro() / (wq.len() as f32).sqrt();
+        let so = wo.norm_fro() / (wo.len() as f32).sqrt();
+        assert!(so < sq * 0.8, "wo rms {so} vs wq rms {sq}");
+    }
+}

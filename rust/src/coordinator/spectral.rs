@@ -1,0 +1,125 @@
+//! Spectral probe — the Figure 1/4 machinery: during training, measure
+//! the ratio of the top-k singular values to the total spectrum for the
+//! gradient, first moment and second moment of tracked matrix parameters.
+//!
+//! Uses the pure-rust Jacobi SVD; probing is restricted to (d, d)
+//! attention matrices by default to keep the probe O(d^3) per record.
+
+use crate::linalg::svd::top_k_ratio;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct SpectralRecord {
+    pub step: usize,
+    /// mean over tracked params of top-k ratio
+    pub grad_ratio: f32,
+    pub m_ratio: f32,
+    pub v_ratio: f32,
+    pub n_tracked: usize,
+}
+
+impl SpectralRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("grad_ratio", Json::num(self.grad_ratio as f64)),
+            ("m_ratio", Json::num(self.m_ratio as f64)),
+            ("v_ratio", Json::num(self.v_ratio as f64)),
+            ("n_tracked", Json::num(self.n_tracked as f64)),
+        ])
+    }
+}
+
+pub struct SpectralProbe {
+    pub k: usize,
+    /// parameter-name predicate: which matrices to track
+    tracked: Vec<String>,
+}
+
+impl SpectralProbe {
+    /// Track the attention projections of the first two blocks (square
+    /// (d, d) matrices — cheap to SVD, representative per Figure 4).
+    pub fn default_for(param_names: &[String]) -> SpectralProbe {
+        let tracked: Vec<String> = param_names
+            .iter()
+            .filter(|n| {
+                (n.starts_with("blk0.") || n.starts_with("blk1."))
+                    && (n.ends_with(".wq") || n.ends_with(".wv"))
+            })
+            .cloned()
+            .collect();
+        SpectralProbe { k: 8, tracked }
+    }
+
+    pub fn tracked(&self) -> &[String] {
+        &self.tracked
+    }
+
+    /// One record from (name -> (grad, m, v)) fetches.
+    pub fn record(
+        &self,
+        step: usize,
+        entries: &[(Tensor, Option<Tensor>, Option<Tensor>)],
+    ) -> SpectralRecord {
+        let mut gr = 0.0f32;
+        let mut mr = 0.0f32;
+        let mut vr = 0.0f32;
+        let mut mcount = 0usize;
+        let mut vcount = 0usize;
+        for (g, m, v) in entries {
+            gr += top_k_ratio(g, self.k);
+            if let Some(m) = m {
+                mr += top_k_ratio(m, self.k);
+                mcount += 1;
+            }
+            if let Some(v) = v {
+                vr += top_k_ratio(v, self.k);
+                vcount += 1;
+            }
+        }
+        let n = entries.len().max(1);
+        SpectralRecord {
+            step,
+            grad_ratio: gr / n as f32,
+            m_ratio: if mcount > 0 { mr / mcount as f32 } else { 0.0 },
+            v_ratio: if vcount > 0 { vr / vcount as f32 } else { 0.0 },
+            n_tracked: entries.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, Rng};
+
+    #[test]
+    fn tracks_expected_params() {
+        let names: Vec<String> = [
+            "tok_emb", "blk0.wq", "blk0.wk", "blk0.wv", "blk0.w1", "blk1.wq", "blk2.wq", "lnf_g",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let probe = SpectralProbe::default_for(&names);
+        assert_eq!(probe.tracked(), &["blk0.wq", "blk0.wv", "blk1.wq"]);
+    }
+
+    #[test]
+    fn second_moment_of_lowrank_grad_is_more_concentrated() {
+        // the paper's Figure 1 qualitative claim: v = EMA(g^2) has an even
+        // stronger low-rank structure when g is (approximately) low-rank
+        let mut rng = Rng::new(0);
+        let u = rng.gaussian_tensor(&[48, 3], 1.0);
+        let w = rng.gaussian_tensor(&[3, 48], 1.0);
+        let mut g = matmul(&u, &w);
+        let noise = rng.gaussian_tensor(&[48, 48], 0.3);
+        g.axpy(1.0, &noise, 1.0);
+        let v = g.map(|x| x * x);
+        let probe = SpectralProbe { k: 8, tracked: vec![] };
+        let rec = probe.record(0, &[(g.clone(), Some(g.clone()), Some(v))]);
+        assert!(rec.v_ratio > rec.grad_ratio, "{} vs {}", rec.v_ratio, rec.grad_ratio);
+        assert_eq!(rec.m_ratio, rec.grad_ratio);
+    }
+}

@@ -1,0 +1,234 @@
+//! Per-parameter optimizer state, mirrored host-side between step-graph
+//! executions. The variant set matches the step graphs in
+//! `python/compile/optim_steps.py`.
+
+use anyhow::{bail, Result};
+
+use crate::config::Method;
+use crate::runtime::{ParamSpec, Preset};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub enum OptState {
+    /// parameter is frozen (LoRA base weights)
+    Frozen,
+    AdamW { m: Tensor, v: Tensor },
+    Lion { m: Tensor },
+    MlorcAdamW { mq: Tensor, mb: Tensor, vq: Tensor, vb: Tensor },
+    MlorcLion { mq: Tensor, mb: Tensor },
+    MlorcM { mq: Tensor, mb: Tensor, v: Tensor },
+    MlorcV { m: Tensor, vq: Tensor, vb: Tensor },
+    Galore { p: Tensor, m_lo: Tensor, v_lo: Tensor, left: bool, refreshed: bool },
+    LdAdamW { p: Tensor, m_lo: Tensor, v_lo: Tensor, e: Tensor, left: bool },
+}
+
+impl OptState {
+    /// Construct the state a parameter needs under `method`.
+    /// `compressed` decides matrix-vs-plain routing (vectors, embeddings,
+    /// heads and LoRA adapters always take the plain path).
+    pub fn for_param(method: Method, spec: &ParamSpec, preset: &Preset) -> Result<OptState> {
+        let l = preset.model.l();
+        let shape = &spec.shape;
+        let plain = || -> OptState {
+            match method.plain_step() {
+                "lion" => OptState::Lion { m: Tensor::zeros(shape) },
+                _ => OptState::AdamW { m: Tensor::zeros(shape), v: Tensor::zeros(shape) },
+            }
+        };
+        if !spec.compressed || shape.len() == 1 {
+            return Ok(plain());
+        }
+        let (m, n) = (shape[0], shape[1]);
+        Ok(match method {
+            Method::FullAdamW | Method::LoraAdamW => plain(),
+            Method::FullLion | Method::LoraLion => plain(),
+            Method::MlorcAdamW => OptState::MlorcAdamW {
+                mq: Tensor::zeros(&[m, l]),
+                mb: Tensor::zeros(&[l, n]),
+                vq: Tensor::zeros(&[m, l]),
+                vb: Tensor::zeros(&[l, n]),
+            },
+            Method::MlorcLion => OptState::MlorcLion {
+                mq: Tensor::zeros(&[m, l]),
+                mb: Tensor::zeros(&[l, n]),
+            },
+            Method::MlorcM => OptState::MlorcM {
+                mq: Tensor::zeros(&[m, l]),
+                mb: Tensor::zeros(&[l, n]),
+                v: Tensor::zeros(shape),
+            },
+            Method::MlorcV => OptState::MlorcV {
+                m: Tensor::zeros(shape),
+                vq: Tensor::zeros(&[m, l]),
+                vb: Tensor::zeros(&[l, n]),
+            },
+            Method::Galore => {
+                let left = m <= n;
+                let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
+                OptState::Galore {
+                    p: Tensor::zeros(&pshape),
+                    m_lo: Tensor::zeros(&rshape),
+                    v_lo: Tensor::zeros(&rshape),
+                    left,
+                    refreshed: false,
+                }
+            }
+            Method::LdAdamW => {
+                let left = m <= n;
+                let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
+                OptState::LdAdamW {
+                    p: Tensor::zeros(&pshape),
+                    m_lo: Tensor::zeros(&rshape),
+                    v_lo: Tensor::zeros(&rshape),
+                    e: Tensor::zeros(shape),
+                    left,
+                }
+            }
+        })
+    }
+
+    /// Which step-graph method name updates this state.
+    pub fn step_method(&self) -> Result<&'static str> {
+        Ok(match self {
+            OptState::Frozen => bail!("frozen param has no step"),
+            OptState::AdamW { .. } => "adamw",
+            OptState::Lion { .. } => "lion",
+            OptState::MlorcAdamW { .. } => "mlorc_adamw",
+            OptState::MlorcLion { .. } => "mlorc_lion",
+            OptState::MlorcM { .. } => "mlorc_m",
+            OptState::MlorcV { .. } => "mlorc_v",
+            OptState::Galore { .. } => "galore",
+            OptState::LdAdamW { .. } => "ldadamw",
+        })
+    }
+
+    /// Optimizer-state footprint in bytes (the Table 1/3 quantity).
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            OptState::Frozen => 0,
+            OptState::AdamW { m, v } => m.size_bytes() + v.size_bytes(),
+            OptState::Lion { m } => m.size_bytes(),
+            OptState::MlorcAdamW { mq, mb, vq, vb } => {
+                mq.size_bytes() + mb.size_bytes() + vq.size_bytes() + vb.size_bytes()
+            }
+            OptState::MlorcLion { mq, mb } => mq.size_bytes() + mb.size_bytes(),
+            OptState::MlorcM { mq, mb, v } => mq.size_bytes() + mb.size_bytes() + v.size_bytes(),
+            OptState::MlorcV { m, vq, vb } => m.size_bytes() + vq.size_bytes() + vb.size_bytes(),
+            OptState::Galore { p, m_lo, v_lo, .. } => {
+                p.size_bytes() + m_lo.size_bytes() + v_lo.size_bytes()
+            }
+            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
+                p.size_bytes() + m_lo.size_bytes() + v_lo.size_bytes() + e.size_bytes()
+            }
+        }
+    }
+
+    /// Reconstructed first moment (spectral probe).
+    pub fn first_moment(&self) -> Option<Tensor> {
+        match self {
+            OptState::AdamW { m, .. } | OptState::MlorcV { m, .. } => Some(m.clone()),
+            OptState::Lion { m } => Some(m.clone()),
+            OptState::MlorcAdamW { mq, mb, .. }
+            | OptState::MlorcLion { mq, mb }
+            | OptState::MlorcM { mq, mb, .. } => Some(crate::linalg::matmul(mq, mb)),
+            _ => None,
+        }
+    }
+
+    /// Reconstructed second moment (spectral probe).
+    pub fn second_moment(&self) -> Option<Tensor> {
+        match self {
+            OptState::AdamW { v, .. } | OptState::MlorcM { v, .. } => Some(v.clone()),
+            OptState::MlorcAdamW { vq, vb, .. } | OptState::MlorcV { vq, vb, .. } => {
+                Some(crate::linalg::matmul(vq, vb))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn mat_spec(m: usize, n: usize) -> ParamSpec {
+        ParamSpec {
+            name: "w".into(),
+            shape: vec![m, n],
+            kind: "matrix".into(),
+            compressed: true,
+        }
+    }
+
+    fn fake_preset(rank: usize) -> Preset {
+        // minimal synthetic preset for state-shape tests
+        use crate::runtime::ModelDims;
+        Preset {
+            model: ModelDims {
+                d_model: 8,
+                n_layers: 1,
+                n_heads: 1,
+                vocab: 16,
+                seq: 8,
+                batch: 2,
+                rank,
+                oversample: 0,
+                d_ff: 16,
+                n_cls: 2,
+            },
+            params: vec![],
+            lora_params: vec![],
+            graphs: Default::default(),
+            opt_steps: Default::default(),
+        }
+    }
+
+    #[test]
+    fn memory_ordering_matches_table1() {
+        // For a (m, n) matrix at rank r: full AdamW state = 2mn floats;
+        // MLorc-AdamW = 2r(m+n); Lion = mn; MLorc-Lion = r(m+n);
+        // LDAdamW >= mn (error buffer).
+        let preset = fake_preset(4);
+        let spec = mat_spec(64, 256);
+        let bytes = |m: Method| OptState::for_param(m, &spec, &preset).unwrap().state_bytes();
+        let full = bytes(Method::FullAdamW);
+        let mlorc = bytes(Method::MlorcAdamW);
+        let galore = bytes(Method::Galore);
+        let ld = bytes(Method::LdAdamW);
+        assert_eq!(full, 2 * 64 * 256 * 4);
+        assert_eq!(mlorc, 2 * 4 * (64 + 256) * 4);
+        assert!(mlorc < full / 10);
+        assert!(galore < full / 10);
+        assert!(ld > 64 * 256 * 4, "error feedback dominates");
+        assert_eq!(bytes(Method::MlorcLion), 4 * (64 + 256) * 4);
+    }
+
+    #[test]
+    fn vectors_always_plain() {
+        let preset = fake_preset(4);
+        let vec_spec = ParamSpec {
+            name: "ln".into(),
+            shape: vec![64],
+            kind: "vector".into(),
+            compressed: false,
+        };
+        let st = OptState::for_param(Method::MlorcAdamW, &vec_spec, &preset).unwrap();
+        assert_eq!(st.step_method().unwrap(), "adamw");
+        let st = OptState::for_param(Method::MlorcLion, &vec_spec, &preset).unwrap();
+        assert_eq!(st.step_method().unwrap(), "lion");
+    }
+
+    #[test]
+    fn galore_projects_short_side() {
+        let preset = fake_preset(4);
+        let tall = OptState::for_param(Method::Galore, &mat_spec(256, 64), &preset).unwrap();
+        match tall {
+            OptState::Galore { p, left, .. } => {
+                assert!(!left);
+                assert_eq!(p.shape, vec![64, 4]);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,658 @@
+//! The training orchestrator: one `Trainer` drives one run — data, fwd/bwd
+//! graph, per-layer optimizer step graphs, eval, metrics, spectral probe.
+//!
+//! Per-layer weight updates (Lv et al., 2024; paper §3.2.2): gradients are
+//! consumed and freed parameter-by-parameter in layer order, so peak
+//! gradient residency is one parameter, not the whole model (the memory
+//! accountant models both modes; Table 6).
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::data::{self, LmDataset};
+use crate::linalg::Rng;
+use crate::optim::OptHp;
+use crate::runtime::{GraphSpec, Preset, Runtime, ValRef};
+use crate::tensor::Tensor;
+
+use super::memory::{MemoryAccountant, MemoryReport};
+use super::metrics::{EvalRecord, MetricsLog, StepRecord};
+use super::params::ParamStore;
+use super::spectral::SpectralProbe;
+use super::state::OptState;
+
+/// Where a trainable parameter lives.
+#[derive(Debug, Clone, Copy)]
+enum Store {
+    Base(usize),
+    Adapter(usize),
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub preset: Preset,
+    pub cfg: RunConfig,
+    pub params: ParamStore,
+    pub adapters: Option<ParamStore>,
+    states: Vec<OptState>,
+    trainable: Vec<Store>,
+    lm_data: Option<Box<dyn LmDataset>>,
+    cls_data: Option<crate::data::SynGlueTask>,
+    rng_data: Rng,
+    rng_omega: Rng,
+    pub metrics: MetricsLog,
+    pub probe: Option<SpectralProbe>,
+    step: usize,
+    fwd_spec: GraphSpec,
+    eval_spec: GraphSpec,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalSummary {
+    pub loss: f32,
+    pub accuracy: f32,
+    pub exact_match: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub final_loss: f32,
+    pub eval: Option<EvalSummary>,
+    pub wall_secs: f64,
+    pub memory_measured: MemoryReport,
+    pub memory_analytic: MemoryReport,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, preset: &Preset, cfg: RunConfig) -> Result<Trainer<'rt>> {
+        let mut rng = Rng::new(cfg.seed);
+        let mut init_rng = rng.split(1);
+        let rng_data = rng.split(2);
+        let rng_omega = rng.split(3);
+
+        let is_cls = cfg.task.is_classification();
+        let is_lora = cfg.method.is_lora();
+        let params = ParamStore::init(preset, is_cls, &mut init_rng);
+        let adapters = if is_lora {
+            Some(ParamStore::init_lora(preset, &mut init_rng))
+        } else {
+            None
+        };
+
+        // Trainable set = what the fwd/bwd graph returns gradients for,
+        // in exactly its output order.
+        let mut trainable = Vec::new();
+        if is_lora {
+            if is_cls {
+                // cls_lora_fwd_bwd: loss, g:cls_head, g:adapters...
+                let head_idx = params
+                    .specs
+                    .iter()
+                    .position(|s| s.kind == "head")
+                    .context("preset has no cls head")?;
+                trainable.push(Store::Base(head_idx));
+            }
+            for i in 0..adapters.as_ref().unwrap().len() {
+                trainable.push(Store::Adapter(i));
+            }
+        } else {
+            for i in 0..params.len() {
+                trainable.push(Store::Base(i));
+            }
+        }
+
+        // Optimizer state per trainable param.
+        let mut states = Vec::with_capacity(trainable.len());
+        for st in &trainable {
+            let spec = match st {
+                Store::Base(i) => &params.specs[*i],
+                Store::Adapter(i) => &adapters.as_ref().unwrap().specs[*i],
+            };
+            states.push(OptState::for_param(cfg.method, spec, preset)?);
+        }
+
+        let graph_name = match (is_cls, is_lora) {
+            (false, false) => "fwd_bwd",
+            (false, true) => "lora_fwd_bwd",
+            (true, false) => "cls_fwd_bwd",
+            (true, true) => "cls_lora_fwd_bwd",
+        };
+        let eval_name = match (is_cls, is_lora) {
+            (false, false) => "eval",
+            (false, true) => "lora_eval",
+            (true, false) => "cls_eval",
+            (true, true) => "cls_lora_eval",
+        };
+        let fwd_spec = preset.graph(graph_name)?.clone();
+        let eval_spec = preset.graph(eval_name)?.clone();
+
+        let (lm_data, cls_data) = if is_cls {
+            (None, Some(data::cls_dataset(cfg.task, preset.model.seq, cfg.seed)))
+        } else {
+            (Some(data::lm_dataset(cfg.task, preset.model.seq, cfg.seed)), None)
+        };
+
+        let probe = if cfg.spectral_every > 0 {
+            let names: Vec<String> = params.specs.iter().map(|s| s.name.clone()).collect();
+            Some(SpectralProbe::default_for(&names))
+        } else {
+            None
+        };
+
+        let mut metrics = MetricsLog::new(&format!(
+            "{}_{}_{}",
+            cfg.preset,
+            cfg.method.name(),
+            cfg.task.name()
+        ));
+        metrics.config = Some(cfg.to_json());
+
+        Ok(Trainer {
+            rt,
+            preset: preset.clone(),
+            cfg,
+            params,
+            adapters,
+            states,
+            trainable,
+            lm_data,
+            cls_data,
+            rng_data,
+            rng_omega,
+            metrics,
+            probe,
+            step: 0,
+            fwd_spec,
+            eval_spec,
+        })
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    fn trainable_spec(&self, i: usize) -> &crate::runtime::ParamSpec {
+        match self.trainable[i] {
+            Store::Base(j) => &self.params.specs[j],
+            Store::Adapter(j) => &self.adapters.as_ref().unwrap().specs[j],
+        }
+    }
+
+    fn trainable_value(&self, i: usize) -> &Tensor {
+        match self.trainable[i] {
+            Store::Base(j) => &self.params.values[j],
+            Store::Adapter(j) => &self.adapters.as_ref().unwrap().values[j],
+        }
+    }
+
+    fn set_trainable_value(&mut self, i: usize, t: Tensor) {
+        match self.trainable[i] {
+            Store::Base(j) => self.params.values[j] = t,
+            Store::Adapter(j) => self.adapters.as_mut().unwrap().values[j] = t,
+        }
+    }
+
+    /// Graph inputs: (tokens, targets/labels, *base[, *adapters]).
+    fn graph_inputs<'a>(
+        &'a self,
+        tokens: &'a crate::tensor::TensorI32,
+        second: &'a crate::tensor::TensorI32,
+    ) -> Vec<ValRef<'a>> {
+        let mut inputs: Vec<ValRef> =
+            Vec::with_capacity(2 + self.params.len() + self.adapters.as_ref().map_or(0, |a| a.len()));
+        inputs.push(tokens.into());
+        inputs.push(second.into());
+        for v in &self.params.values {
+            inputs.push(v.into());
+        }
+        if let Some(a) = &self.adapters {
+            for v in &a.values {
+                inputs.push(v.into());
+            }
+        }
+        inputs
+    }
+
+    /// One training step. Returns the minibatch loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let t0 = Instant::now();
+        let dims = self.preset.model;
+        let step = self.step;
+        let lr = self.cfg.peak_lr * self.cfg.schedule.factor(step);
+
+        // ---- batch + fwd/bwd ------------------------------------------
+        let (tokens, second, batch_lm) = if let Some(ds) = &self.lm_data {
+            let b = data::batcher::make_lm_batch(ds.as_ref(), dims.batch, &mut self.rng_data);
+            (b.tokens.clone(), b.targets.clone(), Some(b))
+        } else {
+            let ds = self.cls_data.as_ref().unwrap();
+            let b = data::batcher::make_cls_batch(ds, dims.batch, &mut self.rng_data);
+            (b.tokens.clone(), b.labels.clone(), None)
+        };
+        let _ = batch_lm; // answer regions only needed at eval time
+        let fwd_t0 = Instant::now();
+        let g = self.rt.load(&self.fwd_spec)?;
+        let inputs = self.graph_inputs(&tokens, &second);
+        let mut outs = self.rt.execute_refs(&g, &inputs)?;
+        drop(inputs);
+        let fwd_secs = fwd_t0.elapsed().as_secs_f64();
+        let loss = outs[0].scalar()?;
+        if !loss.is_finite() {
+            bail!("loss diverged (non-finite) at step {step} — lower the learning rate");
+        }
+        let grads: Vec<Tensor> = outs
+            .drain(1..)
+            .map(|v| v.into_f32())
+            .collect::<Result<Vec<_>>>()?;
+        if grads.len() != self.trainable.len() {
+            bail!("graph returned {} grads for {} trainables", grads.len(), self.trainable.len());
+        }
+
+        // ---- spectral probe (before the state mutates) -----------------
+        let probe_now = self
+            .probe
+            .as_ref()
+            .map(|_| self.cfg.spectral_every > 0 && step % self.cfg.spectral_every == 0)
+            .unwrap_or(false);
+        if probe_now {
+            self.record_spectral(step, &grads)?;
+        }
+
+        // ---- per-layer optimizer updates -------------------------------
+        let opt_t0 = Instant::now();
+        // Consume gradients in order, freeing each after its update — the
+        // per-layer weight update schedule.
+        let mut grads = grads.into_iter();
+        for i in 0..self.trainable.len() {
+            let grad = grads.next().unwrap();
+            self.apply_update(i, grad, lr, step)?;
+            // grad dropped here (per-layer residency)
+        }
+        let opt_secs = opt_t0.elapsed().as_secs_f64();
+
+        self.step += 1;
+        self.metrics.fwd_bwd_secs += fwd_secs;
+        self.metrics.opt_secs += opt_secs;
+        self.metrics.steps.push(StepRecord {
+            step,
+            loss,
+            lr,
+            millis: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(loss)
+    }
+
+    /// Update one trainable parameter via its step graph.
+    fn apply_update(&mut self, i: usize, grad: Tensor, lr: f32, step: usize) -> Result<()> {
+        let spec = self.trainable_spec(i).clone();
+        // Perf (§Perf L3): 1-D parameters are a few hundred floats — a PJRT
+        // dispatch costs more than the math. Update them host-side with the
+        // cross-validated rust mirror of the same step.
+        if spec.shape.len() == 1 {
+            return self.apply_vector_update_host(i, &grad, lr, step);
+        }
+        let key = spec.shape_key();
+        let method = self.states[i].step_method()?;
+        let sg = self.preset.opt_step(method, &key)?.clone();
+        let hp = OptHp::from_json(&sg.hparams);
+        let t = (step + 1) as i32;
+        let c1 = 1.0 / (1.0 - hp.beta1.powi(t));
+        let c2 = 1.0 / (1.0 - hp.beta2.powi(t));
+        let lr_t = Tensor::scalar(lr);
+        let c1_t = Tensor::scalar(c1);
+        let c2_t = Tensor::scalar(c2);
+        let l = self.preset.model.l();
+
+        // GaLore projector refresh on schedule (its own graph).
+        if let OptState::Galore { p, left, refreshed, .. } = &mut self.states[i] {
+            if !*refreshed || step % self.cfg.galore_update_freq == 0 {
+                let proj_spec = self.preset.opt_step("galore_project", &key)?.clone();
+                let om_shape = if *left {
+                    [spec.shape[1], l]
+                } else {
+                    [spec.shape[0], l]
+                };
+                let om = self.rng_omega.gaussian_tensor(&om_shape, 1.0);
+                let outs = self
+                    .rt
+                    .run_refs(&proj_spec, &[(&grad).into(), (&om).into()])?;
+                *p = outs.into_iter().next().unwrap().into_f32()?;
+                *refreshed = true;
+            }
+        }
+
+        let n = *spec.shape.last().unwrap();
+        let m0 = spec.shape[0];
+
+        // Pre-draw the Gaussian test matrices this state needs (the RNG is
+        // a disjoint field, but `trainable_value` borrows all of self).
+        let (om_a, om_b): (Option<Tensor>, Option<Tensor>) = {
+            let need = match &self.states[i] {
+                OptState::MlorcAdamW { .. } => 2,
+                OptState::MlorcLion { .. } | OptState::MlorcM { .. } | OptState::MlorcV { .. } => 1,
+                OptState::LdAdamW { left, .. } => {
+                    if *left {
+                        1
+                    } else {
+                        3 // sentinel: one draw with [m0, l]
+                    }
+                }
+                _ => 0,
+            };
+            match need {
+                2 => (
+                    Some(self.rng_omega.gaussian_tensor(&[n, l], 1.0)),
+                    Some(self.rng_omega.gaussian_tensor(&[n, l], 1.0)),
+                ),
+                1 => (Some(self.rng_omega.gaussian_tensor(&[n, l], 1.0)), None),
+                3 => (Some(self.rng_omega.gaussian_tensor(&[m0, l], 1.0)), None),
+                _ => (None, None),
+            }
+        };
+
+        let w = self.trainable_value(i);
+
+        // Assemble inputs per the step-graph convention and execute.
+        let outs = match &self.states[i] {
+            OptState::Frozen => return Ok(()),
+            OptState::AdamW { m, v } => self.rt.run_refs(
+                &sg,
+                &[w.into(), (&grad).into(), m.into(), v.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into()],
+            )?,
+            OptState::Lion { m } => self
+                .rt
+                .run_refs(&sg, &[w.into(), (&grad).into(), m.into(), (&lr_t).into()])?,
+            OptState::MlorcAdamW { mq, mb, vq, vb } => {
+                let om_m = om_a.as_ref().unwrap();
+                let om_v = om_b.as_ref().unwrap();
+                self.rt.run_refs(
+                    &sg,
+                    &[
+                        w.into(), (&grad).into(),
+                        mq.into(), mb.into(), vq.into(), vb.into(),
+                        om_m.into(), om_v.into(),
+                        (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
+                    ],
+                )?
+            }
+            OptState::MlorcLion { mq, mb } => {
+                let om = om_a.as_ref().unwrap();
+                self.rt.run_refs(
+                    &sg,
+                    &[w.into(), (&grad).into(), mq.into(), mb.into(), om.into(), (&lr_t).into()],
+                )?
+            }
+            OptState::MlorcM { mq, mb, v } => {
+                let om = om_a.as_ref().unwrap();
+                self.rt.run_refs(
+                    &sg,
+                    &[
+                        w.into(), (&grad).into(), mq.into(), mb.into(), v.into(),
+                        om.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
+                    ],
+                )?
+            }
+            OptState::MlorcV { m, vq, vb } => {
+                let om = om_a.as_ref().unwrap();
+                self.rt.run_refs(
+                    &sg,
+                    &[
+                        w.into(), (&grad).into(), m.into(), vq.into(), vb.into(),
+                        om.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
+                    ],
+                )?
+            }
+            OptState::Galore { p, m_lo, v_lo, .. } => self.rt.run_refs(
+                &sg,
+                &[
+                    w.into(), (&grad).into(), p.into(), m_lo.into(), v_lo.into(),
+                    (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
+                ],
+            )?,
+            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
+                let om = om_a.as_ref().unwrap();
+                self.rt.run_refs(
+                    &sg,
+                    &[
+                        w.into(), (&grad).into(), p.into(), m_lo.into(), v_lo.into(), e.into(),
+                        om.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
+                    ],
+                )?
+            }
+        };
+
+        // Scatter outputs back: w', then state in declared order.
+        let mut it = outs.into_iter();
+        let w_new = it.next().context("step graph returned nothing")?.into_f32()?;
+        self.set_trainable_value(i, w_new);
+        match &mut self.states[i] {
+            OptState::Frozen => {}
+            OptState::AdamW { m, v } => {
+                *m = it.next().context("m")?.into_f32()?;
+                *v = it.next().context("v")?.into_f32()?;
+            }
+            OptState::Lion { m } => {
+                *m = it.next().context("m")?.into_f32()?;
+            }
+            OptState::MlorcAdamW { mq, mb, vq, vb } => {
+                *mq = it.next().context("mq")?.into_f32()?;
+                *mb = it.next().context("mb")?.into_f32()?;
+                *vq = it.next().context("vq")?.into_f32()?;
+                *vb = it.next().context("vb")?.into_f32()?;
+            }
+            OptState::MlorcLion { mq, mb } => {
+                *mq = it.next().context("mq")?.into_f32()?;
+                *mb = it.next().context("mb")?.into_f32()?;
+            }
+            OptState::MlorcM { mq, mb, v } => {
+                *mq = it.next().context("mq")?.into_f32()?;
+                *mb = it.next().context("mb")?.into_f32()?;
+                *v = it.next().context("v")?.into_f32()?;
+            }
+            OptState::MlorcV { m, vq, vb } => {
+                *m = it.next().context("m")?.into_f32()?;
+                *vq = it.next().context("vq")?.into_f32()?;
+                *vb = it.next().context("vb")?.into_f32()?;
+            }
+            OptState::Galore { m_lo, v_lo, .. } => {
+                *m_lo = it.next().context("M")?.into_f32()?;
+                *v_lo = it.next().context("V")?.into_f32()?;
+            }
+            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
+                *p = it.next().context("p")?.into_f32()?;
+                *m_lo = it.next().context("M")?.into_f32()?;
+                *v_lo = it.next().context("V")?.into_f32()?;
+                *e = it.next().context("e")?.into_f32()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Host-side update for 1-D params (same math as the adamw/lion step
+    /// graphs; agreement enforced by `optim` unit tests + cross-validation).
+    fn apply_vector_update_host(&mut self, i: usize, g: &Tensor, lr: f32, step: usize) -> Result<()> {
+        let t = (step + 1) as i32;
+        let mut w = match self.trainable[i] {
+            Store::Base(j) => std::mem::replace(&mut self.params.values[j], Tensor::zeros(&[0])),
+            Store::Adapter(j) => {
+                std::mem::replace(&mut self.adapters.as_mut().unwrap().values[j], Tensor::zeros(&[0]))
+            }
+        };
+        match &mut self.states[i] {
+            OptState::AdamW { m, v } => {
+                let hp = crate::optim::OptHp::adamw();
+                let c1 = 1.0 / (1.0 - hp.beta1.powi(t));
+                let c2 = 1.0 / (1.0 - hp.beta2.powi(t));
+                for (mi, gi) in m.data.iter_mut().zip(&g.data) {
+                    *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+                }
+                for (vi, gi) in v.data.iter_mut().zip(&g.data) {
+                    *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+                }
+                for ((wi, mi), vi) in w.data.iter_mut().zip(&m.data).zip(&v.data) {
+                    *wi -= lr * ((mi * c1) / ((vi * c2).sqrt() + hp.eps) + hp.weight_decay * *wi);
+                }
+            }
+            OptState::Lion { m } => {
+                let hp = crate::optim::OptHp::lion();
+                for ((wi, mi), gi) in w.data.iter_mut().zip(&m.data).zip(&g.data) {
+                    let c = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+                    let s = if c > 0.0 { 1.0 } else if c < 0.0 { -1.0 } else { 0.0 };
+                    *wi -= lr * (s + hp.weight_decay * *wi);
+                }
+                for (mi, gi) in m.data.iter_mut().zip(&g.data) {
+                    *mi = hp.beta2 * *mi + (1.0 - hp.beta2) * gi;
+                }
+            }
+            other => bail!("vector param with non-plain state {other:?}"),
+        }
+        self.set_trainable_value(i, w);
+        Ok(())
+    }
+
+    fn record_spectral(&mut self, step: usize, grads: &[Tensor]) -> Result<()> {
+        let Some(probe) = &self.probe else { return Ok(()) };
+        let mut entries = Vec::new();
+        for (i, st) in self.trainable.iter().enumerate() {
+            let spec = match st {
+                Store::Base(j) => &self.params.specs[*j],
+                Store::Adapter(j) => &self.adapters.as_ref().unwrap().specs[*j],
+            };
+            if probe.tracked().contains(&spec.name) {
+                entries.push((
+                    grads[i].clone(),
+                    self.states[i].first_moment(),
+                    self.states[i].second_moment(),
+                ));
+            }
+        }
+        if !entries.is_empty() {
+            let rec = probe.record(step, &entries);
+            log::debug!(
+                "spectral step {step}: g={:.3} m={:.3} v={:.3}",
+                rec.grad_ratio,
+                rec.m_ratio,
+                rec.v_ratio
+            );
+            self.metrics.spectral.push(rec);
+        }
+        Ok(())
+    }
+
+    /// Held-out evaluation over `cfg.eval_batches` batches.
+    pub fn evaluate(&mut self) -> Result<EvalSummary> {
+        let dims = self.preset.model;
+        let mut rng = data::eval_rng(self.cfg.seed ^ (self.step as u64));
+        let g = self.rt.load(&self.eval_spec)?;
+        let mut loss_sum = 0.0f32;
+        let mut acc_sum = 0.0f32;
+        let mut em_sum = 0.0f32;
+        let n = self.cfg.eval_batches.max(1);
+        for _ in 0..n {
+            if let Some(ds) = &self.lm_data {
+                let b = data::batcher::make_lm_batch(ds.as_ref(), dims.batch, &mut rng);
+                let inputs = self.graph_inputs(&b.tokens, &b.targets);
+                let outs = self.rt.execute_refs(&g, &inputs)?;
+                loss_sum += outs[0].scalar()?;
+                let mask = outs[1].as_f32()?;
+                acc_sum += data::batcher::token_accuracy(&b, mask);
+                em_sum += data::batcher::exact_match(&b, mask);
+            } else {
+                let ds = self.cls_data.as_ref().unwrap();
+                let b = data::batcher::make_cls_batch(ds, dims.batch, &mut rng);
+                let inputs = self.graph_inputs(&b.tokens, &b.labels);
+                let outs = self.rt.execute_refs(&g, &inputs)?;
+                loss_sum += outs[0].scalar()?;
+                let correct = outs[1].as_f32()?;
+                let acc = correct.data.iter().sum::<f32>() / correct.len() as f32;
+                acc_sum += acc;
+                em_sum += acc;
+            }
+        }
+        let summary = EvalSummary {
+            loss: loss_sum / n as f32,
+            accuracy: acc_sum / n as f32,
+            exact_match: em_sum / n as f32,
+        };
+        self.metrics.evals.push(EvalRecord {
+            step: self.step,
+            loss: summary.loss,
+            accuracy: summary.accuracy,
+            exact_match: summary.exact_match,
+        });
+        Ok(summary)
+    }
+
+    /// Measured memory report from live state.
+    pub fn memory_measured(&self) -> MemoryReport {
+        let grads_all: usize = (0..self.trainable.len())
+            .map(|i| self.trainable_spec(i).numel() * 4)
+            .sum();
+        let grads_max: usize = (0..self.trainable.len())
+            .map(|i| self.trainable_spec(i).numel() * 4)
+            .max()
+            .unwrap_or(0);
+        let analytic = MemoryAccountant::analytic(
+            &self.preset,
+            self.cfg.method,
+            self.cfg.per_layer_updates,
+            self.cfg.task.is_classification(),
+        );
+        MemoryReport {
+            method: self.cfg.method.name().to_string(),
+            weights_bytes: self.params.total_bytes()
+                + self.adapters.as_ref().map_or(0, |a| a.total_bytes()),
+            opt_state_bytes: self.states.iter().map(|s| s.state_bytes()).sum(),
+            grads_peak_bytes: if self.cfg.per_layer_updates { grads_max } else { grads_all },
+            activations_bytes: analytic.activations_bytes,
+            lora_extra_weights_bytes: 0, // adapters counted in weights above
+        }
+    }
+
+    /// Full training run with logging/eval cadence; returns the outcome.
+    pub fn train(&mut self) -> Result<TrainOutcome> {
+        let t0 = Instant::now();
+        let total = self.cfg.steps;
+        let mut last_eval = None;
+        for s in 0..total {
+            let loss = self.train_step()?;
+            if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
+                log::info!(
+                    "[{}] step {s}/{total} loss {loss:.4} lr {:.2e}",
+                    self.metrics.run_name,
+                    self.cfg.peak_lr * self.cfg.schedule.factor(s),
+                );
+            }
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+                let ev = self.evaluate()?;
+                log::info!(
+                    "[{}] eval @ {s}: loss {:.4} acc {:.3} em {:.3}",
+                    self.metrics.run_name,
+                    ev.loss,
+                    ev.accuracy,
+                    ev.exact_match
+                );
+                last_eval = Some(ev);
+            }
+        }
+        if self.cfg.eval_every == 0 || total % self.cfg.eval_every.max(1) != 0 {
+            last_eval = Some(self.evaluate()?);
+        }
+        self.metrics.wall_secs = t0.elapsed().as_secs_f64();
+        self.metrics.memory = Some(self.memory_measured());
+        Ok(TrainOutcome {
+            final_loss: self.metrics.smoothed_final_loss(10).unwrap_or(f32::NAN),
+            eval: last_eval,
+            wall_secs: self.metrics.wall_secs,
+            memory_measured: self.memory_measured(),
+            memory_analytic: MemoryAccountant::analytic(
+                &self.preset,
+                self.cfg.method,
+                self.cfg.per_layer_updates,
+                self.cfg.task.is_classification(),
+            ),
+        })
+    }
+}

@@ -1,0 +1,175 @@
+//! Batch assembly: pack generated examples into the fixed (B, T) int32
+//! tensors the lowered graphs expect.
+
+use crate::linalg::Rng;
+use crate::tensor::TensorI32;
+
+use super::Tok;
+
+/// One LM example: full token sequence plus the half-open answer region
+/// [ans_start, ans_end) that the loss/eval mask covers.
+#[derive(Debug, Clone)]
+pub struct LmExample {
+    pub tokens: Vec<i32>,
+    pub ans_start: usize,
+    pub ans_end: usize,
+}
+
+pub trait LmDataset {
+    /// Generate one example; must fit in `seq` tokens.
+    fn sample(&self, rng: &mut Rng) -> LmExample;
+    fn seq(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// LM training batch. `targets[t] = tokens[t+1]` inside the answer region,
+/// `PAD_TARGET` (-1) elsewhere — fine-tuning on answers only, exactly like
+/// instruction-tuning on MetaMathQA/CodeFeedback responses.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: TensorI32,
+    pub targets: TensorI32,
+    /// per-row answer regions (for exact-match scoring of `correct_mask`)
+    pub answers: Vec<(usize, usize)>,
+}
+
+pub const PAD_TARGET: i32 = -1;
+
+pub fn make_lm_batch(ds: &dyn LmDataset, batch: usize, rng: &mut Rng) -> Batch {
+    let t = ds.seq();
+    let mut tokens = vec![Tok::PAD; batch * t];
+    let mut targets = vec![PAD_TARGET; batch * t];
+    let mut answers = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let ex = ds.sample(rng);
+        debug_assert!(ex.tokens.len() <= t, "{} > {}", ex.tokens.len(), t);
+        debug_assert!(ex.ans_start < ex.ans_end && ex.ans_end <= ex.tokens.len());
+        let row = &mut tokens[b * t..(b + 1) * t];
+        row[..ex.tokens.len()].copy_from_slice(&ex.tokens);
+        // next-token targets restricted to the answer region: position p
+        // predicts token p+1, so the supervised positions are
+        // [ans_start - 1, ans_end - 1).
+        let trow = &mut targets[b * t..(b + 1) * t];
+        for p in (ex.ans_start - 1)..(ex.ans_end - 1) {
+            trow[p] = ex.tokens[p + 1];
+        }
+        answers.push((ex.ans_start - 1, ex.ans_end - 1));
+    }
+    Batch {
+        tokens: TensorI32::new(vec![batch, t], tokens).unwrap(),
+        targets: TensorI32::new(vec![batch, t], targets).unwrap(),
+        answers,
+    }
+}
+
+/// Exact-match rate given the eval graph's `correct_mask` (B, T).
+pub fn exact_match(batch: &Batch, correct_mask: &crate::tensor::Tensor) -> f32 {
+    let (b, t) = (batch.tokens.shape[0], batch.tokens.shape[1]);
+    assert_eq!(correct_mask.shape, vec![b, t]);
+    let mut hits = 0usize;
+    for (row, (s, e)) in batch.answers.iter().enumerate() {
+        let all = (*s..*e).all(|p| correct_mask.data[row * t + p] > 0.5);
+        hits += all as usize;
+    }
+    hits as f32 / b as f32
+}
+
+/// Token-level accuracy over supervised positions.
+pub fn token_accuracy(batch: &Batch, correct_mask: &crate::tensor::Tensor) -> f32 {
+    let t = batch.tokens.shape[1];
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for (row, (s, e)) in batch.answers.iter().enumerate() {
+        for p in *s..*e {
+            num += correct_mask.data[row * t + p];
+            den += 1.0;
+        }
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+// --------------------------------------------------- classification ----
+
+#[derive(Debug, Clone)]
+pub struct ClsExample {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+pub trait ClsDataset {
+    fn sample(&self, rng: &mut Rng) -> ClsExample;
+    fn seq(&self) -> usize;
+    fn n_cls(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+#[derive(Debug, Clone)]
+pub struct ClsBatch {
+    pub tokens: TensorI32,
+    pub labels: TensorI32,
+}
+
+pub fn make_cls_batch(ds: &dyn ClsDataset, batch: usize, rng: &mut Rng) -> ClsBatch {
+    let t = ds.seq();
+    let mut tokens = vec![Tok::PAD; batch * t];
+    let mut labels = vec![0i32; batch];
+    for b in 0..batch {
+        let ex = ds.sample(rng);
+        debug_assert!(ex.tokens.len() <= t);
+        tokens[b * t..b * t + ex.tokens.len()].copy_from_slice(&ex.tokens);
+        labels[b] = ex.label;
+    }
+    ClsBatch {
+        tokens: TensorI32::new(vec![batch, t], tokens).unwrap(),
+        labels: TensorI32::new(vec![batch], labels).unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    struct Fixed;
+    impl LmDataset for Fixed {
+        fn sample(&self, _rng: &mut Rng) -> LmExample {
+            // ^ 5 5 | 7 $  with answer "7 $"
+            LmExample { tokens: vec![1, 9, 9, 3, 11, 2], ans_start: 4, ans_end: 6 }
+        }
+        fn seq(&self) -> usize {
+            8
+        }
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+    }
+
+    #[test]
+    fn lm_batch_layout() {
+        let mut rng = Rng::new(0);
+        let b = make_lm_batch(&Fixed, 2, &mut rng);
+        assert_eq!(b.tokens.shape, vec![2, 8]);
+        // positions 3 and 4 predict tokens 4 and 5 (the answer region)
+        let trow = &b.targets.data[0..8];
+        assert_eq!(trow, &[-1, -1, -1, 11, 2, -1, -1, -1]);
+        // padding after EOS
+        assert_eq!(b.tokens.data[6], Tok::PAD);
+    }
+
+    #[test]
+    fn exact_match_requires_all_positions() {
+        let mut rng = Rng::new(0);
+        let b = make_lm_batch(&Fixed, 2, &mut rng);
+        let mut mask = Tensor::zeros(&[2, 8]);
+        // row 0: both answer positions correct; row 1: one of two
+        mask.data[3] = 1.0;
+        mask.data[4] = 1.0;
+        mask.data[8 + 3] = 1.0;
+        assert!((exact_match(&b, &mask) - 0.5).abs() < 1e-6);
+        assert!((token_accuracy(&b, &mask) - 0.75).abs() < 1e-6);
+    }
+}

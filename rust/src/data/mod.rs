@@ -1,0 +1,44 @@
+//! Synthetic workloads standing in for the paper's datasets
+//! (DESIGN.md §2): math-chain (MetaMathQA/GSM8K analog), stack-code
+//! (CodeFeedback/HumanEval analog), and SynGLUE (GLUE analog).
+//!
+//! All generation is deterministic from the run seed; train and eval
+//! streams use disjoint RNG streams so eval examples are held out by
+//! construction.
+
+pub mod batcher;
+mod mathchain;
+mod stackcode;
+mod synglue;
+mod tokenizer;
+
+pub use batcher::{Batch, ClsBatch, ClsDataset, LmDataset};
+pub use mathchain::MathChain;
+pub use stackcode::StackCode;
+pub use synglue::{SynGlueTask, SYNGLUE_NAMES};
+pub use tokenizer::{Tok, Tokenizer};
+
+use crate::config::TaskKind;
+use crate::linalg::Rng;
+
+/// Instantiate the LM dataset for a generation task.
+pub fn lm_dataset(task: TaskKind, seq: usize, seed: u64) -> Box<dyn LmDataset> {
+    match task {
+        TaskKind::MathChain => Box::new(MathChain::new(seq, seed)),
+        TaskKind::StackCode => Box::new(StackCode::new(seq, seed)),
+        TaskKind::SynGlue(_) => panic!("SynGLUE is a classification task"),
+    }
+}
+
+/// Instantiate a SynGLUE classification dataset.
+pub fn cls_dataset(task: TaskKind, seq: usize, seed: u64) -> SynGlueTask {
+    match task {
+        TaskKind::SynGlue(i) => SynGlueTask::new(i as usize, seq, seed),
+        _ => panic!("{task:?} is not a classification task"),
+    }
+}
+
+/// Derive the eval-stream RNG for a given run seed (disjoint from train).
+pub fn eval_rng(seed: u64) -> Rng {
+    Rng::new(seed ^ 0xE7A1_BEEF_CAFE_0001)
+}

@@ -1,0 +1,129 @@
+//! Stack-code corpus — the CodeFeedback/HumanEval stand-in.
+//!
+//! Each example is a random typed-bracket "program" (identifiers
+//! interleaved with nested `()[]{}<>` scopes); the task is to emit the
+//! exact closing sequence for all currently-open scopes. Solving it
+//! requires a pushdown model of the prefix — the classic structured
+//! analogue of code completion.
+//!
+//! `^ (ab[cd{e | }])  $`  — prompt before SEP, closing sequence after.
+
+use crate::linalg::Rng;
+
+use super::batcher::{LmDataset, LmExample};
+use super::tokenizer::{Tok, Tokenizer};
+
+const OPEN: [char; 4] = ['(', '[', '{', '<'];
+const CLOSE: [char; 4] = [')', ']', '}', '>'];
+const IDENT: &str = "abcdefghij";
+
+#[derive(Debug, Clone)]
+pub struct StackCode {
+    seq: usize,
+    max_depth: usize,
+    _seed: u64,
+}
+
+impl StackCode {
+    pub fn new(seq: usize, seed: u64) -> StackCode {
+        let max_depth = ((seq.saturating_sub(8)) / 6).clamp(2, 6);
+        StackCode { seq, max_depth, _seed: seed }
+    }
+}
+
+impl LmDataset for StackCode {
+    fn sample(&self, rng: &mut Rng) -> LmExample {
+        // Build prompt with a random walk over open/ident/close moves,
+        // keeping the final stack non-empty so there is something to close.
+        let budget = self.seq - 6; // BOS, SEP, EOS + closing worst case
+        let mut prompt = String::new();
+        let mut stack: Vec<usize> = Vec::new();
+        let target_len = rng.range(budget / 2, budget - self.max_depth);
+        while prompt.len() + stack.len() + 1 < target_len {
+            let can_open = stack.len() < self.max_depth;
+            let can_close = stack.len() > 1; // keep at least one open scope
+            let r = rng.uniform();
+            if can_open && r < 0.35 {
+                let k = rng.below(4);
+                prompt.push(OPEN[k]);
+                stack.push(k);
+            } else if can_close && r < 0.5 {
+                let k = stack.pop().unwrap();
+                prompt.push(CLOSE[k]);
+            } else {
+                let c = IDENT.as_bytes()[rng.below(IDENT.len())] as char;
+                prompt.push(c);
+                if stack.is_empty() {
+                    // ensure at least one scope opens early
+                    let k = rng.below(4);
+                    prompt.push(OPEN[k]);
+                    stack.push(k);
+                }
+            }
+        }
+        let answer: String = stack.iter().rev().map(|&k| CLOSE[k]).collect();
+        let mut tokens = vec![Tok::BOS];
+        tokens.extend(Tokenizer::encode(&prompt).unwrap());
+        tokens.push(Tok::SEP);
+        let ans_start = tokens.len();
+        tokens.extend(Tokenizer::encode(&answer).unwrap());
+        tokens.push(Tok::EOS);
+        let ans_end = tokens.len();
+        debug_assert!(tokens.len() <= self.seq, "stack example too long: {}", tokens.len());
+        LmExample { tokens, ans_start, ans_end }
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn name(&self) -> &'static str {
+        "stack_code"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_closes(prompt: &str, answer: &str) {
+        let mut stack = Vec::new();
+        for c in prompt.chars().chain(answer.chars()) {
+            if let Some(k) = OPEN.iter().position(|&o| o == c) {
+                stack.push(k);
+            } else if let Some(k) = CLOSE.iter().position(|&cl| cl == c) {
+                assert_eq!(stack.pop(), Some(k), "mismatched close in {prompt}|{answer}");
+            }
+        }
+        assert!(stack.is_empty(), "unclosed scopes in {prompt}|{answer}");
+    }
+
+    #[test]
+    fn answers_close_all_scopes() {
+        let ds = StackCode::new(48, 0);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let ex = ds.sample(&mut rng);
+            assert!(ex.tokens.len() <= 48);
+            let prompt = Tokenizer::decode(&ex.tokens[1..ex.ans_start - 1]);
+            let answer = Tokenizer::decode(&ex.tokens[ex.ans_start..ex.ans_end - 1]);
+            assert!(!answer.is_empty());
+            check_closes(&prompt, &answer);
+        }
+    }
+
+    #[test]
+    fn answer_length_varies() {
+        // the closing sequence must not be constant-length, or the task
+        // degenerates into copying
+        let ds = StackCode::new(64, 0);
+        let mut rng = Rng::new(4);
+        let lens: Vec<usize> = (0..50)
+            .map(|_| {
+                let ex = ds.sample(&mut rng);
+                ex.ans_end - ex.ans_start
+            })
+            .collect();
+        assert!(lens.iter().max() > lens.iter().min());
+    }
+}

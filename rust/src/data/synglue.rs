@@ -1,0 +1,329 @@
+//! SynGLUE — eight synthetic binary sequence-classification tasks standing
+//! in for GLUE (Table 5). Each mirrors the *shape* of its namesake:
+//! single-sentence acceptability/sentiment, sentence-pair
+//! paraphrase/entailment/similarity — with graded difficulty so the task
+//! suite is heterogeneous like the real benchmark.
+
+use crate::linalg::Rng;
+
+use super::batcher::{ClsDataset, ClsExample};
+use super::tokenizer::{Tok, Tokenizer};
+
+pub const SYNGLUE_NAMES: [&str; 8] =
+    ["cola", "mnli", "mrpc", "qnli", "qqp", "rte", "sst2", "stsb"];
+
+#[derive(Debug, Clone)]
+pub struct SynGlueTask {
+    pub index: usize,
+    seq: usize,
+    _seed: u64,
+}
+
+impl SynGlueTask {
+    pub fn new(index: usize, seq: usize, seed: u64) -> SynGlueTask {
+        assert!(index < 8);
+        SynGlueTask { index, seq, _seed: seed }
+    }
+
+    fn seg_len(&self) -> usize {
+        ((self.seq - 4) / 2).clamp(4, 24)
+    }
+
+    fn rand_word(&self, rng: &mut Rng, n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|_| Tokenizer::encode_char((b'a' + rng.below(26) as u8) as char).unwrap())
+            .collect()
+    }
+
+    // ---- single-sentence tasks -------------------------------------
+
+    /// CoLA analog: "acceptability" = brackets in the sentence are balanced.
+    fn gen_cola(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len();
+        let mut s = String::new();
+        let mut depth: usize = 0;
+        for _ in 0..n {
+            if depth > 0 && rng.chance(0.4) {
+                s.push(')');
+                depth -= 1;
+            } else if rng.chance(0.35) {
+                s.push('(');
+                depth += 1;
+            } else {
+                s.push((b'a' + rng.below(8) as u8) as char);
+            }
+        }
+        while depth > 0 && s.len() < n + 4 {
+            s.push(')');
+            depth -= 1;
+        }
+        let mut label = 1;
+        if rng.chance(0.5) {
+            // corrupt: flip one bracket or drop a closer
+            label = 0;
+            let mut chars: Vec<char> = s.chars().collect();
+            let pos = rng.below(chars.len());
+            match chars[pos] {
+                '(' => chars[pos] = ')',
+                ')' => chars[pos] = '(',
+                _ => chars.push('('),
+            }
+            s = chars.into_iter().collect();
+        }
+        (Tokenizer::encode(&s).unwrap(), label)
+    }
+
+    /// SST-2 analog: sentiment = majority polarity among +/- marks buried
+    /// in identifier noise.
+    fn gen_sst2(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len() + 4;
+        let pos_count = rng.range(0, n / 2);
+        let neg_count = {
+            let mut c = rng.range(0, n / 2);
+            if c == pos_count {
+                c = if rng.chance(0.5) { c + 1 } else { c.saturating_sub(1) };
+                if c == pos_count {
+                    c += 1;
+                }
+            }
+            c
+        };
+        let mut chars: Vec<char> = Vec::new();
+        chars.extend(std::iter::repeat('+').take(pos_count));
+        chars.extend(std::iter::repeat('-').take(neg_count));
+        while chars.len() < n {
+            chars.push((b'a' + rng.below(12) as u8) as char);
+        }
+        rng.shuffle(&mut chars);
+        let s: String = chars.into_iter().collect();
+        let label = (pos_count > neg_count) as i32;
+        (Tokenizer::encode(&s).unwrap(), label)
+    }
+
+    // ---- sentence-pair tasks ---------------------------------------
+
+    fn pair(&self, a: &[i32], b: &[i32]) -> Vec<i32> {
+        let mut out = a.to_vec();
+        out.push(Tok::SEP);
+        out.extend_from_slice(b);
+        out
+    }
+
+    /// MRPC analog: paraphrase = second segment is a rotation of the first.
+    fn gen_mrpc(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len();
+        let a = self.rand_word(rng, n);
+        if rng.chance(0.5) {
+            let mut b = a.clone();
+            b.rotate_left(rng.range(1, n));
+            (self.pair(&a, &b), 1)
+        } else {
+            (self.pair(&a, &self.rand_word(rng, n)), 0)
+        }
+    }
+
+    /// QQP analog: duplicate = rotation with up to 2 substitutions (harder
+    /// positive class than MRPC).
+    fn gen_qqp(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len();
+        let a = self.rand_word(rng, n);
+        if rng.chance(0.5) {
+            let mut b = a.clone();
+            b.rotate_left(rng.range(1, n));
+            for _ in 0..rng.range(0, 3) {
+                let p = rng.below(n);
+                b[p] = self.rand_word(rng, 1)[0];
+            }
+            (self.pair(&a, &b), 1)
+        } else {
+            (self.pair(&a, &self.rand_word(rng, n)), 0)
+        }
+    }
+
+    /// MNLI analog: entailment = every token of the second segment occurs
+    /// in the first.
+    fn gen_mnli(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len();
+        let a = self.rand_word(rng, n);
+        let m = n / 2;
+        if rng.chance(0.5) {
+            let b: Vec<i32> = (0..m).map(|_| a[rng.below(n)]).collect();
+            (self.pair(&a, &b), 1)
+        } else {
+            let mut b: Vec<i32> = (0..m).map(|_| a[rng.below(n)]).collect();
+            // inject a token guaranteed absent from a
+            let absent = loop {
+                let c = self.rand_word(rng, 1)[0];
+                if !a.contains(&c) {
+                    break c;
+                }
+            };
+            b[rng.below(m)] = absent;
+            (self.pair(&a, &b), 0)
+        }
+    }
+
+    /// QNLI analog: does the "question" token occur in the "passage"?
+    fn gen_qnli(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len() + 6;
+        let passage = self.rand_word(rng, n);
+        let (q, label) = if rng.chance(0.5) {
+            (passage[rng.below(n)], 1)
+        } else {
+            let absent = loop {
+                let c = self.rand_word(rng, 1)[0];
+                if !passage.contains(&c) {
+                    break c;
+                }
+            };
+            (absent, 0)
+        };
+        (self.pair(&[q], &passage), label)
+    }
+
+    /// RTE analog: MNLI with a shorter hypothesis and distractor overlap —
+    /// the hardest pair task (RTE is the weakest GLUE score in the paper).
+    fn gen_rte(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len();
+        let a = self.rand_word(rng, n);
+        let m = 3.max(n / 3);
+        if rng.chance(0.5) {
+            let b: Vec<i32> = (0..m).map(|_| a[rng.below(n)]).collect();
+            (self.pair(&a, &b), 1)
+        } else {
+            // all-but-one token from a: high superficial overlap
+            let mut b: Vec<i32> = (0..m).map(|_| a[rng.below(n)]).collect();
+            let absent = loop {
+                let c = self.rand_word(rng, 1)[0];
+                if !a.contains(&c) {
+                    break c;
+                }
+            };
+            let p = rng.below(m);
+            b[p] = absent;
+            (self.pair(&a, &b), 0)
+        }
+    }
+
+    /// STS-B analog (binarized): label is a deterministic function of the
+    /// *observable* multiset token overlap between the two segments
+    /// (threshold 0.7·n, the balance point given alphabet collisions).
+    fn gen_stsb(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let n = self.seg_len();
+        let a = self.rand_word(rng, n);
+        let k = rng.range(0, n + 1); // copy k tokens, randomize the rest
+        let mut b = a.clone();
+        for i in k..n {
+            b[i] = self.rand_word(rng, 1)[0];
+        }
+        rng.shuffle(&mut b);
+        let label = (10 * multiset_overlap(&a, &b) > 7 * n) as i32;
+        (self.pair(&a, &b), label)
+    }
+}
+
+/// Size of the multiset intersection of two token sequences.
+pub fn multiset_overlap(a: &[i32], b: &[i32]) -> usize {
+    let mut counts = std::collections::BTreeMap::new();
+    for t in a {
+        *counts.entry(*t).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0;
+    for t in b {
+        if let Some(c) = counts.get_mut(t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    overlap
+}
+
+impl ClsDataset for SynGlueTask {
+    fn sample(&self, rng: &mut Rng) -> ClsExample {
+        let (body, label) = match SYNGLUE_NAMES[self.index] {
+            "cola" => self.gen_cola(rng),
+            "mnli" => self.gen_mnli(rng),
+            "mrpc" => self.gen_mrpc(rng),
+            "qnli" => self.gen_qnli(rng),
+            "qqp" => self.gen_qqp(rng),
+            "rte" => self.gen_rte(rng),
+            "sst2" => self.gen_sst2(rng),
+            "stsb" => self.gen_stsb(rng),
+            _ => unreachable!(),
+        };
+        let mut tokens = vec![Tok::BOS];
+        tokens.extend(body);
+        tokens.push(Tok::EOS);
+        tokens.truncate(self.seq);
+        ClsExample { tokens, label }
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn n_cls(&self) -> usize {
+        2
+    }
+
+    fn name(&self) -> &'static str {
+        SYNGLUE_NAMES[self.index]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        for idx in 0..8 {
+            let ds = SynGlueTask::new(idx, 32, 0);
+            let mut rng = Rng::new(idx as u64);
+            let mut labels = [0usize; 2];
+            for _ in 0..200 {
+                let ex = ds.sample(&mut rng);
+                assert!(ex.tokens.len() <= 32, "{} too long", ds.name());
+                assert!(ex.label == 0 || ex.label == 1);
+                assert_eq!(ex.tokens[0], Tok::BOS);
+                labels[ex.label as usize] += 1;
+            }
+            // both classes occur, neither with < 20% mass
+            assert!(labels[0] >= 40 && labels[1] >= 40, "{}: {labels:?}", ds.name());
+        }
+    }
+
+    #[test]
+    fn qnli_label_matches_membership() {
+        prop::check(50, |rng| {
+            let ds = SynGlueTask::new(3, 32, 0); // qnli
+            let ex = ds.sample(rng);
+            // layout: BOS q SEP passage... EOS
+            let q = ex.tokens[1];
+            let sep = 2;
+            assert_eq!(ex.tokens[sep], Tok::SEP);
+            let end = ex.tokens.len() - 1;
+            let present = ex.tokens[sep + 1..end].contains(&q);
+            prop::assert_true(present == (ex.label == 1), "qnli label consistency")
+        });
+    }
+
+    #[test]
+    fn stsb_label_is_function_of_observable_overlap() {
+        // the label must be exactly recoverable from the input pair —
+        // otherwise the task has irreducible label noise
+        let ds = SynGlueTask::new(7, 40, 0);
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let ex = ds.sample(&mut rng);
+            let sep = ex.tokens.iter().position(|&t| t == Tok::SEP).unwrap();
+            let a = &ex.tokens[1..sep];
+            let b = &ex.tokens[sep + 1..ex.tokens.len() - 1];
+            let want = (10 * multiset_overlap(a, b) > 7 * a.len()) as i32;
+            assert_eq!(want, ex.label);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Character-level tokenizer over a fixed symbol alphabet.
+//!
+//! Ids are stable across presets (all token ids < 64 <= smallest vocab);
+//! larger-vocab presets simply leave the tail of the embedding unused,
+//! mimicking fine-tuning a big-vocab model on a narrow domain — which is
+//! exactly the regime where momentum is strongly low-rank.
+
+use anyhow::{anyhow, Result};
+
+/// Reserved control tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tok;
+
+impl Tok {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const EOS: i32 = 2;
+    pub const SEP: i32 = 3; // question/answer or sentence-pair separator
+}
+
+const ALPHABET: &str = "0123456789+-*/=()[]{}<>abcdefghijklmnopqrstuvwxyz.,!? ";
+const BASE: i32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn vocab_used() -> usize {
+        BASE as usize + ALPHABET.len()
+    }
+
+    pub fn encode_char(c: char) -> Result<i32> {
+        ALPHABET
+            .find(c)
+            .map(|i| BASE + i as i32)
+            .ok_or_else(|| anyhow!("character '{c}' not in alphabet"))
+    }
+
+    pub fn encode(s: &str) -> Result<Vec<i32>> {
+        s.chars().map(Self::encode_char).collect()
+    }
+
+    pub fn decode(ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&id| match id {
+                Tok::PAD => '_',
+                Tok::BOS => '^',
+                Tok::EOS => '$',
+                Tok::SEP => '|',
+                id => ALPHABET
+                    .chars()
+                    .nth((id - BASE) as usize)
+                    .unwrap_or('?'),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = "12+(34*5)=x? ok";
+        let ids = Tokenizer::encode(s).unwrap();
+        assert_eq!(Tokenizer::decode(&ids), s);
+        assert!(ids.iter().all(|&i| i >= BASE && (i as usize) < Tokenizer::vocab_used()));
+    }
+
+    #[test]
+    fn control_tokens_disjoint_from_alphabet() {
+        let ids = Tokenizer::encode(ALPHABET).unwrap();
+        for ctl in [Tok::PAD, Tok::BOS, Tok::EOS, Tok::SEP] {
+            assert!(!ids.contains(&ctl));
+        }
+    }
+
+    #[test]
+    fn fits_smallest_vocab() {
+        assert!(Tokenizer::vocab_used() <= 256, "{}", Tokenizer::vocab_used());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Tokenizer::encode("京").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! MLorc: Momentum Low-rank Compression — a rust + JAX + Pallas
+//! reproduction of Shen et al., AISTATS 2026.
+//!
+//! Three layers (see DESIGN.md):
+//!  * L1 Pallas kernels and L2 JAX graphs live in `python/compile/` and are
+//!    AOT-lowered once (`make artifacts`) to HLO text;
+//!  * this crate is L3: it loads the artifacts through PJRT (`runtime`),
+//!    owns the training loop, data pipeline, RNG and all state
+//!    (`coordinator`), and regenerates every table/figure of the paper
+//!    (`bench_harness`). Python never runs at training time.
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,130 @@
+//! Host matmuls (ikj loop order, f64 accumulation on the k-panel).
+//!
+//! These back the reference optimizers and the spectral probe; the training
+//! hot path runs inside XLA. Sizes here are at most (vocab x d_model), so a
+//! cache-friendly scalar kernel is plenty.
+
+use crate::tensor::Tensor;
+
+/// C = A @ B — (m, k) @ (k, n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2().expect("matmul lhs");
+    let (k2, n) = b.dims2().expect("matmul rhs");
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Tensor { shape: vec![m, n], data: c }
+}
+
+/// C = A^T @ B — (m, k)^T @ (m, n) -> (k, n).
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2().expect("matmul_at_b lhs");
+    let (m2, n) = b.dims2().expect("matmul_at_b rhs");
+    assert_eq!(m, m2);
+    let mut c = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let brow = &b.data[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Tensor { shape: vec![k, n], data: c }
+}
+
+/// C = A @ B^T — (m, k) @ (n, k)^T -> (m, n).
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2().expect("matmul_a_bt lhs");
+    let (n, k2) = b.dims2().expect("matmul_a_bt rhs");
+    assert_eq!(k, k2);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f64;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av as f64 * bv as f64;
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    Tensor { shape: vec![m, n], data: c }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2().unwrap();
+        let (_, n) = b.dims2().unwrap();
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for p in 0..k {
+                    s += a.at2(i, p) as f64 * b.at2(p, j) as f64;
+                }
+                c.set2(i, j, s as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 4, 5), (8, 8, 8), (17, 3, 9)] {
+            let a = rng.gaussian_tensor(&[m, k], 1.0);
+            let b = rng.gaussian_tensor(&[k, n], 1.0);
+            let c = matmul(&a, &b);
+            assert!(c.rel_err(&naive(&a, &b)) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        let mut rng = Rng::new(2);
+        let a = rng.gaussian_tensor(&[7, 5], 1.0);
+        let b = rng.gaussian_tensor(&[7, 6], 1.0);
+        let c1 = matmul_at_b(&a, &b);
+        let c2 = matmul(&a.transpose2().unwrap(), &b);
+        assert!(c1.rel_err(&c2) < 1e-5);
+
+        let d = rng.gaussian_tensor(&[6, 5], 1.0);
+        let e1 = matmul_a_bt(&a, &d);
+        let e2 = matmul(&a, &d.transpose2().unwrap());
+        assert!(e1.rel_err(&e2) < 1e-5);
+    }
+
+    #[test]
+    fn identity() {
+        let mut rng = Rng::new(3);
+        let a = rng.gaussian_tensor(&[4, 4], 1.0);
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.set2(i, i, 1.0);
+        }
+        assert!(matmul(&a, &eye).rel_err(&a) < 1e-6);
+    }
+}

@@ -1,0 +1,21 @@
+//! Pure-rust dense linear algebra substrate.
+//!
+//! Three consumers:
+//!  * the spectral probe (Figures 1/4) — `svd::singular_values` on momenta
+//!    fetched from the runtime;
+//!  * cross-validation — the `optim` reference mirrors re-implement every
+//!    optimizer step on host tensors and must agree with the HLO graphs;
+//!  * the coordinator's RNG — Gaussian Omega inputs for RSVD (the lowered
+//!    graphs are pure functions; all randomness is rust-owned).
+
+pub mod matmul;
+pub mod qr;
+pub mod rng;
+pub mod rsvd;
+pub mod svd;
+
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use qr::mgs_qr;
+pub use rng::Rng;
+pub use rsvd::rsvd_qb;
+pub use svd::{singular_values, top_k_ratio};

@@ -1,0 +1,87 @@
+//! Skinny QR via modified Gram-Schmidt with one reorthogonalization pass —
+//! the exact algorithm the Layer-2 graphs unroll, so the rust reference
+//! optimizers reproduce the HLO bit-for-bit up to f32 reassociation.
+
+use crate::tensor::Tensor;
+
+/// Column-orthonormal Q of a (m, l) matrix, l small. Dead columns (norm^2
+/// <= 1e-30) become zero columns — rank simply drops, matching rsvd_lib.
+pub fn mgs_qr(y: &Tensor) -> Tensor {
+    let (m, l) = y.dims2().expect("mgs_qr input");
+    // column-major scratch for locality
+    let mut cols: Vec<Vec<f32>> = (0..l)
+        .map(|j| (0..m).map(|i| y.at2(i, j)).collect())
+        .collect();
+    for j in 0..l {
+        for _pass in 0..2 {
+            for i in 0..j {
+                let (head, tail) = cols.split_at_mut(j);
+                let qi = &head[i];
+                let vj = &mut tail[0];
+                let dot: f64 = qi.iter().zip(vj.iter()).map(|(a, b)| *a as f64 * *b as f64).sum();
+                let dot = dot as f32;
+                for (v, q) in vj.iter_mut().zip(qi) {
+                    *v -= q * dot;
+                }
+            }
+        }
+        let nrm2: f64 = cols[j].iter().map(|x| (*x as f64) * (*x as f64)).sum();
+        let inv = if nrm2 > 1e-30 { 1.0 / nrm2.sqrt() } else { 0.0 } as f32;
+        for v in cols[j].iter_mut() {
+            *v *= inv;
+        }
+    }
+    let mut q = Tensor::zeros(&[m, l]);
+    for j in 0..l {
+        for i in 0..m {
+            q.set2(i, j, cols[j][i]);
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_at_b, Rng};
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(1);
+        for (m, l) in [(32, 4), (64, 8), (100, 3)] {
+            let y = rng.gaussian_tensor(&[m, l], 1.0);
+            let q = mgs_qr(&y);
+            let qtq = matmul_at_b(&q, &q);
+            for i in 0..l {
+                for j in 0..l {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((qtq.at2(i, j) - want).abs() < 5e-5, "qtq[{i},{j}]={}", qtq.at2(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spans_input_columns() {
+        // Every input column must be reproduced by Q Q^T y_j.
+        let mut rng = Rng::new(2);
+        let y = rng.gaussian_tensor(&[48, 4], 1.0);
+        let q = mgs_qr(&y);
+        let proj = crate::linalg::matmul(&q, &matmul_at_b(&q, &y));
+        assert!(proj.rel_err(&y) < 1e-4);
+    }
+
+    #[test]
+    fn zero_column_stays_zero() {
+        let mut rng = Rng::new(3);
+        let mut y = rng.gaussian_tensor(&[16, 3], 1.0);
+        for i in 0..16 {
+            y.set2(i, 1, 0.0);
+        }
+        let q = mgs_qr(&y);
+        for i in 0..16 {
+            assert_eq!(q.at2(i, 1), 0.0);
+            assert!(q.at2(i, 0).is_finite() && q.at2(i, 2).is_finite());
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Host-side QB randomized range finder — the rust mirror of
+//! `python/compile/rsvd_lib.py`, used by the reference optimizers and the
+//! Lemma B.1 property tests.
+
+use crate::tensor::Tensor;
+
+use super::{matmul, matmul_at_b, mgs_qr, Rng};
+
+/// A ~= Q @ B with Q (m, l) column-orthonormal, B = Q^T A (l, n).
+/// `omega` must be (n, l) Gaussian.
+pub fn rsvd_qb(a: &Tensor, omega: &Tensor) -> (Tensor, Tensor) {
+    let y = matmul(a, omega);
+    let q = mgs_qr(&y);
+    let b = matmul_at_b(&q, a);
+    (q, b)
+}
+
+/// Convenience: draw Omega from `rng` and return the reconstruction QB.
+pub fn rsvd_reconstruct(a: &Tensor, l: usize, rng: &mut Rng) -> Tensor {
+    let (_, n) = a.dims2().expect("rsvd input");
+    let omega = rng.gaussian_tensor(&[n, l], 1.0);
+    let (q, b) = rsvd_qb(a, &omega);
+    matmul(&q, &b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn exact_on_lowrank_inputs() {
+        prop::check(32, |rng| {
+            let m = rng.range(8, 48);
+            let n = rng.range(8, 48);
+            let r = rng.range(1, 5);
+            let u = rng.gaussian_tensor(&[m, r], 1.0);
+            let v = rng.gaussian_tensor(&[r, n], 1.0);
+            let a = matmul(&u, &v);
+            let omega = rng.gaussian_tensor(&[n, r], 1.0);
+            let (q, b) = rsvd_qb(&a, &omega);
+            let rec = matmul(&q, &b);
+            let rel = rec.rel_err(&a);
+            prop::assert_lt(rel as f64, 1e-3, "rank-r input reconstructs exactly")
+        });
+    }
+
+    #[test]
+    fn reconstruction_never_beats_input_norm() {
+        // ||QB||_F <= ||A||_F since QB is an orthogonal projection of A.
+        prop::check(32, |rng| {
+            let m = rng.range(4, 40);
+            let n = rng.range(4, 40);
+            // Precondition from the paper (r + p <= min(m, n)); beyond it the
+            // range finder has more columns than the space has dimensions.
+            let l = rng.range(1, 9).min(n).min(m);
+            let a = rng.gaussian_tensor(&[m, n], 1.0);
+            let omega = rng.gaussian_tensor(&[n, l], 1.0);
+            let (q, b) = rsvd_qb(&a, &omega);
+            let rec = matmul(&q, &b);
+            prop::assert_lt(
+                rec.norm_fro() as f64,
+                a.norm_fro() as f64 * (1.0 + 1e-4),
+                "projection is a contraction",
+            )
+        });
+    }
+
+    #[test]
+    fn lemma_b1_error_bound_statistical() {
+        // E||m_t - QB(m_t)||_F <= gamma (1 - beta2) ||g_t||_F when the
+        // previous factor pair is rank l. 20-draw average with 3x slack.
+        let (m, n, r, p) = (40, 28, 4, 2);
+        let l = r + p;
+        let gamma = (1.0 + r as f64 / (p as f64 - 1.0)).sqrt();
+        let beta2 = 0.99f32;
+        let mut rng = Rng::new(17);
+        let q0 = mgs_qr(&rng.gaussian_tensor(&[m, l], 1.0));
+        let b0 = rng.gaussian_tensor(&[l, n], 0.1);
+        let recon0 = matmul(&q0, &b0);
+        let mut errs = 0.0f64;
+        let mut bounds = 0.0f64;
+        for _ in 0..20 {
+            let g = rng.gaussian_tensor(&[m, n], 1.0);
+            let mut mt = recon0.clone();
+            mt.axpy(1.0 - beta2, &g, beta2);
+            let omega = rng.gaussian_tensor(&[n, l], 1.0);
+            let (q, b) = rsvd_qb(&mt, &omega);
+            let mut diff = matmul(&q, &b);
+            diff.axpy(1.0, &mt, -1.0);
+            errs += diff.norm_fro() as f64;
+            bounds += gamma * (1.0 - beta2 as f64) * g.norm_fro() as f64;
+        }
+        assert!(errs <= 3.0 * bounds, "E err {errs} vs bound {bounds}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Singular values via one-sided Jacobi — powers the spectral probe
+//! (top-8 singular-value concentration, Figures 1 and 4).
+//!
+//! One-sided Jacobi orthogonalizes the columns of A by plane rotations;
+//! on convergence the column norms are the singular values. Robust, simple
+//! and accurate for the sizes the probe sees (<= vocab x d_model).
+
+use crate::tensor::Tensor;
+
+/// All singular values of a 2-D tensor, descending.
+pub fn singular_values(a: &Tensor) -> Vec<f32> {
+    let (m, n) = a.dims2().expect("singular_values input");
+    // Work on the transpose when n > m: fewer columns to rotate, same
+    // nonzero spectrum.
+    let work = if n > m { a.transpose2().unwrap() } else { a.clone() };
+    let (rows, cols) = work.dims2().unwrap();
+    // column-major copy
+    let mut c: Vec<Vec<f64>> = (0..cols)
+        .map(|j| (0..rows).map(|i| work.at2(i, j) as f64).collect())
+        .collect();
+
+    let max_sweeps = 30;
+    let tol = 1e-12;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..rows {
+                    app += c[p][i] * c[p][i];
+                    aqq += c[q][i] * c[q][i];
+                    apq += c[p][i] * c[q][i];
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation that zeroes the (p,q) inner product.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let cs = 1.0 / (1.0 + t * t).sqrt();
+                let sn = cs * t;
+                for i in 0..rows {
+                    let vp = c[p][i];
+                    let vq = c[q][i];
+                    c[p][i] = cs * vp - sn * vq;
+                    c[q][i] = sn * vp + cs * vq;
+                }
+            }
+        }
+        if off == 0.0 {
+            break;
+        }
+    }
+
+    let mut sv: Vec<f32> = c
+        .iter()
+        .map(|col| (col.iter().map(|x| x * x).sum::<f64>()).sqrt() as f32)
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// The paper's concentration statistic: sum of top-k singular values over
+/// the total sum (Figure 1). Returns 1.0 for a zero matrix (degenerate but
+/// well-defined: "all mass in the top k").
+pub fn top_k_ratio(a: &Tensor, k: usize) -> f32 {
+    let sv = singular_values(a);
+    let total: f64 = sv.iter().map(|x| *x as f64).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let top: f64 = sv.iter().take(k).map(|x| *x as f64).sum();
+    (top / total) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, Rng};
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Tensor::zeros(&[4, 4]);
+        for (i, v) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            a.set2(i, i, *v);
+        }
+        let sv = singular_values(&a);
+        for (got, want) in sv.iter().zip([4.0, 3.0, 2.0, 1.0]) {
+            assert!((got - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // A = u v^T has a single nonzero singular value ||u|| * ||v||.
+        let mut rng = Rng::new(1);
+        let u = rng.gaussian_tensor(&[12, 1], 1.0);
+        let v = rng.gaussian_tensor(&[1, 9], 1.0);
+        let a = matmul(&u, &v);
+        let sv = singular_values(&a);
+        let want = u.norm_fro() * v.norm_fro();
+        assert!((sv[0] - want).abs() / want < 1e-4);
+        assert!(sv[1] < 1e-4 * want);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // sum of squared singular values == ||A||_F^2
+        let mut rng = Rng::new(2);
+        for shape in [[10, 7], [7, 10], [16, 16]] {
+            let a = rng.gaussian_tensor(&shape, 1.0);
+            let sv = singular_values(&a);
+            let ss: f64 = sv.iter().map(|x| (*x as f64).powi(2)).sum();
+            let f2 = (a.norm_fro() as f64).powi(2);
+            assert!((ss - f2).abs() / f2 < 1e-4, "{ss} vs {f2}");
+        }
+    }
+
+    #[test]
+    fn orthogonal_invariance_and_descending() {
+        let mut rng = Rng::new(3);
+        let a = rng.gaussian_tensor(&[20, 8], 1.0);
+        let sv = singular_values(&a);
+        for w in sv.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // rotating columns by Q (orthonormal) preserves singular values
+        let q = crate::linalg::mgs_qr(&rng.gaussian_tensor(&[8, 8], 1.0));
+        let aq = matmul(&a, &q);
+        let sv2 = singular_values(&aq);
+        for (x, y) in sv.iter().zip(&sv2) {
+            assert!((x - y).abs() < 1e-3 * sv[0]);
+        }
+    }
+
+    #[test]
+    fn top_k_ratio_bounds_and_lowrank() {
+        let mut rng = Rng::new(4);
+        let u = rng.gaussian_tensor(&[32, 2], 1.0);
+        let v = rng.gaussian_tensor(&[2, 24], 1.0);
+        let lowrank = matmul(&u, &v);
+        // rank-2 matrix: top-8 ratio must be ~1
+        assert!(top_k_ratio(&lowrank, 8) > 0.999);
+        let noise = rng.gaussian_tensor(&[32, 24], 1.0);
+        let r = top_k_ratio(&noise, 8);
+        assert!(r > 0.0 && r < 1.0);
+        assert_eq!(top_k_ratio(&Tensor::zeros(&[8, 8]), 8), 1.0);
+    }
+}

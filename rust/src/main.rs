@@ -1,0 +1,210 @@
+//! mlorc — launcher CLI for the MLorc reproduction.
+//!
+//! Subcommands:
+//!   train   — one fine-tuning run (method x task x preset)
+//!   bench   — regenerate a paper table/figure (see DESIGN.md §5)
+//!   info    — artifact/manifest inventory
+//!   memory  — analytic memory report for a preset (Table 1 style)
+
+use anyhow::{bail, Context, Result};
+
+use mlorc::bench_harness::{run_experiment, Scale, EXPERIMENT_IDS};
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::{save_checkpoint, Trainer};
+use mlorc::runtime::{Manifest, Runtime};
+use mlorc::util::{cli::Args, fsutil, logger};
+
+fn main() {
+    logger::init();
+    if let Err(e) = run() {
+        log::error!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("info") => cmd_info(&args),
+        Some("memory") => cmd_memory(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `mlorc help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mlorc — Momentum Low-rank Compression (AISTATS 2026) reproduction
+
+USAGE: mlorc <subcommand> [--options]
+
+  train  --preset tiny --method mlorc_adamw --task math_chain --steps 200
+         [--lr 2e-3] [--seed 0] [--eval-every 50] [--spectral-every 0]
+         [--save-metrics results/run.json] [--checkpoint-dir ckpt/]
+  bench  --experiment <id> [--quick] [--steps N] [--seeds K]
+         ids: {ids}
+  memory --preset tiny [--per-layer]
+  info
+
+methods: {methods}
+tasks:   math_chain, stack_code, synglue_<{glue}>",
+        ids = EXPERIMENT_IDS.join(", "),
+        methods = Method::all().iter().map(|m| m.name()).collect::<Vec<_>>().join(", "),
+        glue = mlorc::data::SYNGLUE_NAMES.join("|"),
+    );
+}
+
+fn open_runtime() -> Result<(Manifest, Runtime)> {
+    let dir = fsutil::artifacts_dir()?;
+    if !dir.join("manifest.json").exists() {
+        bail!("no artifacts at {} — run `make artifacts` first", dir.display());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu(&dir)?;
+    Ok((manifest, rt))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny").to_string();
+    let method = Method::parse(args.get_or("method", "mlorc_adamw"))?;
+    let task = TaskKind::parse(args.get_or("task", "math_chain"))?;
+    let steps = args.get_usize("steps", 200)?;
+    let mut cfg = RunConfig::new(&preset, method, task, steps);
+    cfg.peak_lr = args.get_f64("lr", cfg.peak_lr as f64)? as f32;
+    cfg.seed = args.get_u64("seed", 0)?;
+    cfg.eval_every = args.get_usize("eval-every", 0)?;
+    cfg.eval_batches = args.get_usize("eval-batches", 8)?;
+    cfg.spectral_every = args.get_usize("spectral-every", 0)?;
+    cfg.galore_update_freq = args.get_usize("galore-freq", 50)?;
+    cfg.log_every = args.get_usize("log-every", 10)?;
+    let save_metrics = args.get("save-metrics").map(|s| s.to_string());
+    let ckpt_dir = args.get("checkpoint-dir").map(|s| s.to_string());
+    args.reject_unknown()?;
+
+    let (manifest, rt) = open_runtime()?;
+    let preset_spec = manifest.preset(&preset)?;
+    log::info!(
+        "train: {} / {} / {} — {} params, rank {}",
+        preset,
+        method.name(),
+        task.name(),
+        preset_spec.model.n_params(),
+        preset_spec.model.rank
+    );
+    let mut trainer = Trainer::new(&rt, preset_spec, cfg.clone())?;
+    let outcome = trainer.train()?;
+    if let Some(ev) = &outcome.eval {
+        log::info!(
+            "done: final loss {:.4}, eval loss {:.4}, acc {:.3}, exact match {:.3} ({:.1}s)",
+            outcome.final_loss,
+            ev.loss,
+            ev.accuracy,
+            ev.exact_match,
+            outcome.wall_secs
+        );
+    }
+    let mem = &outcome.memory_measured;
+    log::info!(
+        "memory: weights {:.1} MB, opt state {:.1} MB, grads peak {:.1} MB",
+        mem.weights_bytes as f64 / 1e6,
+        mem.opt_state_bytes as f64 / 1e6,
+        mem.grads_peak_bytes as f64 / 1e6
+    );
+    if let Some(path) = save_metrics {
+        trainer.metrics.save(std::path::Path::new(&path))?;
+        log::info!("metrics -> {path}");
+    }
+    if let Some(dir) = ckpt_dir {
+        save_checkpoint(
+            std::path::Path::new(&dir),
+            trainer.step_count(),
+            &cfg,
+            &trainer.params,
+            trainer.adapters.as_ref(),
+        )?;
+        log::info!("checkpoint -> {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let id = args.require("experiment")?.to_string();
+    let scale = if args.flag("quick") { Scale::Quick } else { Scale::Full };
+    let steps = args.get("steps").map(|s| s.parse()).transpose().context("--steps")?;
+    let seeds = args.get("seeds").map(|s| s.parse()).transpose().context("--seeds")?;
+    args.reject_unknown()?;
+    let (manifest, rt) = open_runtime()?;
+    let ids: Vec<String> = if id == "all" {
+        EXPERIMENT_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        id.split(',').map(|s| s.to_string()).collect()
+    };
+    let out_dir = fsutil::results_dir()?;
+    for id in ids {
+        log::info!("experiment {id} ({scale:?})...");
+        let t0 = std::time::Instant::now();
+        let report = run_experiment(&id, &manifest, &rt, scale, steps, seeds)?;
+        report.save(&out_dir)?;
+        println!("{}", report.to_markdown());
+        log::info!("{id} done in {:.1}s -> results/{id}.md", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.reject_unknown()?;
+    let dir = fsutil::artifacts_dir()?;
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    for (name, preset) in &manifest.presets {
+        let dims = preset.model;
+        println!(
+            "  preset {name}: d={} L={} heads={} vocab={} seq={} batch={} rank={} — {:.1}M params, {} graphs, {} opt-step methods",
+            dims.d_model,
+            dims.n_layers,
+            dims.n_heads,
+            dims.vocab,
+            dims.seq,
+            dims.batch,
+            dims.rank,
+            dims.n_params() as f64 / 1e6,
+            preset.graphs.len(),
+            preset.opt_steps.len(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let preset_name = args.get_or("preset", "tiny").to_string();
+    let per_layer = args.flag("per-layer");
+    args.reject_unknown()?;
+    let dir = fsutil::artifacts_dir()?;
+    let manifest = Manifest::load(&dir)?;
+    let preset = manifest.preset(&preset_name)?;
+    println!(
+        "analytic memory for preset '{preset_name}' (per-layer updates: {per_layer}), {:.1}M params:",
+        preset.model.n_params() as f64 / 1e6
+    );
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>12}",
+        "method", "weights", "opt state", "grads peak", "total"
+    );
+    for &m in Method::all() {
+        let r = mlorc::coordinator::MemoryAccountant::analytic(preset, m, per_layer, false);
+        println!(
+            "{:<14} {:>10.1}MB {:>10.1}MB {:>10.1}MB {:>10.1}MB",
+            m.name(),
+            (r.weights_bytes + r.lora_extra_weights_bytes) as f64 / 1e6,
+            r.opt_state_bytes as f64 / 1e6,
+            r.grads_peak_bytes as f64 / 1e6,
+            r.total() as f64 / 1e6
+        );
+    }
+    Ok(())
+}

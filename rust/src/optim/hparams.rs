@@ -1,0 +1,60 @@
+//! Optimizer hyper-parameters — must stay in lock-step with
+//! `python/compile/configs.py::HPARAMS` (the manifest records the python
+//! side; `rust/tests/cross_validate.rs` asserts the two agree).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptHp {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub galore_scale: f32,
+    pub lora_alpha: f32,
+}
+
+impl OptHp {
+    pub fn adamw() -> OptHp {
+        OptHp {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            galore_scale: 0.25,
+            lora_alpha: 16.0,
+        }
+    }
+
+    /// Paper: MLorc-AdamW uses beta1 = 0.8 to damp RSVD approximation
+    /// error accumulation (Section 4.1).
+    pub fn mlorc_adamw() -> OptHp {
+        OptHp { beta1: 0.8, ..OptHp::adamw() }
+    }
+
+    pub fn lion() -> OptHp {
+        OptHp { beta1: 0.9, beta2: 0.99, ..OptHp::adamw() }
+    }
+
+    pub fn for_method(method: crate::config::Method) -> OptHp {
+        use crate::config::Method::*;
+        match method {
+            FullAdamW | LoraAdamW | Galore | LdAdamW => OptHp::adamw(),
+            MlorcAdamW | MlorcM | MlorcV => OptHp::mlorc_adamw(),
+            FullLion | MlorcLion | LoraLion => OptHp::lion(),
+        }
+    }
+
+    /// From a manifest step-graph hparams blob.
+    pub fn from_json(j: &crate::util::json::Json) -> OptHp {
+        let f = |k: &str, d: f32| {
+            j.get(k).and_then(|v| v.as_f64().ok()).map(|x| x as f32).unwrap_or(d)
+        };
+        OptHp {
+            beta1: f("beta1", 0.9),
+            beta2: f("beta2", 0.999),
+            eps: f("eps", 1e-8),
+            weight_decay: f("weight_decay", 0.0),
+            galore_scale: f("galore_scale", 0.25),
+            lora_alpha: f("lora_alpha", 16.0),
+        }
+    }
+}

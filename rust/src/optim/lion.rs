@@ -1,0 +1,94 @@
+//! Uncompressed Lion (Chen et al., 2023) — baseline "Full (Lion)".
+
+use crate::tensor::Tensor;
+
+use super::OptHp;
+
+#[derive(Debug, Clone)]
+pub struct LionState {
+    pub m: Tensor,
+    pub t: usize,
+}
+
+impl LionState {
+    pub fn new(shape: &[usize]) -> LionState {
+        LionState { m: Tensor::zeros(shape), t: 0 }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.m.size_bytes()
+    }
+
+    pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp) {
+        self.t += 1;
+        for ((wi, mi), gi) in w.data.iter_mut().zip(&self.m.data).zip(&g.data) {
+            let c = hp.beta1 * mi + (1.0 - hp.beta1) * gi;
+            *wi -= lr * (sign(c) + hp.weight_decay * *wi);
+        }
+        for (mi, gi) in self.m.data.iter_mut().zip(&g.data) {
+            *mi = hp.beta2 * *mi + (1.0 - hp.beta2) * gi;
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    #[test]
+    fn update_magnitude_is_lr() {
+        let hp = OptHp::lion();
+        let mut rng = Rng::new(0);
+        let g = rng.gaussian_tensor(&[16], 1.0);
+        let mut w = Tensor::zeros(&[16]);
+        let mut st = LionState::new(&[16]);
+        st.step(&mut w, &g, 0.01, &hp);
+        for (wi, gi) in w.data.iter().zip(&g.data) {
+            if *gi != 0.0 {
+                assert!((wi.abs() - 0.01).abs() < 1e-7);
+                assert_eq!(wi.signum(), -gi.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_uses_beta2() {
+        let hp = OptHp::lion();
+        let g = Tensor::full(&[2], 1.0);
+        let mut w = Tensor::zeros(&[2]);
+        let mut st = LionState::new(&[2]);
+        st.step(&mut w, &g, 0.01, &hp);
+        assert!((st.m.data[0] - (1.0 - hp.beta2)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let hp = OptHp::lion();
+        let mut rng = Rng::new(1);
+        let target = rng.gaussian_tensor(&[4, 4], 1.0);
+        let mut w = Tensor::zeros(&[4, 4]);
+        let mut st = LionState::new(&[4, 4]);
+        let mut lr = 0.05;
+        for step in 0..400 {
+            if step % 100 == 99 {
+                lr *= 0.3; // sign updates need decay to settle
+            }
+            let mut g = w.clone();
+            g.axpy(-1.0, &target, 1.0);
+            st.step(&mut w, &g, lr, &hp);
+        }
+        assert!(w.rel_err(&target) < 0.1, "rel {}", w.rel_err(&target));
+    }
+}

@@ -1,0 +1,298 @@
+//! MLorc reference implementations: Algorithm 1 (AdamW), Algorithm 2
+//! (Lion) and the Table 7 ablations (compress-m-only / compress-v-only).
+//!
+//! State is the QB factor pair per momentum — identical to the lowered
+//! graphs; Omega draws come from a caller-provided RNG stream so the HLO
+//! cross-validation can feed the *same* Omega to both implementations.
+
+use crate::linalg::{matmul, rsvd_qb, Rng};
+use crate::tensor::Tensor;
+
+use super::lion::sign;
+use super::{adamw_apply, bias_corrections, OptHp};
+
+/// Eq. (2): ReLU(recon) + zeta * 1{recon < 0}, zeta = |mean of negative
+/// part| — repairs compression-induced negatives in the second moment.
+pub fn zeta_fix(recon: &mut Tensor) {
+    let mut negsum = 0.0f64;
+    let mut negcnt = 0usize;
+    for x in &recon.data {
+        if *x < 0.0 {
+            negsum += -*x as f64;
+            negcnt += 1;
+        }
+    }
+    let zeta = (negsum / negcnt.max(1) as f64) as f32;
+    for x in recon.data.iter_mut() {
+        if *x < 0.0 {
+            *x = zeta;
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MlorcAdamWState {
+    pub mq: Tensor,
+    pub mb: Tensor,
+    pub vq: Tensor,
+    pub vb: Tensor,
+    pub l: usize,
+    pub t: usize,
+}
+
+impl MlorcAdamWState {
+    pub fn new(shape: &[usize], l: usize) -> MlorcAdamWState {
+        let (m, n) = (shape[0], shape[1]);
+        MlorcAdamWState {
+            mq: Tensor::zeros(&[m, l]),
+            mb: Tensor::zeros(&[l, n]),
+            vq: Tensor::zeros(&[m, l]),
+            vb: Tensor::zeros(&[l, n]),
+            l,
+            t: 0,
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.mq.size_bytes() + self.mb.size_bytes() + self.vq.size_bytes() + self.vb.size_bytes()
+    }
+
+    /// Algorithm 1, lines 5-15. `rng` supplies the two Omega draws.
+    pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
+        self.t += 1;
+        let (_, n) = w.dims2().expect("mlorc on 2-D params only");
+        // lines 6+9: m_t = beta1 * reconstruct + (1-beta1) g
+        let mut mt = matmul(&self.mq, &self.mb);
+        mt.axpy(1.0 - hp.beta1, g, hp.beta1);
+        // lines 7-8+10: v_t = beta2 * fix(reconstruct) + (1-beta2) g^2
+        let mut vt = matmul(&self.vq, &self.vb);
+        zeta_fix(&mut vt);
+        for (vi, gi) in vt.data.iter_mut().zip(&g.data) {
+            *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+        }
+        // lines 11-12: recompress
+        let om_m = rng.gaussian_tensor(&[n, self.l], 1.0);
+        let om_v = rng.gaussian_tensor(&[n, self.l], 1.0);
+        let (mq, mb) = rsvd_qb(&mt, &om_m);
+        let (vq, vb) = rsvd_qb(&vt, &om_v);
+        self.mq = mq;
+        self.mb = mb;
+        self.vq = vq;
+        self.vb = vb;
+        // lines 13-15: update with the *exact* m_t, v_t
+        let (c1, c2) = bias_corrections(hp, self.t);
+        adamw_apply(w, &mt, &vt, lr, c1, c2, hp);
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MlorcLionState {
+    pub mq: Tensor,
+    pub mb: Tensor,
+    pub l: usize,
+    pub t: usize,
+}
+
+impl MlorcLionState {
+    pub fn new(shape: &[usize], l: usize) -> MlorcLionState {
+        MlorcLionState {
+            mq: Tensor::zeros(&[shape[0], l]),
+            mb: Tensor::zeros(&[l, shape[1]]),
+            l,
+            t: 0,
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.mq.size_bytes() + self.mb.size_bytes()
+    }
+
+    /// Algorithm 2, lines 5-10.
+    pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
+        self.t += 1;
+        let (_, n) = w.dims2().expect("mlorc on 2-D params only");
+        let recon = matmul(&self.mq, &self.mb); // line 6
+        // line 10 uses c_t = beta1 recon + (1-beta1) g
+        for ((wi, ri), gi) in w.data.iter_mut().zip(&recon.data).zip(&g.data) {
+            let c = hp.beta1 * ri + (1.0 - hp.beta1) * gi;
+            *wi -= lr * (sign(c) + hp.weight_decay * *wi);
+        }
+        // line 8: m_t = beta2 recon + (1-beta2) g, then line 9 recompress
+        let mut mt = recon;
+        mt.axpy(1.0 - hp.beta2, g, hp.beta2);
+        let om = rng.gaussian_tensor(&[n, self.l], 1.0);
+        let (mq, mb) = rsvd_qb(&mt, &om);
+        self.mq = mq;
+        self.mb = mb;
+    }
+}
+
+/// Table 7 ablation: compress m only, keep v exact.
+#[derive(Debug, Clone)]
+pub struct MlorcMState {
+    pub mq: Tensor,
+    pub mb: Tensor,
+    pub v: Tensor,
+    pub l: usize,
+    pub t: usize,
+}
+
+impl MlorcMState {
+    pub fn new(shape: &[usize], l: usize) -> MlorcMState {
+        MlorcMState {
+            mq: Tensor::zeros(&[shape[0], l]),
+            mb: Tensor::zeros(&[l, shape[1]]),
+            v: Tensor::zeros(shape),
+            l,
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
+        self.t += 1;
+        let (_, n) = w.dims2().unwrap();
+        let mut mt = matmul(&self.mq, &self.mb);
+        mt.axpy(1.0 - hp.beta1, g, hp.beta1);
+        for (vi, gi) in self.v.data.iter_mut().zip(&g.data) {
+            *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+        }
+        let om = rng.gaussian_tensor(&[n, self.l], 1.0);
+        let (mq, mb) = rsvd_qb(&mt, &om);
+        self.mq = mq;
+        self.mb = mb;
+        let (c1, c2) = bias_corrections(hp, self.t);
+        adamw_apply(w, &mt, &self.v, lr, c1, c2, hp);
+    }
+}
+
+/// Table 7 ablation: compress v only, keep m exact.
+#[derive(Debug, Clone)]
+pub struct MlorcVState {
+    pub m: Tensor,
+    pub vq: Tensor,
+    pub vb: Tensor,
+    pub l: usize,
+    pub t: usize,
+}
+
+impl MlorcVState {
+    pub fn new(shape: &[usize], l: usize) -> MlorcVState {
+        MlorcVState {
+            m: Tensor::zeros(shape),
+            vq: Tensor::zeros(&[shape[0], l]),
+            vb: Tensor::zeros(&[l, shape[1]]),
+            l,
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
+        self.t += 1;
+        let (_, n) = w.dims2().unwrap();
+        for (mi, gi) in self.m.data.iter_mut().zip(&g.data) {
+            *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+        }
+        let mut vt = matmul(&self.vq, &self.vb);
+        zeta_fix(&mut vt);
+        for (vi, gi) in vt.data.iter_mut().zip(&g.data) {
+            *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+        }
+        let om = rng.gaussian_tensor(&[n, self.l], 1.0);
+        let (vq, vb) = rsvd_qb(&vt, &om);
+        self.vq = vq;
+        self.vb = vb;
+        let (c1, c2) = bias_corrections(hp, self.t);
+        adamw_apply(w, &self.m, &vt, lr, c1, c2, hp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::AdamWState;
+
+    #[test]
+    fn zeta_fix_matches_paper_formula() {
+        let mut t = Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.0, -4.0, 5.0, 0.0]).unwrap();
+        zeta_fix(&mut t);
+        // zeta = (2+4)/2 = 3; negatives replaced by 3
+        assert_eq!(t.data, vec![1.0, 3.0, 3.0, 3.0, 5.0, 0.0]);
+        let mut ok = Tensor::new(vec![1, 3], vec![1.0, 2.0, 0.5]).unwrap();
+        zeta_fix(&mut ok);
+        assert_eq!(ok.data, vec![1.0, 2.0, 0.5]); // identity on nonneg input
+    }
+
+    #[test]
+    fn full_rank_mlorc_equals_adamw() {
+        // l = min(m, n): compression is lossless, trajectories coincide.
+        let hp = OptHp::mlorc_adamw();
+        let shape = [10usize, 10];
+        let mut rng = Rng::new(0);
+        let mut w1 = rng.gaussian_tensor(&shape, 1.0);
+        let mut w2 = w1.clone();
+        let mut mlorc = MlorcAdamWState::new(&shape, 10);
+        let mut adamw = AdamWState::new(&shape);
+        let mut om_rng = Rng::new(99);
+        for _ in 0..5 {
+            let g = rng.gaussian_tensor(&shape, 1.0);
+            mlorc.step(&mut w1, &g, 1e-2, &hp, &mut om_rng);
+            adamw.step(&mut w2, &g, 1e-2, &hp);
+            assert!(w1.rel_err(&w2) < 1e-4, "rel {}", w1.rel_err(&w2));
+        }
+    }
+
+    #[test]
+    fn mlorc_adamw_converges_on_lowrank_quadratic() {
+        // f(W) = 0.5 || W - W* ||^2 with rank-2 W*: gradients are low-rank
+        // plus the current iterate, matching the paper's regime.
+        let hp = OptHp::mlorc_adamw();
+        let mut rng = Rng::new(1);
+        let u = rng.gaussian_tensor(&[12, 2], 1.0);
+        let v = rng.gaussian_tensor(&[2, 16], 1.0);
+        let target = matmul(&u, &v);
+        let mut w = Tensor::zeros(&[12, 16]);
+        let mut st = MlorcAdamWState::new(&[12, 16], 4);
+        let mut om_rng = Rng::new(7);
+        for _ in 0..600 {
+            let mut g = w.clone();
+            g.axpy(-1.0, &target, 1.0);
+            st.step(&mut w, &g, 0.05, &hp, &mut om_rng);
+        }
+        assert!(w.rel_err(&target) < 0.08, "rel {}", w.rel_err(&target));
+    }
+
+    #[test]
+    fn mlorc_lion_update_magnitude() {
+        let hp = OptHp::lion();
+        let mut rng = Rng::new(2);
+        let g = rng.gaussian_tensor(&[8, 8], 1.0);
+        let mut w = Tensor::zeros(&[8, 8]);
+        let mut st = MlorcLionState::new(&[8, 8], 4);
+        st.step(&mut w, &g, 0.01, &hp, &mut rng);
+        for (wi, gi) in w.data.iter().zip(&g.data) {
+            if gi.abs() > 1e-6 {
+                assert!((wi.abs() - 0.01).abs() < 1e-7);
+                assert_eq!(wi.signum(), -gi.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn ablations_track_their_exact_half() {
+        let hp = OptHp::mlorc_adamw();
+        let mut rng = Rng::new(3);
+        let g = rng.gaussian_tensor(&[6, 6], 1.0);
+        let mut w = Tensor::zeros(&[6, 6]);
+        let mut mm = MlorcMState::new(&[6, 6], 2);
+        mm.step(&mut w, &g, 1e-3, &hp, &mut rng);
+        for (vi, gi) in mm.v.data.iter().zip(&g.data) {
+            assert!((vi - (1.0 - hp.beta2) * gi * gi).abs() < 1e-9);
+        }
+        let mut mv = MlorcVState::new(&[6, 6], 2);
+        let mut w2 = Tensor::zeros(&[6, 6]);
+        mv.step(&mut w2, &g, 1e-3, &hp, &mut rng);
+        for (mi, gi) in mv.m.data.iter().zip(&g.data) {
+            assert!((mi - (1.0 - hp.beta1) * gi).abs() < 1e-7);
+        }
+    }
+}

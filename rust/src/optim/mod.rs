@@ -1,0 +1,61 @@
+//! Pure-rust reference optimizers — host mirrors of the Layer-2 step
+//! graphs (`python/compile/optim_steps.py`).
+//!
+//! Purposes:
+//!  * cross-validation: `rust/tests/cross_validate.rs` runs the HLO step
+//!    graphs and these mirrors side by side and asserts agreement — three
+//!    independent implementations (jnp ref, Pallas, rust) must coincide;
+//!  * the Theorem 3.3 experiment (`bench --experiment theory`) optimizes a
+//!    synthetic smooth objective entirely on the host;
+//!  * unit/property tests of algebraic invariants with no PJRT dependency.
+
+mod adamw;
+mod galore;
+mod hparams;
+mod ldadamw;
+mod lion;
+mod mlorc;
+
+pub use adamw::AdamWState;
+pub use galore::GaloreState;
+pub use hparams::OptHp;
+pub use ldadamw::LdAdamWState;
+pub use lion::LionState;
+pub use mlorc::{zeta_fix, MlorcAdamWState, MlorcLionState, MlorcMState, MlorcVState};
+
+use crate::tensor::Tensor;
+
+/// Bias corrections c1 = 1/(1-beta1^t), c2 = 1/(1-beta2^t), t >= 1.
+pub fn bias_corrections(hp: &OptHp, t: usize) -> (f32, f32) {
+    let t = t as i32;
+    (
+        1.0 / (1.0 - hp.beta1.powi(t)),
+        1.0 / (1.0 - hp.beta2.powi(t)),
+    )
+}
+
+/// AdamW apply: w -= lr * (m*c1 / (sqrt(v*c2) + eps) + wd * w).
+pub(crate) fn adamw_apply(w: &mut Tensor, m: &Tensor, v: &Tensor, lr: f32, c1: f32, c2: f32, hp: &OptHp) {
+    for ((wi, mi), vi) in w.data.iter_mut().zip(&m.data).zip(&v.data) {
+        let mhat = mi * c1;
+        let vhat = vi * c2;
+        *wi -= lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * *wi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_corrections_shrink_to_one() {
+        let hp = OptHp::adamw();
+        let (c1a, c2a) = bias_corrections(&hp, 1);
+        let (c1b, c2b) = bias_corrections(&hp, 10_000);
+        assert!(c1a > c1b && c2a > c2b);
+        assert!((c1b - 1.0).abs() < 1e-3);
+        assert!((c2b - 1.0).abs() < 0.01);
+        // step 1: c1 = 1/(1-beta1)
+        assert!((c1a - 1.0 / (1.0 - hp.beta1)).abs() < 1e-4);
+    }
+}

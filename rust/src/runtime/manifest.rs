@@ -1,0 +1,319 @@
+//! artifacts/manifest.json — the cross-language contract written by aot.py.
+//!
+//! The manifest is the *only* place model dimensions, parameter tables and
+//! graph IO orders are declared; the coordinator never hard-codes them.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub scalar_layout: Vec<String>,
+    pub presets: BTreeMap<String, Preset>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub model: ModelDims,
+    pub params: Vec<ParamSpec>,
+    pub lora_params: Vec<ParamSpec>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    /// method -> "MxN" (or "N" for vectors) -> step graph
+    pub opt_steps: BTreeMap<String, BTreeMap<String, GraphSpec>>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub rank: usize,
+    pub oversample: usize,
+    pub d_ff: usize,
+    pub n_cls: usize,
+}
+
+impl ModelDims {
+    /// Total parameter count of the LM (without classification head).
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * d * d + 2 * d * self.d_ff + 4 * d;
+        self.vocab * d + self.seq * d + self.n_layers * per_layer + 2 * d
+    }
+
+    pub fn l(&self) -> usize {
+        self.rank + self.oversample
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String, // matrix | vector | embed | head (lora adapters: "lora")
+    pub compressed: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Key into `opt_steps[method]`: "MxN" / "N".
+    pub fn shape_key(&self) -> String {
+        self.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    pub rank: usize,
+    pub l: usize,
+    pub hparams: Json,
+}
+
+impl GraphSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|io| io.name == name)
+            .ok_or_else(|| anyhow!("graph {} has no input '{name}'", self.file))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow!("graph {} has no output '{name}'", self.file))
+    }
+
+    pub fn hparam_f32(&self, key: &str, default: f32) -> f32 {
+        self.hparams
+            .get(key)
+            .and_then(|v| v.as_f64().ok())
+            .map(|x| x as f32)
+            .unwrap_or(default)
+    }
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let json = Json::from_file(&path)?;
+        let scalar_layout = json
+            .req("scalar_layout")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut presets = BTreeMap::new();
+        for (name, p) in json.req("presets")?.as_obj()? {
+            presets.insert(
+                name.clone(),
+                parse_preset(p).with_context(|| format!("preset '{name}'"))?,
+            );
+        }
+        Ok(Manifest { root: artifacts_dir.to_path_buf(), scalar_layout, presets })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&Preset> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow!("preset '{name}' not in manifest (have: {:?}); run `make artifacts`",
+                self.presets.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl Preset {
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph '{name}' not lowered for this preset"))
+    }
+
+    pub fn opt_step(&self, method: &str, shape_key: &str) -> Result<&GraphSpec> {
+        self.opt_steps
+            .get(method)
+            .and_then(|m| m.get(shape_key))
+            .ok_or_else(|| anyhow!("no opt step for method '{method}' shape '{shape_key}'"))
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamSpec> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("unknown param '{name}'"))
+    }
+
+    /// Parameters of the LM graph (everything except the cls head).
+    pub fn lm_params(&self) -> Vec<&ParamSpec> {
+        self.params.iter().filter(|p| p.kind != "head").collect()
+    }
+}
+
+fn parse_preset(p: &Json) -> Result<Preset> {
+    let m = p.req("model")?;
+    let model = ModelDims {
+        d_model: m.req("d_model")?.as_usize()?,
+        n_layers: m.req("n_layers")?.as_usize()?,
+        n_heads: m.req("n_heads")?.as_usize()?,
+        vocab: m.req("vocab")?.as_usize()?,
+        seq: m.req("seq")?.as_usize()?,
+        batch: m.req("batch")?.as_usize()?,
+        rank: m.req("rank")?.as_usize()?,
+        oversample: m.req("oversample")?.as_usize()?,
+        d_ff: m.req("d_ff")?.as_usize()?,
+        n_cls: m.req("n_cls")?.as_usize()?,
+    };
+    let params = p
+        .req("params")?
+        .as_arr()?
+        .iter()
+        .map(parse_param)
+        .collect::<Result<Vec<_>>>()?;
+    let lora_params = p
+        .req("lora_params")?
+        .as_arr()?
+        .iter()
+        .map(|j| {
+            Ok(ParamSpec {
+                name: j.req("name")?.as_str()?.to_string(),
+                shape: j.req("shape")?.shape()?,
+                kind: "lora".to_string(),
+                compressed: false,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut graphs = BTreeMap::new();
+    for (name, g) in p.req("graphs")?.as_obj()? {
+        graphs.insert(name.clone(), parse_graph(g).with_context(|| format!("graph '{name}'"))?);
+    }
+    let mut opt_steps = BTreeMap::new();
+    for (method, shapes) in p.req("opt_steps")?.as_obj()? {
+        let mut by_shape = BTreeMap::new();
+        for (key, g) in shapes.as_obj()? {
+            by_shape.insert(
+                key.clone(),
+                parse_graph(g).with_context(|| format!("opt step {method}/{key}"))?,
+            );
+        }
+        opt_steps.insert(method.clone(), by_shape);
+    }
+    Ok(Preset { model, params, lora_params, graphs, opt_steps })
+}
+
+fn parse_param(j: &Json) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: j.req("name")?.as_str()?.to_string(),
+        shape: j.req("shape")?.shape()?,
+        kind: j.req("kind")?.as_str()?.to_string(),
+        compressed: j.req("compressed")?.as_bool()?,
+    })
+}
+
+fn parse_graph(j: &Json) -> Result<GraphSpec> {
+    let inputs = j
+        .req("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|io| {
+            Ok(IoSpec {
+                name: io.req("name")?.as_str()?.to_string(),
+                shape: io.req("shape")?.shape()?,
+                dtype: io.req("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = j
+        .req("outputs")?
+        .as_arr()?
+        .iter()
+        .map(|o| Ok(o.as_str()?.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    if outputs.is_empty() {
+        bail!("graph has no outputs");
+    }
+    Ok(GraphSpec {
+        file: j.req("file")?.as_str()?.to_string(),
+        inputs,
+        outputs,
+        rank: j.get("rank").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+        l: j.get("l").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+        hparams: j.get("hparams").cloned().unwrap_or(Json::Obj(Default::default())),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fsutil;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Structural validation against the artifacts built by `make
+        // artifacts`; skipped when artifacts are absent (pure-rust CI).
+        let dir = match fsutil::artifacts_dir() {
+            Ok(d) if d.join("manifest.json").exists() => d,
+            _ => return,
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.scalar_layout[0], "lr");
+        let p = m.preset("nano").unwrap();
+        assert_eq!(p.model.d_model, 64);
+        // every param with kind matrix must have a shape entry in opt_steps
+        // for at least the adamw method
+        for param in &p.params {
+            if param.compressed {
+                assert!(
+                    p.opt_step("adamw", &param.shape_key()).is_ok()
+                        || p.opt_step("mlorc_adamw", &param.shape_key()).is_ok(),
+                    "no step graph for {}",
+                    param.name
+                );
+            }
+        }
+        // graph IO tables are self-consistent
+        let g = p.graph("fwd_bwd").unwrap();
+        assert_eq!(g.inputs.len(), p.lm_params().len() + 2);
+        assert_eq!(g.outputs.len(), p.lm_params().len() + 1);
+        assert_eq!(g.input_index("tokens").unwrap(), 0);
+        assert!(g.output_index("loss").unwrap() == 0);
+    }
+
+    #[test]
+    fn n_params_formula() {
+        let dims = ModelDims {
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            vocab: 256,
+            seq: 32,
+            batch: 4,
+            rank: 4,
+            oversample: 0,
+            d_ff: 256,
+            n_cls: 2,
+        };
+        // embed 256*64 + pos 32*64 + 2*(4*64^2 + 2*64*256 + 4*64) + 2*64
+        let want = 256 * 64 + 32 * 64 + 2 * (4 * 64 * 64 + 2 * 64 * 256 + 4 * 64) + 2 * 64;
+        assert_eq!(dims.n_params(), want);
+    }
+}

@@ -1,0 +1,14 @@
+//! Layer-3 runtime: loads AOT artifacts (HLO text + manifest) and executes
+//! them on the PJRT CPU client.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Interchange is HLO *text*; see aot.py.
+
+mod client;
+mod manifest;
+mod value;
+
+pub use client::{LoadedGraph, Runtime};
+pub use manifest::{GraphSpec, IoSpec, Manifest, ModelDims, ParamSpec, Preset};
+pub use value::{HostValue, ValRef};

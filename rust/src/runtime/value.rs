@@ -1,0 +1,149 @@
+//! Host values crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{Tensor, TensorI32};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+impl HostValue {
+    pub fn scalar_f32(x: f32) -> HostValue {
+        HostValue::F32(Tensor::scalar(x))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => &t.shape,
+            HostValue::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostValue::F32(_) => "float32",
+            HostValue::I32(_) => "int32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            HostValue::F32(t) => t.size_bytes(),
+            HostValue::I32(t) => t.size_bytes(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            HostValue::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            HostValue::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI32> {
+        match self {
+            HostValue::I32(t) => Ok(t),
+            HostValue::F32(_) => bail!("expected i32 value, got f32"),
+        }
+    }
+
+    /// Scalar extraction (rank-0 f32).
+    pub fn scalar(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.len() != 1 {
+            bail!("expected scalar, got shape {:?}", t.shape);
+        }
+        Ok(t.data[0])
+    }
+}
+
+/// Borrowed view for zero-clone graph invocation (the hot path passes
+/// parameter tensors by reference every step).
+#[derive(Debug, Clone, Copy)]
+pub enum ValRef<'a> {
+    F32(&'a Tensor),
+    I32(&'a TensorI32),
+}
+
+impl<'a> ValRef<'a> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ValRef::F32(t) => &t.shape,
+            ValRef::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            ValRef::F32(_) => "float32",
+            ValRef::I32(_) => "int32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            ValRef::F32(t) => t.size_bytes(),
+            ValRef::I32(t) => t.size_bytes(),
+        }
+    }
+}
+
+impl<'a> From<&'a HostValue> for ValRef<'a> {
+    fn from(v: &'a HostValue) -> ValRef<'a> {
+        match v {
+            HostValue::F32(t) => ValRef::F32(t),
+            HostValue::I32(t) => ValRef::I32(t),
+        }
+    }
+}
+
+impl<'a> From<&'a Tensor> for ValRef<'a> {
+    fn from(t: &'a Tensor) -> ValRef<'a> {
+        ValRef::F32(t)
+    }
+}
+
+impl<'a> From<&'a TensorI32> for ValRef<'a> {
+    fn from(t: &'a TensorI32) -> ValRef<'a> {
+        ValRef::I32(t)
+    }
+}
+
+impl From<Tensor> for HostValue {
+    fn from(t: Tensor) -> Self {
+        HostValue::F32(t)
+    }
+}
+
+impl From<TensorI32> for HostValue {
+    fn from(t: TensorI32) -> Self {
+        HostValue::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = HostValue::scalar_f32(2.0);
+        assert_eq!(v.scalar().unwrap(), 2.0);
+        assert_eq!(v.dtype(), "float32");
+        assert!(v.as_i32().is_err());
+        let t: HostValue = TensorI32::zeros(&[2, 3]).into();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.size_bytes(), 24);
+        assert!(t.scalar().is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! RTEN: a trivially simple binary tensor container for checkpoints.
+//!
+//! Layout (little-endian):
+//!   magic  "RTEN1\0\0\0"                      (8 bytes)
+//!   u32    n_entries
+//!   per entry:
+//!     u32  name_len, name bytes (utf-8)
+//!     u8   dtype (0 = f32, 1 = i32)
+//!     u32  rank, u64 dims[rank]
+//!     raw  data (dims product * 4 bytes)
+//!
+//! No compression — checkpoints are local scratch, and `write_atomic`
+//! protects against torn files.
+
+use std::collections::BTreeMap;
+use std::io::{Cursor, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+use crate::util::fsutil;
+
+const MAGIC: &[u8; 8] = b"RTEN1\0\0\0";
+
+pub fn write_rten(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.write_all(MAGIC)?;
+    buf.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        buf.write_all(&(name.len() as u32).to_le_bytes())?;
+        buf.write_all(name.as_bytes())?;
+        buf.push(0u8); // dtype f32
+        buf.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for d in &t.shape {
+            buf.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        for x in &t.data {
+            buf.write_all(&x.to_le_bytes())?;
+        }
+    }
+    fsutil::write_atomic(path, &buf)
+}
+
+pub fn read_rten(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut cur = Cursor::new(bytes.as_slice());
+    let mut magic = [0u8; 8];
+    cur.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an RTEN file", path.display());
+    }
+    let n = read_u32(&mut cur)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut cur)? as usize;
+        let mut name = vec![0u8; name_len];
+        cur.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name is not utf-8")?;
+        let mut dtype = [0u8; 1];
+        cur.read_exact(&mut dtype)?;
+        if dtype[0] != 0 {
+            bail!("unsupported dtype {} for '{name}'", dtype[0]);
+        }
+        let rank = read_u32(&mut cur)? as usize;
+        if rank > 8 {
+            bail!("implausible rank {rank} for '{name}'");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut d = [0u8; 8];
+            cur.read_exact(&mut d)?;
+            shape.push(u64::from_le_bytes(d) as usize);
+        }
+        let count: usize = shape.iter().product();
+        let mut data = vec![0f32; count];
+        for x in data.iter_mut() {
+            let mut b = [0u8; 4];
+            cur.read_exact(&mut b)?;
+            *x = f32::from_le_bytes(b);
+        }
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+fn read_u32(cur: &mut Cursor<&[u8]>) -> Result<u32> {
+    let mut b = [0u8; 4];
+    cur.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        m.insert("b".to_string(), Tensor::new(vec![3], vec![-1., 0., 1.]).unwrap());
+        m.insert("s".to_string(), Tensor::scalar(7.5));
+        let path = std::env::temp_dir().join(format!("rten_{}.bin", std::process::id()));
+        write_rten(&path, &m).unwrap();
+        let back = read_rten(&path).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = std::env::temp_dir().join(format!("rten_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"NOTRTEN0rest").unwrap();
+        assert!(read_rten(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

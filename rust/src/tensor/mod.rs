@@ -1,0 +1,8 @@
+//! Host tensors: the coordinator-side representation of parameters,
+//! gradients and optimizer state between PJRT calls.
+
+mod io;
+mod tensor;
+
+pub use io::{read_rten, write_rten};
+pub use tensor::{Tensor, TensorI32};

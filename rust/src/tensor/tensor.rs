@@ -1,0 +1,193 @@
+//! Row-major host tensors (f32 and i32).
+//!
+//! Deliberately minimal: the heavy math runs inside XLA; the host side only
+//! needs construction, elementwise helpers for cross-validation, and the
+//! spectral probe (which uses `linalg`).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// (rows, cols) view of a 2-D tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [m, n] => Ok((*m, *n)),
+            s => bail!("expected 2-D tensor, got shape {s:?}"),
+        }
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, n) = (self.shape[0], self.shape[1]);
+        self.data[i * n + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let n = self.shape[1];
+        self.data[i * n + j] = v;
+    }
+
+    pub fn norm_fro(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn norm_l11(&self) -> f32 {
+        self.data.iter().map(|x| x.abs() as f64).sum::<f64>() as f32
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Relative Frobenius error ||a-b|| / max(||b||, eps).
+    pub fn rel_err(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num.sqrt() / den.sqrt().max(1e-12)) as f32
+    }
+
+    pub fn transpose2(&self) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// In-place axpy: self = alpha * x + beta * self.
+    pub fn axpy(&mut self, alpha: f32, x: &Tensor, beta: f32) {
+        assert_eq!(self.shape, x.shape);
+        for (s, v) in self.data.iter_mut().zip(&x.data) {
+            *s = alpha * v + beta * *s;
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|x| f(*x)).collect() }
+    }
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<TensorI32> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(TensorI32 { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> TensorI32 {
+        TensorI32 { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: i32) -> TensorI32 {
+        TensorI32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(TensorI32::new(vec![4], vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let tt = t.transpose2().unwrap();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.at2(2, 1), t.at2(1, 2));
+        assert_eq!(tt.transpose2().unwrap(), t);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::new(vec![2, 2], vec![3.0, 4.0, 0.0, 0.0]).unwrap();
+        assert!((t.norm_fro() - 5.0).abs() < 1e-6);
+        assert!((t.norm_l11() - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_err_and_axpy() {
+        let a = Tensor::full(&[4], 1.0);
+        let mut b = Tensor::full(&[4], 2.0);
+        assert!((a.rel_err(&b) - 0.5).abs() < 1e-6);
+        b.axpy(1.0, &a, -1.0); // b = a - b = -1
+        assert_eq!(b.data, vec![-1.0; 4]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let s = Tensor::scalar(2.5);
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.len(), 1);
+    }
+}

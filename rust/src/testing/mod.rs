@@ -1,0 +1,4 @@
+//! Test-support code compiled into the library so unit tests, integration
+//! tests and benches share it.
+
+pub mod prop;

@@ -1,0 +1,98 @@
+//! Mini property-testing harness (the vendor set has no `proptest`).
+//!
+//! `check(n, f)` runs `f` against `n` independently seeded RNGs; the
+//! closure builds its own random case from the RNG and returns
+//! `Err(description)` on violation. Failures report the *case seed* so a
+//! failing case replays deterministically:
+//!
+//! ```text
+//! property failed (replay with seed 0x000000000000002a): ...
+//! ```
+//!
+//! Set `MLORC_PROP_SEED` to replay one specific case, and
+//! `MLORC_PROP_CASES` to scale case counts up in long runs.
+
+use crate::linalg::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Run `f` over `n` seeded cases (scaled by `MLORC_PROP_CASES`).
+pub fn check(n: usize, f: impl Fn(&mut Rng) -> PropResult) {
+    if let Ok(seed_s) = std::env::var("MLORC_PROP_SEED") {
+        let seed = parse_seed(&seed_s);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed (replay with seed {seed:#018x}): {msg}");
+        }
+        return;
+    }
+    let scale: usize = std::env::var("MLORC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    for case in 0..(n * scale) {
+        let seed = 0x5EED_0000u64 ^ (case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed (replay with seed {seed:#018x}): {msg}");
+        }
+    }
+}
+
+fn parse_seed(s: &str) -> u64 {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).expect("bad hex MLORC_PROP_SEED")
+    } else {
+        s.parse().expect("bad MLORC_PROP_SEED")
+    }
+}
+
+pub fn assert_lt(a: f64, b: f64, what: &str) -> PropResult {
+    if a < b {
+        Ok(())
+    } else {
+        Err(format!("{what}: expected {a} < {b}"))
+    }
+}
+
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    let denom = b.abs().max(1.0);
+    if (a - b).abs() / denom <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (rel {})", (a - b).abs() / denom))
+    }
+}
+
+pub fn assert_true(cond: bool, what: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0);
+        check(10, |_| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with seed")]
+    fn failing_property_reports_seed() {
+        check(5, |rng| {
+            let x = rng.uniform();
+            assert_lt(x, -1.0, "impossible")
+        });
+    }
+}

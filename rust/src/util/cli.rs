@@ -1,0 +1,185 @@
+//! Tiny argv parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `mlorc <subcommand> [positional]... [--key value | --key=value | --flag]...`
+//!
+//! Positionals must precede options: once the first `--` token appears, a
+//! bare token binds as the value of the preceding `--key` (there is no
+//! reliable way to distinguish a flag from a key-with-value otherwise).
+//! Boolean flags that must precede a positional can be written `--flag=1`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys the command actually read — for unknown-option errors.
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str, default: &str) -> Vec<String> {
+        self.get_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// After a command has pulled everything it knows, reject leftovers so
+    /// typos fail loudly instead of silently using defaults.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.options.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !seen.iter().any(|s| s == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("train data.bin --preset tiny --steps=100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("preset"), Some("tiny"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["data.bin"]);
+    }
+
+    #[test]
+    fn bare_token_after_option_binds_as_value() {
+        // documented grammar: positionals precede options
+        let a = parse("train --verbose data.bin");
+        assert_eq!(a.get("verbose"), Some("data.bin"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn value_starting_with_dashes_via_equals() {
+        let a = parse("x --note=--weird--");
+        assert_eq!(a.get("note"), Some("--weird--"));
+    }
+
+    #[test]
+    fn trailing_flag_is_flag_not_option() {
+        let a = parse("bench --quiet");
+        assert!(a.flag("quiet"));
+        assert!(a.get("quiet").is_none());
+    }
+
+    #[test]
+    fn typed_getters_error_on_garbage() {
+        let a = parse("t --steps abc");
+        assert!(a.get_usize("steps", 0).is_err());
+        let a = parse("t --lr 1e-3");
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 1e-3);
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let a = parse("train --prset tiny");
+        let _ = a.get("preset");
+        assert!(a.reject_unknown().is_err());
+        let a = parse("train --preset tiny");
+        let _ = a.get("preset");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("bench --methods mlorc_adamw,lora,galore");
+        assert_eq!(a.get_list("methods", ""), vec!["mlorc_adamw", "lora", "galore"]);
+        assert_eq!(a.get_list("missing", "a,b"), vec!["a", "b"]);
+    }
+}

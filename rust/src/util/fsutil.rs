@@ -1,0 +1,69 @@
+//! Small filesystem helpers shared by checkpointing, metrics and benches.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Create all parent directories of `path`.
+pub fn ensure_parent(path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    Ok(())
+}
+
+/// Atomic-ish write: write to `<path>.tmp` then rename. Keeps partially
+/// written metrics/checkpoints from being picked up by a reader.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    ensure_parent(path)?;
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+    Ok(())
+}
+
+/// Locate the repository root (directory containing `artifacts/`) from the
+/// current dir upwards — lets examples and benches run from anywhere in the
+/// workspace.
+pub fn find_repo_root() -> Result<PathBuf> {
+    if let Ok(root) = std::env::var("MLORC_ROOT") {
+        return Ok(PathBuf::from(root));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        if dir.join("artifacts").is_dir() || dir.join("Cargo.toml").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            anyhow::bail!("could not locate repo root (set MLORC_ROOT)");
+        }
+    }
+}
+
+/// Default artifacts directory.
+pub fn artifacts_dir() -> Result<PathBuf> {
+    Ok(find_repo_root()?.join("artifacts"))
+}
+
+/// results/ output directory for benches and experiments.
+pub fn results_dir() -> Result<PathBuf> {
+    let d = find_repo_root()?.join("results");
+    std::fs::create_dir_all(&d)?;
+    Ok(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mlorc_fs_{}", std::process::id()));
+        let path = dir.join("a/b/c.json");
+        write_atomic(&path, b"{\"x\":1}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"x\":1}");
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,65 @@
+//! Tiny `log`-facade backend (no `env_logger` in the vendor set).
+//!
+//! Level comes from `MLORC_LOG` (error|warn|info|debug|trace), default info.
+//! Output goes to stderr with elapsed-seconds timestamps so training logs
+//! interleave cleanly with metrics on stdout.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct Logger {
+    start: Instant,
+    level: LevelFilter,
+}
+
+impl Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+/// Install the logger; idempotent (tests may race to call it).
+pub fn init() {
+    let level = match std::env::var("MLORC_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now(), level });
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,6 @@
+//! Dependency-free plumbing: JSON, CLI parsing, logging, filesystem.
+
+pub mod cli;
+pub mod fsutil;
+pub mod json;
+pub mod logger;

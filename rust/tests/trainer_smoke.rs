@@ -1,0 +1,147 @@
+//! End-to-end coordinator smoke tests on the nano preset: every method
+//! must run steps, decrease training loss on math-chain, and produce a
+//! coherent memory report. Skipped when artifacts are absent.
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::Trainer;
+use mlorc::runtime::{Manifest, Runtime};
+use mlorc::util::fsutil;
+
+fn setup() -> Option<(Manifest, Runtime)> {
+    let dir = fsutil::artifacts_dir().ok()?;
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some((Manifest::load(&dir).unwrap(), Runtime::cpu(&dir).unwrap()))
+}
+
+fn short_run(method: Method, task: TaskKind, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::new("nano", method, task, steps);
+    cfg.log_every = 0;
+    cfg.eval_batches = 2;
+    // nano-scale LRs: higher than the 7B-scale defaults
+    cfg.peak_lr = match method {
+        Method::FullLion | Method::MlorcLion | Method::LoraLion => 1e-3,
+        Method::LoraAdamW => 5e-3,
+        Method::Galore => 5e-3,
+        _ => 3e-3,
+    };
+    cfg
+}
+
+#[test]
+fn mlorc_adamw_reduces_loss_on_mathchain() {
+    let Some((manifest, rt)) = setup() else { return };
+    let preset = manifest.preset("nano").unwrap();
+    let cfg = short_run(Method::MlorcAdamW, TaskKind::MathChain, 30);
+    let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+    let first = tr.train_step().unwrap();
+    for _ in 0..29 {
+        tr.train_step().unwrap();
+    }
+    let last = tr.metrics.smoothed_final_loss(5).unwrap();
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(last < first * 0.8, "loss barely moved: {first} -> {last}");
+}
+
+#[test]
+fn every_method_runs_three_steps_lm() {
+    let Some((manifest, rt)) = setup() else { return };
+    let preset = manifest.preset("nano").unwrap();
+    for &method in Method::all() {
+        let cfg = short_run(method, TaskKind::MathChain, 3);
+        let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+        for _ in 0..3 {
+            let loss = tr.train_step().unwrap_or_else(|e| panic!("{method:?}: {e}"));
+            assert!(loss.is_finite(), "{method:?} loss not finite");
+        }
+        let mem = tr.memory_measured();
+        assert!(mem.opt_state_bytes > 0, "{method:?} no optimizer state");
+    }
+}
+
+#[test]
+fn cls_task_trains_and_evaluates() {
+    let Some((manifest, rt)) = setup() else { return };
+    let preset = manifest.preset("nano").unwrap();
+    for method in [Method::MlorcAdamW, Method::LoraAdamW] {
+        let mut cfg = short_run(method, TaskKind::SynGlue(6), 12); // sst2-like
+        cfg.eval_batches = 4;
+        let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+        for _ in 0..12 {
+            tr.train_step().unwrap();
+        }
+        let ev = tr.evaluate().unwrap();
+        assert!(ev.loss.is_finite());
+        assert!((0.0..=1.0).contains(&ev.accuracy), "{method:?} acc {}", ev.accuracy);
+    }
+}
+
+#[test]
+fn lora_base_weights_stay_frozen() {
+    let Some((manifest, rt)) = setup() else { return };
+    let preset = manifest.preset("nano").unwrap();
+    let cfg = short_run(Method::LoraAdamW, TaskKind::MathChain, 3);
+    let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+    let wq_before = tr.params.get("blk0.wq").unwrap().clone();
+    let emb_before = tr.params.get("tok_emb").unwrap().clone();
+    for _ in 0..3 {
+        tr.train_step().unwrap();
+    }
+    assert_eq!(*tr.params.get("blk0.wq").unwrap(), wq_before);
+    assert_eq!(*tr.params.get("tok_emb").unwrap(), emb_before);
+    // adapters did move
+    let a = tr.adapters.as_ref().unwrap();
+    assert!(a.get("blk0.wq.lora_B").unwrap().norm_fro() > 0.0);
+}
+
+#[test]
+fn memory_ranking_matches_table3() {
+    let Some((manifest, rt)) = setup() else { return };
+    let preset = manifest.preset("nano").unwrap();
+    let mut opt_bytes = std::collections::BTreeMap::new();
+    for method in [Method::FullAdamW, Method::MlorcAdamW, Method::Galore, Method::LdAdamW] {
+        let cfg = short_run(method, TaskKind::MathChain, 1);
+        let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+        tr.train_step().unwrap();
+        opt_bytes.insert(method.name(), tr.memory_measured().opt_state_bytes);
+    }
+    // Table 3 ordering: MLorc ≈ GaLore < LDAdamW < Full (opt state)
+    assert!(opt_bytes["mlorc_adamw"] < opt_bytes["full_adamw"]);
+    assert!(opt_bytes["galore"] < opt_bytes["full_adamw"]);
+    assert!(opt_bytes["ldadamw"] > opt_bytes["mlorc_adamw"]);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some((manifest, rt)) = setup() else { return };
+    let preset = manifest.preset("nano").unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..2 {
+        let cfg = short_run(Method::MlorcAdamW, TaskKind::MathChain, 4).with_seed(123);
+        let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+        let mut run = Vec::new();
+        for _ in 0..4 {
+            run.push(tr.train_step().unwrap());
+        }
+        losses.push(run);
+    }
+    assert_eq!(losses[0], losses[1], "same seed must reproduce the loss curve");
+}
+
+#[test]
+fn spectral_probe_records_during_training() {
+    let Some((manifest, rt)) = setup() else { return };
+    let preset = manifest.preset("nano").unwrap();
+    let mut cfg = short_run(Method::FullAdamW, TaskKind::MathChain, 6);
+    cfg.spectral_every = 2;
+    let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
+    for _ in 0..6 {
+        tr.train_step().unwrap();
+    }
+    assert_eq!(tr.metrics.spectral.len(), 3);
+    for rec in &tr.metrics.spectral {
+        assert!(rec.grad_ratio > 0.0 && rec.grad_ratio <= 1.0);
+        assert!(rec.v_ratio > 0.0 && rec.v_ratio <= 1.0);
+    }
+}
