@@ -10,5 +10,5 @@ mod report;
 mod theory;
 
 pub use experiments::{run_experiment, Scale, EXPERIMENT_IDS};
-pub use report::Report;
+pub use report::{write_bench_json, Report};
 pub use theory::run_theory;

@@ -77,6 +77,15 @@ impl Report {
     }
 }
 
+/// Write a machine-readable benchmark payload (`BENCH_*.json`) at the
+/// repository root, where the cross-PR perf trajectory is tracked.
+/// Returns the path written.
+pub fn write_bench_json(file_name: &str, data: &Json) -> Result<std::path::PathBuf> {
+    let path = fsutil::find_repo_root()?.join(file_name);
+    fsutil::write_atomic(&path, data.to_string_pretty().as_bytes())?;
+    Ok(path)
+}
+
 /// Format bytes as GB/MB with 1 decimal.
 pub fn fmt_bytes(b: usize) -> String {
     if b >= 1 << 30 {

@@ -173,6 +173,11 @@ pub struct RunConfig {
     pub spectral_every: usize,
     /// free gradient buffers eagerly, layer by layer (per-layer updates)
     pub per_layer_updates: bool,
+    /// step optimizer states on the host (rust reference mirrors, factored
+    /// MLorc fast path) in parallel, instead of per-layer step graphs
+    pub host_opt: bool,
+    /// host stepping worker count (0 = auto: available cores, capped at 8)
+    pub opt_threads: usize,
     pub log_every: usize,
 }
 
@@ -191,6 +196,8 @@ impl RunConfig {
             galore_update_freq: 50,
             spectral_every: 0,
             per_layer_updates: true,
+            host_opt: false,
+            opt_threads: 0,
             log_every: 10,
         }
     }
@@ -219,6 +226,8 @@ impl RunConfig {
             ("galore_update_freq", Json::num(self.galore_update_freq as f64)),
             ("spectral_every", Json::num(self.spectral_every as f64)),
             ("per_layer_updates", Json::Bool(self.per_layer_updates)),
+            ("host_opt", Json::Bool(self.host_opt)),
+            ("opt_threads", Json::num(self.opt_threads as f64)),
             ("log_every", Json::num(self.log_every as f64)),
         ])
     }
@@ -237,6 +246,15 @@ impl RunConfig {
             galore_update_freq: j.req("galore_update_freq")?.as_usize()?,
             spectral_every: j.req("spectral_every")?.as_usize()?,
             per_layer_updates: j.req("per_layer_updates")?.as_bool()?,
+            // optional for checkpoints written before host stepping existed
+            host_opt: match j.get("host_opt") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
+            opt_threads: match j.get("opt_threads") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
             log_every: j.req("log_every")?.as_usize()?,
         })
     }

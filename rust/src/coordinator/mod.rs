@@ -17,5 +17,5 @@ pub use memory::{MemoryAccountant, MemoryReport};
 pub use metrics::{EvalRecord, MetricsLog, StepRecord};
 pub use params::ParamStore;
 pub use spectral::{SpectralProbe, SpectralRecord};
-pub use state::OptState;
+pub use state::{host_step_all, HostStepJob, OptState};
 pub use trainer::{EvalSummary, TrainOutcome, Trainer};

@@ -1,10 +1,24 @@
 //! Per-parameter optimizer state, mirrored host-side between step-graph
 //! executions. The variant set matches the step graphs in
 //! `python/compile/optim_steps.py`.
+//!
+//! Besides the graph path, every state (minus the projection-based
+//! baselines) can step itself entirely on the host through
+//! [`OptState::host_step`], backed by the cross-validated reference
+//! optimizers in `optim`. [`host_step_all`] fans a batch of such updates
+//! out over a small scoped thread pool; because each job owns its
+//! parameter, state and Omega RNG stream, and the linalg kernels are
+//! bit-deterministic across thread counts, the parallel schedule produces
+//! results bit-identical to stepping sequentially.
 
 use anyhow::{bail, Result};
 
 use crate::config::Method;
+use crate::linalg::{threads, Rng, Workspace};
+use crate::optim::{
+    adamw_host_step, lion_host_step, mlorc_adamw_core, mlorc_lion_core, mlorc_m_core,
+    mlorc_v_core, OptHp,
+};
 use crate::runtime::{ParamSpec, Preset};
 use crate::tensor::Tensor;
 
@@ -145,6 +159,121 @@ impl OptState {
             _ => None,
         }
     }
+
+    /// Hyper-parameters of the step this state takes — identical to the
+    /// manifest hparams of the matching step graph (pinned by
+    /// `cross_validate::hparams_match_rust_defaults`).
+    pub fn host_hp(&self) -> OptHp {
+        match self {
+            OptState::Lion { .. } => OptHp::lion(),
+            OptState::MlorcLion { .. } => OptHp::lion(),
+            OptState::MlorcAdamW { .. } | OptState::MlorcM { .. } | OptState::MlorcV { .. } => {
+                OptHp::mlorc_adamw()
+            }
+            _ => OptHp::adamw(),
+        }
+    }
+
+    /// One optimizer step entirely on the host, using the reference
+    /// mirrors (factored fast path for the MLorc family). `t` is 1-based;
+    /// `rng` is this parameter's own Omega stream; scratch comes from the
+    /// caller's `ws` pool.
+    pub fn host_step(
+        &mut self,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let hp = self.host_hp();
+        match self {
+            OptState::Frozen => {}
+            OptState::AdamW { m, v } => adamw_host_step(w, g, m, v, lr, t, &hp),
+            OptState::Lion { m } => lion_host_step(w, g, m, lr, &hp),
+            OptState::MlorcAdamW { mq, mb, vq, vb } => {
+                let (_, n) = w.dims2()?;
+                let l = mq.shape[1];
+                let om_m = rng.gaussian_tensor(&[n, l], 1.0);
+                let om_v = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_adamw_core(w, g, mq, mb, vq, vb, t, lr, &hp, &om_m, &om_v, ws);
+            }
+            OptState::MlorcLion { mq, mb } => {
+                let (_, n) = w.dims2()?;
+                let l = mq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_lion_core(w, g, mq, mb, lr, &hp, &om, ws);
+            }
+            OptState::MlorcM { mq, mb, v } => {
+                let (_, n) = w.dims2()?;
+                let l = mq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_m_core(w, g, mq, mb, v, t, lr, &hp, &om, ws);
+            }
+            OptState::MlorcV { m, vq, vb } => {
+                let (_, n) = w.dims2()?;
+                let l = vq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_v_core(w, g, m, vq, vb, t, lr, &hp, &om, ws);
+            }
+            OptState::Galore { .. } | OptState::LdAdamW { .. } => {
+                bail!("host stepping not implemented for {}", self.step_method()?)
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One host optimizer update: a parameter, its gradient, state and Omega
+/// stream, bundled so a batch can be distributed across threads.
+pub struct HostStepJob<'a> {
+    pub w: &'a mut Tensor,
+    pub grad: Tensor,
+    pub state: &'a mut OptState,
+    pub rng: &'a mut Rng,
+    pub lr: f32,
+    /// 1-based step count for bias corrections.
+    pub t: usize,
+}
+
+/// Run every job, fanned out over at most `workspaces.len()` scoped
+/// threads (contiguous chunks). Worker threads run their linalg kernels
+/// in serial mode to avoid nested oversubscription; since the kernels are
+/// bit-deterministic across thread counts and jobs are fully independent,
+/// the result is bit-identical to sequential stepping in job order.
+pub fn host_step_all(jobs: &mut [HostStepJob], workspaces: &mut [Workspace]) -> Result<()> {
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    assert!(!workspaces.is_empty(), "host_step_all needs at least one workspace");
+    let nt = workspaces.len().min(jobs.len());
+    if nt <= 1 {
+        let ws = &mut workspaces[0];
+        for job in jobs.iter_mut() {
+            job.state.host_step(job.w, &job.grad, job.lr, job.t, job.rng, ws)?;
+        }
+        return Ok(());
+    }
+    let chunk = jobs.len().div_ceil(nt);
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (band, ws) in jobs.chunks_mut(chunk).zip(workspaces.iter_mut()) {
+            handles.push(s.spawn(move || {
+                threads::serial(|| {
+                    for job in band.iter_mut() {
+                        job.state.host_step(job.w, &job.grad, job.lr, job.t, job.rng, ws)?;
+                    }
+                    Ok(())
+                })
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("host step worker panicked")).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

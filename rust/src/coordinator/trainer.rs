@@ -12,7 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::data::{self, LmDataset};
-use crate::linalg::Rng;
+use crate::linalg::{Rng, Workspace};
 use crate::optim::OptHp;
 use crate::runtime::{GraphSpec, Preset, Runtime, ValRef};
 use crate::tensor::Tensor;
@@ -21,7 +21,7 @@ use super::memory::{MemoryAccountant, MemoryReport};
 use super::metrics::{EvalRecord, MetricsLog, StepRecord};
 use super::params::ParamStore;
 use super::spectral::SpectralProbe;
-use super::state::OptState;
+use super::state::{host_step_all, HostStepJob, OptState};
 
 /// Where a trainable parameter lives.
 #[derive(Debug, Clone, Copy)]
@@ -41,7 +41,12 @@ pub struct Trainer<'rt> {
     lm_data: Option<Box<dyn LmDataset>>,
     cls_data: Option<crate::data::SynGlueTask>,
     rng_data: Rng,
-    rng_omega: Rng,
+    /// One Omega stream per trainable parameter: draws are independent of
+    /// the order parameters are stepped in, which is what lets the host
+    /// path fan updates out over threads bit-identically to sequential.
+    omega_streams: Vec<Rng>,
+    /// Per-worker scratch pools for host-side stepping.
+    host_ws: Vec<Workspace>,
     pub metrics: MetricsLog,
     pub probe: Option<SpectralProbe>,
     step: usize,
@@ -70,8 +75,14 @@ impl<'rt> Trainer<'rt> {
         let mut rng = Rng::new(cfg.seed);
         let mut init_rng = rng.split(1);
         let rng_data = rng.split(2);
-        let rng_omega = rng.split(3);
+        let mut rng_omega = rng.split(3);
 
+        if cfg.host_opt && matches!(cfg.method, crate::config::Method::Galore | crate::config::Method::LdAdamW) {
+            bail!(
+                "--host-opt does not support {} (projection-based baselines step through graphs only)",
+                cfg.method.name()
+            );
+        }
         let is_cls = cfg.task.is_classification();
         let is_lora = cfg.method.is_lora();
         let params = ParamStore::init(preset, is_cls, &mut init_rng);
@@ -112,6 +123,16 @@ impl<'rt> Trainer<'rt> {
             };
             states.push(OptState::for_param(cfg.method, spec, preset)?);
         }
+
+        // Independent per-parameter Omega streams (see field docs).
+        let omega_streams: Vec<Rng> =
+            (0..trainable.len()).map(|i| rng_omega.split(i as u64 + 1)).collect();
+        let pool = if cfg.opt_threads > 0 {
+            cfg.opt_threads
+        } else {
+            crate::linalg::threads::budget()
+        };
+        let host_ws: Vec<Workspace> = (0..pool.max(1)).map(|_| Workspace::new()).collect();
 
         let graph_name = match (is_cls, is_lora) {
             (false, false) => "fwd_bwd",
@@ -160,7 +181,8 @@ impl<'rt> Trainer<'rt> {
             lm_data,
             cls_data,
             rng_data,
-            rng_omega,
+            omega_streams,
+            host_ws,
             metrics,
             probe,
             step: 0,
@@ -262,13 +284,21 @@ impl<'rt> Trainer<'rt> {
 
         // ---- per-layer optimizer updates -------------------------------
         let opt_t0 = Instant::now();
-        // Consume gradients in order, freeing each after its update — the
-        // per-layer weight update schedule.
-        let mut grads = grads.into_iter();
-        for i in 0..self.trainable.len() {
-            let grad = grads.next().unwrap();
-            self.apply_update(i, grad, lr, step)?;
-            // grad dropped here (per-layer residency)
+        if self.cfg.host_opt {
+            // Host stepping: all states update through the rust reference
+            // mirrors, fanned out across the worker pool. Trades per-layer
+            // gradient residency for parallelism; results are bit-identical
+            // to stepping sequentially (per-parameter Omega streams).
+            self.apply_updates_host(grads, lr, step)?;
+        } else {
+            // Consume gradients in order, freeing each after its update —
+            // the per-layer weight update schedule.
+            let mut grads = grads.into_iter();
+            for i in 0..self.trainable.len() {
+                let grad = grads.next().unwrap();
+                self.apply_update(i, grad, lr, step)?;
+                // grad dropped here (per-layer residency)
+            }
         }
         let opt_secs = opt_t0.elapsed().as_secs_f64();
 
@@ -314,7 +344,7 @@ impl<'rt> Trainer<'rt> {
                 } else {
                     [spec.shape[0], l]
                 };
-                let om = self.rng_omega.gaussian_tensor(&om_shape, 1.0);
+                let om = self.omega_streams[i].gaussian_tensor(&om_shape, 1.0);
                 let outs = self
                     .rt
                     .run_refs(&proj_spec, &[(&grad).into(), (&om).into()])?;
@@ -341,13 +371,14 @@ impl<'rt> Trainer<'rt> {
                 }
                 _ => 0,
             };
+            let stream = &mut self.omega_streams[i];
             match need {
                 2 => (
-                    Some(self.rng_omega.gaussian_tensor(&[n, l], 1.0)),
-                    Some(self.rng_omega.gaussian_tensor(&[n, l], 1.0)),
+                    Some(stream.gaussian_tensor(&[n, l], 1.0)),
+                    Some(stream.gaussian_tensor(&[n, l], 1.0)),
                 ),
-                1 => (Some(self.rng_omega.gaussian_tensor(&[n, l], 1.0)), None),
-                3 => (Some(self.rng_omega.gaussian_tensor(&[m0, l], 1.0)), None),
+                1 => (Some(stream.gaussian_tensor(&[n, l], 1.0)), None),
+                3 => (Some(stream.gaussian_tensor(&[m0, l], 1.0)), None),
                 _ => (None, None),
             }
         };
@@ -470,6 +501,40 @@ impl<'rt> Trainer<'rt> {
         Ok(())
     }
 
+    /// Host stepping: update every trainable parameter through the rust
+    /// reference optimizers, distributed over the worker pool. Each job
+    /// owns its parameter tensor, state and Omega stream, so the schedule
+    /// cannot change results (asserted by `tests/host_parallel.rs`).
+    fn apply_updates_host(&mut self, grads: Vec<Tensor>, lr: f32, step: usize) -> Result<()> {
+        let t = step + 1;
+        let Trainer { params, adapters, states, omega_streams, trainable, host_ws, .. } = self;
+        let mut base_refs: Vec<Option<&mut Tensor>> =
+            params.values.iter_mut().map(Some).collect();
+        let mut adapter_refs: Vec<Option<&mut Tensor>> = match adapters {
+            Some(a) => a.values.iter_mut().map(Some).collect(),
+            None => Vec::new(),
+        };
+        let mut jobs: Vec<HostStepJob> = Vec::with_capacity(states.len());
+        let zipped = states
+            .iter_mut()
+            .zip(omega_streams.iter_mut())
+            .zip(trainable.iter())
+            .zip(grads.into_iter());
+        for (((state, rng), store), grad) in zipped {
+            if matches!(state, OptState::Frozen) {
+                continue;
+            }
+            let w = match store {
+                Store::Base(j) => base_refs[*j].take().expect("base param stepped twice"),
+                Store::Adapter(j) => {
+                    adapter_refs[*j].take().expect("adapter param stepped twice")
+                }
+            };
+            jobs.push(HostStepJob { w, grad, state, rng, lr, t });
+        }
+        host_step_all(&mut jobs, host_ws)
+    }
+
     /// Host-side update for 1-D params (same math as the adamw/lion step
     /// graphs; agreement enforced by `optim` unit tests + cross-validation).
     fn apply_vector_update_host(&mut self, i: usize, g: &Tensor, lr: f32, step: usize) -> Result<()> {
@@ -482,29 +547,10 @@ impl<'rt> Trainer<'rt> {
         };
         match &mut self.states[i] {
             OptState::AdamW { m, v } => {
-                let hp = crate::optim::OptHp::adamw();
-                let c1 = 1.0 / (1.0 - hp.beta1.powi(t));
-                let c2 = 1.0 / (1.0 - hp.beta2.powi(t));
-                for (mi, gi) in m.data.iter_mut().zip(&g.data) {
-                    *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
-                }
-                for (vi, gi) in v.data.iter_mut().zip(&g.data) {
-                    *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
-                }
-                for ((wi, mi), vi) in w.data.iter_mut().zip(&m.data).zip(&v.data) {
-                    *wi -= lr * ((mi * c1) / ((vi * c2).sqrt() + hp.eps) + hp.weight_decay * *wi);
-                }
+                crate::optim::adamw_host_step(&mut w, g, m, v, lr, t as usize, &OptHp::adamw())
             }
             OptState::Lion { m } => {
-                let hp = crate::optim::OptHp::lion();
-                for ((wi, mi), gi) in w.data.iter_mut().zip(&m.data).zip(&g.data) {
-                    let c = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
-                    let s = if c > 0.0 { 1.0 } else if c < 0.0 { -1.0 } else { 0.0 };
-                    *wi -= lr * (s + hp.weight_decay * *wi);
-                }
-                for (mi, gi) in m.data.iter_mut().zip(&g.data) {
-                    *mi = hp.beta2 * *mi + (1.0 - hp.beta2) * gi;
-                }
+                crate::optim::lion_host_step(&mut w, g, m, lr, &OptHp::lion())
             }
             other => bail!("vector param with non-plain state {other:?}"),
         }

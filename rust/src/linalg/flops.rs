@@ -1,0 +1,93 @@
+//! GEMM accounting for the optimizer fast-path audits.
+//!
+//! Every entry into a linalg GEMM (including the fused
+//! reconstruction+apply kernels in `optim`) records its logical dims on
+//! the *calling* thread when recording is armed. The MLorc acceptance
+//! audit replays one optimizer step under recording and asserts the
+//! factored recompression shape: per moment, exactly one O(m·n·l) GEMM
+//! materializes (or is fused into) a dense m×n result, while every sketch
+//! and projection GEMM has a thin (≤ (m+n)·l sized) output.
+//!
+//! Recording is thread-local so concurrent tests do not pollute each
+//! other; kernels record once at entry, before any worker threads spawn.
+
+use std::cell::RefCell;
+
+/// One recorded GEMM: `out = lhs · rhs` with `out` of `out_rows × out_cols`
+/// and a shared inner dimension, plus the op label for readability.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmRecord {
+    pub op: &'static str,
+    pub out_rows: usize,
+    pub inner: usize,
+    pub out_cols: usize,
+}
+
+impl GemmRecord {
+    /// Multiply-add count of this GEMM.
+    pub fn madds(&self) -> usize {
+        self.out_rows * self.inner * self.out_cols
+    }
+
+    /// Number of elements the GEMM materializes.
+    pub fn out_elems(&self) -> usize {
+        self.out_rows * self.out_cols
+    }
+
+    /// True when the op is a fused reconstruction (writes no standalone
+    /// dense intermediate — the product is consumed in-register by the
+    /// optimizer apply epilogue).
+    pub fn is_fused(&self) -> bool {
+        self.op.starts_with("fused_")
+    }
+}
+
+thread_local! {
+    static RECORDS: RefCell<Option<Vec<GemmRecord>>> = const { RefCell::new(None) };
+}
+
+/// Arm recording on the current thread (clears any prior records).
+pub fn start_recording() {
+    RECORDS.with(|r| *r.borrow_mut() = Some(Vec::new()));
+}
+
+/// Disarm recording and return everything recorded since
+/// [`start_recording`]. Returns an empty vec if recording was never armed.
+pub fn finish_recording() -> Vec<GemmRecord> {
+    RECORDS.with(|r| r.borrow_mut().take().unwrap_or_default())
+}
+
+/// Record one GEMM if recording is armed on this thread. Cheap when off.
+pub fn record(op: &'static str, out_rows: usize, inner: usize, out_cols: usize) {
+    RECORDS.with(|r| {
+        if let Some(log) = r.borrow_mut().as_mut() {
+            log.push(GemmRecord { op, out_rows, inner, out_cols });
+        }
+    });
+}
+
+/// Total multiply-adds across a record set.
+pub fn total_madds(records: &[GemmRecord]) -> usize {
+    records.iter().map(|r| r.madds()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_roundtrip() {
+        assert!(finish_recording().is_empty());
+        record("matmul", 3, 4, 5); // not armed: dropped
+        start_recording();
+        record("matmul", 3, 4, 5);
+        record("fused_recon_adamw", 6, 2, 7);
+        let recs = finish_recording();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].madds(), 60);
+        assert!(!recs[0].is_fused());
+        assert!(recs[1].is_fused());
+        assert_eq!(total_madds(&recs), 60 + 84);
+        assert!(finish_recording().is_empty());
+    }
+}

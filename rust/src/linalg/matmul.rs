@@ -1,24 +1,277 @@
-//! Host matmuls (ikj loop order, f64 accumulation on the k-panel).
+//! Host GEMM kernels.
 //!
-//! These back the reference optimizers and the spectral probe; the training
-//! hot path runs inside XLA. Sizes here are at most (vocab x d_model), so a
-//! cache-friendly scalar kernel is plenty.
+//! Two tiers:
+//!  * `matmul` / `matmul_at_b` / `matmul_a_bt` (and their `_into`
+//!    variants): cache-blocked, register-tiled kernels parallelized across
+//!    disjoint output row bands with `std::thread::scope`. Banding never
+//!    changes the reduction order inside a row, so results are
+//!    bit-identical for every thread count (see `linalg::threads`).
+//!  * `scalar_*`: the straightforward single-threaded loops — the
+//!    pre-optimization baseline kept as the correctness oracle for
+//!    property tests and the speedup reference for `bench_opt_step`.
+//!
+//! Historical note: the original kernels skipped `a == 0.0` multiplies,
+//! which silently dropped NaN/Inf propagation from the B operand
+//! (0 · NaN must be NaN). Neither tier does that anymore; the regression
+//! is pinned by `nan_propagates_through_zero_lhs` below.
+
+// Index loops over banded raw slices are intentional here: the iterator
+// forms obscure the blocking structure and the banding determinism argument.
+#![allow(clippy::needless_range_loop)]
 
 use crate::tensor::Tensor;
 
+use super::{flops, threads};
+
+/// k-panel size for the blocked kernel (KC · 4 rows of A ≈ L1-resident).
+const KC: usize = 256;
+/// Outputs at most this wide accumulate whole C rows in registers.
+const SMALL_N: usize = 16;
+
+// --------------------------------------------------------------- C = A @ B
+
 /// C = A @ B — (m, k) @ (k, n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, _) = a.dims2().expect("matmul lhs");
+    let (_, n) = b.dims2().expect("matmul rhs");
+    let mut c = Tensor { shape: vec![m, n], data: vec![0.0; m * n] };
+    matmul_into(&mut c, a, b);
+    c
+}
+
+/// C = A @ B into a caller-provided (workspace) tensor; overwrites `c`.
+pub fn matmul_into(c: &mut Tensor, a: &Tensor, b: &Tensor) {
     let (m, k) = a.dims2().expect("matmul lhs");
     let (k2, n) = b.dims2().expect("matmul rhs");
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let (cm, cn) = c.dims2().expect("matmul out");
+    assert_eq!((cm, cn), (m, n), "matmul out shape");
+    flops::record("matmul", m, k, n);
+    c.data.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let nt = threads::for_work(m * k * n, m);
+    if nt <= 1 {
+        gemm_nn_band(&a.data, &b.data, &mut c.data, 0, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+            let (ad, bd) = (&a.data[..], &b.data[..]);
+            s.spawn(move || gemm_nn_band(ad, bd, chunk, t * rows_per, k, n));
+        }
+    });
+}
+
+/// One band of C = A @ B: rows `i0 ..` of C (band length from `c.len()`).
+fn gemm_nn_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usize) {
+    let rows = c.len() / n;
+    if n <= SMALL_N {
+        // Thin output: keep the whole C row in registers across the k loop
+        // (the RSVD sketch G·Ω lives here — n = l is small).
+        for i in 0..rows {
+            let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+            let mut acc = [0.0f32; SMALL_N];
+            let acc = &mut acc[..n];
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n..p * n + n];
+                for (ac, &bv) in acc.iter_mut().zip(brow) {
+                    *ac += av * bv;
+                }
+            }
+            c[i * n..i * n + n].copy_from_slice(acc);
+        }
+        return;
+    }
+    // 4-row register tile over KC-wide k panels: each B row is loaded once
+    // per 4 rows of A, and C tiles stay hot across the panel.
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        for (q4, c4) in c.chunks_mut(4 * n).enumerate() {
+            let r = i0 + q4 * 4;
+            let rows_here = c4.len() / n;
+            if rows_here == 4 {
+                let (c0, rest) = c4.split_at_mut(n);
+                let (c1, rest) = rest.split_at_mut(n);
+                let (c2, c3) = rest.split_at_mut(n);
+                let a0 = &a[r * k..(r + 1) * k];
+                let a1 = &a[(r + 1) * k..(r + 2) * k];
+                let a2 = &a[(r + 2) * k..(r + 3) * k];
+                let a3 = &a[(r + 3) * k..(r + 4) * k];
+                for p in kk..kend {
+                    let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+                    let brow = &b[p * n..p * n + n];
+                    for ((((x0, x1), x2), x3), &bv) in c0
+                        .iter_mut()
+                        .zip(c1.iter_mut())
+                        .zip(c2.iter_mut())
+                        .zip(c3.iter_mut())
+                        .zip(brow)
+                    {
+                        *x0 += v0 * bv;
+                        *x1 += v1 * bv;
+                        *x2 += v2 * bv;
+                        *x3 += v3 * bv;
+                    }
+                }
+            } else {
+                // 1-3 tail rows: plain axpy per row, same p order as the
+                // 4-row tile so banding stays bit-deterministic.
+                for (ri, crow) in c4.chunks_mut(n).enumerate() {
+                    let arow = &a[(r + ri) * k..(r + ri + 1) * k];
+                    for p in kk..kend {
+                        let av = arow[p];
+                        let brow = &b[p * n..p * n + n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+        kk = kend;
+    }
+}
+
+// ------------------------------------------------------------ C = A^T @ B
+
+/// C = A^T @ B — (m, k)^T @ (m, n) -> (k, n).
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    let (_, k) = a.dims2().expect("matmul_at_b lhs");
+    let (_, n) = b.dims2().expect("matmul_at_b rhs");
+    let mut c = Tensor { shape: vec![k, n], data: vec![0.0; k * n] };
+    matmul_at_b_into(&mut c, a, b);
+    c
+}
+
+/// C = A^T @ B into a caller-provided tensor; overwrites `c`.
+pub fn matmul_at_b_into(c: &mut Tensor, a: &Tensor, b: &Tensor) {
+    let (m, k) = a.dims2().expect("matmul_at_b lhs");
+    let (m2, n) = b.dims2().expect("matmul_at_b rhs");
+    assert_eq!(m, m2, "matmul_at_b outer dims {m} vs {m2}");
+    let (ck, cn) = c.dims2().expect("matmul_at_b out");
+    assert_eq!((ck, cn), (k, n), "matmul_at_b out shape");
+    flops::record("matmul_at_b", k, m, n);
+    c.data.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // Parallelize across output rows (columns of A); each band scans all
+    // of A and B once, accumulating its own k-rows of C.
+    let nt = threads::for_work(m * k * n, k);
+    if nt <= 1 {
+        gemm_tn_band(&a.data, &b.data, &mut c.data, 0, m, k, n);
+        return;
+    }
+    let rows_per = k.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+            let (ad, bd) = (&a.data[..], &b.data[..]);
+            s.spawn(move || gemm_tn_band(ad, bd, chunk, t * rows_per, m, k, n));
+        }
+    });
+}
+
+/// One band of C = A^T @ B: output rows `p0 ..` (band length from `c.len()`).
+fn gemm_tn_band(a: &[f32], b: &[f32], c: &mut [f32], p0: usize, m: usize, k: usize, n: usize) {
+    let prows = c.len() / n;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for dp in 0..prows {
+            let av = arow[p0 + dp];
+            let crow = &mut c[dp * n..(dp + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ C = A @ B^T
+
+/// C = A @ B^T — (m, k) @ (n, k)^T -> (m, n).
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, _) = a.dims2().expect("matmul_a_bt lhs");
+    let (n, _) = b.dims2().expect("matmul_a_bt rhs");
+    let mut c = Tensor { shape: vec![m, n], data: vec![0.0; m * n] };
+    matmul_a_bt_into(&mut c, a, b);
+    c
+}
+
+/// C = A @ B^T into a caller-provided tensor; overwrites `c`.
+pub fn matmul_a_bt_into(c: &mut Tensor, a: &Tensor, b: &Tensor) {
+    let (m, k) = a.dims2().expect("matmul_a_bt lhs");
+    let (n, k2) = b.dims2().expect("matmul_a_bt rhs");
+    assert_eq!(k, k2, "matmul_a_bt inner dims {k} vs {k2}");
+    let (cm, cn) = c.dims2().expect("matmul_a_bt out");
+    assert_eq!((cm, cn), (m, n), "matmul_a_bt out shape");
+    flops::record("matmul_a_bt", m, k, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.data.fill(0.0);
+        return;
+    }
+    let nt = threads::for_work(m * k * n, m);
+    if nt <= 1 {
+        gemm_nt_band(&a.data, &b.data, &mut c.data, 0, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+            let (ad, bd) = (&a.data[..], &b.data[..]);
+            s.spawn(move || gemm_nt_band(ad, bd, chunk, t * rows_per, k, n));
+        }
+    });
+}
+
+/// One band of C = A @ B^T: rows of contiguous-by-contiguous dot products
+/// with 4-way split accumulators (fixed summation tree, band-independent).
+fn gemm_nt_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usize) {
+    let rows = c.len() / n;
+    for i in 0..rows {
+        let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+        let crow = &mut c[i * n..i * n + n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut ca = arow.chunks_exact(4);
+            let mut cb = brow.chunks_exact(4);
+            for (qa, qb) in (&mut ca).zip(&mut cb) {
+                s0 += qa[0] * qb[0];
+                s1 += qa[1] * qb[1];
+                s2 += qa[2] * qb[2];
+                s3 += qa[3] * qb[3];
+            }
+            let mut tail = 0.0f32;
+            for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+                tail += x * y;
+            }
+            *cv = ((s0 + s1) + (s2 + s3)) + tail;
+        }
+    }
+}
+
+// ------------------------------------------------- scalar reference tier
+
+/// Reference C = A @ B: single-threaded ikj loops (pre-optimization
+/// baseline; the zero-skip NaN bug of the original kernel is fixed).
+pub fn scalar_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2().expect("matmul lhs");
+    let (k2, n) = b.dims2().expect("matmul rhs");
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    flops::record("scalar_matmul", m, k, n);
     let mut c = vec![0.0f32; m * n];
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
             let brow = &b.data[p * n..(p + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += av * bv;
@@ -28,19 +281,17 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor { shape: vec![m, n], data: c }
 }
 
-/// C = A^T @ B — (m, k)^T @ (m, n) -> (k, n).
-pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+/// Reference C = A^T @ B — (m, k)^T @ (m, n) -> (k, n).
+pub fn scalar_matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2().expect("matmul_at_b lhs");
     let (m2, n) = b.dims2().expect("matmul_at_b rhs");
     assert_eq!(m, m2);
+    flops::record("scalar_matmul_at_b", k, m, n);
     let mut c = vec![0.0f32; k * n];
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let brow = &b.data[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
             let crow = &mut c[p * n..(p + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += av * bv;
@@ -50,11 +301,12 @@ pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor { shape: vec![k, n], data: c }
 }
 
-/// C = A @ B^T — (m, k) @ (n, k)^T -> (m, n).
-pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+/// Reference C = A @ B^T — (m, k) @ (n, k)^T -> (m, n), f64 dot.
+pub fn scalar_matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2().expect("matmul_a_bt lhs");
     let (n, k2) = b.dims2().expect("matmul_a_bt rhs");
     assert_eq!(k, k2);
+    flops::record("scalar_matmul_a_bt", m, k, n);
     let mut c = vec![0.0f32; m * n];
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
@@ -73,7 +325,7 @@ pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Rng;
+    use crate::linalg::{threads, Rng};
 
     fn naive(a: &Tensor, b: &Tensor) -> Tensor {
         let (m, k) = a.dims2().unwrap();
@@ -94,11 +346,13 @@ mod tests {
     #[test]
     fn matches_naive() {
         let mut rng = Rng::new(1);
-        for (m, k, n) in [(3, 4, 5), (8, 8, 8), (17, 3, 9)] {
+        // hit both the small-n and the 4-row-tile paths, plus odd tails
+        for (m, k, n) in [(3, 4, 5), (8, 8, 8), (17, 3, 9), (33, 7, 40), (5, 300, 24)] {
             let a = rng.gaussian_tensor(&[m, k], 1.0);
             let b = rng.gaussian_tensor(&[k, n], 1.0);
             let c = matmul(&a, &b);
-            assert!(c.rel_err(&naive(&a, &b)) < 1e-5);
+            assert!(c.rel_err(&naive(&a, &b)) < 1e-5, "({m},{k},{n})");
+            assert!(scalar_matmul(&a, &b).rel_err(&c) < 1e-5, "scalar ({m},{k},{n})");
         }
     }
 
@@ -110,11 +364,13 @@ mod tests {
         let c1 = matmul_at_b(&a, &b);
         let c2 = matmul(&a.transpose2().unwrap(), &b);
         assert!(c1.rel_err(&c2) < 1e-5);
+        assert!(scalar_matmul_at_b(&a, &b).rel_err(&c2) < 1e-5);
 
         let d = rng.gaussian_tensor(&[6, 5], 1.0);
         let e1 = matmul_a_bt(&a, &d);
         let e2 = matmul(&a, &d.transpose2().unwrap());
         assert!(e1.rel_err(&e2) < 1e-5);
+        assert!(scalar_matmul_a_bt(&a, &d).rel_err(&e2) < 1e-5);
     }
 
     #[test]
@@ -126,5 +382,59 @@ mod tests {
             eye.set2(i, i, 1.0);
         }
         assert!(matmul(&a, &eye).rel_err(&a) < 1e-6);
+    }
+
+    #[test]
+    fn nan_propagates_through_zero_lhs() {
+        // Regression: the original kernels skipped a==0.0 multiplies, so a
+        // zero row in A masked NaN/Inf in B. IEEE: 0 * NaN = NaN.
+        let a = Tensor::new(vec![2, 2], vec![0.0, 0.0, 1.0, 2.0]).unwrap();
+        let mut b = Tensor::new(vec![2, 3], vec![f32::NAN, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        b.set2(1, 1, f32::INFINITY);
+        for f in [matmul, scalar_matmul] {
+            let c = f(&a, &b);
+            assert!(c.at2(0, 0).is_nan(), "0*NaN row must stay NaN");
+            assert!(c.at2(0, 1).is_nan(), "0*Inf is NaN and must not be skipped");
+            assert!(c.at2(1, 0).is_nan());
+        }
+        // A^T @ B with a zero column in A
+        let at = a.transpose2().unwrap();
+        for f in [matmul_at_b, scalar_matmul_at_b] {
+            let c = f(&at, &b);
+            assert!(c.at2(0, 0).is_nan());
+        }
+    }
+
+    #[test]
+    fn banding_is_bit_deterministic() {
+        // Threaded and forced-serial kernels must agree exactly, not just
+        // within tolerance — the parallel trainer relies on this.
+        let mut rng = Rng::new(4);
+        let a = rng.gaussian_tensor(&[97, 53], 1.0);
+        let b = rng.gaussian_tensor(&[53, 41], 1.0);
+        let threaded = matmul(&a, &b);
+        let serial = threads::serial(|| matmul(&a, &b));
+        assert_eq!(threaded.data, serial.data);
+
+        let bt = rng.gaussian_tensor(&[41, 53], 1.0);
+        assert_eq!(
+            matmul_a_bt(&a, &bt).data,
+            threads::serial(|| matmul_a_bt(&a, &bt)).data
+        );
+        let b2 = rng.gaussian_tensor(&[97, 19], 1.0);
+        assert_eq!(
+            matmul_at_b(&a, &b2).data,
+            threads::serial(|| matmul_at_b(&a, &b2)).data
+        );
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let mut rng = Rng::new(5);
+        for (m, k, n) in [(1, 1, 1), (1, 9, 33), (33, 9, 1), (2, 1, 2), (64, 2, 3)] {
+            let a = rng.gaussian_tensor(&[m, k], 1.0);
+            let b = rng.gaussian_tensor(&[k, n], 1.0);
+            assert!(matmul(&a, &b).rel_err(&naive(&a, &b)) < 1e-5, "({m},{k},{n})");
+        }
     }
 }

@@ -1,21 +1,32 @@
 //! Pure-rust dense linear algebra substrate.
 //!
-//! Three consumers:
+//! Consumers:
 //!  * the spectral probe (Figures 1/4) — `svd::singular_values` on momenta
 //!    fetched from the runtime;
 //!  * cross-validation — the `optim` reference mirrors re-implement every
 //!    optimizer step on host tensors and must agree with the HLO graphs;
 //!  * the coordinator's RNG — Gaussian Omega inputs for RSVD (the lowered
-//!    graphs are pure functions; all randomness is rust-owned).
+//!    graphs are pure functions; all randomness is rust-owned);
+//!  * the host fast path — blocked multi-threaded GEMMs (`matmul`), the
+//!    factored QB recompression (`rsvd`), pooled scratch (`workspace`),
+//!    thread budgeting (`threads`) and GEMM accounting (`flops`) behind
+//!    the MLorc optimizer hot loop.
 
+pub mod flops;
 pub mod matmul;
 pub mod qr;
 pub mod rng;
 pub mod rsvd;
 pub mod svd;
+pub mod threads;
+pub mod workspace;
 
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
-pub use qr::mgs_qr;
+pub use matmul::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into,
+    scalar_matmul, scalar_matmul_a_bt, scalar_matmul_at_b,
+};
+pub use qr::{mgs_qr, mgs_qr_ws};
 pub use rng::Rng;
-pub use rsvd::rsvd_qb;
+pub use rsvd::{rsvd_qb, rsvd_qb_factored, rsvd_qb_ws};
 pub use svd::{singular_values, top_k_ratio};
+pub use workspace::Workspace;

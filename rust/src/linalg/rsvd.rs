@@ -1,17 +1,98 @@
 //! Host-side QB randomized range finder — the rust mirror of
 //! `python/compile/rsvd_lib.py`, used by the reference optimizers and the
 //! Lemma B.1 property tests.
+//!
+//! Two paths:
+//!  * [`rsvd_qb`] / [`rsvd_qb_ws`]: the direct recompression `Y = A Ω`,
+//!    `Q = qr(Y)`, `B = Qᵀ A` on a materialized A.
+//!  * [`rsvd_qb_factored`]: the MLorc fast path. The matrix being
+//!    recompressed every optimizer step is never arbitrary — it is
+//!    `A = β·Q_prev B_prev + (1−β)·G`. Exploiting that factor structure:
+//!
+//!    ```text
+//!    Y  = A Ω  = β·Q_prev (B_prev Ω) + (1−β)·(G Ω)
+//!    B  = Qᵀ A = β·(Qᵀ Q_prev) B_prev + (1−β)·(Qᵀ G)
+//!    ```
+//!
+//!    so A is never materialized: the previous-state terms collapse to
+//!    O((m+n)·l²) small GEMMs, the only O(m·n·l) contractions left are the
+//!    two thin-output gradient sketches `G Ω` and `Qᵀ G`, and the single
+//!    dense reconstruction that remains is fused into the optimizer apply
+//!    (see `optim::mlorc`). Up to f32 reassociation this is algebraically
+//!    identical to the direct path.
 
 use crate::tensor::Tensor;
 
-use super::{matmul, matmul_at_b, mgs_qr, Rng};
+use super::{matmul, matmul_at_b_into, matmul_into, mgs_qr_ws, Rng, Workspace};
 
 /// A ~= Q @ B with Q (m, l) column-orthonormal, B = Q^T A (l, n).
 /// `omega` must be (n, l) Gaussian.
 pub fn rsvd_qb(a: &Tensor, omega: &Tensor) -> (Tensor, Tensor) {
-    let y = matmul(a, omega);
-    let q = mgs_qr(&y);
-    let b = matmul_at_b(&q, a);
+    let mut ws = Workspace::new();
+    rsvd_qb_ws(a, omega, &mut ws)
+}
+
+/// Direct QB recompression on pooled scratch; Q and B are backed by
+/// workspace buffers (return them with `ws.give_tensor` when replaced).
+pub fn rsvd_qb_ws(a: &Tensor, omega: &Tensor, ws: &mut Workspace) -> (Tensor, Tensor) {
+    let (m, n) = a.dims2().expect("rsvd input");
+    let (n2, l) = omega.dims2().expect("rsvd omega");
+    assert_eq!(n, n2, "rsvd omega rows {n2} vs input cols {n}");
+    let mut y = ws.take_tensor(&[m, l]);
+    matmul_into(&mut y, a, omega);
+    let q = mgs_qr_ws(&y, ws);
+    ws.give_tensor(y);
+    let mut b = ws.take_tensor(&[l, n]);
+    matmul_at_b_into(&mut b, &q, a);
+    (q, b)
+}
+
+/// Factored QB recompression of `A = beta·qp bp + (1−beta)·g` without
+/// materializing A. Returns the new (Q, B) factor pair.
+pub fn rsvd_qb_factored(
+    qp: &Tensor,
+    bp: &Tensor,
+    beta: f32,
+    g: &Tensor,
+    omega: &Tensor,
+    ws: &mut Workspace,
+) -> (Tensor, Tensor) {
+    let (m, l) = qp.dims2().expect("factored rsvd q_prev");
+    let (l2, n) = bp.dims2().expect("factored rsvd b_prev");
+    let (gm, gn) = g.dims2().expect("factored rsvd g");
+    let (on, ol) = omega.dims2().expect("factored rsvd omega");
+    assert_eq!(l, l2, "factor rank mismatch {l} vs {l2}");
+    assert_eq!((gm, gn), (m, n), "gradient shape vs factors");
+    assert_eq!((on, ol), (n, l), "omega shape vs factors");
+
+    // Y = beta * qp (bp Ω) + (1-beta) * g Ω
+    let mut t1 = ws.take_tensor(&[l, l]);
+    matmul_into(&mut t1, bp, omega); // O(n·l²)
+    let mut y = ws.take_tensor(&[m, l]);
+    matmul_into(&mut y, qp, &t1); // O(m·l²)
+    ws.give_tensor(t1);
+    let mut gom = ws.take_tensor(&[m, l]);
+    matmul_into(&mut gom, g, omega); // thin gradient sketch
+    for (yv, &gv) in y.data.iter_mut().zip(&gom.data) {
+        *yv = beta * *yv + (1.0 - beta) * gv;
+    }
+    ws.give_tensor(gom);
+
+    let q = mgs_qr_ws(&y, ws);
+    ws.give_tensor(y);
+
+    // B = beta * (Qᵀ qp) bp + (1-beta) * Qᵀ g
+    let mut rot = ws.take_tensor(&[l, l]);
+    matmul_at_b_into(&mut rot, &q, qp); // O(m·l²)
+    let mut b = ws.take_tensor(&[l, n]);
+    matmul_into(&mut b, &rot, bp); // O(n·l²)
+    ws.give_tensor(rot);
+    let mut gproj = ws.take_tensor(&[l, n]);
+    matmul_at_b_into(&mut gproj, &q, g); // thin gradient projection
+    for (bv, &gv) in b.data.iter_mut().zip(&gproj.data) {
+        *bv = beta * *bv + (1.0 - beta) * gv;
+    }
+    ws.give_tensor(gproj);
     (q, b)
 }
 
@@ -67,6 +148,58 @@ mod tests {
     }
 
     #[test]
+    fn factored_path_matches_direct() {
+        // The factored recompression must agree with the direct one on the
+        // materialized A = beta*QpBp + (1-beta)*G, up to f32 reassociation.
+        prop::check(24, |rng| {
+            let m = rng.range(6, 40);
+            let n = rng.range(6, 40);
+            let l = rng.range(1, 7).min(m).min(n);
+            let beta = 0.8f32;
+            let qp = mgs_qr_ws(&rng.gaussian_tensor(&[m, l], 1.0), &mut Workspace::new());
+            let bp = rng.gaussian_tensor(&[l, n], 1.0);
+            let g = rng.gaussian_tensor(&[m, n], 1.0);
+            let omega = rng.gaussian_tensor(&[n, l], 1.0);
+
+            let mut a = matmul(&qp, &bp);
+            a.axpy(1.0 - beta, &g, beta);
+            let (qd, bd) = rsvd_qb(&a, &omega);
+            let direct = matmul(&qd, &bd);
+
+            let mut ws = Workspace::new();
+            let (qf, bf) = rsvd_qb_factored(&qp, &bp, beta, &g, &omega, &mut ws);
+            let fact = matmul(&qf, &bf);
+            prop::assert_lt(
+                fact.rel_err(&direct) as f64,
+                5e-4,
+                "factored recompression equals direct",
+            )
+        });
+    }
+
+    #[test]
+    fn factored_path_zero_state_first_step() {
+        // With zero previous factors the factored path must reduce to the
+        // direct recompression of (1-beta)*G.
+        let mut rng = Rng::new(9);
+        let (m, n, l) = (24, 18, 4);
+        let beta = 0.8f32;
+        let qp = Tensor::zeros(&[m, l]);
+        let bp = Tensor::zeros(&[l, n]);
+        let g = rng.gaussian_tensor(&[m, n], 1.0);
+        let omega = rng.gaussian_tensor(&[n, l], 1.0);
+        let mut ws = Workspace::new();
+        let (qf, bf) = rsvd_qb_factored(&qp, &bp, beta, &g, &omega, &mut ws);
+        let mut scaled = g.clone();
+        for x in scaled.data.iter_mut() {
+            *x *= 1.0 - beta;
+        }
+        let (qd, bd) = rsvd_qb(&scaled, &omega);
+        let rel = matmul(&qf, &bf).rel_err(&matmul(&qd, &bd));
+        assert!(rel < 1e-5, "rel {rel}");
+    }
+
+    #[test]
     fn lemma_b1_error_bound_statistical() {
         // E||m_t - QB(m_t)||_F <= gamma (1 - beta2) ||g_t||_F when the
         // previous factor pair is rank l. 20-draw average with 3x slack.
@@ -75,7 +208,7 @@ mod tests {
         let gamma = (1.0 + r as f64 / (p as f64 - 1.0)).sqrt();
         let beta2 = 0.99f32;
         let mut rng = Rng::new(17);
-        let q0 = mgs_qr(&rng.gaussian_tensor(&[m, l], 1.0));
+        let q0 = crate::linalg::mgs_qr(&rng.gaussian_tensor(&[m, l], 1.0));
         let b0 = rng.gaussian_tensor(&[l, n], 0.1);
         let recon0 = matmul(&q0, &b0);
         let mut errs = 0.0f64;
@@ -92,5 +225,23 @@ mod tests {
             bounds += gamma * (1.0 - beta2 as f64) * g.norm_fro() as f64;
         }
         assert!(errs <= 3.0 * bounds, "E err {errs} vs bound {bounds}");
+
+        // Same statistic on the factored fast path: the bound must hold
+        // there too (it is the same operator up to reassociation).
+        let mut errs_f = 0.0f64;
+        let mut bounds_f = 0.0f64;
+        let mut ws = Workspace::new();
+        for _ in 0..20 {
+            let g = rng.gaussian_tensor(&[m, n], 1.0);
+            let mut mt = recon0.clone();
+            mt.axpy(1.0 - beta2, &g, beta2);
+            let omega = rng.gaussian_tensor(&[n, l], 1.0);
+            let (q, b) = rsvd_qb_factored(&q0, &b0, beta2, &g, &omega, &mut ws);
+            let mut diff = matmul(&q, &b);
+            diff.axpy(1.0, &mt, -1.0);
+            errs_f += diff.norm_fro() as f64;
+            bounds_f += gamma * (1.0 - beta2 as f64) * g.norm_fro() as f64;
+        }
+        assert!(errs_f <= 3.0 * bounds_f, "factored E err {errs_f} vs bound {bounds_f}");
     }
 }

@@ -1,0 +1,92 @@
+//! Thread-budget policy for the host linalg kernels.
+//!
+//! The kernels parallelize across disjoint output row bands with
+//! `std::thread::scope` (no pool dependency). Because banding only
+//! partitions *which* rows a thread computes — never the reduction order
+//! within a row — results are bit-identical for every thread count, so
+//! the budget here is purely a performance knob, not a numerics one.
+//!
+//! Controls:
+//!  * `MLORC_THREADS=<n>` caps the global budget (default: available
+//!    parallelism, capped at 8 — these are latency-bound mid-size GEMMs,
+//!    not HPC kernels);
+//!  * [`serial`] forces single-threaded kernels on the current thread —
+//!    used by the coordinator's per-parameter parallel stepping so worker
+//!    threads do not oversubscribe the machine with nested spawns.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Spawning a thread costs ~10µs; only split work when each extra thread
+/// gets at least this many multiply-adds.
+const MIN_MADDS_PER_THREAD: usize = 192 * 1024;
+
+fn global_budget() -> usize {
+    static BUDGET: OnceLock<usize> = OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        if let Ok(v) = std::env::var("MLORC_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    })
+}
+
+/// The configured global thread budget (env override or detected cores).
+pub fn budget() -> usize {
+    global_budget()
+}
+
+thread_local! {
+    static FORCE_SERIAL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with kernel threading disabled on this thread (nested calls ok).
+pub fn serial<R>(f: impl FnOnce() -> R) -> R {
+    FORCE_SERIAL.with(|s| {
+        let prev = s.replace(true);
+        let out = f();
+        s.set(prev);
+        out
+    })
+}
+
+/// True while inside a [`serial`] scope on this thread.
+pub fn in_serial() -> bool {
+    FORCE_SERIAL.with(|s| s.get())
+}
+
+/// Thread count for a kernel of `madds` multiply-adds spanning `rows`
+/// independent output rows. Returns 1 inside [`serial`] scopes.
+pub fn for_work(madds: usize, rows: usize) -> usize {
+    if in_serial() || rows < 2 {
+        return 1;
+    }
+    let by_size = (madds / MIN_MADDS_PER_THREAD).max(1);
+    global_budget().min(by_size).min(rows).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_scope_forces_one_thread() {
+        assert!(!in_serial());
+        let n = serial(|| {
+            assert!(in_serial());
+            for_work(usize::MAX / 2, 1024)
+        });
+        assert_eq!(n, 1);
+        assert!(!in_serial());
+    }
+
+    #[test]
+    fn small_work_stays_single_threaded() {
+        assert_eq!(for_work(1000, 1024), 1);
+        assert!(for_work(64 << 20, 1024) >= 1);
+        // never more threads than rows
+        assert_eq!(for_work(usize::MAX / 2, 1), 1);
+    }
+}

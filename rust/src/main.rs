@@ -45,6 +45,7 @@ USAGE: mlorc <subcommand> [--options]
 
   train  --preset tiny --method mlorc_adamw --task math_chain --steps 200
          [--lr 2e-3] [--seed 0] [--eval-every 50] [--spectral-every 0]
+         [--host-opt] [--opt-threads N]
          [--save-metrics results/run.json] [--checkpoint-dir ckpt/]
   bench  --experiment <id> [--quick] [--steps N] [--seeds K]
          ids: {ids}
@@ -81,6 +82,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.eval_batches = args.get_usize("eval-batches", 8)?;
     cfg.spectral_every = args.get_usize("spectral-every", 0)?;
     cfg.galore_update_freq = args.get_usize("galore-freq", 50)?;
+    cfg.host_opt = args.flag("host-opt");
+    cfg.opt_threads = args.get_usize("opt-threads", 0)?;
     cfg.log_every = args.get_usize("log-every", 10)?;
     let save_metrics = args.get("save-metrics").map(|s| s.to_string());
     let ckpt_dir = args.get("checkpoint-dir").map(|s| s.to_string());

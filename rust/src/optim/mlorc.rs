@@ -4,8 +4,38 @@
 //! State is the QB factor pair per momentum — identical to the lowered
 //! graphs; Omega draws come from a caller-provided RNG stream so the HLO
 //! cross-validation can feed the *same* Omega to both implementations.
+//!
+//! ## Host fast path
+//!
+//! Every step recompresses `m_t = β·Q_prev B_prev + (1−β)·G`. The factor
+//! structure is exploited end to end (`linalg::rsvd::rsvd_qb_factored`):
+//! the sketch and projection collapse onto small O((m+n)·l²) GEMMs plus
+//! the two unavoidable thin gradient contractions `G Ω` / `Qᵀ G`, and the
+//! single remaining dense reconstruction is *fused* into the AdamW/Lion
+//! apply — no m×n first-moment buffer exists at any point. The second
+//! moment keeps a dense v_t scratch because the ζ-fix (Eq. 2) is
+//! nonlinear, but its reconstruction GEMM is the only one per step that
+//! materializes an m×n intermediate (asserted by `factored_step_gemm_audit`
+//! below and re-checked by `bench_opt_step`). All scratch comes from a
+//! per-state [`Workspace`], so steady-state steps allocate nothing.
+//! Footprint note: that pool retains its largest scratch (the dense v_t
+//! buffer for the AdamW/V variants) between steps — the usual speed/memory
+//! trade of pooling; `state_bytes()` reports the algorithmic O((m+n)·l)
+//! state only. The coordinator does not pay per-parameter retention: its
+//! `OptState` tensors step through a small set of *shared* per-worker
+//! workspaces (`Trainer::host_ws`).
+//!
+//! The pre-optimization algorithm shape is kept as
+//! [`mlorc_adamw_step_direct`] — the bench baseline and the equivalence
+//! oracle for the fast path.
 
-use crate::linalg::{matmul, rsvd_qb, Rng};
+// The fused-apply bands use index loops over raw row slices on purpose
+// (see linalg/matmul.rs — same banding-determinism rationale).
+#![allow(clippy::needless_range_loop)]
+
+use crate::linalg::{
+    flops, matmul, matmul_into, rsvd_qb, rsvd_qb_factored, rsvd_qb_ws, threads, Rng, Workspace,
+};
 use crate::tensor::Tensor;
 
 use super::lion::sign;
@@ -30,6 +60,336 @@ pub fn zeta_fix(recon: &mut Tensor) {
     }
 }
 
+// ------------------------------------------------------------------ cores
+//
+// Free functions over raw state tensors, shared by the reference state
+// structs below and the coordinator's parallel host stepping
+// (`coordinator::state::OptState::host_step`).
+
+/// Dense second moment: v_t = beta2 * zeta_fix(vq vb) + (1-beta2) * g².
+/// The ζ-fix needs the global negative-part mean, so this moment cannot
+/// ride the factored path; its reconstruction is the step's one dense GEMM.
+fn second_moment_dense(vt: &mut Tensor, vq: &Tensor, vb: &Tensor, g: &Tensor, beta2: f32) {
+    matmul_into(vt, vq, vb);
+    zeta_fix(vt);
+    for (vi, gi) in vt.data.iter_mut().zip(&g.data) {
+        *vi = beta2 * *vi + (1.0 - beta2) * gi * gi;
+    }
+}
+
+/// Fused reconstruction + AdamW apply: per element,
+/// `m_t = beta1·(mq mb) + (1−beta1)·g`, then
+/// `w -= lr·(c1·m_t / (sqrt(c2·v_t) + eps) + wd·w)` — one pass over W, G
+/// and v_t; the reconstruction lives in an n-wide register/L1 row only.
+#[allow(clippy::too_many_arguments)]
+fn fused_recon_adamw_apply(
+    w: &mut Tensor,
+    g: &Tensor,
+    vt: &Tensor,
+    mq: &Tensor,
+    mb: &Tensor,
+    beta1: f32,
+    lr: f32,
+    c1: f32,
+    c2: f32,
+    hp: &OptHp,
+    ws: &mut Workspace,
+) {
+    let (m, n) = w.dims2().expect("fused apply weight");
+    let (_, l) = mq.dims2().expect("fused apply mq");
+    flops::record("fused_recon_adamw", m, l, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let nt = threads::for_work(m * n * (l + 4), m);
+    let mut scratch = ws.take(nt * n);
+    if nt <= 1 {
+        fused_adamw_band(
+            &mut w.data, &g.data, &vt.data, &mq.data, &mb.data, &mut scratch, l, n, beta1, lr,
+            c1, c2, hp,
+        );
+    } else {
+        let rows_per = m.div_ceil(nt);
+        std::thread::scope(|s| {
+            let bands = w
+                .data
+                .chunks_mut(rows_per * n)
+                .zip(g.data.chunks(rows_per * n))
+                .zip(vt.data.chunks(rows_per * n))
+                .zip(mq.data.chunks(rows_per * l))
+                .zip(scratch.chunks_mut(n));
+            for ((((w_band, g_band), vt_band), mq_band), row_buf) in bands {
+                let mb_all = &mb.data[..];
+                s.spawn(move || {
+                    fused_adamw_band(
+                        w_band, g_band, vt_band, mq_band, mb_all, row_buf, l, n, beta1, lr, c1,
+                        c2, hp,
+                    )
+                });
+            }
+        });
+    }
+    ws.give(scratch);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fused_adamw_band(
+    w: &mut [f32],
+    g: &[f32],
+    vt: &[f32],
+    mq: &[f32],
+    mb: &[f32],
+    row: &mut [f32],
+    l: usize,
+    n: usize,
+    beta1: f32,
+    lr: f32,
+    c1: f32,
+    c2: f32,
+    hp: &OptHp,
+) {
+    let rows = w.len() / n;
+    let row = &mut row[..n];
+    for i in 0..rows {
+        // reconstruction row: row = mq[i, :] @ mb
+        row.fill(0.0);
+        let arow = &mq[i * l..(i + 1) * l];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &mb[p * n..(p + 1) * n];
+            for (rv, &bv) in row.iter_mut().zip(brow) {
+                *rv += av * bv;
+            }
+        }
+        // apply epilogue
+        let wrow = &mut w[i * n..(i + 1) * n];
+        let grow = &g[i * n..(i + 1) * n];
+        let vrow = &vt[i * n..(i + 1) * n];
+        for (((wi, &gi), &vi), &ri) in wrow.iter_mut().zip(grow).zip(vrow).zip(row.iter()) {
+            let mt = beta1 * ri + (1.0 - beta1) * gi;
+            let mhat = mt * c1;
+            let vhat = vi * c2;
+            *wi -= lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * *wi);
+        }
+    }
+}
+
+/// Fused reconstruction + Lion apply: per element
+/// `c = beta1·(mq mb) + (1−beta1)·g`, `w -= lr·(sign(c) + wd·w)`.
+#[allow(clippy::too_many_arguments)]
+fn fused_recon_lion_apply(
+    w: &mut Tensor,
+    g: &Tensor,
+    mq: &Tensor,
+    mb: &Tensor,
+    beta1: f32,
+    lr: f32,
+    hp: &OptHp,
+    ws: &mut Workspace,
+) {
+    let (m, n) = w.dims2().expect("fused lion weight");
+    let (_, l) = mq.dims2().expect("fused lion mq");
+    flops::record("fused_recon_lion", m, l, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let nt = threads::for_work(m * n * (l + 2), m);
+    let mut scratch = ws.take(nt * n);
+    if nt <= 1 {
+        fused_lion_band(&mut w.data, &g.data, &mq.data, &mb.data, &mut scratch, l, n, beta1, lr, hp);
+    } else {
+        let rows_per = m.div_ceil(nt);
+        std::thread::scope(|s| {
+            let bands = w
+                .data
+                .chunks_mut(rows_per * n)
+                .zip(g.data.chunks(rows_per * n))
+                .zip(mq.data.chunks(rows_per * l))
+                .zip(scratch.chunks_mut(n));
+            for (((w_band, g_band), mq_band), row_buf) in bands {
+                let mb_all = &mb.data[..];
+                s.spawn(move || {
+                    fused_lion_band(w_band, g_band, mq_band, mb_all, row_buf, l, n, beta1, lr, hp)
+                });
+            }
+        });
+    }
+    ws.give(scratch);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fused_lion_band(
+    w: &mut [f32],
+    g: &[f32],
+    mq: &[f32],
+    mb: &[f32],
+    row: &mut [f32],
+    l: usize,
+    n: usize,
+    beta1: f32,
+    lr: f32,
+    hp: &OptHp,
+) {
+    let rows = w.len() / n;
+    let row = &mut row[..n];
+    for i in 0..rows {
+        row.fill(0.0);
+        let arow = &mq[i * l..(i + 1) * l];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &mb[p * n..(p + 1) * n];
+            for (rv, &bv) in row.iter_mut().zip(brow) {
+                *rv += av * bv;
+            }
+        }
+        let wrow = &mut w[i * n..(i + 1) * n];
+        let grow = &g[i * n..(i + 1) * n];
+        for ((wi, &gi), &ri) in wrow.iter_mut().zip(grow).zip(row.iter()) {
+            let c = beta1 * ri + (1.0 - beta1) * gi;
+            *wi -= lr * (sign(c) + hp.weight_decay * *wi);
+        }
+    }
+}
+
+/// One MLorc-AdamW step (Algorithm 1, lines 5-15) on raw state tensors.
+#[allow(clippy::too_many_arguments)]
+pub fn mlorc_adamw_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    mq: &mut Tensor,
+    mb: &mut Tensor,
+    vq: &mut Tensor,
+    vb: &mut Tensor,
+    t: usize,
+    lr: f32,
+    hp: &OptHp,
+    om_m: &Tensor,
+    om_v: &Tensor,
+    ws: &mut Workspace,
+) {
+    let (m, n) = w.dims2().expect("mlorc on 2-D params only");
+    // lines 7-8+10: dense v_t (ζ-fix blocks the factored path)
+    let mut vt = ws.take_tensor(&[m, n]);
+    second_moment_dense(&mut vt, vq, vb, g, hp.beta2);
+    let (vq2, vb2) = rsvd_qb_ws(&vt, om_v, ws);
+    // lines 6+9+11: factored recompression of m_t — old factors intact
+    let (mq2, mb2) = rsvd_qb_factored(mq, mb, hp.beta1, g, om_m, ws);
+    // lines 13-15: apply with the *exact* m_t (fused recon) and v_t
+    let (c1, c2) = bias_corrections(hp, t);
+    fused_recon_adamw_apply(w, g, &vt, mq, mb, hp.beta1, lr, c1, c2, hp, ws);
+    ws.give_tensor(vt);
+    ws.give_tensor(std::mem::replace(mq, mq2));
+    ws.give_tensor(std::mem::replace(mb, mb2));
+    ws.give_tensor(std::mem::replace(vq, vq2));
+    ws.give_tensor(std::mem::replace(vb, vb2));
+}
+
+/// One MLorc-Lion step (Algorithm 2, lines 5-10) on raw state tensors.
+#[allow(clippy::too_many_arguments)]
+pub fn mlorc_lion_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    mq: &mut Tensor,
+    mb: &mut Tensor,
+    lr: f32,
+    hp: &OptHp,
+    om: &Tensor,
+    ws: &mut Workspace,
+) {
+    // line 10: update from c_t = beta1 recon + (1-beta1) g (old factors)
+    fused_recon_lion_apply(w, g, mq, mb, hp.beta1, lr, hp, ws);
+    // lines 8-9: m_t = beta2 recon + (1-beta2) g, recompressed factored
+    let (mq2, mb2) = rsvd_qb_factored(mq, mb, hp.beta2, g, om, ws);
+    ws.give_tensor(std::mem::replace(mq, mq2));
+    ws.give_tensor(std::mem::replace(mb, mb2));
+}
+
+/// Table 7 compress-m-only step on raw state tensors.
+#[allow(clippy::too_many_arguments)]
+pub fn mlorc_m_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    mq: &mut Tensor,
+    mb: &mut Tensor,
+    v: &mut Tensor,
+    t: usize,
+    lr: f32,
+    hp: &OptHp,
+    om: &Tensor,
+    ws: &mut Workspace,
+) {
+    for (vi, gi) in v.data.iter_mut().zip(&g.data) {
+        *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+    }
+    let (mq2, mb2) = rsvd_qb_factored(mq, mb, hp.beta1, g, om, ws);
+    let (c1, c2) = bias_corrections(hp, t);
+    fused_recon_adamw_apply(w, g, v, mq, mb, hp.beta1, lr, c1, c2, hp, ws);
+    ws.give_tensor(std::mem::replace(mq, mq2));
+    ws.give_tensor(std::mem::replace(mb, mb2));
+}
+
+/// Table 7 compress-v-only step on raw state tensors.
+#[allow(clippy::too_many_arguments)]
+pub fn mlorc_v_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    m_exact: &mut Tensor,
+    vq: &mut Tensor,
+    vb: &mut Tensor,
+    t: usize,
+    lr: f32,
+    hp: &OptHp,
+    om: &Tensor,
+    ws: &mut Workspace,
+) {
+    let (m, n) = w.dims2().expect("mlorc on 2-D params only");
+    for (mi, gi) in m_exact.data.iter_mut().zip(&g.data) {
+        *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+    }
+    let mut vt = ws.take_tensor(&[m, n]);
+    second_moment_dense(&mut vt, vq, vb, g, hp.beta2);
+    let (vq2, vb2) = rsvd_qb_ws(&vt, om, ws);
+    let (c1, c2) = bias_corrections(hp, t);
+    adamw_apply(w, m_exact, &vt, lr, c1, c2, hp);
+    ws.give_tensor(vt);
+    ws.give_tensor(std::mem::replace(vq, vq2));
+    ws.give_tensor(std::mem::replace(vb, vb2));
+}
+
+/// The pre-optimization MLorc-AdamW step shape: materialize both
+/// reconstructions, recompress directly, apply separately. Kept as the
+/// bench baseline and the equivalence oracle for the fast path.
+#[allow(clippy::too_many_arguments)]
+pub fn mlorc_adamw_step_direct(
+    w: &mut Tensor,
+    g: &Tensor,
+    mq: &mut Tensor,
+    mb: &mut Tensor,
+    vq: &mut Tensor,
+    vb: &mut Tensor,
+    t: usize,
+    lr: f32,
+    hp: &OptHp,
+    om_m: &Tensor,
+    om_v: &Tensor,
+) {
+    let mut mt = matmul(mq, mb);
+    mt.axpy(1.0 - hp.beta1, g, hp.beta1);
+    let mut vt = matmul(vq, vb);
+    zeta_fix(&mut vt);
+    for (vi, gi) in vt.data.iter_mut().zip(&g.data) {
+        *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+    }
+    let (mq2, mb2) = rsvd_qb(&mt, om_m);
+    let (vq2, vb2) = rsvd_qb(&vt, om_v);
+    *mq = mq2;
+    *mb = mb2;
+    *vq = vq2;
+    *vb = vb2;
+    let (c1, c2) = bias_corrections(hp, t);
+    adamw_apply(w, &mt, &vt, lr, c1, c2, hp);
+}
+
+// ------------------------------------------------------------ state structs
+
 #[derive(Debug, Clone)]
 pub struct MlorcAdamWState {
     pub mq: Tensor,
@@ -38,6 +398,7 @@ pub struct MlorcAdamWState {
     pub vb: Tensor,
     pub l: usize,
     pub t: usize,
+    ws: Workspace,
 }
 
 impl MlorcAdamWState {
@@ -50,6 +411,7 @@ impl MlorcAdamWState {
             vb: Tensor::zeros(&[l, n]),
             l,
             t: 0,
+            ws: Workspace::new(),
         }
     }
 
@@ -59,29 +421,27 @@ impl MlorcAdamWState {
 
     /// Algorithm 1, lines 5-15. `rng` supplies the two Omega draws.
     pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
-        self.t += 1;
         let (_, n) = w.dims2().expect("mlorc on 2-D params only");
-        // lines 6+9: m_t = beta1 * reconstruct + (1-beta1) g
-        let mut mt = matmul(&self.mq, &self.mb);
-        mt.axpy(1.0 - hp.beta1, g, hp.beta1);
-        // lines 7-8+10: v_t = beta2 * fix(reconstruct) + (1-beta2) g^2
-        let mut vt = matmul(&self.vq, &self.vb);
-        zeta_fix(&mut vt);
-        for (vi, gi) in vt.data.iter_mut().zip(&g.data) {
-            *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
-        }
-        // lines 11-12: recompress
         let om_m = rng.gaussian_tensor(&[n, self.l], 1.0);
         let om_v = rng.gaussian_tensor(&[n, self.l], 1.0);
-        let (mq, mb) = rsvd_qb(&mt, &om_m);
-        let (vq, vb) = rsvd_qb(&vt, &om_v);
-        self.mq = mq;
-        self.mb = mb;
-        self.vq = vq;
-        self.vb = vb;
-        // lines 13-15: update with the *exact* m_t, v_t
-        let (c1, c2) = bias_corrections(hp, self.t);
-        adamw_apply(w, &mt, &vt, lr, c1, c2, hp);
+        self.step_with_omegas(w, g, lr, hp, &om_m, &om_v);
+    }
+
+    /// Step with caller-provided Omega draws (benches, cross-validation).
+    pub fn step_with_omegas(
+        &mut self,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        hp: &OptHp,
+        om_m: &Tensor,
+        om_v: &Tensor,
+    ) {
+        self.t += 1;
+        mlorc_adamw_core(
+            w, g, &mut self.mq, &mut self.mb, &mut self.vq, &mut self.vb, self.t, lr, hp, om_m,
+            om_v, &mut self.ws,
+        );
     }
 }
 
@@ -91,6 +451,7 @@ pub struct MlorcLionState {
     pub mb: Tensor,
     pub l: usize,
     pub t: usize,
+    ws: Workspace,
 }
 
 impl MlorcLionState {
@@ -100,6 +461,7 @@ impl MlorcLionState {
             mb: Tensor::zeros(&[l, shape[1]]),
             l,
             t: 0,
+            ws: Workspace::new(),
         }
     }
 
@@ -109,21 +471,22 @@ impl MlorcLionState {
 
     /// Algorithm 2, lines 5-10.
     pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
-        self.t += 1;
         let (_, n) = w.dims2().expect("mlorc on 2-D params only");
-        let recon = matmul(&self.mq, &self.mb); // line 6
-        // line 10 uses c_t = beta1 recon + (1-beta1) g
-        for ((wi, ri), gi) in w.data.iter_mut().zip(&recon.data).zip(&g.data) {
-            let c = hp.beta1 * ri + (1.0 - hp.beta1) * gi;
-            *wi -= lr * (sign(c) + hp.weight_decay * *wi);
-        }
-        // line 8: m_t = beta2 recon + (1-beta2) g, then line 9 recompress
-        let mut mt = recon;
-        mt.axpy(1.0 - hp.beta2, g, hp.beta2);
         let om = rng.gaussian_tensor(&[n, self.l], 1.0);
-        let (mq, mb) = rsvd_qb(&mt, &om);
-        self.mq = mq;
-        self.mb = mb;
+        self.step_with_omega(w, g, lr, hp, &om);
+    }
+
+    /// Step with a caller-provided Omega draw.
+    pub fn step_with_omega(
+        &mut self,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        hp: &OptHp,
+        om: &Tensor,
+    ) {
+        self.t += 1;
+        mlorc_lion_core(w, g, &mut self.mq, &mut self.mb, lr, hp, om, &mut self.ws);
     }
 }
 
@@ -135,6 +498,7 @@ pub struct MlorcMState {
     pub v: Tensor,
     pub l: usize,
     pub t: usize,
+    ws: Workspace,
 }
 
 impl MlorcMState {
@@ -145,23 +509,17 @@ impl MlorcMState {
             v: Tensor::zeros(shape),
             l,
             t: 0,
+            ws: Workspace::new(),
         }
     }
 
     pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
         self.t += 1;
         let (_, n) = w.dims2().unwrap();
-        let mut mt = matmul(&self.mq, &self.mb);
-        mt.axpy(1.0 - hp.beta1, g, hp.beta1);
-        for (vi, gi) in self.v.data.iter_mut().zip(&g.data) {
-            *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
-        }
         let om = rng.gaussian_tensor(&[n, self.l], 1.0);
-        let (mq, mb) = rsvd_qb(&mt, &om);
-        self.mq = mq;
-        self.mb = mb;
-        let (c1, c2) = bias_corrections(hp, self.t);
-        adamw_apply(w, &mt, &self.v, lr, c1, c2, hp);
+        mlorc_m_core(
+            w, g, &mut self.mq, &mut self.mb, &mut self.v, self.t, lr, hp, &om, &mut self.ws,
+        );
     }
 }
 
@@ -173,6 +531,7 @@ pub struct MlorcVState {
     pub vb: Tensor,
     pub l: usize,
     pub t: usize,
+    ws: Workspace,
 }
 
 impl MlorcVState {
@@ -183,26 +542,17 @@ impl MlorcVState {
             vb: Tensor::zeros(&[l, shape[1]]),
             l,
             t: 0,
+            ws: Workspace::new(),
         }
     }
 
     pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
         self.t += 1;
         let (_, n) = w.dims2().unwrap();
-        for (mi, gi) in self.m.data.iter_mut().zip(&g.data) {
-            *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
-        }
-        let mut vt = matmul(&self.vq, &self.vb);
-        zeta_fix(&mut vt);
-        for (vi, gi) in vt.data.iter_mut().zip(&g.data) {
-            *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
-        }
         let om = rng.gaussian_tensor(&[n, self.l], 1.0);
-        let (vq, vb) = rsvd_qb(&vt, &om);
-        self.vq = vq;
-        self.vb = vb;
-        let (c1, c2) = bias_corrections(hp, self.t);
-        adamw_apply(w, &self.m, &vt, lr, c1, c2, hp);
+        mlorc_v_core(
+            w, g, &mut self.m, &mut self.vq, &mut self.vb, self.t, lr, hp, &om, &mut self.ws,
+        );
     }
 }
 
@@ -239,6 +589,94 @@ mod tests {
             adamw.step(&mut w2, &g, 1e-2, &hp);
             assert!(w1.rel_err(&w2) < 1e-4, "rel {}", w1.rel_err(&w2));
         }
+    }
+
+    #[test]
+    fn fast_path_matches_direct_step() {
+        // The factored+fused step must track the materialized direct step
+        // given identical Omega draws — same algorithm, different schedule.
+        let hp = OptHp::mlorc_adamw();
+        let (m, n, l) = (24, 17, 4);
+        let mut rng = Rng::new(5);
+        let mut w_fast = rng.gaussian_tensor(&[m, n], 0.5);
+        let mut w_dir = w_fast.clone();
+        let mut fast = MlorcAdamWState::new(&[m, n], l);
+        let (mut mq, mut mb) = (Tensor::zeros(&[m, l]), Tensor::zeros(&[l, n]));
+        let (mut vq, mut vb) = (Tensor::zeros(&[m, l]), Tensor::zeros(&[l, n]));
+        for t in 1..=4 {
+            let g = rng.gaussian_tensor(&[m, n], 1.0);
+            let om_m = rng.gaussian_tensor(&[n, l], 1.0);
+            let om_v = rng.gaussian_tensor(&[n, l], 1.0);
+            fast.step_with_omegas(&mut w_fast, &g, 1e-2, &hp, &om_m, &om_v);
+            mlorc_adamw_step_direct(
+                &mut w_dir, &g, &mut mq, &mut mb, &mut vq, &mut vb, t, 1e-2, &hp, &om_m, &om_v,
+            );
+            let rel = w_fast.rel_err(&w_dir);
+            assert!(rel < 5e-3, "step {t}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn factored_step_gemm_audit() {
+        // Acceptance shape of the fast path: per moment exactly one
+        // O(m·n·l) GEMM touches a dense m×n result — the fused m-moment
+        // reconstruction and the v-moment reconstruction — while every
+        // sketch/projection GEMM has a thin output (≤ max(m,n)·l elems).
+        let hp = OptHp::mlorc_adamw();
+        let (m, n, l) = (40, 24, 4);
+        let mut rng = Rng::new(3);
+        let mut w = rng.gaussian_tensor(&[m, n], 0.5);
+        let mut st = MlorcAdamWState::new(&[m, n], l);
+        let g = rng.gaussian_tensor(&[m, n], 1.0);
+        let om_m = rng.gaussian_tensor(&[n, l], 1.0);
+        let om_v = rng.gaussian_tensor(&[n, l], 1.0);
+        // warm the state so both moments have nonzero factors
+        st.step_with_omegas(&mut w, &g, 1e-2, &hp, &om_m, &om_v);
+
+        flops::start_recording();
+        st.step_with_omegas(&mut w, &g, 1e-2, &hp, &om_m, &om_v);
+        let recs = flops::finish_recording();
+
+        let dense = m * n;
+        let thin_cap = m.max(n) * l;
+        let dense_nonfused: Vec<_> =
+            recs.iter().filter(|r| !r.is_fused() && r.out_elems() == dense).collect();
+        let fused: Vec<_> = recs.iter().filter(|r| r.is_fused()).collect();
+        assert_eq!(dense_nonfused.len(), 1, "one dense recon (v moment): {recs:?}");
+        assert_eq!(dense_nonfused[0].inner, l, "the dense recon is the O(m·n·l) QB product");
+        assert_eq!(fused.len(), 1, "one fused recon (m moment): {recs:?}");
+        for r in recs.iter().filter(|r| !r.is_fused() && r.out_elems() != dense) {
+            assert!(
+                r.out_elems() <= thin_cap,
+                "sketch/projection GEMM must be thin: {r:?}"
+            );
+        }
+
+        // Contrast: the direct step materializes both reconstructions.
+        let (mut mq, mut mb) = (st.mq.clone(), st.mb.clone());
+        let (mut vq, mut vb) = (st.vq.clone(), st.vb.clone());
+        flops::start_recording();
+        mlorc_adamw_step_direct(
+            &mut w, &g, &mut mq, &mut mb, &mut vq, &mut vb, 3, 1e-2, &hp, &om_m, &om_v,
+        );
+        let direct = flops::finish_recording();
+        let direct_dense = direct.iter().filter(|r| r.out_elems() == dense).count();
+        assert_eq!(direct_dense, 2, "direct path reconstructs both moments: {direct:?}");
+    }
+
+    #[test]
+    fn steady_state_steps_do_not_allocate() {
+        let hp = OptHp::mlorc_adamw();
+        let (m, n, l) = (32, 20, 4);
+        let mut rng = Rng::new(8);
+        let mut w = rng.gaussian_tensor(&[m, n], 0.5);
+        let mut st = MlorcAdamWState::new(&[m, n], l);
+        for _ in 0..3 {
+            let g = rng.gaussian_tensor(&[m, n], 1.0);
+            st.step(&mut w, &g, 1e-2, &hp, &mut rng);
+        }
+        let warm = st.ws.reuse_ratio();
+        assert!(warm > 0.5, "workspace reuse after warmup: {warm}");
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //!    independent implementations (jnp ref, Pallas, rust) must coincide;
 //!  * the Theorem 3.3 experiment (`bench --experiment theory`) optimizes a
 //!    synthetic smooth objective entirely on the host;
+//!  * the coordinator's host stepping mode (`RunConfig::host_opt`), which
+//!    updates per-parameter states through the `*_core` functions below in
+//!    parallel across a thread pool;
 //!  * unit/property tests of algebraic invariants with no PJRT dependency.
 
 mod adamw;
@@ -21,7 +24,10 @@ pub use galore::GaloreState;
 pub use hparams::OptHp;
 pub use ldadamw::LdAdamWState;
 pub use lion::LionState;
-pub use mlorc::{zeta_fix, MlorcAdamWState, MlorcLionState, MlorcMState, MlorcVState};
+pub use mlorc::{
+    mlorc_adamw_core, mlorc_adamw_step_direct, mlorc_lion_core, mlorc_m_core, mlorc_v_core,
+    zeta_fix, MlorcAdamWState, MlorcLionState, MlorcMState, MlorcVState,
+};
 
 use crate::tensor::Tensor;
 
@@ -35,11 +41,46 @@ pub fn bias_corrections(hp: &OptHp, t: usize) -> (f32, f32) {
 }
 
 /// AdamW apply: w -= lr * (m*c1 / (sqrt(v*c2) + eps) + wd * w).
-pub(crate) fn adamw_apply(w: &mut Tensor, m: &Tensor, v: &Tensor, lr: f32, c1: f32, c2: f32, hp: &OptHp) {
+/// Public so benches and external baselines measure the exact same apply.
+pub fn adamw_apply(w: &mut Tensor, m: &Tensor, v: &Tensor, lr: f32, c1: f32, c2: f32, hp: &OptHp) {
     for ((wi, mi), vi) in w.data.iter_mut().zip(&m.data).zip(&v.data) {
         let mhat = mi * c1;
         let vhat = vi * c2;
         *wi -= lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * *wi);
+    }
+}
+
+/// One uncompressed AdamW step over raw state tensors (any shape) — the
+/// host mirror of the `adamw` step graph, shared by the trainer's vector
+/// path and `OptState::host_step`.
+pub fn adamw_host_step(
+    w: &mut Tensor,
+    g: &Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    lr: f32,
+    t: usize,
+    hp: &OptHp,
+) {
+    for (mi, gi) in m.data.iter_mut().zip(&g.data) {
+        *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+    }
+    for (vi, gi) in v.data.iter_mut().zip(&g.data) {
+        *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+    }
+    let (c1, c2) = bias_corrections(hp, t);
+    adamw_apply(w, m, v, lr, c1, c2, hp);
+}
+
+/// One uncompressed Lion step over raw state tensors — host mirror of the
+/// `lion` step graph (update from old momentum, then decay it).
+pub fn lion_host_step(w: &mut Tensor, g: &Tensor, m: &mut Tensor, lr: f32, hp: &OptHp) {
+    for ((wi, mi), gi) in w.data.iter_mut().zip(&m.data).zip(&g.data) {
+        let c = hp.beta1 * mi + (1.0 - hp.beta1) * gi;
+        *wi -= lr * (lion::sign(c) + hp.weight_decay * *wi);
+    }
+    for (mi, gi) in m.data.iter_mut().zip(&g.data) {
+        *mi = hp.beta2 * *mi + (1.0 - hp.beta2) * gi;
     }
 }
 
@@ -57,5 +98,36 @@ mod tests {
         assert!((c2b - 1.0).abs() < 0.01);
         // step 1: c1 = 1/(1-beta1)
         assert!((c1a - 1.0 / (1.0 - hp.beta1)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn host_steps_match_reference_states() {
+        let hp = OptHp::adamw();
+        let mut rng = crate::linalg::Rng::new(4);
+        let g = rng.gaussian_tensor(&[6, 5], 1.0);
+        let mut w1 = rng.gaussian_tensor(&[6, 5], 1.0);
+        let mut w2 = w1.clone();
+        let mut st = AdamWState::new(&[6, 5]);
+        let (mut m, mut v) = (Tensor::zeros(&[6, 5]), Tensor::zeros(&[6, 5]));
+        for t in 1..=3 {
+            st.step(&mut w1, &g, 1e-2, &hp);
+            adamw_host_step(&mut w2, &g, &mut m, &mut v, 1e-2, t, &hp);
+            assert_eq!(w1.data, w2.data, "adamw host step must be bit-identical");
+        }
+
+        let hp = OptHp::lion();
+        let mut l1 = rng.gaussian_tensor(&[4, 4], 1.0);
+        let mut l2 = l1.clone();
+        let mut lst = LionState::new(&[4, 4]);
+        let mut lm = Tensor::zeros(&[4, 4]);
+        for _ in 0..3 {
+            lst.step(&mut l1, &g_sub(&g), 1e-2, &hp);
+            lion_host_step(&mut l2, &g_sub(&g), &mut lm, 1e-2, &hp);
+            assert_eq!(l1.data, l2.data, "lion host step must be bit-identical");
+        }
+    }
+
+    fn g_sub(g: &Tensor) -> Tensor {
+        Tensor::new(vec![4, 4], g.data[..16].to_vec()).unwrap()
     }
 }

@@ -3,27 +3,15 @@
 //! Executables are cached per file path; inputs/outputs are checked against
 //! the manifest IO tables so a drifted artifact fails loudly at the
 //! boundary instead of producing garbage.
-
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
-
-use anyhow::{anyhow, bail, Result};
-
-use crate::tensor::{Tensor, TensorI32};
-
-use super::manifest::GraphSpec;
-use super::value::{HostValue, ValRef};
-
-pub struct Runtime {
-    client: xla::PjRtClient,
-    root: PathBuf,
-    cache: RefCell<HashMap<String, Rc<LoadedGraph>>>,
-    /// cumulative executor statistics (perf accounting)
-    pub stats: RefCell<RuntimeStats>,
-}
+//!
+//! The actual PJRT backend needs the external `xla` bindings crate, which
+//! the hermetic offline build does not carry. It is therefore gated behind
+//! the `pjrt` cargo feature; the default build ships a stub `Runtime` with
+//! the same API whose constructor fails with a clear message. Everything
+//! that gates on `make artifacts` being present (trainer smoke tests,
+//! cross-validation, graph benches) skips cleanly in stub builds, while
+//! the pure-host path (linalg kernels, reference optimizers, host benches)
+//! is fully functional.
 
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
@@ -35,186 +23,271 @@ pub struct RuntimeStats {
     pub bytes_out: usize,
 }
 
-pub struct LoadedGraph {
-    pub spec: GraphSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
+    use std::time::Instant;
 
-impl Runtime {
-    /// CPU PJRT client rooted at the artifacts directory.
-    pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        log::debug!(
-            "PJRT platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Runtime {
-            client,
-            root: artifacts_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
-        })
+    use anyhow::{anyhow, bail, Result};
+
+    use crate::tensor::{Tensor, TensorI32};
+
+    use super::super::manifest::GraphSpec;
+    use super::super::value::{HostValue, ValRef};
+    use super::RuntimeStats;
+
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        root: PathBuf,
+        cache: RefCell<HashMap<String, Rc<LoadedGraph>>>,
+        /// cumulative executor statistics (perf accounting)
+        pub stats: RefCell<RuntimeStats>,
     }
 
-    /// Load + compile (cached) the graph described by `spec`.
-    pub fn load(&self, spec: &GraphSpec) -> Result<Rc<LoadedGraph>> {
-        if let Some(g) = self.cache.borrow().get(&spec.file) {
-            return Ok(g.clone());
+    pub struct LoadedGraph {
+        pub spec: GraphSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Runtime {
+        /// CPU PJRT client rooted at the artifacts directory.
+        pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+            log::debug!(
+                "PJRT platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            Ok(Runtime {
+                client,
+                root: artifacts_dir.to_path_buf(),
+                cache: RefCell::new(HashMap::new()),
+                stats: RefCell::new(RuntimeStats::default()),
+            })
         }
-        let path = self.root.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
+
+        /// Load + compile (cached) the graph described by `spec`.
+        pub fn load(&self, spec: &GraphSpec) -> Result<Rc<LoadedGraph>> {
+            if let Some(g) = self.cache.borrow().get(&spec.file) {
+                return Ok(g.clone());
+            }
+            let path = self.root.join(&spec.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            let dt = t0.elapsed().as_secs_f64();
+            {
+                let mut s = self.stats.borrow_mut();
+                s.compiles += 1;
+                s.compile_secs += dt;
+            }
+            log::debug!("compiled {} in {:.2}s", spec.file, dt);
+            let g = Rc::new(LoadedGraph { spec: spec.clone(), exe });
+            self.cache.borrow_mut().insert(spec.file.clone(), g.clone());
+            Ok(g)
+        }
+
+        /// Execute a loaded graph on host values, returning host values in the
+        /// graph's output order.
+        pub fn execute(&self, g: &LoadedGraph, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+            let refs: Vec<ValRef> = inputs.iter().map(ValRef::from).collect();
+            self.execute_refs(g, &refs)
+        }
+
+        /// Zero-clone execution path: borrows the input tensors (the training
+        /// hot loop passes parameters by reference every step).
+        pub fn execute_refs(&self, g: &LoadedGraph, inputs: &[ValRef]) -> Result<Vec<HostValue>> {
+            self.check_inputs(g, inputs)?;
+            let literals = inputs.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
+            let t0 = Instant::now();
+            let result = g
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {}: {e:?}", g.spec.file))?;
+            let out_lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of {}: {e:?}", g.spec.file))?;
+            // aot.py lowers with return_tuple=True: root is always a tuple.
+            let parts = out_lit
+                .to_tuple()
+                .map_err(|e| anyhow!("untupling result of {}: {e:?}", g.spec.file))?;
+            if parts.len() != g.spec.outputs.len() {
+                bail!(
+                    "{}: expected {} outputs, got {}",
+                    g.spec.file,
+                    g.spec.outputs.len(),
+                    parts.len()
+                );
+            }
+            let out = parts.into_iter().map(from_literal).collect::<Result<Vec<_>>>()?;
+            let dt = t0.elapsed().as_secs_f64();
             let mut s = self.stats.borrow_mut();
-            s.compiles += 1;
-            s.compile_secs += dt;
+            s.executions += 1;
+            s.execute_secs += dt;
+            s.bytes_in += inputs.iter().map(|v| v.size_bytes()).sum::<usize>();
+            s.bytes_out += out.iter().map(|v| v.size_bytes()).sum::<usize>();
+            Ok(out)
         }
-        log::debug!("compiled {} in {:.2}s", spec.file, dt);
-        let g = Rc::new(LoadedGraph { spec: spec.clone(), exe });
-        self.cache.borrow_mut().insert(spec.file.clone(), g.clone());
-        Ok(g)
-    }
 
-    /// Execute a loaded graph on host values, returning host values in the
-    /// graph's output order.
-    pub fn execute(&self, g: &LoadedGraph, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
-        let refs: Vec<ValRef> = inputs.iter().map(ValRef::from).collect();
-        self.execute_refs(g, &refs)
-    }
-
-    /// Zero-clone execution path: borrows the input tensors (the training
-    /// hot loop passes parameters by reference every step).
-    pub fn execute_refs(&self, g: &LoadedGraph, inputs: &[ValRef]) -> Result<Vec<HostValue>> {
-        self.check_inputs(g, inputs)?;
-        let literals = inputs.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
-        let t0 = Instant::now();
-        let result = g
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {}: {e:?}", g.spec.file))?;
-        let out_lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {}: {e:?}", g.spec.file))?;
-        // aot.py lowers with return_tuple=True: root is always a tuple.
-        let parts = out_lit
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling result of {}: {e:?}", g.spec.file))?;
-        if parts.len() != g.spec.outputs.len() {
-            bail!(
-                "{}: expected {} outputs, got {}",
-                g.spec.file,
-                g.spec.outputs.len(),
-                parts.len()
-            );
+        /// Convenience: load + execute in one call.
+        pub fn run(&self, spec: &GraphSpec, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+            let g = self.load(spec)?;
+            self.execute(&g, inputs)
         }
-        let out = parts.into_iter().map(from_literal).collect::<Result<Vec<_>>>()?;
-        let dt = t0.elapsed().as_secs_f64();
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.execute_secs += dt;
-        s.bytes_in += inputs.iter().map(|v| v.size_bytes()).sum::<usize>();
-        s.bytes_out += out.iter().map(|v| v.size_bytes()).sum::<usize>();
-        Ok(out)
-    }
 
-    /// Convenience: load + execute in one call.
-    pub fn run(&self, spec: &GraphSpec, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
-        let g = self.load(spec)?;
-        self.execute(&g, inputs)
-    }
-
-    /// Convenience: load + execute by reference.
-    pub fn run_refs(&self, spec: &GraphSpec, inputs: &[ValRef]) -> Result<Vec<HostValue>> {
-        let g = self.load(spec)?;
-        self.execute_refs(&g, inputs)
-    }
-
-    fn check_inputs(&self, g: &LoadedGraph, inputs: &[ValRef]) -> Result<()> {
-        if inputs.len() != g.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                g.spec.file,
-                g.spec.inputs.len(),
-                inputs.len()
-            );
+        /// Convenience: load + execute by reference.
+        pub fn run_refs(&self, spec: &GraphSpec, inputs: &[ValRef]) -> Result<Vec<HostValue>> {
+            let g = self.load(spec)?;
+            self.execute_refs(&g, inputs)
         }
-        for (io, v) in g.spec.inputs.iter().zip(inputs) {
-            if io.shape != v.shape() {
+
+        fn check_inputs(&self, g: &LoadedGraph, inputs: &[ValRef]) -> Result<()> {
+            if inputs.len() != g.spec.inputs.len() {
                 bail!(
-                    "{}: input '{}' expects shape {:?}, got {:?}",
+                    "{}: expected {} inputs, got {}",
                     g.spec.file,
-                    io.name,
-                    io.shape,
-                    v.shape()
+                    g.spec.inputs.len(),
+                    inputs.len()
                 );
             }
-            if io.dtype != v.dtype() {
-                bail!(
-                    "{}: input '{}' expects dtype {}, got {}",
-                    g.spec.file,
-                    io.name,
-                    io.dtype,
-                    v.dtype()
-                );
+            for (io, v) in g.spec.inputs.iter().zip(inputs) {
+                if io.shape != v.shape() {
+                    bail!(
+                        "{}: input '{}' expects shape {:?}, got {:?}",
+                        g.spec.file,
+                        io.name,
+                        io.shape,
+                        v.shape()
+                    );
+                }
+                if io.dtype != v.dtype() {
+                    bail!(
+                        "{}: input '{}' expects dtype {}, got {}",
+                        g.spec.file,
+                        io.name,
+                        io.dtype,
+                        v.dtype()
+                    );
+                }
+            }
+            Ok(())
+        }
+
+        pub fn stats_snapshot(&self) -> RuntimeStats {
+            self.stats.borrow().clone()
+        }
+    }
+
+    fn to_literal(v: &ValRef) -> Result<xla::Literal> {
+        match v {
+            ValRef::F32(t) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &t.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal from f32 tensor {:?}: {e:?}", t.shape))
+            }
+            ValRef::I32(t) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &t.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal from i32 tensor {:?}: {e:?}", t.shape))
             }
         }
-        Ok(())
     }
 
-    pub fn stats_snapshot(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
-    }
-}
-
-fn to_literal(v: &ValRef) -> Result<xla::Literal> {
-    match v {
-        ValRef::F32(t) => {
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-            };
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &t.shape,
-                bytes,
-            )
-            .map_err(|e| anyhow!("literal from f32 tensor {:?}: {e:?}", t.shape))
-        }
-        ValRef::I32(t) => {
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-            };
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                &t.shape,
-                bytes,
-            )
-            .map_err(|e| anyhow!("literal from i32 tensor {:?}: {e:?}", t.shape))
+    fn from_literal(lit: xla::Literal) -> Result<HostValue> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("output literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))?;
+                Ok(HostValue::F32(Tensor::new(dims, data)?))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec<i32>: {e:?}"))?;
+                Ok(HostValue::I32(TensorI32::new(dims, data)?))
+            }
+            other => bail!("unsupported output element type {other:?}"),
         }
     }
 }
 
-fn from_literal(lit: xla::Literal) -> Result<HostValue> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow!("output literal shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => {
-            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))?;
-            Ok(HostValue::F32(Tensor::new(dims, data)?))
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
+    use std::rc::Rc;
+
+    use anyhow::{bail, Result};
+
+    use super::super::manifest::GraphSpec;
+    use super::super::value::{HostValue, ValRef};
+    use super::RuntimeStats;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: this binary was built without the `pjrt` \
+         feature (the external `xla` bindings crate is not vendored). Host-side \
+         paths — linalg kernels, reference optimizers, `cargo bench --bench \
+         bench_opt_step` — work without it.";
+
+    /// API-compatible stand-in for the PJRT runtime. `cpu()` always fails,
+    /// so the other methods are unreachable in practice but keep the same
+    /// signatures for callers.
+    pub struct Runtime {
+        pub stats: std::cell::RefCell<RuntimeStats>,
+    }
+
+    pub struct LoadedGraph {
+        pub spec: GraphSpec,
+    }
+
+    impl Runtime {
+        pub fn cpu(_artifacts_dir: &Path) -> Result<Runtime> {
+            bail!("{UNAVAILABLE}")
         }
-        xla::ElementType::S32 => {
-            let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec<i32>: {e:?}"))?;
-            Ok(HostValue::I32(TensorI32::new(dims, data)?))
+
+        pub fn load(&self, _spec: &GraphSpec) -> Result<Rc<LoadedGraph>> {
+            bail!("{UNAVAILABLE}")
         }
-        other => bail!("unsupported output element type {other:?}"),
+
+        pub fn execute(&self, _g: &LoadedGraph, _inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn execute_refs(&self, _g: &LoadedGraph, _inputs: &[ValRef]) -> Result<Vec<HostValue>> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn run(&self, _spec: &GraphSpec, _inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn run_refs(&self, _spec: &GraphSpec, _inputs: &[ValRef]) -> Result<Vec<HostValue>> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn stats_snapshot(&self) -> RuntimeStats {
+            self.stats.borrow().clone()
+        }
     }
 }
+
+pub use backend::{LoadedGraph, Runtime};

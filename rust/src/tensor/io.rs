@@ -1,13 +1,16 @@
 //! RTEN: a trivially simple binary tensor container for checkpoints.
 //!
 //! Layout (little-endian):
-//!   magic  "RTEN1\0\0\0"                      (8 bytes)
-//!   u32    n_entries
-//!   per entry:
-//!     u32  name_len, name bytes (utf-8)
-//!     u8   dtype (0 = f32, 1 = i32)
-//!     u32  rank, u64 dims[rank]
-//!     raw  data (dims product * 4 bytes)
+//!
+//! ```text
+//! magic  "RTEN1\0\0\0"                      (8 bytes)
+//! u32    n_entries
+//! per entry:
+//!   u32  name_len, name bytes (utf-8)
+//!   u8   dtype (0 = f32, 1 = i32)
+//!   u32  rank, u64 dims[rank]
+//!   raw  data (dims product * 4 bytes)
+//! ```
 //!
 //! No compression — checkpoints are local scratch, and `write_atomic`
 //! protects against torn files.

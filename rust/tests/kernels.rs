@@ -1,0 +1,128 @@
+//! Property tests for the blocked/threaded linalg kernels and the
+//! factored recompression fast path, against the scalar reference tier on
+//! adversarial shapes: 1×n, m×1, tall-skinny, wide-flat, and sizes that
+//! are not multiples of the register tile or k-panel.
+
+use mlorc::linalg::{
+    matmul, matmul_a_bt, matmul_at_b, rsvd_qb, rsvd_qb_factored, scalar_matmul,
+    scalar_matmul_a_bt, scalar_matmul_at_b, threads, Rng, Workspace,
+};
+use mlorc::tensor::Tensor;
+use mlorc::testing::prop;
+
+/// Adversarial dim: degenerate and tile-straddling sizes, plus random.
+fn adversarial_dim(rng: &mut Rng) -> usize {
+    match rng.below(8) {
+        0 => 1,
+        1 => 2,
+        2 => 3,   // below the 4-row register tile
+        3 => 5,   // straddles it
+        4 => 15,  // just under SMALL_N
+        5 => 17,  // just over SMALL_N
+        6 => 63,  // odd multi-tile
+        _ => rng.range(1, 80),
+    }
+}
+
+#[test]
+fn blocked_matmul_matches_scalar_on_adversarial_shapes() {
+    prop::check(64, |rng| {
+        let (m, k, n) = (adversarial_dim(rng), adversarial_dim(rng), adversarial_dim(rng));
+        let a = rng.gaussian_tensor(&[m, k], 1.0);
+        let b = rng.gaussian_tensor(&[k, n], 1.0);
+        let fast = matmul(&a, &b);
+        let slow = scalar_matmul(&a, &b);
+        prop::assert_lt(
+            fast.max_abs_diff(&slow) as f64,
+            1e-4 * (k as f64).sqrt().max(1.0),
+            &format!("matmul ({m},{k},{n})"),
+        )
+    });
+}
+
+#[test]
+fn blocked_at_b_and_a_bt_match_scalar() {
+    prop::check(64, |rng| {
+        let (m, k, n) = (adversarial_dim(rng), adversarial_dim(rng), adversarial_dim(rng));
+        let a = rng.gaussian_tensor(&[m, k], 1.0);
+        let b = rng.gaussian_tensor(&[m, n], 1.0);
+        let fast = matmul_at_b(&a, &b);
+        let slow = scalar_matmul_at_b(&a, &b);
+        prop::assert_lt(
+            fast.max_abs_diff(&slow) as f64,
+            1e-4 * (m as f64).sqrt().max(1.0),
+            &format!("at_b ({m},{k},{n})"),
+        )?;
+        let bt = rng.gaussian_tensor(&[n, k], 1.0);
+        let fast = matmul_a_bt(&a, &bt);
+        let slow = scalar_matmul_a_bt(&a, &bt);
+        prop::assert_lt(
+            fast.max_abs_diff(&slow) as f64,
+            1e-4 * (k as f64).sqrt().max(1.0),
+            &format!("a_bt ({m},{k},{n})"),
+        )
+    });
+}
+
+#[test]
+fn threaded_kernels_are_bit_deterministic() {
+    // Results must be bit-identical whether banding threads are used or
+    // not — this is what makes parallel host stepping reproducible.
+    prop::check(16, |rng| {
+        let (m, k, n) = (rng.range(30, 130), rng.range(1, 70), rng.range(1, 70));
+        let a = rng.gaussian_tensor(&[m, k], 1.0);
+        let b = rng.gaussian_tensor(&[k, n], 1.0);
+        let threaded = matmul(&a, &b);
+        let serial = threads::serial(|| matmul(&a, &b));
+        prop::assert_true(threaded.data == serial.data, "matmul banding changed bits")?;
+
+        let b2 = rng.gaussian_tensor(&[m, n], 1.0);
+        let t2 = matmul_at_b(&a, &b2);
+        let s2 = threads::serial(|| matmul_at_b(&a, &b2));
+        prop::assert_true(t2.data == s2.data, "at_b banding changed bits")
+    });
+}
+
+#[test]
+fn nan_propagation_regression() {
+    // Zero row in A, NaN in B: the old zero-skip dropped the NaN.
+    let mut a = Tensor::zeros(&[3, 2]);
+    a.set2(2, 0, 1.0);
+    let mut b = Tensor::new(vec![2, 2], vec![f32::NAN, 1.0, 2.0, 3.0]).unwrap();
+    let c = matmul(&a, &b);
+    assert!(c.at2(0, 0).is_nan() && c.at2(1, 0).is_nan() && c.at2(2, 0).is_nan());
+    assert!(c.at2(0, 1).is_finite());
+    b.set2(0, 0, f32::INFINITY);
+    let c = scalar_matmul(&a, &b);
+    assert!(c.at2(0, 0).is_nan(), "0 * Inf must be NaN, not skipped");
+}
+
+#[test]
+fn factored_recompression_property() {
+    // On adversarial shapes the factored sketch must agree with the direct
+    // recompression of the materialized matrix.
+    prop::check(32, |rng| {
+        let m = rng.range(2, 50);
+        let n = rng.range(2, 50);
+        let l = rng.range(1, 7).min(m).min(n);
+        let beta = [0.0f32, 0.5, 0.8, 0.99][rng.below(4)];
+        let mut ws = Workspace::new();
+        let qp = mlorc::linalg::mgs_qr(&rng.gaussian_tensor(&[m, l], 1.0));
+        let bp = rng.gaussian_tensor(&[l, n], 0.7);
+        let g = rng.gaussian_tensor(&[m, n], 1.0);
+        let omega = rng.gaussian_tensor(&[n, l], 1.0);
+
+        let mut a = matmul(&qp, &bp);
+        a.axpy(1.0 - beta, &g, beta);
+        let (qd, bd) = rsvd_qb(&a, &omega);
+        let (qf, bf) = rsvd_qb_factored(&qp, &bp, beta, &g, &omega, &mut ws);
+        let direct = matmul(&qd, &bd);
+        let fact = matmul(&qf, &bf);
+        let denom = direct.norm_fro().max(1e-6);
+        prop::assert_lt(
+            (fact.max_abs_diff(&direct) / denom) as f64,
+            5e-4,
+            &format!("factored vs direct ({m},{n},{l},beta={beta})"),
+        )
+    });
+}

@@ -1,0 +1,200 @@
+//! Vendored minimal `anyhow`.
+//!
+//! The offline build has no crates.io access, so this crate provides the
+//! subset of the `anyhow` 1.x API the workspace uses: `Error` (message +
+//! context chain), `Result<T>`, the `anyhow!` / `bail!` / `ensure!`
+//! macros, and the `Context` extension trait on `Result` and `Option`.
+//! Formatting matches upstream where it matters: `{}` prints the topmost
+//! context, `{:#}` prints the whole chain joined by `": "`, and `{:?}`
+//! prints the top message followed by a `Caused by:` list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Dynamic error: a message with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap `self` as the cause of a new, higher-level message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain from the outermost context to the root cause.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(cause) = cur.cause.as_deref() {
+            cur = cause;
+        }
+        cur
+    }
+}
+
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.cause.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, err) in self.chain().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(&err.msg)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let causes: Vec<&Error> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for (i, err) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {}", err.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Matches upstream: `Error` itself does not implement `std::error::Error`,
+// which is what makes this blanket conversion coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain: Vec<String> = Vec::new();
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(&err);
+        while let Some(e) = cur {
+            chain.push(e.to_string());
+            cur = e.source();
+        }
+        let mut out = Error::msg(chain.pop().expect("at least one message"));
+        while let Some(msg) = chain.pop() {
+            out = out.context(msg);
+        }
+        out
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+// A single impl bound on `Into<Error>` covers both `Result<T, Error>`
+// (identity conversion) and results carrying std errors (the blanket
+// `From` above) without overlapping impls.
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => { $crate::Error::msg(format!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => { return Err($crate::anyhow!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            $crate::bail!($($arg)+)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root failure {}", 7)
+    }
+
+    #[test]
+    fn display_and_chain() {
+        let err = fails().context("while doing work").unwrap_err();
+        assert_eq!(format!("{err}"), "while doing work");
+        assert_eq!(format!("{err:#}"), "while doing work: root failure 7");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert_eq!(err.root_cause().to_string(), "root failure 7");
+        assert_eq!(err.chain().count(), 2);
+    }
+
+    #[test]
+    fn std_error_conversion_and_option_context() {
+        let io: std::io::Error = std::io::Error::new(std::io::ErrorKind::Other, "disk gone");
+        let err: Error = io.into();
+        assert!(format!("{err}").contains("disk gone"));
+
+        let none: Option<u32> = None;
+        let err = none.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{err}"), "missing key");
+
+        let ok: Option<u32> = Some(3);
+        assert_eq!(ok.context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(check(1).is_ok());
+        assert!(check(-1).is_err());
+    }
+}
