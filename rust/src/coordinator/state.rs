@@ -2,10 +2,11 @@
 //! executions. The variant set matches the step graphs in
 //! `python/compile/optim_steps.py`.
 //!
-//! Besides the graph path, every state (minus the projection-based
-//! baselines) can step itself entirely on the host through
-//! [`OptState::host_step`], backed by the cross-validated reference
-//! optimizers in `optim`. [`host_step_all`] fans a batch of such updates
+//! Besides the graph path, every state — including the projection-based
+//! GaLore/LDAdamW baselines — can step itself entirely on the host
+//! through [`OptState::host_step`], backed by the cross-validated
+//! reference optimizers in `optim` (the same `*_core` free functions the
+//! reference state structs delegate to). [`host_step_all`] fans a batch of such updates
 //! out over a small scoped thread pool; because each job owns its
 //! parameter, state and Omega RNG stream, and the linalg kernels are
 //! bit-deterministic across thread counts, the parallel schedule produces
@@ -16,8 +17,8 @@ use anyhow::{bail, Result};
 use crate::config::Method;
 use crate::linalg::{threads, Rng, Workspace};
 use crate::optim::{
-    adamw_host_step, lion_host_step, mlorc_adamw_core, mlorc_lion_core, mlorc_m_core,
-    mlorc_v_core, OptHp,
+    adamw_host_step, galore_core, galore_refresh_projector, ldadamw_core, lion_host_step,
+    mlorc_adamw_core, mlorc_lion_core, mlorc_m_core, mlorc_v_core, OptHp,
 };
 use crate::runtime::{ParamSpec, Preset};
 use crate::tensor::Tensor;
@@ -217,8 +218,21 @@ impl OptState {
                 let om = rng.gaussian_tensor(&[n, l], 1.0);
                 mlorc_v_core(w, g, m, vq, vb, t, lr, &hp, &om, ws);
             }
-            OptState::Galore { .. } | OptState::LdAdamW { .. } => {
-                bail!("host stepping not implemented for {}", self.step_method()?)
+            OptState::Galore { p, m_lo, v_lo, left, refreshed } => {
+                // Refresh cadence lives with the caller (the trainer clears
+                // `refreshed` every `galore_update_freq` steps, mirroring
+                // the graph path); the Omega draw happens only on refresh,
+                // keeping the per-parameter stream schedule-independent.
+                let l = p.shape[1];
+                if !*refreshed {
+                    galore_refresh_projector(p, g, *left, l, rng);
+                    *refreshed = true;
+                }
+                galore_core(w, g, p, m_lo, v_lo, *left, t, lr, &hp);
+            }
+            OptState::LdAdamW { p, m_lo, v_lo, e, left } => {
+                let l = p.shape[1];
+                ldadamw_core(w, g, p, m_lo, v_lo, e, *left, l, t, lr, &hp, rng);
             }
         }
         Ok(())

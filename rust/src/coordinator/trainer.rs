@@ -30,6 +30,11 @@ enum Store {
     Adapter(usize),
 }
 
+/// Per-worker `Workspace` retention cap, applied after every host step.
+/// Generous next to the tiny-preset scratch high-water mark (~1 MB dense
+/// v_t at 512×512) but a hard ceiling against one-off large parameters.
+const HOST_WS_TRIM_BYTES: usize = 8 << 20;
+
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
     pub preset: Preset,
@@ -71,18 +76,15 @@ pub struct TrainOutcome {
 }
 
 impl<'rt> Trainer<'rt> {
-    pub fn new(rt: &'rt Runtime, preset: &Preset, cfg: RunConfig) -> Result<Trainer<'rt>> {
+    pub fn new(rt: &'rt Runtime, preset: &Preset, mut cfg: RunConfig) -> Result<Trainer<'rt>> {
+        // Normalize once so both the graph path and the host path see a
+        // sane refresh cadence (freq 0 would be a div-by-zero at use).
+        cfg.galore_update_freq = cfg.galore_update_freq.max(1);
         let mut rng = Rng::new(cfg.seed);
         let mut init_rng = rng.split(1);
         let rng_data = rng.split(2);
         let mut rng_omega = rng.split(3);
 
-        if cfg.host_opt && matches!(cfg.method, crate::config::Method::Galore | crate::config::Method::LdAdamW) {
-            bail!(
-                "--host-opt does not support {} (projection-based baselines step through graphs only)",
-                cfg.method.name()
-            );
-        }
         let is_cls = cfg.task.is_classification();
         let is_lora = cfg.method.is_lora();
         let params = ParamStore::init(preset, is_cls, &mut init_rng);
@@ -507,7 +509,17 @@ impl<'rt> Trainer<'rt> {
     /// cannot change results (asserted by `tests/host_parallel.rs`).
     fn apply_updates_host(&mut self, grads: Vec<Tensor>, lr: f32, step: usize) -> Result<()> {
         let t = step + 1;
+        let galore_refresh_due = step % self.cfg.galore_update_freq == 0;
         let Trainer { params, adapters, states, omega_streams, trainable, host_ws, .. } = self;
+        // GaLore projector cadence, mirroring the graph path: clearing the
+        // flag makes `host_step` re-derive P from this step's gradient.
+        if galore_refresh_due {
+            for state in states.iter_mut() {
+                if let OptState::Galore { refreshed, .. } = state {
+                    *refreshed = false;
+                }
+            }
+        }
         let mut base_refs: Vec<Option<&mut Tensor>> =
             params.values.iter_mut().map(Some).collect();
         let mut adapter_refs: Vec<Option<&mut Tensor>> = match adapters {
@@ -532,7 +544,14 @@ impl<'rt> Trainer<'rt> {
             };
             jobs.push(HostStepJob { w, grad, state, rng, lr, t });
         }
-        host_step_all(&mut jobs, host_ws)
+        host_step_all(&mut jobs, host_ws)?;
+        // Bound scratch retention: the pools keep their largest buffers
+        // (e.g. the dense v_t of the biggest parameter) between steps;
+        // trim so a one-off large tensor cannot pin memory forever.
+        for ws in host_ws.iter_mut() {
+            ws.trim(HOST_WS_TRIM_BYTES);
+        }
+        Ok(())
     }
 
     /// Host-side update for 1-D params (same math as the adamw/lion step

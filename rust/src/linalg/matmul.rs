@@ -3,12 +3,23 @@
 //! Two tiers:
 //!  * `matmul` / `matmul_at_b` / `matmul_a_bt` (and their `_into`
 //!    variants): cache-blocked, register-tiled kernels parallelized across
-//!    disjoint output row bands with `std::thread::scope`. Banding never
-//!    changes the reduction order inside a row, so results are
-//!    bit-identical for every thread count (see `linalg::threads`).
+//!    disjoint output row bands on the persistent worker pool
+//!    (`linalg::pool::par_row_bands` — one entry point, no per-call thread
+//!    spawns). Inner loops run on the 8-lane SIMD microkernels
+//!    (`linalg::simd`); the TN/NT kernels read their strided KC-panels
+//!    through packed, 32-byte aligned `Workspace` scratch (the NN panel is
+//!    already contiguous, so it is read in place). Banding never changes
+//!    the reduction order inside a row, and packing never changes the
+//!    order values are combined in, so results are bit-identical for every
+//!    thread count (see `linalg::threads`).
 //!  * `scalar_*`: the straightforward single-threaded loops — the
 //!    pre-optimization baseline kept as the correctness oracle for
 //!    property tests and the speedup reference for `bench_opt_step`.
+//!
+//! The per-band kernels (`gemm_nn_band` & co.) are public so
+//! `bench_opt_step` can wrap them in the PR-1-era `std::thread::scope`
+//! spawn scaffold and measure the pool against it; library code must only
+//! enter them through the `_into` fronts.
 //!
 //! Historical note: the original kernels skipped `a == 0.0` multiplies,
 //! which silently dropped NaN/Inf propagation from the B operand
@@ -21,12 +32,18 @@
 
 use crate::tensor::Tensor;
 
-use super::{flops, threads};
+use super::workspace::with_kernel_ws;
+use super::{flops, pool, simd};
 
-/// k-panel size for the blocked kernel (KC · 4 rows of A ≈ L1-resident).
+/// k-panel size for the blocked kernels (KC · 4 rows of A ≈ L1-resident).
 const KC: usize = 256;
 /// Outputs at most this wide accumulate whole C rows in registers.
 const SMALL_N: usize = 16;
+/// Pack a KC-panel into aligned scratch only when the band has at least
+/// this many output rows to amortize the copy. The pack changes *where*
+/// operands are read from, never the order they are combined in, so this
+/// band-size-dependent choice cannot perturb bits.
+const PACK_MIN_ROWS: usize = 8;
 
 // --------------------------------------------------------------- C = A @ B
 
@@ -51,22 +68,17 @@ pub fn matmul_into(c: &mut Tensor, a: &Tensor, b: &Tensor) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let nt = threads::for_work(m * k * n, m);
-    if nt <= 1 {
-        gemm_nn_band(&a.data, &b.data, &mut c.data, 0, k, n);
-        return;
-    }
-    let rows_per = m.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-            let (ad, bd) = (&a.data[..], &b.data[..]);
-            s.spawn(move || gemm_nn_band(ad, bd, chunk, t * rows_per, k, n));
-        }
+    let bands = pool::BandedMut::new(&mut c.data);
+    let (ad, bd) = (&a.data[..], &b.data[..]);
+    pool::par_row_bands(m, m * k * n, move |_, r| {
+        let chunk = unsafe { bands.rows(r.clone(), n) };
+        gemm_nn_band(ad, bd, chunk, r.start, k, n);
     });
 }
 
 /// One band of C = A @ B: rows `i0 ..` of C (band length from `c.len()`).
-fn gemm_nn_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usize) {
+/// Public only as the bench's spawn-scaffold baseline building block.
+pub fn gemm_nn_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usize) {
     let rows = c.len() / n;
     if n <= SMALL_N {
         // Thin output: keep the whole C row in registers across the k loop
@@ -76,20 +88,21 @@ fn gemm_nn_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usi
             let mut acc = [0.0f32; SMALL_N];
             let acc = &mut acc[..n];
             for (p, &av) in arow.iter().enumerate() {
-                let brow = &b[p * n..p * n + n];
-                for (ac, &bv) in acc.iter_mut().zip(brow) {
-                    *ac += av * bv;
-                }
+                simd::axpy(acc, av, &b[p * n..p * n + n]);
             }
             c[i * n..i * n + n].copy_from_slice(acc);
         }
         return;
     }
     // 4-row register tile over KC-wide k panels: each B row is loaded once
-    // per 4 rows of A, and C tiles stay hot across the panel.
+    // per 4 rows of A, and C tiles stay hot across the panel. No pack here:
+    // the NN panel `b[kk*n .. kend*n]` is already contiguous and read in
+    // p-order, so a copy would be pure overhead — packing lives in the
+    // TN/NT kernels, where it genuinely de-strides the operand.
     let mut kk = 0;
     while kk < k {
         let kend = (kk + KC).min(k);
+        let bsrc = &b[kk * n..kend * n];
         for (q4, c4) in c.chunks_mut(4 * n).enumerate() {
             let r = i0 + q4 * 4;
             let rows_here = c4.len() / n;
@@ -102,20 +115,8 @@ fn gemm_nn_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usi
                 let a2 = &a[(r + 2) * k..(r + 3) * k];
                 let a3 = &a[(r + 3) * k..(r + 4) * k];
                 for p in kk..kend {
-                    let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
-                    let brow = &b[p * n..p * n + n];
-                    for ((((x0, x1), x2), x3), &bv) in c0
-                        .iter_mut()
-                        .zip(c1.iter_mut())
-                        .zip(c2.iter_mut())
-                        .zip(c3.iter_mut())
-                        .zip(brow)
-                    {
-                        *x0 += v0 * bv;
-                        *x1 += v1 * bv;
-                        *x2 += v2 * bv;
-                        *x3 += v3 * bv;
-                    }
+                    let brow = &bsrc[(p - kk) * n..(p - kk) * n + n];
+                    simd::axpy4(c0, c1, c2, c3, a0[p], a1[p], a2[p], a3[p], brow);
                 }
             } else {
                 // 1-3 tail rows: plain axpy per row, same p order as the
@@ -123,11 +124,8 @@ fn gemm_nn_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usi
                 for (ri, crow) in c4.chunks_mut(n).enumerate() {
                     let arow = &a[(r + ri) * k..(r + ri + 1) * k];
                     for p in kk..kend {
-                        let av = arow[p];
-                        let brow = &b[p * n..p * n + n];
-                        for (cv, &bv) in crow.iter_mut().zip(brow) {
-                            *cv += av * bv;
-                        }
+                        let brow = &bsrc[(p - kk) * n..(p - kk) * n + n];
+                        simd::axpy(crow, arow[p], brow);
                     }
                 }
             }
@@ -161,33 +159,60 @@ pub fn matmul_at_b_into(c: &mut Tensor, a: &Tensor, b: &Tensor) {
     }
     // Parallelize across output rows (columns of A); each band scans all
     // of A and B once, accumulating its own k-rows of C.
-    let nt = threads::for_work(m * k * n, k);
-    if nt <= 1 {
-        gemm_tn_band(&a.data, &b.data, &mut c.data, 0, m, k, n);
-        return;
-    }
-    let rows_per = k.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-            let (ad, bd) = (&a.data[..], &b.data[..]);
-            s.spawn(move || gemm_tn_band(ad, bd, chunk, t * rows_per, m, k, n));
-        }
+    let bands = pool::BandedMut::new(&mut c.data);
+    let (ad, bd) = (&a.data[..], &b.data[..]);
+    pool::par_row_bands(k, m * k * n, move |_, r| {
+        let chunk = unsafe { bands.rows(r.clone(), n) };
+        gemm_tn_band(ad, bd, chunk, r.start, m, k, n);
     });
 }
 
-/// One band of C = A^T @ B: output rows `p0 ..` (band length from `c.len()`).
-fn gemm_tn_band(a: &[f32], b: &[f32], c: &mut [f32], p0: usize, m: usize, k: usize, n: usize) {
+/// One band of C = A^T @ B: output rows `p0 ..` (band length from
+/// `c.len()`). The band's column slice of A is packed into contiguous
+/// aligned scratch per KC-panel of the reduction dim, turning the strided
+/// `a[i, p0+dp]` reads into sequential ones. Public for the bench spawn
+/// baseline only.
+pub fn gemm_tn_band(a: &[f32], b: &[f32], c: &mut [f32], p0: usize, m: usize, k: usize, n: usize) {
     let prows = c.len() / n;
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for dp in 0..prows {
-            let av = arow[p0 + dp];
-            let crow = &mut c[dp * n..(dp + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+    let mut ii = 0;
+    while ii < m {
+        let iend = (ii + KC).min(m);
+        let mc = iend - ii;
+        with_kernel_ws(|ws| {
+            let panel = if prows >= 2 && mc >= PACK_MIN_ROWS {
+                // dirty take: the loop below writes every element
+                let mut p = ws.take_aligned_dirty(mc * prows);
+                let dst = p.as_mut_slice();
+                for i in ii..iend {
+                    let src = &a[i * k + p0..i * k + p0 + prows];
+                    dst[(i - ii) * prows..(i - ii) * prows + prows].copy_from_slice(src);
+                }
+                Some(p)
+            } else {
+                None
+            };
+            for i in ii..iend {
+                let brow = &b[i * n..(i + 1) * n];
+                match &panel {
+                    Some(p) => {
+                        let arow = &p.as_slice()[(i - ii) * prows..(i - ii) * prows + prows];
+                        for dp in 0..prows {
+                            simd::axpy(&mut c[dp * n..(dp + 1) * n], arow[dp], brow);
+                        }
+                    }
+                    None => {
+                        for dp in 0..prows {
+                            let av = a[i * k + p0 + dp];
+                            simd::axpy(&mut c[dp * n..(dp + 1) * n], av, brow);
+                        }
+                    }
+                }
             }
-        }
+            if let Some(p) = panel {
+                ws.give_aligned(p);
+            }
+        });
+        ii = iend;
     }
 }
 
@@ -217,44 +242,55 @@ pub fn matmul_a_bt_into(c: &mut Tensor, a: &Tensor, b: &Tensor) {
         c.data.fill(0.0);
         return;
     }
-    let nt = threads::for_work(m * k * n, m);
-    if nt <= 1 {
-        gemm_nt_band(&a.data, &b.data, &mut c.data, 0, k, n);
-        return;
-    }
-    let rows_per = m.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-            let (ad, bd) = (&a.data[..], &b.data[..]);
-            s.spawn(move || gemm_nt_band(ad, bd, chunk, t * rows_per, k, n));
-        }
+    let bands = pool::BandedMut::new(&mut c.data);
+    let (ad, bd) = (&a.data[..], &b.data[..]);
+    pool::par_row_bands(m, m * k * n, move |_, r| {
+        let chunk = unsafe { bands.rows(r.clone(), n) };
+        gemm_nt_band(ad, bd, chunk, r.start, k, n);
     });
 }
 
 /// One band of C = A @ B^T: rows of contiguous-by-contiguous dot products
-/// with 4-way split accumulators (fixed summation tree, band-independent).
-fn gemm_nt_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usize) {
+/// with the fixed 8-lane split-accumulator tree (`simd::dot`), accumulated
+/// per KC-panel of the reduction dim. The summation shape depends only on
+/// (k, KC) — never on the band — so banding stays bit-deterministic.
+/// Public for the bench spawn baseline only.
+pub fn gemm_nt_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usize) {
     let rows = c.len() / n;
-    for i in 0..rows {
-        let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
-        let crow = &mut c[i * n..i * n + n];
-        for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            let mut ca = arow.chunks_exact(4);
-            let mut cb = brow.chunks_exact(4);
-            for (qa, qb) in (&mut ca).zip(&mut cb) {
-                s0 += qa[0] * qb[0];
-                s1 += qa[1] * qb[1];
-                s2 += qa[2] * qb[2];
-                s3 += qa[3] * qb[3];
+    c.fill(0.0);
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        let kc = kend - kk;
+        with_kernel_ws(|ws| {
+            // pack the n × kc column-slice of B^T rows into one dense panel
+            let panel = if rows >= PACK_MIN_ROWS {
+                // dirty take: the loop below writes every element
+                let mut p = ws.take_aligned_dirty(n * kc);
+                let dst = p.as_mut_slice();
+                for j in 0..n {
+                    dst[j * kc..j * kc + kc].copy_from_slice(&b[j * k + kk..j * k + kend]);
+                }
+                Some(p)
+            } else {
+                None
+            };
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * k + kk..(i0 + i) * k + kend];
+                let crow = &mut c[i * n..i * n + n];
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let bslice = match &panel {
+                        Some(p) => &p.as_slice()[j * kc..j * kc + kc],
+                        None => &b[j * k + kk..j * k + kend],
+                    };
+                    *cv += simd::dot(arow, bslice);
+                }
             }
-            let mut tail = 0.0f32;
-            for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-                tail += x * y;
+            if let Some(p) = panel {
+                ws.give_aligned(p);
             }
-            *cv = ((s0 + s1) + (s2 + s3)) + tail;
-        }
+        });
+        kk = kend;
     }
 }
 
@@ -407,7 +443,7 @@ mod tests {
 
     #[test]
     fn banding_is_bit_deterministic() {
-        // Threaded and forced-serial kernels must agree exactly, not just
+        // Pooled and forced-serial kernels must agree exactly, not just
         // within tolerance — the parallel trainer relies on this.
         let mut rng = Rng::new(4);
         let a = rng.gaussian_tensor(&[97, 53], 1.0);

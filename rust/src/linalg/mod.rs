@@ -7,16 +7,19 @@
 //!    optimizer step on host tensors and must agree with the HLO graphs;
 //!  * the coordinator's RNG — Gaussian Omega inputs for RSVD (the lowered
 //!    graphs are pure functions; all randomness is rust-owned);
-//!  * the host fast path — blocked multi-threaded GEMMs (`matmul`), the
-//!    factored QB recompression (`rsvd`), pooled scratch (`workspace`),
-//!    thread budgeting (`threads`) and GEMM accounting (`flops`) behind
-//!    the MLorc optimizer hot loop.
+//!  * the host fast path — band-parallel GEMMs (`matmul`) on the
+//!    persistent worker pool (`pool`) with 8-lane SIMD microkernels
+//!    (`simd`), the factored QB recompression (`rsvd`), pooled scratch
+//!    (`workspace`), thread budgeting (`threads`) and GEMM accounting
+//!    (`flops`) behind the MLorc optimizer hot loop.
 
 pub mod flops;
 pub mod matmul;
+pub mod pool;
 pub mod qr;
 pub mod rng;
 pub mod rsvd;
+pub mod simd;
 pub mod svd;
 pub mod threads;
 pub mod workspace;

@@ -1,0 +1,332 @@
+//! Persistent worker pool behind every band-parallel kernel.
+//!
+//! PR 1 parallelized the GEMM and fused-apply kernels by spawning fresh OS
+//! threads with `std::thread::scope` on every call — ~10µs per thread per
+//! call, duplicated across five call sites. This module replaces all of
+//! that with one lazily-initialized, std-only pool (`budget() - 1` workers,
+//! the calling thread executes bands too) and a single entry point:
+//!
+//! ```ignore
+//! pool::par_row_bands(rows, madds, |band, range| { /* rows range of C */ });
+//! ```
+//!
+//! Contracts preserved from the spawn-era kernels:
+//!
+//!  * **Banding determinism.** The band plan (`plan`) partitions `rows`
+//!    into `div_ceil` chunks exactly like the old `chunks_mut(rows_per*n)`
+//!    scaffolds, and band execution only decides *which* rows a thread
+//!    computes, never the reduction order within a row — results are
+//!    bit-identical for every thread count (see `linalg::threads`).
+//!  * **No nested oversubscription.** `threads::for_work` still returns 1
+//!    inside [`threads::serial`] scopes (the coordinator's per-parameter
+//!    workers), and a band closure that itself reaches a kernel runs it
+//!    inline: `par_row_bands` called from a pool worker never re-enters
+//!    the queue, so total live parallelism never exceeds
+//!    `threads::budget()`.
+//!  * **No deadlock by construction.** Bands are claimed from a shared
+//!    atomic cursor; the submitting thread claims bands alongside the
+//!    workers and then waits on a per-batch latch, so a busy pool only
+//!    means the caller does more of its own work.
+//!
+//! Mutable outputs cross into the band closure through [`BandedMut`], a
+//! send/sync wrapper whose (unsafe) accessor hands out the sub-slice for a
+//! row range — sound because `plan` produces disjoint ranges and every
+//! band index is claimed exactly once.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::threads;
+
+// ------------------------------------------------------------------ batch
+
+/// One parallel region: a lifetime-erased band closure plus claim/finish
+/// bookkeeping. Lives in an `Arc` shared by the queue, the workers and the
+/// submitting thread.
+struct Batch {
+    /// Borrow of the caller's closure, erased to `'static`. Only
+    /// dereferenced while executing a claimed band; the caller blocks
+    /// until `finished == nbands`, so the borrow cannot dangle.
+    f: &'static (dyn Fn(usize, Range<usize>) + Sync),
+    rows: usize,
+    rows_per: usize,
+    nbands: usize,
+    /// Next unclaimed band index (may overshoot `nbands`).
+    next: AtomicUsize,
+    /// Set if any band panicked; the submitter re-panics.
+    panicked: AtomicBool,
+    /// Count of completed bands + the latch the submitter waits on.
+    finished: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl Batch {
+    /// Claim and run bands until the cursor is exhausted. Returns how many
+    /// bands this thread executed.
+    fn work(&self) -> usize {
+        let mut ran = 0;
+        loop {
+            let band = self.next.fetch_add(1, Ordering::Relaxed);
+            if band >= self.nbands {
+                return ran;
+            }
+            let lo = band * self.rows_per;
+            let hi = self.rows.min(lo + self.rows_per);
+            let r = catch_unwind(AssertUnwindSafe(|| (self.f)(band, lo..hi)));
+            if r.is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+            ran += 1;
+            let mut fin = self.finished.lock().unwrap();
+            *fin += 1;
+            if *fin == self.nbands {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.nbands
+    }
+}
+
+// ------------------------------------------------------------------- pool
+
+struct Shared {
+    /// Batches with unclaimed bands, oldest first.
+    queue: Mutex<Vec<Arc<Batch>>>,
+    work_cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+thread_local! {
+    /// True on pool worker threads: kernels called from inside a band run
+    /// inline instead of re-entering the queue (no nested parallelism, no
+    /// self-deadlock).
+    static ON_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker.
+pub fn on_worker() -> bool {
+    ON_WORKER.with(|w| w.get())
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    ON_WORKER.with(|w| w.set(true));
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // Drop exhausted batches, pick the oldest live one.
+                q.retain(|b| !b.exhausted());
+                if let Some(b) = q.first() {
+                    break b.clone();
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        batch.work();
+    }
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let shared = Arc::new(Shared { queue: Mutex::new(Vec::new()), work_cv: Condvar::new() });
+        // The submitting thread always executes bands itself, so budget n
+        // needs n-1 workers. Workers are detached and park on `work_cv`
+        // between batches; they die with the process.
+        let workers = threads::budget().saturating_sub(1);
+        for i in 0..workers {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("mlorc-pool-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, workers }
+    })
+}
+
+/// Number of persistent worker threads (0 until the first parallel call
+/// lazily starts the pool, then `threads::budget() - 1`). Diagnostics
+/// only; never initializes the pool itself.
+pub fn worker_count() -> usize {
+    POOL.get().map_or(0, |p| p.workers)
+}
+
+// ------------------------------------------------------------- entry point
+
+/// The band plan for a kernel of `madds` multiply-adds over `rows`
+/// independent output rows: `(nbands, rows_per)`. Band `b` covers rows
+/// `b*rows_per .. min(rows, (b+1)*rows_per)` — identical to the spawn-era
+/// `chunks_mut` partition, so banding stays bit-deterministic. Callers
+/// that need per-band scratch (the fused applies) size it with this.
+pub fn plan(rows: usize, madds: usize) -> (usize, usize) {
+    let nt = if on_worker() { 1 } else { threads::for_work(madds, rows) };
+    if nt <= 1 || rows == 0 {
+        return (1, rows.max(1));
+    }
+    let rows_per = rows.div_ceil(nt);
+    (rows.div_ceil(rows_per), rows_per)
+}
+
+/// Run `f(band_idx, row_range)` over the band plan for (`rows`, `madds`),
+/// in parallel on the persistent pool when the work warrants it. Returns
+/// after every band has finished. Single entry point for all band-parallel
+/// kernels (three GEMM variants + two fused applies).
+pub fn par_row_bands<F>(rows: usize, madds: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    let (nbands, rows_per) = plan(rows, madds);
+    if nbands <= 1 {
+        f(0, 0..rows);
+        return;
+    }
+    // Erase the closure's lifetime: we block on the latch below, so the
+    // borrow outlives every dereference (see `Batch::f`).
+    let f_ref: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
+    let f_static: &'static (dyn Fn(usize, Range<usize>) + Sync) =
+        unsafe { std::mem::transmute(f_ref) };
+    let batch = Arc::new(Batch {
+        f: f_static,
+        rows,
+        rows_per,
+        nbands,
+        next: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        finished: Mutex::new(0),
+        done_cv: Condvar::new(),
+    });
+    let p = pool();
+    {
+        let mut q = p.shared.queue.lock().unwrap();
+        q.push(batch.clone());
+    }
+    p.shared.work_cv.notify_all();
+    // Work alongside the pool, then wait for stragglers.
+    batch.work();
+    {
+        let mut fin = batch.finished.lock().unwrap();
+        while *fin < nbands {
+            fin = batch.done_cv.wait(fin).unwrap();
+        }
+    }
+    // Workers drop exhausted batches lazily; make sure ours is gone even
+    // if no worker wakes again.
+    p.shared.queue.lock().unwrap().retain(|b| !Arc::ptr_eq(b, &batch));
+    if batch.panicked.load(Ordering::SeqCst) {
+        panic!("par_row_bands: a band closure panicked");
+    }
+}
+
+// -------------------------------------------------------------- BandedMut
+
+/// A mutable f32 slice that band closures may carve disjoint row ranges
+/// out of. `Send + Sync` so it can be captured by the shared band closure;
+/// soundness rests on the `par_row_bands` contract that band row ranges
+/// are disjoint and each band index runs exactly once.
+pub struct BandedMut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _life: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for BandedMut<'_> {}
+unsafe impl Sync for BandedMut<'_> {}
+
+impl<'a> BandedMut<'a> {
+    pub fn new(s: &'a mut [f32]) -> BandedMut<'a> {
+        BandedMut { ptr: s.as_mut_ptr(), len: s.len(), _life: std::marker::PhantomData }
+    }
+
+    /// The sub-slice holding rows `r` of width `width` (elements
+    /// `r.start*width .. r.end*width`).
+    ///
+    /// # Safety
+    /// Caller must guarantee no two live borrows overlap — inside
+    /// `par_row_bands` that holds when every band uses its own `r` (bands
+    /// are disjoint) and a distinct `width`-consistent layout.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rows(&self, r: Range<usize>, width: usize) -> &mut [f32] {
+        let lo = r.start * width;
+        let hi = r.end * width;
+        // Hard assert (once per band, not per element): callers size
+        // per-band scratch from a separate `plan()` call, and a plan/
+        // execution divergence must panic rather than corrupt the heap.
+        assert!(lo <= hi && hi <= self.len, "band slice {lo}..{hi} of {}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_matches_chunks_mut_partition() {
+        // div_ceil banding: 10 rows over 4 threads -> 3,3,3,1.
+        threads::with_budget(4, || {
+            let (nb, rp) = plan(10, usize::MAX / 4);
+            assert_eq!((nb, rp), (4, 3));
+        });
+        // Tiny work stays single-banded regardless of budget.
+        let (nb, _) = plan(10, 8);
+        assert_eq!(nb, 1);
+    }
+
+    #[test]
+    fn bands_cover_rows_exactly_once() {
+        threads::with_budget(3, || {
+            let rows = 17;
+            let mut hits = vec![0.0f32; rows];
+            let banded = BandedMut::new(&mut hits);
+            par_row_bands(rows, usize::MAX / 4, |_, r| {
+                let h = unsafe { banded.rows(r, 1) };
+                for x in h.iter_mut() {
+                    *x += 1.0;
+                }
+            });
+            assert!(hits.iter().all(|&h| h == 1.0), "{hits:?}");
+        });
+    }
+
+    #[test]
+    fn serial_scope_runs_inline() {
+        threads::serial(|| {
+            let (nb, _) = plan(1024, usize::MAX / 4);
+            assert_eq!(nb, 1);
+        });
+    }
+
+    #[test]
+    fn more_bands_than_workers_still_complete() {
+        // with_budget can exceed the physical worker count; the claim
+        // cursor drains everything regardless.
+        threads::with_budget(8, || {
+            let rows = 64;
+            let mut out = vec![0.0f32; rows];
+            let banded = BandedMut::new(&mut out);
+            par_row_bands(rows, usize::MAX / 4, |_, r| {
+                let o = unsafe { banded.rows(r.clone(), 1) };
+                for (x, i) in o.iter_mut().zip(r) {
+                    *x = i as f32;
+                }
+            });
+            for (i, x) in out.iter().enumerate() {
+                assert_eq!(*x, i as f32);
+            }
+        });
+    }
+}

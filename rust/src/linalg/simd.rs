@@ -1,0 +1,329 @@
+//! 8-lane SIMD microkernels for the GEMM inner loops.
+//!
+//! Two tiers, selected once per process:
+//!
+//!  * **portable** — unrolled 8-wide lane arrays (`[f32; 8]` chunks with
+//!    independent accumulators) that LLVM reliably autovectorizes without
+//!    fast-math, on every architecture;
+//!  * **x86-64 AVX2+FMA** — explicit `std::arch` intrinsics behind
+//!    *runtime* feature detection (`is_x86_feature_detected!`), used when
+//!    the CPU has them and `MLORC_NO_SIMD` is unset.
+//!
+//! Determinism contract: tier selection is process-global and every
+//! routine fixes its per-element operation order by position only (8-wide
+//! body from index 0, scalar tail) — never by band start — so banded
+//! kernels stay bit-identical across thread counts. The two tiers may
+//! differ from each other in the last ulp (FMA contraction, dot-tree
+//! rounding); the scalar-oracle property tests compare with tolerance.
+//!
+//! No multiply is ever skipped on a zero operand: `0 · NaN = NaN` and
+//! `0 · Inf = NaN` propagate through both tiers (pinned by the kernel
+//! regression tests).
+
+/// SIMD register width in f32 lanes (AVX 256-bit).
+pub const LANES: usize = 8;
+
+#[cfg(target_arch = "x86_64")]
+fn avx_ok() -> bool {
+    use std::sync::OnceLock;
+    static OK: OnceLock<bool> = OnceLock::new();
+    *OK.get_or_init(|| {
+        if std::env::var_os("MLORC_NO_SIMD").is_some() {
+            return false;
+        }
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    })
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx_ok() -> bool {
+    false
+}
+
+/// True when the explicit `std::arch` tier is active (diagnostics/bench).
+pub fn simd_tier() -> &'static str {
+    if avx_ok() {
+        "avx2+fma"
+    } else {
+        "portable8"
+    }
+}
+
+// ------------------------------------------------------------------- axpy
+
+/// `c[j] += a * b[j]` — the row-update workhorse of `gemm_nn`/`gemm_tn`
+/// and the fused reconstruction rows.
+#[inline]
+pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(c.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx_ok() {
+        unsafe { axpy_avx(c, a, b) };
+        return;
+    }
+    axpy_portable(c, a, b);
+}
+
+#[inline]
+fn axpy_portable(c: &mut [f32], a: f32, b: &[f32]) {
+    let mut cc = c.chunks_exact_mut(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (c8, b8) in (&mut cc).zip(&mut bc) {
+        for i in 0..LANES {
+            c8[i] += a * b8[i];
+        }
+    }
+    for (cv, &bv) in cc.into_remainder().iter_mut().zip(bc.remainder()) {
+        *cv += a * bv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx(c: &mut [f32], a: f32, b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = c.len().min(b.len());
+    let va = _mm256_set1_ps(a);
+    let mut j = 0;
+    while j + LANES <= n {
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        let vc = _mm256_loadu_ps(c.as_ptr().add(j));
+        _mm256_storeu_ps(c.as_mut_ptr().add(j), _mm256_fmadd_ps(va, vb, vc));
+        j += LANES;
+    }
+    while j < n {
+        *c.get_unchecked_mut(j) += a * *b.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// Four simultaneous axpys against one shared `b` row:
+/// `c_i[j] += v_i * b[j]` — the 4-row register tile of `gemm_nn` (loads
+/// each `b` lane once per four output rows).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn axpy4(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    v0: f32,
+    v1: f32,
+    v2: f32,
+    v3: f32,
+    b: &[f32],
+) {
+    debug_assert!(c0.len() == b.len() && c1.len() == b.len());
+    debug_assert!(c2.len() == b.len() && c3.len() == b.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx_ok() {
+        unsafe { axpy4_avx(c0, c1, c2, c3, v0, v1, v2, v3, b) };
+        return;
+    }
+    axpy4_portable(c0, c1, c2, c3, v0, v1, v2, v3, b);
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn axpy4_portable(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    v0: f32,
+    v1: f32,
+    v2: f32,
+    v3: f32,
+    b: &[f32],
+) {
+    let n = b.len();
+    let mut j = 0;
+    while j + LANES <= n {
+        for i in 0..LANES {
+            let bv = b[j + i];
+            c0[j + i] += v0 * bv;
+            c1[j + i] += v1 * bv;
+            c2[j + i] += v2 * bv;
+            c3[j + i] += v3 * bv;
+        }
+        j += LANES;
+    }
+    while j < n {
+        let bv = b[j];
+        c0[j] += v0 * bv;
+        c1[j] += v1 * bv;
+        c2[j] += v2 * bv;
+        c3[j] += v3 * bv;
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn axpy4_avx(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    v0: f32,
+    v1: f32,
+    v2: f32,
+    v3: f32,
+    b: &[f32],
+) {
+    use std::arch::x86_64::*;
+    // clamp like axpy_avx/dot_avx: never trust one operand's length alone
+    let n = b.len().min(c0.len()).min(c1.len()).min(c2.len()).min(c3.len());
+    let (w0, w1, w2, w3) =
+        (_mm256_set1_ps(v0), _mm256_set1_ps(v1), _mm256_set1_ps(v2), _mm256_set1_ps(v3));
+    let mut j = 0;
+    while j + LANES <= n {
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        let x0 = _mm256_loadu_ps(c0.as_ptr().add(j));
+        let x1 = _mm256_loadu_ps(c1.as_ptr().add(j));
+        let x2 = _mm256_loadu_ps(c2.as_ptr().add(j));
+        let x3 = _mm256_loadu_ps(c3.as_ptr().add(j));
+        _mm256_storeu_ps(c0.as_mut_ptr().add(j), _mm256_fmadd_ps(w0, vb, x0));
+        _mm256_storeu_ps(c1.as_mut_ptr().add(j), _mm256_fmadd_ps(w1, vb, x1));
+        _mm256_storeu_ps(c2.as_mut_ptr().add(j), _mm256_fmadd_ps(w2, vb, x2));
+        _mm256_storeu_ps(c3.as_mut_ptr().add(j), _mm256_fmadd_ps(w3, vb, x3));
+        j += LANES;
+    }
+    while j < n {
+        let bv = *b.get_unchecked(j);
+        *c0.get_unchecked_mut(j) += v0 * bv;
+        *c1.get_unchecked_mut(j) += v1 * bv;
+        *c2.get_unchecked_mut(j) += v2 * bv;
+        *c3.get_unchecked_mut(j) += v3 * bv;
+        j += 1;
+    }
+}
+
+// -------------------------------------------------------------------- dot
+
+/// `Σ a[j]·b[j]` with a fixed 8-lane split-accumulator summation tree
+/// (band-independent: the tree depends only on the slice length) — the
+/// `gemm_nt` inner product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx_ok() {
+        return unsafe { dot_avx(a, b) };
+    }
+    dot_portable(a, b)
+}
+
+#[inline]
+fn lane_tree(s: [f32; LANES]) -> f32 {
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+}
+
+#[inline]
+fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (a8, b8) in (&mut ca).zip(&mut cb) {
+        for i in 0..LANES {
+            s[i] += a8[i] * b8[i];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    lane_tree(s) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0;
+    while j + LANES <= n {
+        let va = _mm256_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        acc = _mm256_fmadd_ps(va, vb, acc);
+        j += LANES;
+    }
+    let mut s = [0.0f32; LANES];
+    _mm256_storeu_ps(s.as_mut_ptr(), acc);
+    let mut tail = 0.0f32;
+    while j < n {
+        tail += *a.get_unchecked(j) * *b.get_unchecked(j);
+        j += 1;
+    }
+    lane_tree(s) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_scalar() {
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let b: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+            let mut c: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+            let mut want = c.clone();
+            for (w, &bv) in want.iter_mut().zip(&b) {
+                *w += 1.5 * bv;
+            }
+            axpy(&mut c, 1.5, &b);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-5, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_matches_four_axpys() {
+        let n = 37;
+        let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).sin()).collect();
+        let base: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        let mut rows = vec![base.clone(), base.clone(), base.clone(), base.clone()];
+        let vs = [0.5f32, -1.25, 2.0, 0.0];
+        let mut want = rows.clone();
+        for (r, &v) in want.iter_mut().zip(&vs) {
+            for (x, &bv) in r.iter_mut().zip(&b) {
+                *x += v * bv;
+            }
+        }
+        let (r0, rest) = rows.split_at_mut(1);
+        let (r1, rest) = rest.split_at_mut(1);
+        let (r2, r3) = rest.split_at_mut(1);
+        axpy4(
+            &mut r0[0], &mut r1[0], &mut r2[0], &mut r3[0], vs[0], vs[1], vs[2], vs[3], &b,
+        );
+        for (r, w) in rows.iter().zip(&want) {
+            for (x, y) in r.iter().zip(w) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_f64_reference() {
+        for n in [0usize, 1, 5, 8, 16, 23, 200] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.4).cos()).collect();
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            assert!((got - want).abs() < 1e-4 * (n as f64).sqrt().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn zero_times_nan_is_nan() {
+        let mut c = vec![0.0f32; 4];
+        axpy(&mut c, 0.0, &[f32::NAN, 1.0, f32::INFINITY, 2.0]);
+        assert!(c[0].is_nan());
+        assert!(c[2].is_nan(), "0 * Inf must be NaN");
+        assert_eq!(c[1], 0.0);
+        assert!(dot(&[0.0, 0.0], &[f32::NAN, 1.0]).is_nan());
+    }
+}

@@ -1,8 +1,8 @@
 //! Thread-budget policy for the host linalg kernels.
 //!
-//! The kernels parallelize across disjoint output row bands with
-//! `std::thread::scope` (no pool dependency). Because banding only
-//! partitions *which* rows a thread computes — never the reduction order
+//! The kernels parallelize across disjoint output row bands on the
+//! persistent worker pool (`linalg::pool`). Because banding only
+//! partitions *which* rows a band computes — never the reduction order
 //! within a row — results are bit-identical for every thread count, so
 //! the budget here is purely a performance knob, not a numerics one.
 //!
@@ -12,14 +12,20 @@
 //!    not HPC kernels);
 //!  * [`serial`] forces single-threaded kernels on the current thread —
 //!    used by the coordinator's per-parameter parallel stepping so worker
-//!    threads do not oversubscribe the machine with nested spawns.
+//!    threads do not oversubscribe the machine with nested bands;
+//!  * [`with_budget`] overrides the budget on the current thread — the
+//!    determinism tests use it to exercise several band counts inside one
+//!    process (the env var is latched once). It changes how many *bands*
+//!    a kernel is split into, not the pool's worker count; bands beyond
+//!    the workers are drained by the claim cursor.
 
 use std::cell::Cell;
 use std::sync::OnceLock;
 
-/// Spawning a thread costs ~10µs; only split work when each extra thread
-/// gets at least this many multiply-adds.
-const MIN_MADDS_PER_THREAD: usize = 192 * 1024;
+/// Handing a band to a pooled worker costs ~1µs (vs ~10µs for the old
+/// per-call thread spawn); split work when each extra band gets at least
+/// this many multiply-adds.
+const MIN_MADDS_PER_THREAD: usize = 64 * 1024;
 
 fn global_budget() -> usize {
     static BUDGET: OnceLock<usize> = OnceLock::new();
@@ -34,12 +40,17 @@ fn global_budget() -> usize {
 }
 
 /// The configured global thread budget (env override or detected cores).
+/// This also sizes the persistent pool: `budget() - 1` workers, the
+/// calling thread executes bands too.
 pub fn budget() -> usize {
     global_budget()
 }
 
 thread_local! {
     static FORCE_SERIAL: Cell<bool> = const { Cell::new(false) };
+    /// 0 = no override; otherwise the per-thread budget used by
+    /// [`for_work`] in place of the global one.
+    static BUDGET_OVERRIDE: Cell<usize> = const { Cell::new(0) };
 }
 
 /// Run `f` with kernel threading disabled on this thread (nested calls ok).
@@ -57,14 +68,37 @@ pub fn in_serial() -> bool {
     FORCE_SERIAL.with(|s| s.get())
 }
 
-/// Thread count for a kernel of `madds` multiply-adds spanning `rows`
+/// Run `f` with the thread budget forced to `n` on this thread (nested
+/// calls ok; [`serial`] still wins). Test hook for banding determinism:
+/// kernels called inside see `budget() == n` and plan their bands
+/// accordingly, regardless of `MLORC_THREADS` or core count.
+pub fn with_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    BUDGET_OVERRIDE.with(|b| {
+        let prev = b.replace(n.max(1));
+        let out = f();
+        b.set(prev);
+        out
+    })
+}
+
+/// The budget [`for_work`] sees on this thread (override or global).
+pub fn effective_budget() -> usize {
+    let ov = BUDGET_OVERRIDE.with(|b| b.get());
+    if ov > 0 {
+        ov
+    } else {
+        global_budget()
+    }
+}
+
+/// Band count for a kernel of `madds` multiply-adds spanning `rows`
 /// independent output rows. Returns 1 inside [`serial`] scopes.
 pub fn for_work(madds: usize, rows: usize) -> usize {
     if in_serial() || rows < 2 {
         return 1;
     }
     let by_size = (madds / MIN_MADDS_PER_THREAD).max(1);
-    global_budget().min(by_size).min(rows).max(1)
+    effective_budget().min(by_size).min(rows).max(1)
 }
 
 #[cfg(test)]
@@ -88,5 +122,21 @@ mod tests {
         assert!(for_work(64 << 20, 1024) >= 1);
         // never more threads than rows
         assert_eq!(for_work(usize::MAX / 2, 1), 1);
+    }
+
+    #[test]
+    fn budget_override_scopes_and_nests() {
+        assert_eq!(effective_budget(), global_budget());
+        let n = with_budget(5, || {
+            assert_eq!(effective_budget(), 5);
+            let inner = with_budget(2, || for_work(usize::MAX / 2, 1024));
+            assert_eq!(inner, 2);
+            for_work(usize::MAX / 2, 1024)
+        });
+        assert_eq!(n, 5);
+        assert_eq!(effective_budget(), global_budget());
+        // serial still wins over an override
+        let s = with_budget(8, || serial(|| for_work(usize::MAX / 2, 1024)));
+        assert_eq!(s, 1);
     }
 }

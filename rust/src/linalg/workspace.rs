@@ -9,12 +9,88 @@
 //! Usage discipline: `take`/`take_tensor` hands out a zeroed buffer of the
 //! requested size; `give`/`give_tensor` returns it. Buffers are matched by
 //! capacity (first fit), so one pool serves mixed shapes. The pool is
-//! deliberately not thread-safe — each worker owns its own `Workspace`.
+//! deliberately not thread-safe — each worker owns its own `Workspace`;
+//! the GEMM kernels' panel-packing scratch comes from a per-thread
+//! workspace ([`with_kernel_ws`]) so pool workers never contend.
+//!
+//! Retention is bounded: [`Workspace::trim`] drops the largest pooled
+//! buffers until the free list fits a byte budget — the coordinator calls
+//! it after every optimizer step so a one-off large parameter cannot pin
+//! its scratch forever.
+
+use std::cell::RefCell;
 
 use crate::tensor::Tensor;
 
+// ------------------------------------------------------------ aligned buf
+
+/// One 32-byte-aligned lane of 8 f32 — the allocation unit of
+/// [`AlignedBuf`], matching the SIMD width (`simd::LANES`).
+#[repr(C, align(32))]
+#[derive(Clone, Copy)]
+struct Lane([f32; 8]);
+
+const ZERO_LANE: Lane = Lane([0.0; 8]);
+
+/// A 32-byte-aligned f32 scratch buffer for packed GEMM panels. Backed by
+/// `Vec<Lane>` so the start of the slice is always SIMD-aligned; exposed
+/// as plain `&[f32]` / `&mut [f32]` views of the first `len` elements.
+pub struct AlignedBuf {
+    lanes: Vec<Lane>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    fn with_len(len: usize) -> AlignedBuf {
+        AlignedBuf { lanes: vec![ZERO_LANE; len.div_ceil(8)], len }
+    }
+
+    /// Reset to `len` zeroed elements, reusing the lane allocation.
+    fn reset(&mut self, len: usize) {
+        let lanes = len.div_ceil(8);
+        self.lanes.clear();
+        self.lanes.resize(lanes, ZERO_LANE);
+        self.len = len;
+    }
+
+    /// Reset to `len` elements of *unspecified* content (stale pool data),
+    /// skipping the zero pass — for pack panels that are fully overwritten
+    /// before any read.
+    fn reset_dirty(&mut self, len: usize) {
+        let lanes = len.div_ceil(8);
+        self.lanes.resize(lanes, ZERO_LANE);
+        self.len = len;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn cap_bytes(&self) -> usize {
+        self.lanes.capacity() * std::mem::size_of::<Lane>()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // Lane is repr(C) over [f32; 8]: a lane slice reinterprets as a
+        // contiguous f32 slice of 8x the length.
+        unsafe { std::slice::from_raw_parts(self.lanes.as_ptr() as *const f32, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
+// -------------------------------------------------------------- workspace
+
 pub struct Workspace {
     free: Vec<Vec<f32>>,
+    /// aligned pack-panel buffers, pooled separately from plain scratch
+    free_aligned: Vec<AlignedBuf>,
     /// buffers handed out since construction (diagnostics)
     taken: usize,
     /// buffers served from the free list rather than the allocator
@@ -40,6 +116,7 @@ impl std::fmt::Debug for Workspace {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Workspace")
             .field("pooled", &self.free.len())
+            .field("pooled_aligned", &self.free_aligned.len())
             .field("taken", &self.taken)
             .field("reused", &self.reused)
             .finish()
@@ -48,7 +125,7 @@ impl std::fmt::Debug for Workspace {
 
 impl Workspace {
     pub fn new() -> Workspace {
-        Workspace { free: Vec::new(), taken: 0, reused: 0 }
+        Workspace { free: Vec::new(), free_aligned: Vec::new(), taken: 0, reused: 0 }
     }
 
     /// A zeroed buffer of exactly `len` elements (best-fit from the pool).
@@ -80,6 +157,62 @@ impl Workspace {
         }
     }
 
+    /// A zeroed 32-byte-aligned buffer of `len` elements (best-fit from
+    /// the aligned pool) — GEMM panel-packing scratch.
+    pub fn take_aligned(&mut self, len: usize) -> AlignedBuf {
+        self.taken += 1;
+        let need = len.div_ceil(8);
+        let pos = self
+            .free_aligned
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.lanes.capacity() >= need)
+            .min_by_key(|(_, b)| b.lanes.capacity())
+            .map(|(i, _)| i);
+        match pos {
+            Some(i) => {
+                self.reused += 1;
+                let mut buf = self.free_aligned.swap_remove(i);
+                buf.reset(len);
+                buf
+            }
+            None => AlignedBuf::with_len(len),
+        }
+    }
+
+    /// Like [`take_aligned`](Workspace::take_aligned) but with
+    /// *unspecified* contents (stale pool data) — skips the zero pass for
+    /// callers that fully overwrite the buffer before reading it (the
+    /// GEMM pack panels, which would otherwise pay ~50% extra memory
+    /// traffic per KC-panel).
+    pub fn take_aligned_dirty(&mut self, len: usize) -> AlignedBuf {
+        self.taken += 1;
+        let need = len.div_ceil(8);
+        let pos = self
+            .free_aligned
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.lanes.capacity() >= need)
+            .min_by_key(|(_, b)| b.lanes.capacity())
+            .map(|(i, _)| i);
+        match pos {
+            Some(i) => {
+                self.reused += 1;
+                let mut buf = self.free_aligned.swap_remove(i);
+                buf.reset_dirty(len);
+                buf
+            }
+            None => AlignedBuf::with_len(len),
+        }
+    }
+
+    /// Return an aligned buffer to the pool.
+    pub fn give_aligned(&mut self, buf: AlignedBuf) {
+        if buf.lanes.capacity() > 0 {
+            self.free_aligned.push(buf);
+        }
+    }
+
     /// A zeroed tensor of `shape`, backed by a pooled buffer.
     pub fn take_tensor(&mut self, shape: &[usize]) -> Tensor {
         let len = shape.iter().product();
@@ -99,10 +232,77 @@ impl Workspace {
         self.reused as f64 / self.taken as f64
     }
 
-    /// Bytes currently held on the free list.
+    /// Bytes currently held on the free lists (plain + aligned).
     pub fn pooled_bytes(&self) -> usize {
-        self.free.iter().map(|b| b.capacity() * 4).sum()
+        self.free.iter().map(|b| b.capacity() * 4).sum::<usize>()
+            + self.free_aligned.iter().map(|b| b.cap_bytes()).sum::<usize>()
     }
+
+    /// Drop pooled buffers, largest first, until the free lists hold at
+    /// most `max_bytes`. Buffers currently handed out are unaffected; the
+    /// next `give` may push retention above the bound again until the next
+    /// trim (the coordinator trims after every step).
+    pub fn trim(&mut self, max_bytes: usize) {
+        while self.pooled_bytes() > max_bytes {
+            // largest buffer across both pools
+            let big_plain = self
+                .free
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, b)| b.capacity() * 4)
+                .map(|(i, b)| (i, b.capacity() * 4));
+            let big_aligned = self
+                .free_aligned
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, b)| b.cap_bytes())
+                .map(|(i, b)| (i, b.cap_bytes()));
+            match (big_plain, big_aligned) {
+                (Some((i, pb)), Some((j, ab))) => {
+                    if pb >= ab {
+                        self.free.swap_remove(i);
+                    } else {
+                        self.free_aligned.swap_remove(j);
+                    }
+                }
+                (Some((i, _)), None) => {
+                    self.free.swap_remove(i);
+                }
+                (None, Some((j, _))) => {
+                    self.free_aligned.swap_remove(j);
+                }
+                (None, None) => return, // nothing pooled; bound unreachable
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- per-thread scratch
+
+/// Retention cap for each thread's kernel workspace, applied after every
+/// `with_kernel_ws` scope. Pack panels are at most KC rows × the band's
+/// row width, so a single wide operand can pool several MB per thread
+/// (pool workers live for the process); the trim keeps that bounded
+/// independently of the coordinator's own `Workspace::trim` calls.
+const KERNEL_WS_TRIM_BYTES: usize = 8 << 20;
+
+thread_local! {
+    /// Kernel-internal scratch (packed TN/NT panels). Per-thread so pool
+    /// workers and the caller never contend; retained across calls like
+    /// any workspace, trimmed to [`KERNEL_WS_TRIM_BYTES`] on scope exit.
+    static KERNEL_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Run `f` with this thread's kernel workspace. Not re-entrant: kernel
+/// band bodies must not nest `with_kernel_ws` calls (they don't — bands
+/// never invoke other GEMMs).
+pub fn with_kernel_ws<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    KERNEL_WS.with(|ws| {
+        let ws = &mut ws.borrow_mut();
+        let out = f(ws);
+        ws.trim(KERNEL_WS_TRIM_BYTES);
+        out
+    })
 }
 
 #[cfg(test)]
@@ -147,5 +347,66 @@ mod tests {
         ws.give(b);
         assert!(ws.pooled_bytes() > 0);
         assert_eq!(ws.clone().pooled_bytes(), 0);
+    }
+
+    #[test]
+    fn aligned_buffers_are_aligned_zeroed_and_reused() {
+        let mut ws = Workspace::new();
+        for len in [1usize, 7, 8, 9, 100] {
+            let mut b = ws.take_aligned(len);
+            assert_eq!(b.len(), len);
+            assert_eq!(b.as_slice().as_ptr() as usize % 32, 0, "32B alignment");
+            assert!(b.as_slice().iter().all(|x| *x == 0.0));
+            b.as_mut_slice().iter_mut().for_each(|x| *x = f32::NAN);
+            ws.give_aligned(b);
+        }
+        let taken_before = ws.taken;
+        let b = ws.take_aligned(64); // reuse of the 100-elem buffer
+        assert!(b.as_slice().iter().all(|x| *x == 0.0), "reused buffers are re-zeroed");
+        assert_eq!(ws.taken, taken_before + 1);
+        assert!(ws.reused > 0);
+        ws.give_aligned(b);
+        // dirty variant: length/alignment guaranteed, contents unspecified
+        let d = ws.take_aligned_dirty(32);
+        assert_eq!(d.len(), 32);
+        assert_eq!(d.as_slice().as_ptr() as usize % 32, 0);
+        ws.give_aligned(d);
+    }
+
+    #[test]
+    fn trim_bounds_retention() {
+        let mut ws = Workspace::new();
+        for len in [1024usize, 2048, 4096, 512] {
+            let b = ws.take(len);
+            ws.give(b);
+        }
+        let a = ws.take_aligned(4096);
+        ws.give_aligned(a);
+        assert!(ws.pooled_bytes() > 8 * 1024);
+        ws.trim(8 * 1024);
+        assert!(ws.pooled_bytes() <= 8 * 1024, "pooled {}", ws.pooled_bytes());
+        // the small buffers survive (largest dropped first)
+        assert!(ws.free.iter().any(|b| b.capacity() == 512));
+        ws.trim(0);
+        assert_eq!(ws.pooled_bytes(), 0);
+        // trimming an empty pool is a no-op, not a hang
+        ws.trim(0);
+    }
+
+    #[test]
+    fn kernel_ws_is_per_thread_and_reuses() {
+        let cap_before = with_kernel_ws(|ws| {
+            let b = ws.take_aligned(256);
+            let p = b.as_slice().as_ptr() as usize;
+            ws.give_aligned(b);
+            p
+        });
+        let cap_after = with_kernel_ws(|ws| {
+            let b = ws.take_aligned(200);
+            let p = b.as_slice().as_ptr() as usize;
+            ws.give_aligned(b);
+            p
+        });
+        assert_eq!(cap_before, cap_after, "same thread reuses the pack buffer");
     }
 }

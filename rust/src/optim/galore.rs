@@ -1,11 +1,68 @@
 //! GaLore reference (Zhao et al., 2024): AdamW in a gradient-derived
 //! low-rank subspace, projector refreshed every T steps. Projects the
 //! *shorter* side, like the official implementation.
+//!
+//! The math lives in the free functions [`galore_refresh_projector`] and
+//! [`galore_core`], shared verbatim by the reference state struct below
+//! and the coordinator's host stepping (`OptState::host_step`) — one
+//! implementation, cross-validated once.
 
 use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, mgs_qr, Rng};
 use crate::tensor::Tensor;
 
 use super::{bias_corrections, OptHp};
+
+/// Refresh the projector from the gradient's dominant subspace:
+/// randomized range finder of G (left) or Gᵀ (right) at rank `l` — the
+/// stand-in for the paper's exact SVD, same dominant subspace up to the
+/// RSVD tail bound. Draws one Gaussian test matrix from `rng`.
+pub fn galore_refresh_projector(p: &mut Tensor, g: &Tensor, left: bool, l: usize, rng: &mut Rng) {
+    let (m, n) = g.dims2().unwrap();
+    *p = if left {
+        let om = rng.gaussian_tensor(&[n, l], 1.0);
+        mgs_qr(&matmul(g, &om))
+    } else {
+        let om = rng.gaussian_tensor(&[m, l], 1.0);
+        mgs_qr(&matmul_at_b(g, &om))
+    };
+}
+
+/// One GaLore step on raw state tensors (projector already current):
+/// project the gradient, Adam moments in the subspace, project the
+/// normalized update back. `t` is 1-based (bias corrections).
+///
+/// Unlike the MLorc cores this baseline allocates its intermediates
+/// per call — it exists for coverage and cross-validation, not as a hot
+/// path; route through a `Workspace` only if it ever becomes one.
+#[allow(clippy::too_many_arguments)]
+pub fn galore_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    p: &Tensor,
+    m_lo: &mut Tensor,
+    v_lo: &mut Tensor,
+    left: bool,
+    t: usize,
+    lr: f32,
+    hp: &OptHp,
+) {
+    let r = if left { matmul_at_b(p, g) } else { matmul(g, p) };
+    for (mi, ri) in m_lo.data.iter_mut().zip(&r.data) {
+        *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * ri;
+    }
+    for (vi, ri) in v_lo.data.iter_mut().zip(&r.data) {
+        *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * ri * ri;
+    }
+    let (c1, c2) = bias_corrections(hp, t);
+    let mut nhat = m_lo.clone();
+    for (ni, vi) in nhat.data.iter_mut().zip(&v_lo.data) {
+        *ni = (*ni * c1) / ((vi * c2).sqrt() + hp.eps);
+    }
+    let full = if left { matmul(p, &nhat) } else { matmul_a_bt(&nhat, p) };
+    for (wi, fi) in w.data.iter_mut().zip(&full.data) {
+        *wi -= lr * (hp.galore_scale * fi + hp.weight_decay * *wi);
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct GaloreState {
@@ -42,14 +99,7 @@ impl GaloreState {
     /// Randomized range finder of the gradient (stand-in for the paper's
     /// exact SVD; same dominant subspace up to the RSVD tail bound).
     pub fn refresh_projector(&mut self, g: &Tensor, rng: &mut Rng) {
-        let (m, n) = g.dims2().unwrap();
-        self.p = if self.left {
-            let om = rng.gaussian_tensor(&[n, self.l], 1.0);
-            mgs_qr(&matmul(g, &om))
-        } else {
-            let om = rng.gaussian_tensor(&[m, self.l], 1.0);
-            mgs_qr(&matmul_at_b(g, &om))
-        };
+        galore_refresh_projector(&mut self.p, g, self.left, self.l, rng);
     }
 
     pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
@@ -57,22 +107,7 @@ impl GaloreState {
             self.refresh_projector(g, rng);
         }
         self.t += 1;
-        let r = if self.left { matmul_at_b(&self.p, g) } else { matmul(g, &self.p) };
-        for (mi, ri) in self.m_lo.data.iter_mut().zip(&r.data) {
-            *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * ri;
-        }
-        for (vi, ri) in self.v_lo.data.iter_mut().zip(&r.data) {
-            *vi = hp.beta2 * *vi + (1.0 - hp.beta2) * ri * ri;
-        }
-        let (c1, c2) = bias_corrections(hp, self.t);
-        let mut nhat = self.m_lo.clone();
-        for (ni, vi) in nhat.data.iter_mut().zip(&self.v_lo.data) {
-            *ni = (*ni * c1) / ((vi * c2).sqrt() + hp.eps);
-        }
-        let full = if self.left { matmul(&self.p, &nhat) } else { matmul_a_bt(&nhat, &self.p) };
-        for (wi, fi) in w.data.iter_mut().zip(&full.data) {
-            *wi -= lr * (hp.galore_scale * fi + hp.weight_decay * *wi);
-        }
+        galore_core(w, g, &self.p, &mut self.m_lo, &mut self.v_lo, self.left, self.t, lr, hp);
     }
 }
 

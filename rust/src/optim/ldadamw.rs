@@ -1,11 +1,74 @@
 //! LDAdamW reference (Robert et al., 2024, simplified per DESIGN.md):
 //! per-step projector from the error-compensated gradient, rotation-aware
 //! low-dimensional Adam state, full-size error-feedback buffer.
+//!
+//! The step math lives in the free function [`ldadamw_core`], shared
+//! verbatim by the reference state struct below and the coordinator's
+//! host stepping (`OptState::host_step`).
 
 use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, mgs_qr, Rng};
 use crate::tensor::Tensor;
 
 use super::{bias_corrections, OptHp};
+
+/// One LDAdamW step on raw state tensors. Draws the per-step Gaussian
+/// test matrix for the fresh projector from `rng`; `l` is the projector
+/// rank (p has `l` columns), `t` is 1-based.
+#[allow(clippy::too_many_arguments)]
+pub fn ldadamw_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    p: &mut Tensor,
+    m_lo: &mut Tensor,
+    v_lo: &mut Tensor,
+    e: &mut Tensor,
+    left: bool,
+    l: usize,
+    t: usize,
+    lr: f32,
+    hp: &OptHp,
+    rng: &mut Rng,
+) {
+    let (m, n) = g.dims2().unwrap();
+    // error-compensated gradient
+    let mut a = g.clone();
+    a.axpy(1.0, e, 1.0);
+    // fresh projector from a's range
+    let p_new = if left {
+        let om = rng.gaussian_tensor(&[n, l], 1.0);
+        mgs_qr(&matmul(&a, &om))
+    } else {
+        let om = rng.gaussian_tensor(&[m, l], 1.0);
+        mgs_qr(&matmul_at_b(&a, &om))
+    };
+    let rot = matmul_at_b(&p_new, p); // (l, l)
+    let r = if left { matmul_at_b(&p_new, &a) } else { matmul(&a, &p_new) };
+    // rotate old state into the new basis
+    let m_rot = if left { matmul(&rot, m_lo) } else { matmul_a_bt(m_lo, &rot) };
+    let v_rot = if left { matmul(&rot, v_lo) } else { matmul_a_bt(v_lo, &rot) };
+    for ((mi, mr), ri) in m_lo.data.iter_mut().zip(&m_rot.data).zip(&r.data) {
+        *mi = hp.beta1 * mr + (1.0 - hp.beta1) * ri;
+    }
+    for ((vi, vr), ri) in v_lo.data.iter_mut().zip(&v_rot.data).zip(&r.data) {
+        *vi = hp.beta2 * vr.abs() + (1.0 - hp.beta2) * ri * ri;
+    }
+    // error feedback: what the projection dropped (a is dead past here,
+    // so it becomes the new buffer instead of being cloned)
+    let recon = if left { matmul(&p_new, &r) } else { matmul_a_bt(&r, &p_new) };
+    *e = a;
+    e.axpy(-1.0, &recon, 1.0);
+    *p = p_new;
+    // update
+    let (c1, c2) = bias_corrections(hp, t);
+    let mut nhat = m_lo.clone();
+    for (ni, vi) in nhat.data.iter_mut().zip(&v_lo.data) {
+        *ni = (*ni * c1) / ((vi * c2).sqrt() + hp.eps);
+    }
+    let full = if left { matmul(p, &nhat) } else { matmul_a_bt(&nhat, p) };
+    for (wi, fi) in w.data.iter_mut().zip(&full.data) {
+        *wi -= lr * (fi + hp.weight_decay * *wi);
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct LdAdamWState {
@@ -49,44 +112,20 @@ impl LdAdamWState {
 
     pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, hp: &OptHp, rng: &mut Rng) {
         self.t += 1;
-        let (m, n) = g.dims2().unwrap();
-        // error-compensated gradient
-        let mut a = g.clone();
-        a.axpy(1.0, &self.e, 1.0);
-        // fresh projector from a's range
-        let p_new = if self.left {
-            let om = rng.gaussian_tensor(&[n, self.l], 1.0);
-            mgs_qr(&matmul(&a, &om))
-        } else {
-            let om = rng.gaussian_tensor(&[m, self.l], 1.0);
-            mgs_qr(&matmul_at_b(&a, &om))
-        };
-        let rot = matmul_at_b(&p_new, &self.p); // (l, l)
-        let r = if self.left { matmul_at_b(&p_new, &a) } else { matmul(&a, &p_new) };
-        // rotate old state into the new basis
-        let m_rot = if self.left { matmul(&rot, &self.m_lo) } else { matmul_a_bt(&self.m_lo, &rot) };
-        let v_rot = if self.left { matmul(&rot, &self.v_lo) } else { matmul_a_bt(&self.v_lo, &rot) };
-        for ((mi, mr), ri) in self.m_lo.data.iter_mut().zip(&m_rot.data).zip(&r.data) {
-            *mi = hp.beta1 * mr + (1.0 - hp.beta1) * ri;
-        }
-        for ((vi, vr), ri) in self.v_lo.data.iter_mut().zip(&v_rot.data).zip(&r.data) {
-            *vi = hp.beta2 * vr.abs() + (1.0 - hp.beta2) * ri * ri;
-        }
-        // error feedback: what the projection dropped
-        let recon = if self.left { matmul(&p_new, &r) } else { matmul_a_bt(&r, &p_new) };
-        self.e = a.clone();
-        self.e.axpy(-1.0, &recon, 1.0);
-        self.p = p_new;
-        // update
-        let (c1, c2) = bias_corrections(hp, self.t);
-        let mut nhat = self.m_lo.clone();
-        for (ni, vi) in nhat.data.iter_mut().zip(&self.v_lo.data) {
-            *ni = (*ni * c1) / ((vi * c2).sqrt() + hp.eps);
-        }
-        let full = if self.left { matmul(&self.p, &nhat) } else { matmul_a_bt(&nhat, &self.p) };
-        for (wi, fi) in w.data.iter_mut().zip(&full.data) {
-            *wi -= lr * (fi + hp.weight_decay * *wi);
-        }
+        ldadamw_core(
+            w,
+            g,
+            &mut self.p,
+            &mut self.m_lo,
+            &mut self.v_lo,
+            &mut self.e,
+            self.left,
+            self.l,
+            self.t,
+            lr,
+            hp,
+            rng,
+        );
     }
 }
 

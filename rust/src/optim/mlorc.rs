@@ -33,8 +33,9 @@
 // (see linalg/matmul.rs — same banding-determinism rationale).
 #![allow(clippy::needless_range_loop)]
 
+use crate::linalg::pool::{self, BandedMut};
 use crate::linalg::{
-    flops, matmul, matmul_into, rsvd_qb, rsvd_qb_factored, rsvd_qb_ws, threads, Rng, Workspace,
+    flops, matmul, matmul_into, rsvd_qb, rsvd_qb_factored, rsvd_qb_ws, simd, Rng, Workspace,
 };
 use crate::tensor::Tensor;
 
@@ -81,8 +82,10 @@ fn second_moment_dense(vt: &mut Tensor, vq: &Tensor, vb: &Tensor, g: &Tensor, be
 /// `m_t = beta1·(mq mb) + (1−beta1)·g`, then
 /// `w -= lr·(c1·m_t / (sqrt(c2·v_t) + eps) + wd·w)` — one pass over W, G
 /// and v_t; the reconstruction lives in an n-wide register/L1 row only.
+/// Public (with [`fused_adamw_band`]) so `bench_opt_step` can measure the
+/// pooled apply against a PR-1-era spawn-scaffold reference.
 #[allow(clippy::too_many_arguments)]
-fn fused_recon_adamw_apply(
+pub fn fused_recon_adamw_apply(
     w: &mut Tensor,
     g: &Tensor,
     vt: &Tensor,
@@ -101,39 +104,43 @@ fn fused_recon_adamw_apply(
     if m == 0 || n == 0 {
         return;
     }
-    let nt = threads::for_work(m * n * (l + 4), m);
-    let mut scratch = ws.take(nt * n);
-    if nt <= 1 {
-        fused_adamw_band(
-            &mut w.data, &g.data, &vt.data, &mq.data, &mb.data, &mut scratch, l, n, beta1, lr,
-            c1, c2, hp,
-        );
-    } else {
-        let rows_per = m.div_ceil(nt);
-        std::thread::scope(|s| {
-            let bands = w
-                .data
-                .chunks_mut(rows_per * n)
-                .zip(g.data.chunks(rows_per * n))
-                .zip(vt.data.chunks(rows_per * n))
-                .zip(mq.data.chunks(rows_per * l))
-                .zip(scratch.chunks_mut(n));
-            for ((((w_band, g_band), vt_band), mq_band), row_buf) in bands {
-                let mb_all = &mb.data[..];
-                s.spawn(move || {
-                    fused_adamw_band(
-                        w_band, g_band, vt_band, mq_band, mb_all, row_buf, l, n, beta1, lr, c1,
-                        c2, hp,
-                    )
-                });
-            }
+    // One reconstruction-row buffer per band; the plan is recomputed
+    // identically inside par_row_bands (pure function of rows/madds).
+    let madds = m * n * (l + 4);
+    let (nbands, _) = pool::plan(m, madds);
+    let mut scratch = ws.take(nbands * n);
+    {
+        let w_bands = BandedMut::new(&mut w.data);
+        let s_bands = BandedMut::new(&mut scratch);
+        let (gd, vtd, mqd, mbd) = (&g.data[..], &vt.data[..], &mq.data[..], &mb.data[..]);
+        pool::par_row_bands(m, madds, move |band, r| {
+            let w_band = unsafe { w_bands.rows(r.clone(), n) };
+            let row_buf = unsafe { s_bands.rows(band..band + 1, n) };
+            fused_adamw_band(
+                w_band,
+                &gd[r.start * n..r.end * n],
+                &vtd[r.start * n..r.end * n],
+                &mqd[r.start * l..r.end * l],
+                mbd,
+                row_buf,
+                l,
+                n,
+                beta1,
+                lr,
+                c1,
+                c2,
+                hp,
+            );
         });
     }
     ws.give(scratch);
 }
 
+/// One band of the fused AdamW apply (rows of `w`/`g`/`vt`/`mq` with a
+/// shared `mb` and one n-wide reconstruction row buffer). Public for the
+/// bench spawn baseline only.
 #[allow(clippy::too_many_arguments)]
-fn fused_adamw_band(
+pub fn fused_adamw_band(
     w: &mut [f32],
     g: &[f32],
     vt: &[f32],
@@ -155,10 +162,7 @@ fn fused_adamw_band(
         row.fill(0.0);
         let arow = &mq[i * l..(i + 1) * l];
         for (p, &av) in arow.iter().enumerate() {
-            let brow = &mb[p * n..(p + 1) * n];
-            for (rv, &bv) in row.iter_mut().zip(brow) {
-                *rv += av * bv;
-            }
+            simd::axpy(row, av, &mb[p * n..(p + 1) * n]);
         }
         // apply epilogue
         let wrow = &mut w[i * n..(i + 1) * n];
@@ -176,7 +180,7 @@ fn fused_adamw_band(
 /// Fused reconstruction + Lion apply: per element
 /// `c = beta1·(mq mb) + (1−beta1)·g`, `w -= lr·(sign(c) + wd·w)`.
 #[allow(clippy::too_many_arguments)]
-fn fused_recon_lion_apply(
+pub fn fused_recon_lion_apply(
     w: &mut Tensor,
     g: &Tensor,
     mq: &Tensor,
@@ -192,32 +196,37 @@ fn fused_recon_lion_apply(
     if m == 0 || n == 0 {
         return;
     }
-    let nt = threads::for_work(m * n * (l + 2), m);
-    let mut scratch = ws.take(nt * n);
-    if nt <= 1 {
-        fused_lion_band(&mut w.data, &g.data, &mq.data, &mb.data, &mut scratch, l, n, beta1, lr, hp);
-    } else {
-        let rows_per = m.div_ceil(nt);
-        std::thread::scope(|s| {
-            let bands = w
-                .data
-                .chunks_mut(rows_per * n)
-                .zip(g.data.chunks(rows_per * n))
-                .zip(mq.data.chunks(rows_per * l))
-                .zip(scratch.chunks_mut(n));
-            for (((w_band, g_band), mq_band), row_buf) in bands {
-                let mb_all = &mb.data[..];
-                s.spawn(move || {
-                    fused_lion_band(w_band, g_band, mq_band, mb_all, row_buf, l, n, beta1, lr, hp)
-                });
-            }
+    let madds = m * n * (l + 2);
+    let (nbands, _) = pool::plan(m, madds);
+    let mut scratch = ws.take(nbands * n);
+    {
+        let w_bands = BandedMut::new(&mut w.data);
+        let s_bands = BandedMut::new(&mut scratch);
+        let (gd, mqd, mbd) = (&g.data[..], &mq.data[..], &mb.data[..]);
+        pool::par_row_bands(m, madds, move |band, r| {
+            let w_band = unsafe { w_bands.rows(r.clone(), n) };
+            let row_buf = unsafe { s_bands.rows(band..band + 1, n) };
+            fused_lion_band(
+                w_band,
+                &gd[r.start * n..r.end * n],
+                &mqd[r.start * l..r.end * l],
+                mbd,
+                row_buf,
+                l,
+                n,
+                beta1,
+                lr,
+                hp,
+            );
         });
     }
     ws.give(scratch);
 }
 
+/// One band of the fused Lion apply. Public for the bench spawn baseline
+/// only.
 #[allow(clippy::too_many_arguments)]
-fn fused_lion_band(
+pub fn fused_lion_band(
     w: &mut [f32],
     g: &[f32],
     mq: &[f32],
@@ -235,10 +244,7 @@ fn fused_lion_band(
         row.fill(0.0);
         let arow = &mq[i * l..(i + 1) * l];
         for (p, &av) in arow.iter().enumerate() {
-            let brow = &mb[p * n..(p + 1) * n];
-            for (rv, &bv) in row.iter_mut().zip(brow) {
-                *rv += av * bv;
-            }
+            simd::axpy(row, av, &mb[p * n..(p + 1) * n]);
         }
         let wrow = &mut w[i * n..(i + 1) * n];
         let grow = &g[i * n..(i + 1) * n];

@@ -20,11 +20,12 @@ mod lion;
 mod mlorc;
 
 pub use adamw::AdamWState;
-pub use galore::GaloreState;
+pub use galore::{galore_core, galore_refresh_projector, GaloreState};
 pub use hparams::OptHp;
-pub use ldadamw::LdAdamWState;
+pub use ldadamw::{ldadamw_core, LdAdamWState};
 pub use lion::LionState;
 pub use mlorc::{
+    fused_adamw_band, fused_lion_band, fused_recon_adamw_apply, fused_recon_lion_apply,
     mlorc_adamw_core, mlorc_adamw_step_direct, mlorc_lion_core, mlorc_m_core, mlorc_v_core,
     zeta_fix, MlorcAdamWState, MlorcLionState, MlorcMState, MlorcVState,
 };

@@ -4,13 +4,40 @@
 //! leak into the numbers.
 
 use mlorc::coordinator::{host_step_all, HostStepJob, OptState};
-use mlorc::linalg::{Rng, Workspace};
+use mlorc::linalg::{threads, Rng, Workspace};
+use mlorc::optim::{GaloreState, LdAdamWState, MlorcAdamWState, MlorcLionState, OptHp};
 use mlorc::tensor::Tensor;
 
 struct Fleet {
     weights: Vec<Tensor>,
     states: Vec<OptState>,
     rngs: Vec<Rng>,
+}
+
+/// A zero-initialized GaLore state shaped like `OptState::for_param`.
+fn galore_state(m: usize, n: usize, l: usize) -> OptState {
+    let left = m <= n;
+    let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
+    OptState::Galore {
+        p: Tensor::zeros(&pshape),
+        m_lo: Tensor::zeros(&rshape),
+        v_lo: Tensor::zeros(&rshape),
+        left,
+        refreshed: false,
+    }
+}
+
+/// A zero-initialized LDAdamW state shaped like `OptState::for_param`.
+fn ldadamw_state(m: usize, n: usize, l: usize) -> OptState {
+    let left = m <= n;
+    let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
+    OptState::LdAdamW {
+        p: Tensor::zeros(&pshape),
+        m_lo: Tensor::zeros(&rshape),
+        v_lo: Tensor::zeros(&rshape),
+        e: Tensor::zeros(&[m, n]),
+        left,
+    }
 }
 
 /// A mixed bag of parameters: MLorc-AdamW matrices of several shapes,
@@ -34,7 +61,7 @@ fn fleet(seed: u64) -> (Fleet, Vec<Tensor>) {
         let (m, n) = (shape[0], shape[1]);
         weights.push(rng.gaussian_tensor(shape, 0.5));
         grads.push(rng.gaussian_tensor(shape, 1.0));
-        states.push(match i % 4 {
+        states.push(match i % 6 {
             0 | 1 => OptState::MlorcAdamW {
                 mq: Tensor::zeros(&[m, l]),
                 mb: Tensor::zeros(&[l, n]),
@@ -45,6 +72,8 @@ fn fleet(seed: u64) -> (Fleet, Vec<Tensor>) {
                 mq: Tensor::zeros(&[m, l]),
                 mb: Tensor::zeros(&[l, n]),
             },
+            3 => galore_state(m, n, l),
+            4 => ldadamw_state(m, n, l),
             _ => OptState::AdamW { m: Tensor::zeros(shape), v: Tensor::zeros(shape) },
         });
         // each parameter owns an independent Omega stream
@@ -110,6 +139,106 @@ fn rerun_is_deterministic() {
     run_rounds(&mut b, &grads, &mut ws_b, 3);
     for (x, y) in a.weights.iter().zip(&b.weights) {
         assert_eq!(x.data, y.data);
+    }
+}
+
+#[test]
+fn fused_applies_bit_identical_across_budgets() {
+    // Both fused reconstruction+apply kernels (AdamW and Lion) through the
+    // worker pool must produce the same bits for every band count —
+    // emulating MLORC_THREADS ∈ {1, 2, 3, 8} via the per-thread override —
+    // and inside a nested threads::serial scope. (512, 128, l=4) sizes the
+    // applies and the factored-path GEMMs past the banding threshold.
+    let (m, n, l) = (512usize, 128usize, 4usize);
+    let hp = OptHp::mlorc_adamw();
+    let hp_lion = OptHp::lion();
+    let run = |budget: usize| {
+        threads::with_budget(budget, || {
+            let mut rng = Rng::new(42);
+            let mut w = rng.gaussian_tensor(&[m, n], 0.5);
+            let mut st = MlorcAdamWState::new(&[m, n], l);
+            let mut wl = rng.gaussian_tensor(&[m, n], 0.5);
+            let mut stl = MlorcLionState::new(&[m, n], l);
+            let mut om_rng = Rng::new(7);
+            for _ in 0..2 {
+                let g = rng.gaussian_tensor(&[m, n], 1.0);
+                st.step(&mut w, &g, 1e-2, &hp, &mut om_rng);
+                stl.step(&mut wl, &g, 1e-2, &hp_lion, &mut om_rng);
+            }
+            (w, wl)
+        })
+    };
+    let (w1, wl1) = run(1);
+    for budget in [2usize, 3, 8] {
+        let (w, wl) = run(budget);
+        assert_eq!(w.data, w1.data, "fused adamw apply diverged at budget {budget}");
+        assert_eq!(wl.data, wl1.data, "fused lion apply diverged at budget {budget}");
+    }
+    let (ws, wls) = threads::serial(|| run(8));
+    assert_eq!(ws.data, w1.data, "fused adamw apply diverged inside serial scope");
+    assert_eq!(wls.data, wl1.data, "fused lion apply diverged inside serial scope");
+}
+
+#[test]
+fn galore_host_step_matches_reference() {
+    // OptState::host_step must reproduce the reference GaloreState
+    // trajectory bit-for-bit: both route through galore_refresh_projector
+    // + galore_core with the same Omega stream; the trainer mirrors the
+    // refresh cadence by clearing `refreshed` every update_freq steps.
+    let hp = OptHp::adamw();
+    let (l, freq) = (3usize, 2usize);
+    for shape in [[10usize, 24], [24usize, 10]] {
+        let (m, n) = (shape[0], shape[1]);
+        let mut data_rng = Rng::new(5);
+        let mut w_ref = data_rng.gaussian_tensor(&shape, 0.5);
+        let mut w_host = w_ref.clone();
+        let mut ref_st = GaloreState::new(&shape, l, freq);
+        let mut host_st = galore_state(m, n, l);
+        let mut rng_ref = Rng::new(11);
+        let mut rng_host = Rng::new(11);
+        let mut ws = Workspace::new();
+        for step in 0..5 {
+            let g = data_rng.gaussian_tensor(&shape, 1.0);
+            ref_st.step(&mut w_ref, &g, 1e-2, &hp, &mut rng_ref);
+            if step % freq == 0 {
+                if let OptState::Galore { refreshed, .. } = &mut host_st {
+                    *refreshed = false;
+                }
+            }
+            host_st
+                .host_step(&mut w_host, &g, 1e-2, step + 1, &mut rng_host, &mut ws)
+                .unwrap();
+            assert_eq!(w_ref.data, w_host.data, "galore {shape:?} step {step}");
+        }
+    }
+}
+
+#[test]
+fn ldadamw_host_step_matches_reference() {
+    // Same cross-validation for LDAdamW: one ldadamw_core, two drivers.
+    // (The reference seeds P with identity columns, host state with zeros;
+    // both are annihilated by the zero moments in step 1, so trajectories
+    // coincide from the first step.)
+    let hp = OptHp::adamw();
+    let l = 3usize;
+    for shape in [[8usize, 20], [20usize, 8]] {
+        let (m, n) = (shape[0], shape[1]);
+        let mut data_rng = Rng::new(6);
+        let mut w_ref = data_rng.gaussian_tensor(&shape, 0.5);
+        let mut w_host = w_ref.clone();
+        let mut ref_st = LdAdamWState::new(&shape, l);
+        let mut host_st = ldadamw_state(m, n, l);
+        let mut rng_ref = Rng::new(13);
+        let mut rng_host = Rng::new(13);
+        let mut ws = Workspace::new();
+        for step in 0..4 {
+            let g = data_rng.gaussian_tensor(&shape, 1.0);
+            ref_st.step(&mut w_ref, &g, 1e-2, &hp, &mut rng_ref);
+            host_st
+                .host_step(&mut w_host, &g, 1e-2, step + 1, &mut rng_host, &mut ws)
+                .unwrap();
+            assert_eq!(w_ref.data, w_host.data, "ldadamw {shape:?} step {step}");
+        }
     }
 }
 

@@ -84,6 +84,121 @@ fn threaded_kernels_are_bit_deterministic() {
 }
 
 #[test]
+fn gemm_variants_bit_identical_across_budgets() {
+    // Emulates MLORC_THREADS ∈ {1, 2, 3, 8} (the env var is latched once
+    // per process; `threads::with_budget` is the same knob per thread):
+    // every band plan must produce the same bits, including from inside a
+    // nested `threads::serial` scope. Shapes sized so the 64k-madds/band
+    // threshold actually splits work at budget >= 2.
+    let mut rng = Rng::new(77);
+    let a = rng.gaussian_tensor(&[137, 61], 1.0);
+    let b = rng.gaussian_tensor(&[61, 45], 1.0);
+    let b2 = rng.gaussian_tensor(&[137, 45], 1.0);
+    let bt = rng.gaussian_tensor(&[45, 61], 1.0);
+
+    let base_nn = threads::with_budget(1, || matmul(&a, &b));
+    let base_tn = threads::with_budget(1, || matmul_at_b(&a, &b2));
+    let base_nt = threads::with_budget(1, || matmul_a_bt(&a, &bt));
+    for budget in [2usize, 3, 8] {
+        threads::with_budget(budget, || {
+            assert_eq!(matmul(&a, &b).data, base_nn.data, "nn budget {budget}");
+            assert_eq!(matmul_at_b(&a, &b2).data, base_tn.data, "tn budget {budget}");
+            assert_eq!(matmul_a_bt(&a, &bt).data, base_nt.data, "nt budget {budget}");
+        });
+    }
+    // nested serial scope: bands forced to 1 regardless of the override
+    threads::with_budget(8, || {
+        threads::serial(|| {
+            assert_eq!(matmul(&a, &b).data, base_nn.data, "nn nested serial");
+            assert_eq!(matmul_at_b(&a, &b2).data, base_tn.data, "tn nested serial");
+            assert_eq!(matmul_a_bt(&a, &bt).data, base_nt.data, "nt nested serial");
+        });
+    });
+}
+
+/// 0 = NaN, 1 = +Inf, 2 = -Inf, 3 = finite.
+fn classify(x: f32) -> u8 {
+    if x.is_nan() {
+        0
+    } else if x == f32::INFINITY {
+        1
+    } else if x == f32::NEG_INFINITY {
+        2
+    } else {
+        3
+    }
+}
+
+#[test]
+fn packed_simd_kernels_match_oracle_with_nan_inf() {
+    // The packed/SIMD kernels only reorder *summation* within a row; the
+    // product multiset per output element is identical to the scalar
+    // oracle, so NaN/±Inf classes must agree exactly (a NaN or a mixed
+    // ±Inf pair poisons the sum in every order) and finite values within
+    // tolerance. Injects NaN/Inf/zeros on adversarial shapes.
+    prop::check(48, |rng| {
+        let (m, k, n) = (adversarial_dim(rng), adversarial_dim(rng), adversarial_dim(rng));
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0];
+        let mut a = rng.gaussian_tensor(&[m, k], 1.0);
+        let mut b = rng.gaussian_tensor(&[k, n], 1.0);
+        for _ in 0..3 {
+            let ia = rng.below(a.data.len());
+            a.data[ia] = specials[rng.below(4)];
+            let ib = rng.below(b.data.len());
+            b.data[ib] = specials[rng.below(4)];
+        }
+        let tol = 1e-3 * (k.max(m) as f64).sqrt();
+        // nn
+        let (fast, slow) = (matmul(&a, &b), scalar_matmul(&a, &b));
+        for (i, (x, y)) in fast.data.iter().zip(&slow.data).enumerate() {
+            prop::assert_true(
+                classify(*x) == classify(*y),
+                &format!("nn class mismatch at {i} ({m},{k},{n}): {x} vs {y}"),
+            )?;
+            if classify(*x) == 3 {
+                prop::assert_lt((x - y).abs() as f64, tol, "nn finite")?;
+            }
+        }
+        // tn: A^T (m,k) with B (m,n)
+        let b_tn = {
+            let mut t = rng.gaussian_tensor(&[m, n], 1.0);
+            let i = rng.below(t.data.len());
+            t.data[i] = specials[rng.below(4)];
+            t
+        };
+        let (fast, slow) = (matmul_at_b(&a, &b_tn), scalar_matmul_at_b(&a, &b_tn));
+        for (i, (x, y)) in fast.data.iter().zip(&slow.data).enumerate() {
+            prop::assert_true(
+                classify(*x) == classify(*y),
+                &format!("tn class mismatch at {i} ({m},{k},{n}): {x} vs {y}"),
+            )?;
+            if classify(*x) == 3 {
+                prop::assert_lt((x - y).abs() as f64, tol, "tn finite")?;
+            }
+        }
+        // nt: A (m,k) with B^T (n,k)
+        let b_nt = {
+            let mut t = rng.gaussian_tensor(&[n, k], 1.0);
+            let i = rng.below(t.data.len());
+            t.data[i] = specials[rng.below(4)];
+            t
+        };
+        let fast = matmul_a_bt(&a, &b_nt);
+        let slow = scalar_matmul_a_bt(&a, &b_nt);
+        for (i, (x, y)) in fast.data.iter().zip(&slow.data).enumerate() {
+            prop::assert_true(
+                classify(*x) == classify(*y),
+                &format!("nt class mismatch at {i} ({m},{k},{n}): {x} vs {y}"),
+            )?;
+            if classify(*x) == 3 {
+                prop::assert_lt((x - y).abs() as f64, tol, "nt finite")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn nan_propagation_regression() {
     // Zero row in A, NaN in B: the old zero-skip dropped the NaN.
     let mut a = Tensor::zeros(&[3, 2]);
