@@ -1,17 +1,42 @@
-//! Checkpointing: parameters (and LoRA adapters) to RTEN + a JSON sidecar
-//! with the run config, so a run can resume or be evaluated later.
+//! Checkpointing.
+//!
+//! Two formats coexist:
+//!
+//! * **v1** (`save_checkpoint`/`load_checkpoint`): parameters (and LoRA
+//!   adapters) to RTEN + a JSON sidecar with the run config. Evaluation
+//!   snapshots only — v1 silently drops every optimizer state, so a v1
+//!   directory cannot resume training dynamics.
+//! * **v2** (`save_checkpoint_v2`/`load_checkpoint_v2`): v1's tensors
+//!   plus the full `OptState` of every trainable parameter (MLorc Q/B
+//!   momentum factors, AdamW/Lion moments, GaLore/LDAdamW projectors and
+//!   flags), the data RNG and per-parameter Omega stream positions, and
+//!   the step count — everything needed to resume a killed run with
+//!   training dynamics bit-identical to an uninterrupted one. MLorc is
+//!   what makes this cheap: the momentum of matrix parameters is stored
+//!   as rank-l factors, so the whole optimizer state is a few percent of
+//!   the full-AdamW footprint (see `MemoryAccountant`).
+//!
+//! Crash safety: every file goes through `write_atomic`, and the rotated
+//! writer (`save_checkpoint_v2_rotated`) puts each snapshot in its own
+//! `step-NNNNNNNN/` subdirectory, flipping the `LATEST` pointer only
+//! after the snapshot is fully on disk — a kill mid-write can never
+//! corrupt the snapshot a restart resumes from.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::linalg::Rng;
+use crate::tensor::{read_rten, write_rten, Tensor};
 use crate::util::fsutil;
 use crate::util::json::Json;
-use crate::tensor::write_rten;
 
 use super::params::ParamStore;
+use super::state::OptState;
+
+// ------------------------------------------------------------------- v1
 
 pub fn save_checkpoint(
     dir: &Path,
@@ -21,6 +46,29 @@ pub fn save_checkpoint(
     adapters: Option<&ParamStore>,
 ) -> Result<()> {
     std::fs::create_dir_all(dir)?;
+    let tensors = collect_params(params, adapters);
+    write_rten(&dir.join("params.rten"), &tensors)?;
+    let meta = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("step", Json::num(step as f64)),
+        ("config", cfg.to_json()),
+        ("n_tensors", Json::num(tensors.len() as f64)),
+    ]);
+    fsutil::write_atomic(&dir.join("meta.json"), meta.to_string_pretty().as_bytes())
+}
+
+/// Load parameters (+ step count) from a v1 *or* v2 directory — both
+/// carry `params.rten`. Optimizer state, if any, is ignored.
+pub fn load_checkpoint(dir: &Path, params: &mut ParamStore) -> Result<usize> {
+    let meta = Json::from_file(&dir.join("meta.json"))?;
+    let step = meta.req("step")?.as_usize()?;
+    let tensors = read_rten(&dir.join("params.rten"))
+        .with_context(|| format!("checkpoint at {}", dir.display()))?;
+    restore_store(&tensors, params)?;
+    Ok(step)
+}
+
+fn collect_params(params: &ParamStore, adapters: Option<&ParamStore>) -> BTreeMap<String, Tensor> {
     let mut tensors = BTreeMap::new();
     for (spec, val) in params.specs.iter().zip(&params.values) {
         tensors.insert(spec.name.clone(), val.clone());
@@ -30,21 +78,11 @@ pub fn save_checkpoint(
             tensors.insert(spec.name.clone(), val.clone());
         }
     }
-    write_rten(&dir.join("params.rten"), &tensors)?;
-    let meta = Json::obj(vec![
-        ("step", Json::num(step as f64)),
-        ("config", cfg.to_json()),
-        ("n_tensors", Json::num(tensors.len() as f64)),
-    ]);
-    fsutil::write_atomic(&dir.join("meta.json"), meta.to_string_pretty().as_bytes())
+    tensors
 }
 
-pub fn load_checkpoint(dir: &Path, params: &mut ParamStore) -> Result<usize> {
-    let meta = Json::from_file(&dir.join("meta.json"))?;
-    let step = meta.req("step")?.as_usize()?;
-    let tensors = crate::tensor::read_rten(&dir.join("params.rten"))
-        .with_context(|| format!("checkpoint at {}", dir.display()))?;
-    for (spec, val) in params.specs.iter().zip(params.values.iter_mut()) {
+fn restore_store(tensors: &BTreeMap<String, Tensor>, store: &mut ParamStore) -> Result<()> {
+    for (spec, val) in store.specs.iter().zip(store.values.iter_mut()) {
         match tensors.get(&spec.name) {
             Some(t) => {
                 if t.shape != spec.shape {
@@ -60,7 +98,299 @@ pub fn load_checkpoint(dir: &Path, params: &mut ParamStore) -> Result<usize> {
             None => bail!("checkpoint missing tensor '{}'", spec.name),
         }
     }
-    Ok(step)
+    Ok(())
+}
+
+// ------------------------------------------------------------------- v2
+
+/// Everything the v2 format persists beyond the raw parameter tensors.
+pub struct OptSnapshot<'a> {
+    /// (trainable parameter name, its state), in trainable order.
+    pub opt: Vec<(String, &'a OptState)>,
+    /// Data/batch RNG stream position.
+    pub rng_data: &'a Rng,
+    /// Per-trainable Omega stream positions, in trainable order.
+    pub omega: &'a [Rng],
+}
+
+/// A loaded v2 checkpoint (parameters are restored in place; the rest is
+/// returned for the trainer to adopt).
+pub struct CheckpointV2 {
+    pub step: usize,
+    pub config: RunConfig,
+    pub rng_data: Rng,
+    pub omega: Vec<Rng>,
+    pub opt: BTreeMap<String, OptState>,
+}
+
+/// Write a full v2 snapshot into `dir`. `meta.json` is written last and
+/// is the commit marker: loaders refuse a directory without it.
+pub fn save_checkpoint_v2(
+    dir: &Path,
+    step: usize,
+    cfg: &RunConfig,
+    params: &ParamStore,
+    adapters: Option<&ParamStore>,
+    snap: &OptSnapshot,
+) -> Result<()> {
+    if snap.opt.len() != snap.omega.len() {
+        bail!("{} opt states but {} omega streams", snap.opt.len(), snap.omega.len());
+    }
+    std::fs::create_dir_all(dir)?;
+    let tensors = collect_params(params, adapters);
+    write_rten(&dir.join("params.rten"), &tensors)?;
+
+    let mut opt_tensors = BTreeMap::new();
+    let mut opt_meta = Json::Obj(BTreeMap::new());
+    for (name, state) in &snap.opt {
+        opt_meta.set(name, state.ckpt_meta());
+        for (field, t) in state.tensor_fields() {
+            opt_tensors.insert(format!("{name}/{field}"), t.clone());
+        }
+    }
+    write_rten(&dir.join("opt_state.rten"), &opt_tensors)?;
+
+    let omega = Json::arr(snap.omega.iter().map(rng_to_json));
+    let meta = Json::obj(vec![
+        ("version", Json::num(2.0)),
+        ("step", Json::num(step as f64)),
+        ("config", cfg.to_json()),
+        ("n_tensors", Json::num(tensors.len() as f64)),
+        ("opt_states", opt_meta),
+        (
+            "rng",
+            Json::obj(vec![("data", rng_to_json(snap.rng_data)), ("omega", omega)]),
+        ),
+    ]);
+    fsutil::write_atomic(&dir.join("meta.json"), meta.to_string_pretty().as_bytes())
+}
+
+/// Load a v2 checkpoint: parameters (and adapters) are restored in place,
+/// optimizer states / RNG positions / step come back in [`CheckpointV2`].
+///
+/// A v1 directory fails with a structured "this is v1" error instead of a
+/// confusing shape/missing-tensor mismatch: v1's `save_checkpoint`
+/// dropped all optimizer state, so there is nothing to resume from.
+pub fn load_checkpoint_v2(
+    dir: &Path,
+    params: &mut ParamStore,
+    adapters: Option<&mut ParamStore>,
+) -> Result<CheckpointV2> {
+    let meta = Json::from_file(&dir.join("meta.json"))?;
+    let version = match meta.get("version") {
+        Some(v) => v.as_usize()?,
+        None => 1, // pre-versioning checkpoints are v1 by definition
+    };
+    if version < 2 {
+        bail!(
+            "checkpoint at {} is format v1: parameters only — v1 `save_checkpoint` \
+             dropped every optimizer state, so it cannot resume training dynamics. \
+             Load it with `load_checkpoint` (params + step) and restart the \
+             optimizer, or re-checkpoint with the v2 writer.",
+            dir.display()
+        );
+    }
+    if version > 2 {
+        bail!(
+            "checkpoint at {} is format v{version}, newer than this binary understands (v2)",
+            dir.display()
+        );
+    }
+    let step = meta.req("step")?.as_usize()?;
+    let config = RunConfig::from_json(meta.req("config")?)?;
+
+    let tensors = read_rten(&dir.join("params.rten"))
+        .with_context(|| format!("checkpoint at {}", dir.display()))?;
+    restore_store(&tensors, params)?;
+    if let Some(a) = adapters {
+        restore_store(&tensors, a)?;
+    }
+
+    let opt_tensors = read_rten(&dir.join("opt_state.rten"))
+        .with_context(|| format!("checkpoint at {}", dir.display()))?;
+    let mut opt = BTreeMap::new();
+    for (name, state_meta) in meta.req("opt_states")?.as_obj()? {
+        let state = OptState::from_ckpt(state_meta, |field| {
+            let key = format!("{name}/{field}");
+            opt_tensors
+                .get(&key)
+                .cloned()
+                .with_context(|| format!("checkpoint missing optimizer tensor '{key}'"))
+        })
+        .with_context(|| format!("optimizer state for '{name}'"))?;
+        opt.insert(name.clone(), state);
+    }
+
+    let rng = meta.req("rng")?;
+    let rng_data = rng_from_json(rng.req("data")?).context("data rng")?;
+    let omega = rng
+        .req("omega")?
+        .as_arr()?
+        .iter()
+        .map(rng_from_json)
+        .collect::<Result<Vec<_>>>()
+        .context("omega rng streams")?;
+
+    Ok(CheckpointV2 { step, config, rng_data, omega, opt })
+}
+
+/// Resolve + load a v2 checkpoint and validate it against a live run:
+/// same preset/method/task and a matching Omega stream count are
+/// required; a seed mismatch only warns (the checkpoint's streams win).
+/// Parameters (and adapters) are restored in place; optimizer states,
+/// RNG streams and the step count come back for the caller to adopt.
+/// Shared by `Trainer::resume_from` and the serve host engine so the
+/// resume contract cannot drift between them.
+pub fn load_for_resume(
+    dir: &Path,
+    cfg: &RunConfig,
+    params: &mut ParamStore,
+    adapters: Option<&mut ParamStore>,
+    n_streams: usize,
+) -> Result<CheckpointV2> {
+    let snap_dir = resolve_checkpoint_dir(dir)?;
+    let ck = load_checkpoint_v2(&snap_dir, params, adapters)?;
+    if ck.config.method != cfg.method
+        || ck.config.preset != cfg.preset
+        || ck.config.task != cfg.task
+    {
+        bail!(
+            "checkpoint at {} is a {}/{}/{} run; this run is {}/{}/{}",
+            snap_dir.display(),
+            ck.config.preset,
+            ck.config.method.name(),
+            ck.config.task.name(),
+            cfg.preset,
+            cfg.method.name(),
+            cfg.task.name()
+        );
+    }
+    if ck.config.seed != cfg.seed {
+        log::warn!(
+            "resume: checkpoint seed {} != run seed {}; continuing with the checkpoint's streams",
+            ck.config.seed,
+            cfg.seed
+        );
+    }
+    if ck.omega.len() != n_streams {
+        bail!(
+            "checkpoint has {} omega streams for {} trainable parameters",
+            ck.omega.len(),
+            n_streams
+        );
+    }
+    Ok(ck)
+}
+
+// -------------------------------------------------------------- rotation
+
+/// How many `step-*` snapshots a rotated checkpoint root retains.
+const KEEP_SNAPSHOTS: usize = 2;
+
+fn snapshot_name(step: usize) -> String {
+    format!("step-{step:08}")
+}
+
+/// Crash-safe cadence writer: puts the snapshot in `root/step-NNNNNNNN/`,
+/// then flips `root/LATEST` to it, then prunes all but the newest
+/// [`KEEP_SNAPSHOTS`] snapshots. Returns the snapshot directory.
+pub fn save_checkpoint_v2_rotated(
+    root: &Path,
+    step: usize,
+    cfg: &RunConfig,
+    params: &ParamStore,
+    adapters: Option<&ParamStore>,
+    snap: &OptSnapshot,
+) -> Result<PathBuf> {
+    let name = snapshot_name(step);
+    let dir = root.join(&name);
+    save_checkpoint_v2(&dir, step, cfg, params, adapters, snap)?;
+    fsutil::write_atomic(&root.join("LATEST"), name.as_bytes())?;
+    prune_snapshots(root, &name);
+    Ok(dir)
+}
+
+/// Best-effort removal of stale snapshots (never the LATEST target).
+fn prune_snapshots(root: &Path, latest: &str) {
+    let Ok(entries) = std::fs::read_dir(root) else { return };
+    let mut snaps: Vec<String> = entries
+        .flatten()
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("step-") && n.as_str() != latest)
+        .collect();
+    snaps.sort();
+    // `latest` itself is excluded above, so keep the newest
+    // KEEP_SNAPSHOTS - 1 of the rest.
+    let keep = KEEP_SNAPSHOTS.saturating_sub(1);
+    let drop_n = snaps.len().saturating_sub(keep);
+    for name in snaps.into_iter().take(drop_n) {
+        if let Err(e) = std::fs::remove_dir_all(root.join(&name)) {
+            log::warn!("could not prune old checkpoint {name}: {e}");
+        }
+    }
+}
+
+/// True if `dir` is a loadable checkpoint: either a direct snapshot or a
+/// rotated root with a `LATEST` pointer.
+pub fn has_checkpoint(dir: &Path) -> bool {
+    dir.join("meta.json").exists() || dir.join("LATEST").exists()
+}
+
+/// Resolve a user-supplied path to the concrete snapshot directory:
+/// accepts a direct snapshot (`meta.json` present) or a rotated root
+/// (follows `LATEST`).
+pub fn resolve_checkpoint_dir(dir: &Path) -> Result<PathBuf> {
+    if dir.join("meta.json").exists() {
+        return Ok(dir.to_path_buf());
+    }
+    let latest = dir.join("LATEST");
+    if latest.exists() {
+        let name = std::fs::read_to_string(&latest)
+            .with_context(|| format!("reading {}", latest.display()))?;
+        let snap = dir.join(name.trim());
+        if !snap.join("meta.json").exists() {
+            bail!(
+                "checkpoint root {} points at '{}' but that snapshot has no meta.json",
+                dir.display(),
+                name.trim()
+            );
+        }
+        return Ok(snap);
+    }
+    bail!("no checkpoint at {} (neither meta.json nor LATEST found)", dir.display())
+}
+
+// ------------------------------------------------------------ rng <-> json
+
+fn rng_to_json(r: &Rng) -> Json {
+    let (s, spare) = r.snapshot();
+    let words: Vec<Json> = s.iter().map(|w| Json::str(format!("{w:016x}"))).collect();
+    Json::obj(vec![
+        ("s", Json::Arr(words)),
+        (
+            "spare",
+            match spare {
+                Some(bits) => Json::str(format!("{bits:016x}")),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn rng_from_json(j: &Json) -> Result<Rng> {
+    let words = j.req("s")?.as_arr()?;
+    if words.len() != 4 {
+        bail!("rng state wants 4 words, got {}", words.len());
+    }
+    let mut s = [0u64; 4];
+    for (slot, w) in s.iter_mut().zip(words) {
+        *slot = u64::from_str_radix(w.as_str()?, 16).context("rng state word")?;
+    }
+    let spare = match j.req("spare")? {
+        Json::Null => None,
+        v => Some(u64::from_str_radix(v.as_str()?, 16).context("rng spare bits")?),
+    };
+    Ok(Rng::from_snapshot(s, spare))
 }
 
 #[cfg(test)]
@@ -83,9 +413,13 @@ mod tests {
         }
     }
 
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mlorc_ckpt_{tag}_{}", std::process::id()))
+    }
+
     #[test]
     fn roundtrip_and_shape_guard() {
-        let dir = std::env::temp_dir().join(format!("mlorc_ckpt_{}", std::process::id()));
+        let dir = tmp("v1");
         let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
         let orig = store();
         save_checkpoint(&dir, 42, &cfg, &orig, None).unwrap();
@@ -100,5 +434,73 @@ mod tests {
         wrong.values[0] = Tensor::zeros(&[3, 2]);
         assert!(load_checkpoint(&dir, &mut wrong).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v2_load_of_v1_dir_is_a_structured_error() {
+        let dir = tmp("v1_as_v2");
+        let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
+        let orig = store();
+        save_checkpoint(&dir, 3, &cfg, &orig, None).unwrap();
+        let mut loaded = store();
+        let err = load_checkpoint_v2(&dir, &mut loaded, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("format v1"), "unhelpful error: {msg}");
+        assert!(msg.contains("optimizer state"), "unhelpful error: {msg}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v2_roundtrip_with_opt_state_and_rng() {
+        let dir = tmp("v2");
+        let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
+        let orig = store();
+        let mut rng = Rng::new(9);
+        let mq = rng.gaussian_tensor(&[2, 2], 1.0);
+        let state = OptState::MlorcLion { mq: mq.clone(), mb: rng.gaussian_tensor(&[2, 3], 1.0) };
+        let vstate = OptState::AdamW { m: Tensor::zeros(&[4]), v: Tensor::full(&[4], 0.5) };
+        let mut data_rng = Rng::new(1);
+        data_rng.normal(); // advance + populate the Box-Muller spare
+        let omega = vec![Rng::new(2), Rng::new(3)];
+        let snap = OptSnapshot {
+            opt: vec![("a".to_string(), &state), ("b".to_string(), &vstate)],
+            rng_data: &data_rng,
+            omega: &omega,
+        };
+        save_checkpoint_v2(&dir, 7, &cfg, &orig, None, &snap).unwrap();
+
+        let mut loaded = store();
+        loaded.values[0] = Tensor::zeros(&[2, 3]);
+        let back = load_checkpoint_v2(&dir, &mut loaded, None).unwrap();
+        assert_eq!(back.step, 7);
+        assert_eq!(loaded.values[0], orig.values[0]);
+        assert_eq!(back.rng_data.snapshot(), data_rng.snapshot());
+        assert_eq!(back.omega.len(), 2);
+        assert_eq!(back.omega[1].snapshot(), omega[1].snapshot());
+        match back.opt.get("a").unwrap() {
+            OptState::MlorcLion { mq: q, .. } => assert_eq!(q.data, mq.data),
+            other => panic!("wrong variant {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_keeps_latest_and_prunes() {
+        let root = tmp("rot");
+        let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
+        let orig = store();
+        let rng = Rng::new(0);
+        let snap = OptSnapshot { opt: vec![], rng_data: &rng, omega: &[] };
+        for step in [5usize, 10, 15] {
+            save_checkpoint_v2_rotated(&root, step, &cfg, &orig, None, &snap).unwrap();
+        }
+        let resolved = resolve_checkpoint_dir(&root).unwrap();
+        assert!(resolved.ends_with("step-00000015"));
+        assert!(!root.join("step-00000005").exists(), "oldest snapshot not pruned");
+        assert!(root.join("step-00000010").exists(), "previous snapshot must be kept");
+        let mut loaded = store();
+        let back = load_checkpoint_v2(&resolved, &mut loaded, None).unwrap();
+        assert_eq!(back.step, 15);
+        std::fs::remove_dir_all(&root).unwrap();
     }
 }

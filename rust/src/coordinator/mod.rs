@@ -12,7 +12,10 @@ mod spectral;
 mod state;
 mod trainer;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    has_checkpoint, load_checkpoint, load_checkpoint_v2, load_for_resume, resolve_checkpoint_dir,
+    save_checkpoint, save_checkpoint_v2, save_checkpoint_v2_rotated, CheckpointV2, OptSnapshot,
+};
 pub use memory::{MemoryAccountant, MemoryReport};
 pub use metrics::{EvalRecord, MetricsLog, StepRecord};
 pub use params::ParamStore;

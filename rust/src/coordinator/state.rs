@@ -6,22 +6,32 @@
 //! GaLore/LDAdamW baselines — can step itself entirely on the host
 //! through [`OptState::host_step`], backed by the cross-validated
 //! reference optimizers in `optim` (the same `*_core` free functions the
-//! reference state structs delegate to). [`host_step_all`] fans a batch of such updates
-//! out over a small scoped thread pool; because each job owns its
-//! parameter, state and Omega RNG stream, and the linalg kernels are
-//! bit-deterministic across thread counts, the parallel schedule produces
-//! results bit-identical to stepping sequentially.
+//! reference state structs delegate to). [`host_step_all`] fans a batch
+//! of such updates out over the persistent worker pool (`linalg::pool`);
+//! because each job owns its parameter, state and Omega RNG stream, and
+//! the linalg kernels are bit-deterministic across thread counts, the
+//! parallel schedule produces results bit-identical to stepping
+//! sequentially.
+//!
+//! Every variant also serializes to the v2 checkpoint format
+//! ([`OptState::tensor_fields`] / [`OptState::ckpt_meta`] /
+//! [`OptState::from_ckpt`]) — MLorc's compressed Q/B momentum factors are
+//! the whole first/second-moment state, which is what makes
+//! checkpoint-every-few-steps cheap enough for the serve scheduler.
+
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
 use crate::config::Method;
-use crate::linalg::{threads, Rng, Workspace};
+use crate::linalg::{pool, threads, Rng, Workspace};
 use crate::optim::{
     adamw_host_step, galore_core, galore_refresh_projector, ldadamw_core, lion_host_step,
     mlorc_adamw_core, mlorc_lion_core, mlorc_m_core, mlorc_v_core, OptHp,
 };
 use crate::runtime::{ParamSpec, Preset};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub enum OptState {
@@ -42,7 +52,13 @@ impl OptState {
     /// `compressed` decides matrix-vs-plain routing (vectors, embeddings,
     /// heads and LoRA adapters always take the plain path).
     pub fn for_param(method: Method, spec: &ParamSpec, preset: &Preset) -> Result<OptState> {
-        let l = preset.model.l();
+        OptState::for_param_with_l(method, spec, preset.model.l())
+    }
+
+    /// Like [`OptState::for_param`] but with the sketch width `l` given
+    /// directly — for callers without a manifest preset (the serve host
+    /// engine builds its parameter fleet from shapes alone).
+    pub fn for_param_with_l(method: Method, spec: &ParamSpec, l: usize) -> Result<OptState> {
         let shape = &spec.shape;
         let plain = || -> OptState {
             match method.plain_step() {
@@ -114,6 +130,98 @@ impl OptState {
             OptState::MlorcV { .. } => "mlorc_v",
             OptState::Galore { .. } => "galore",
             OptState::LdAdamW { .. } => "ldadamw",
+        })
+    }
+
+    /// Stable variant tag used by checkpoint metadata (v2 format).
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            OptState::Frozen => "frozen",
+            OptState::AdamW { .. } => "adamw",
+            OptState::Lion { .. } => "lion",
+            OptState::MlorcAdamW { .. } => "mlorc_adamw",
+            OptState::MlorcLion { .. } => "mlorc_lion",
+            OptState::MlorcM { .. } => "mlorc_m",
+            OptState::MlorcV { .. } => "mlorc_v",
+            OptState::Galore { .. } => "galore",
+            OptState::LdAdamW { .. } => "ldadamw",
+        }
+    }
+
+    /// The state's tensor fields under stable names, in declared order —
+    /// checkpoint v2 stores each as `<param>/<field>` in `opt_state.rten`.
+    pub fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        match self {
+            OptState::Frozen => vec![],
+            OptState::AdamW { m, v } => vec![("m", m), ("v", v)],
+            OptState::Lion { m } => vec![("m", m)],
+            OptState::MlorcAdamW { mq, mb, vq, vb } => {
+                vec![("mq", mq), ("mb", mb), ("vq", vq), ("vb", vb)]
+            }
+            OptState::MlorcLion { mq, mb } => vec![("mq", mq), ("mb", mb)],
+            OptState::MlorcM { mq, mb, v } => vec![("mq", mq), ("mb", mb), ("v", v)],
+            OptState::MlorcV { m, vq, vb } => vec![("m", m), ("vq", vq), ("vb", vb)],
+            OptState::Galore { p, m_lo, v_lo, .. } => {
+                vec![("p", p), ("m_lo", m_lo), ("v_lo", v_lo)]
+            }
+            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
+                vec![("p", p), ("m_lo", m_lo), ("v_lo", v_lo), ("e", e)]
+            }
+        }
+    }
+
+    /// Checkpoint metadata: the variant tag plus every non-tensor flag
+    /// ([`OptState::from_ckpt`] is the inverse).
+    pub fn ckpt_meta(&self) -> Json {
+        let mut meta = Json::obj(vec![("variant", Json::str(self.variant_name()))]);
+        match self {
+            OptState::Galore { left, refreshed, .. } => {
+                meta.set("left", Json::Bool(*left));
+                meta.set("refreshed", Json::Bool(*refreshed));
+            }
+            OptState::LdAdamW { left, .. } => {
+                meta.set("left", Json::Bool(*left));
+            }
+            _ => {}
+        }
+        meta
+    }
+
+    /// Rebuild a state from checkpoint metadata plus a tensor lookup
+    /// (`take(field)` yields the stored `<param>/<field>` tensor).
+    pub fn from_ckpt(
+        meta: &Json,
+        mut take: impl FnMut(&'static str) -> Result<Tensor>,
+    ) -> Result<OptState> {
+        let variant = meta.req("variant")?.as_str()?;
+        Ok(match variant {
+            "frozen" => OptState::Frozen,
+            "adamw" => OptState::AdamW { m: take("m")?, v: take("v")? },
+            "lion" => OptState::Lion { m: take("m")? },
+            "mlorc_adamw" => OptState::MlorcAdamW {
+                mq: take("mq")?,
+                mb: take("mb")?,
+                vq: take("vq")?,
+                vb: take("vb")?,
+            },
+            "mlorc_lion" => OptState::MlorcLion { mq: take("mq")?, mb: take("mb")? },
+            "mlorc_m" => OptState::MlorcM { mq: take("mq")?, mb: take("mb")?, v: take("v")? },
+            "mlorc_v" => OptState::MlorcV { m: take("m")?, vq: take("vq")?, vb: take("vb")? },
+            "galore" => OptState::Galore {
+                p: take("p")?,
+                m_lo: take("m_lo")?,
+                v_lo: take("v_lo")?,
+                left: meta.req("left")?.as_bool()?,
+                refreshed: meta.req("refreshed")?.as_bool()?,
+            },
+            "ldadamw" => OptState::LdAdamW {
+                p: take("p")?,
+                m_lo: take("m_lo")?,
+                v_lo: take("v_lo")?,
+                e: take("e")?,
+                left: meta.req("left")?.as_bool()?,
+            },
+            other => bail!("unknown optimizer state variant '{other}' in checkpoint"),
         })
     }
 
@@ -251,11 +359,13 @@ pub struct HostStepJob<'a> {
     pub t: usize,
 }
 
-/// Run every job, fanned out over at most `workspaces.len()` scoped
-/// threads (contiguous chunks). Worker threads run their linalg kernels
-/// in serial mode to avoid nested oversubscription; since the kernels are
-/// bit-deterministic across thread counts and jobs are fully independent,
-/// the result is bit-identical to sequential stepping in job order.
+/// Run every job, fanned out over the persistent worker pool
+/// (`linalg::pool`) in contiguous chunks of at most `workspaces.len()`
+/// bands — no per-call thread spawns. Band closures run their linalg
+/// kernels in serial mode to avoid nested oversubscription; since the
+/// kernels are bit-deterministic across thread counts and jobs are fully
+/// independent, the result is bit-identical to sequential stepping in job
+/// order (asserted by `tests/host_parallel.rs`).
 pub fn host_step_all(jobs: &mut [HostStepJob], workspaces: &mut [Workspace]) -> Result<()> {
     if jobs.is_empty() {
         return Ok(());
@@ -269,25 +379,46 @@ pub fn host_step_all(jobs: &mut [HostStepJob], workspaces: &mut [Workspace]) -> 
         }
         return Ok(());
     }
+    // Same contiguous div_ceil partition as the spawn-era scaffold; each
+    // band pairs a job chunk with its own workspace, handed to exactly
+    // one band closure through a take-once slot.
     let chunk = jobs.len().div_ceil(nt);
-    let results: Vec<Result<()>> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (band, ws) in jobs.chunks_mut(chunk).zip(workspaces.iter_mut()) {
-            handles.push(s.spawn(move || {
+    let bands: Vec<_> = jobs
+        .chunks_mut(chunk)
+        .zip(workspaces.iter_mut())
+        .map(|(band, ws)| Mutex::new(Some((band, ws))))
+        .collect();
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let nbands = bands.len();
+    // Pin the band plan to exactly `nbands` one-row bands. When the pool
+    // runs the batch inline (serial scope / nested call) a single closure
+    // invocation receives the whole index range, so it drains every band.
+    threads::with_budget(nbands, || {
+        pool::par_row_bands(nbands, usize::MAX / 4, |_, range| {
+            for idx in range {
+                let Some((band, ws)) = bands[idx].lock().unwrap().take() else {
+                    continue;
+                };
                 threads::serial(|| {
                     for job in band.iter_mut() {
-                        job.state.host_step(job.w, &job.grad, job.lr, job.t, job.rng, ws)?;
+                        let r =
+                            job.state.host_step(job.w, &job.grad, job.lr, job.t, job.rng, ws);
+                        if let Err(e) = r {
+                            let mut slot = first_err.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            return;
+                        }
                     }
-                    Ok(())
-                })
-            }));
-        }
-        handles.into_iter().map(|h| h.join().expect("host step worker panicked")).collect()
+                });
+            }
+        });
     });
-    for r in results {
-        r?;
+    match first_err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -360,6 +491,32 @@ mod tests {
         assert_eq!(st.step_method().unwrap(), "adamw");
         let st = OptState::for_param(Method::MlorcLion, &vec_spec, &preset).unwrap();
         assert_eq!(st.step_method().unwrap(), "lion");
+    }
+
+    #[test]
+    fn ckpt_meta_roundtrip_all_variants() {
+        // Every variant must survive meta + tensor-field serialization;
+        // flags (left/refreshed) and tensor shapes are the load-bearing
+        // part, byte-exactness is covered by tests/checkpoint_v2.rs.
+        let preset = fake_preset(4);
+        let spec = mat_spec(12, 40);
+        for &method in Method::all() {
+            let st = OptState::for_param(method, &spec, &preset).unwrap();
+            let meta = st.ckpt_meta();
+            let fields: std::collections::BTreeMap<&'static str, Tensor> =
+                st.tensor_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
+            let back = OptState::from_ckpt(&meta, |k| {
+                fields.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing field {k}"))
+            })
+            .unwrap();
+            assert_eq!(back.variant_name(), st.variant_name(), "{method:?}");
+            assert_eq!(back.state_bytes(), st.state_bytes(), "{method:?}");
+        }
+        assert!(OptState::from_ckpt(
+            &Json::obj(vec![("variant", Json::str("sgd"))]),
+            |_| Ok(Tensor::zeros(&[1]))
+        )
+        .is_err());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! gradient residency is one parameter, not the whole model (the memory
 //! accountant models both modes; Table 6).
 
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -17,6 +18,7 @@ use crate::optim::OptHp;
 use crate::runtime::{GraphSpec, Preset, Runtime, ValRef};
 use crate::tensor::Tensor;
 
+use super::checkpoint::{self, OptSnapshot};
 use super::memory::{MemoryAccountant, MemoryReport};
 use super::metrics::{EvalRecord, MetricsLog, StepRecord};
 use super::params::ParamStore;
@@ -195,6 +197,50 @@ impl<'rt> Trainer<'rt> {
 
     pub fn step_count(&self) -> usize {
         self.step
+    }
+
+    /// Write a full v2 snapshot (params, every `OptState`, RNG stream
+    /// positions, step count) into the rotated checkpoint root `dir`.
+    pub fn save_full_checkpoint(&self, dir: &Path) -> Result<()> {
+        let opt: Vec<(String, &OptState)> = (0..self.trainable.len())
+            .map(|i| (self.trainable_spec(i).name.clone(), &self.states[i]))
+            .collect();
+        let snap = OptSnapshot { opt, rng_data: &self.rng_data, omega: &self.omega_streams };
+        checkpoint::save_checkpoint_v2_rotated(
+            dir,
+            self.step,
+            &self.cfg,
+            &self.params,
+            self.adapters.as_ref(),
+            &snap,
+        )?;
+        Ok(())
+    }
+
+    /// Resume this trainer from a v2 checkpoint (direct snapshot dir or
+    /// rotated root): restores params/adapters, every optimizer state,
+    /// the data + Omega RNG stream positions and the step count, so the
+    /// continued run is bit-identical to one that was never interrupted.
+    /// Returns the restored step count.
+    pub fn resume_from(&mut self, dir: &Path) -> Result<usize> {
+        let ck = checkpoint::load_for_resume(
+            dir,
+            &self.cfg,
+            &mut self.params,
+            self.adapters.as_mut(),
+            self.omega_streams.len(),
+        )?;
+        for i in 0..self.trainable.len() {
+            let name = self.trainable_spec(i).name.clone();
+            match ck.opt.get(&name) {
+                Some(st) => self.states[i] = st.clone(),
+                None => bail!("checkpoint missing optimizer state for '{name}'"),
+            }
+        }
+        self.omega_streams = ck.omega;
+        self.rng_data = ck.rng_data;
+        self.step = ck.step;
+        Ok(ck.step)
     }
 
     fn trainable_spec(&self, i: usize) -> &crate::runtime::ParamSpec {
@@ -678,10 +724,24 @@ impl<'rt> Trainer<'rt> {
 
     /// Full training run with logging/eval cadence; returns the outcome.
     pub fn train(&mut self) -> Result<TrainOutcome> {
+        self.train_with_checkpoints(0, None)
+    }
+
+    /// [`Trainer::train`] with a periodic checkpoint hook: every `every`
+    /// steps (0 = off) a full v2 snapshot goes into the rotated root
+    /// `ckpt_root`; a final snapshot is always written when a root is
+    /// given. Starts from the current step, so a resumed trainer
+    /// continues instead of restarting.
+    pub fn train_with_checkpoints(
+        &mut self,
+        every: usize,
+        ckpt_root: Option<&Path>,
+    ) -> Result<TrainOutcome> {
         let t0 = Instant::now();
         let total = self.cfg.steps;
+        let start = self.step;
         let mut last_eval = None;
-        for s in 0..total {
+        for s in start..total {
             let loss = self.train_step()?;
             if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
                 log::info!(
@@ -689,6 +749,11 @@ impl<'rt> Trainer<'rt> {
                     self.metrics.run_name,
                     self.cfg.peak_lr * self.cfg.schedule.factor(s),
                 );
+            }
+            if let Some(root) = ckpt_root {
+                if every > 0 && (s + 1) % every == 0 && s + 1 < total {
+                    self.save_full_checkpoint(root)?;
+                }
             }
             if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
                 let ev = self.evaluate()?;
@@ -701,6 +766,9 @@ impl<'rt> Trainer<'rt> {
                 );
                 last_eval = Some(ev);
             }
+        }
+        if let Some(root) = ckpt_root {
+            self.save_full_checkpoint(root)?;
         }
         if self.cfg.eval_every == 0 || total % self.cfg.eval_every.max(1) != 0 {
             last_eval = Some(self.evaluate()?);

@@ -16,6 +16,7 @@ pub mod data;
 pub mod linalg;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 pub mod util;

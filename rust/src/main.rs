@@ -2,16 +2,22 @@
 //!
 //! Subcommands:
 //!   train   — one fine-tuning run (method x task x preset)
+//!   submit  — enqueue a fine-tuning job into a serve spool
+//!   serve   — drain a spool with N concurrent jobs (crash-safe resume)
+//!   status  — aggregate per-job status across a spool
 //!   bench   — regenerate a paper table/figure (see DESIGN.md §5)
 //!   info    — artifact/manifest inventory
 //!   memory  — analytic memory report for a preset (Table 1 style)
+
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use mlorc::bench_harness::{run_experiment, Scale, EXPERIMENT_IDS};
 use mlorc::config::{Method, RunConfig, TaskKind};
-use mlorc::coordinator::{save_checkpoint, Trainer};
+use mlorc::coordinator::Trainer;
 use mlorc::runtime::{Manifest, Runtime};
+use mlorc::serve::{self, Engine, JobSpec, ServeOpts, Spool};
 use mlorc::util::{cli::Args, fsutil, logger};
 
 fn main() {
@@ -26,6 +32,9 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("status") => cmd_status(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         Some("memory") => cmd_memory(&args),
@@ -46,17 +55,25 @@ USAGE: mlorc <subcommand> [--options]
   train  --preset tiny --method mlorc_adamw --task math_chain --steps 200
          [--lr 2e-3] [--seed 0] [--eval-every 50] [--spectral-every 0]
          [--host-opt] [--opt-threads N]
-         [--save-metrics results/run.json] [--checkpoint-dir ckpt/]
+         [--save-metrics results/run.json]
+         [--checkpoint-dir ckpt/] [--checkpoint-every N] [--resume ckpt/]
+  submit --spool spool/ --method mlorc_adamw --steps 200
+         [--engine host|graph] [--preset <name>] [--task <t>] [--lr X]
+         [--seed N] [--checkpoint-every N] [--id jobNNN_name]
+  serve  --spool spool/ [--jobs 2] [--drain] [--poll-ms 500]
+  status --spool spool/ [--json] [--expect-all-done]
   bench  --experiment <id> [--quick] [--steps N] [--seeds K]
          ids: {ids}
   memory --preset tiny [--per-layer]
   info
 
 methods: {methods}
-tasks:   math_chain, stack_code, synglue_<{glue}>",
+tasks:   math_chain, stack_code, synglue_<{glue}>
+host engine presets (no artifacts needed): {hosts}",
         ids = EXPERIMENT_IDS.join(", "),
         methods = Method::all().iter().map(|m| m.name()).collect::<Vec<_>>().join(", "),
         glue = mlorc::data::SYNGLUE_NAMES.join("|"),
+        hosts = serve::host_preset_names().join(", "),
     );
 }
 
@@ -87,7 +104,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.log_every = args.get_usize("log-every", 10)?;
     let save_metrics = args.get("save-metrics").map(|s| s.to_string());
     let ckpt_dir = args.get("checkpoint-dir").map(|s| s.to_string());
+    let ckpt_every = args.get_usize("checkpoint-every", 0)?;
+    let resume = args.get("resume").map(|s| s.to_string());
     args.reject_unknown()?;
+    if ckpt_every > 0 && ckpt_dir.is_none() {
+        bail!("--checkpoint-every {ckpt_every} needs --checkpoint-dir <dir> to write into");
+    }
 
     let (manifest, rt) = open_runtime()?;
     let preset_spec = manifest.preset(&preset)?;
@@ -100,7 +122,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         preset_spec.model.rank
     );
     let mut trainer = Trainer::new(&rt, preset_spec, cfg.clone())?;
-    let outcome = trainer.train()?;
+    if let Some(dir) = &resume {
+        let step = trainer.resume_from(Path::new(dir))?;
+        log::info!("resumed from {dir} at step {step} (v2 optimizer state + RNG streams restored)");
+    }
+    let outcome = trainer.train_with_checkpoints(ckpt_every, ckpt_dir.as_deref().map(Path::new))?;
     if let Some(ev) = &outcome.eval {
         log::info!(
             "done: final loss {:.4}, eval loss {:.4}, acc {:.3}, exact match {:.3} ({:.1}s)",
@@ -123,14 +149,91 @@ fn cmd_train(args: &Args) -> Result<()> {
         log::info!("metrics -> {path}");
     }
     if let Some(dir) = ckpt_dir {
-        save_checkpoint(
-            std::path::Path::new(&dir),
-            trainer.step_count(),
-            &cfg,
-            &trainer.params,
-            trainer.adapters.as_ref(),
-        )?;
-        log::info!("checkpoint -> {dir}");
+        // train_with_checkpoints already wrote the final v2 snapshot
+        // (params + full optimizer state + RNG streams) into the root.
+        log::info!("checkpoint (v2, resumable) -> {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let spool_dir = args.get_or("spool", "spool").to_string();
+    let engine = Engine::parse(args.get_or("engine", "host"))?;
+    let default_preset = match engine {
+        Engine::Host => "host-nano",
+        Engine::Graph => "tiny",
+    };
+    let preset = args.get_or("preset", default_preset).to_string();
+    let method = Method::parse(args.get_or("method", "mlorc_adamw"))?;
+    let task = TaskKind::parse(args.get_or("task", "math_chain"))?;
+    let steps = args.get_usize("steps", 200)?;
+    let mut cfg = RunConfig::new(&preset, method, task, steps);
+    cfg.peak_lr = args.get_f64("lr", cfg.peak_lr as f64)? as f32;
+    cfg.seed = args.get_u64("seed", 0)?;
+    cfg.opt_threads = args.get_usize("opt-threads", 0)?;
+    cfg.host_opt = args.flag("host-opt");
+    cfg.log_every = 0;
+    let checkpoint_every = args.get_usize("checkpoint-every", 10)?;
+    let id = args.get("id").map(|s| s.to_string());
+    args.reject_unknown()?;
+
+    let spool = Spool::open(Path::new(&spool_dir))?;
+    let id = match id {
+        Some(i) => i,
+        None => spool.next_job_id(method.name())?,
+    };
+    let spec = JobSpec { id, engine, checkpoint_every, cfg };
+    let path = spool.submit(&spec)?;
+    println!("submitted {} -> {}", spec.id, path.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spool_dir = args.get_or("spool", "spool").to_string();
+    let opts = ServeOpts {
+        jobs: args.get_usize("jobs", 2)?,
+        drain: args.flag("drain"),
+        poll_ms: args.get_u64("poll-ms", 500)?,
+        die_after_checkpoints: args.get_usize("die-after-checkpoints", 0)?,
+    };
+    args.reject_unknown()?;
+    let spool = Spool::open(Path::new(&spool_dir))?;
+    let summary = serve::serve(&spool, &opts)?;
+    log::info!(
+        "serve: {} done, {} failed ({} recovered at startup)",
+        summary.done,
+        summary.failed,
+        summary.recovered
+    );
+    if summary.failed > 0 {
+        bail!("{} job(s) failed — see {}/status/", summary.failed, spool_dir);
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    let spool_dir = args.get_or("spool", "spool").to_string();
+    let as_json = args.flag("json");
+    let expect_all_done = args.flag("expect-all-done");
+    args.reject_unknown()?;
+    let spool = Spool::open(Path::new(&spool_dir))?;
+    let rows = serve::aggregate(&spool)?;
+    if as_json {
+        println!(
+            "{}",
+            mlorc::util::json::Json::arr(rows.iter().map(|r| r.to_json())).to_string_pretty()
+        );
+    } else {
+        println!("{}", serve::render_table(&rows));
+    }
+    if expect_all_done {
+        if rows.is_empty() {
+            bail!("spool {spool_dir} has no jobs");
+        }
+        let not_done = rows.iter().filter(|r| r.state != "done").count();
+        if not_done > 0 {
+            bail!("{not_done} job(s) not done");
+        }
     }
     Ok(())
 }

@@ -1,0 +1,338 @@
+//! Host-only training engine for the serve scheduler.
+//!
+//! The graph engine (`coordinator::Trainer`) needs AOT artifacts and a
+//! `pjrt`-enabled build; hermetic builds have neither. The host engine
+//! gives `mlorc serve` a real optimizer workload with zero artifacts:
+//! per-parameter synthetic least-squares fine-tuning. Each matrix
+//! parameter `W` chases a hidden target `W*` under a fresh Gaussian probe
+//! batch `X` every step:
+//!
+//! ```text
+//! R = (W - W*) X          loss_i = ||R||_F^2 / (m * batch)
+//! G = R X^T / batch
+//! ```
+//!
+//! so the gradients are full-rank, step-dependent matrices exercising the
+//! exact production update path: `OptState::host_step` for every method
+//! (MLorc factored fast path included), fanned out through
+//! [`host_step_all`] on the worker pool, with per-parameter Omega RNG
+//! streams. Everything is bit-deterministic across thread budgets and
+//! worker counts, and checkpoints use the same v2 format as the real
+//! trainer — which is what lets the serve acceptance tests pin
+//! "concurrent == solo" and "kill/resume == uninterrupted" to the bit.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{
+    host_step_all, load_for_resume, save_checkpoint_v2_rotated, HostStepJob, OptSnapshot,
+    OptState, ParamStore,
+};
+use crate::linalg::{matmul, matmul_a_bt, threads, Rng, Workspace};
+use crate::runtime::ParamSpec;
+use crate::tensor::Tensor;
+
+/// Per-worker `Workspace` retention cap (mirrors the trainer's).
+const HOST_WS_TRIM_BYTES: usize = 8 << 20;
+
+/// Shapes + batch + sketch width for one synthetic host preset. Mixed
+/// tall/wide/square matrices keep both GaLore/LDAdamW projector sides and
+/// the MLorc left/right factors honest; 1-D entries take the plain
+/// vector path like LN gains do in the real model.
+struct HostPreset {
+    shapes: &'static [&'static [usize]],
+    batch: usize,
+    l: usize,
+}
+
+fn host_preset(name: &str) -> Result<HostPreset> {
+    Ok(match name {
+        "host-nano" => HostPreset {
+            shapes: &[&[48, 20], &[20, 48], &[32, 32], &[16]],
+            batch: 8,
+            l: 4,
+        },
+        "host-tiny" => HostPreset {
+            shapes: &[&[96, 64], &[64, 96], &[64, 64], &[128, 32], &[32]],
+            batch: 16,
+            l: 4,
+        },
+        "host-small" => HostPreset {
+            shapes: &[&[192, 128], &[128, 192], &[128, 128], &[256, 64], &[64]],
+            batch: 32,
+            l: 8,
+        },
+        other => bail!(
+            "unknown host preset '{other}' (host engine presets: {})",
+            host_preset_names().join(", ")
+        ),
+    })
+}
+
+/// The presets the host engine understands.
+pub fn host_preset_names() -> Vec<&'static str> {
+    vec!["host-nano", "host-tiny", "host-small"]
+}
+
+/// A self-contained host-side trainer: same step/checkpoint/resume
+/// surface as `coordinator::Trainer`, no runtime or artifacts.
+pub struct HostTrainer {
+    pub cfg: RunConfig,
+    pub params: ParamStore,
+    targets: Vec<Tensor>,
+    states: Vec<OptState>,
+    rng_data: Rng,
+    omega_streams: Vec<Rng>,
+    host_ws: Vec<Workspace>,
+    batch: usize,
+    step: usize,
+    last_loss: f32,
+}
+
+impl HostTrainer {
+    pub fn new(mut cfg: RunConfig) -> Result<HostTrainer> {
+        cfg.galore_update_freq = cfg.galore_update_freq.max(1);
+        if cfg.method.is_lora() {
+            bail!(
+                "host engine has no adapter graphs; method '{}' needs the graph engine",
+                cfg.method.name()
+            );
+        }
+        let hp = host_preset(&cfg.preset)?;
+        // Same stream-splitting scheme as Trainer::new: init / data /
+        // omega tags, plus a target stream the graph path has no use for.
+        let mut rng = Rng::new(cfg.seed);
+        let mut init_rng = rng.split(1);
+        let rng_data = rng.split(2);
+        let mut rng_omega = rng.split(3);
+        let mut tgt_rng = rng.split(4);
+
+        let mut specs = Vec::new();
+        let mut values = Vec::new();
+        let mut targets = Vec::new();
+        for (i, shape) in hp.shapes.iter().enumerate() {
+            let matrix = shape.len() == 2;
+            specs.push(ParamSpec {
+                name: format!("p{i}.{}", if matrix { "w" } else { "b" }),
+                shape: shape.to_vec(),
+                kind: if matrix { "matrix" } else { "vector" }.to_string(),
+                compressed: matrix,
+            });
+            values.push(init_rng.gaussian_tensor(shape, 0.1));
+            targets.push(tgt_rng.gaussian_tensor(shape, 0.5));
+        }
+        let params = ParamStore { specs, values };
+        let states = params
+            .specs
+            .iter()
+            .map(|s| OptState::for_param_with_l(cfg.method, s, hp.l))
+            .collect::<Result<Vec<_>>>()?;
+        let omega_streams: Vec<Rng> =
+            (0..params.len()).map(|i| rng_omega.split(i as u64 + 1)).collect();
+        // Workspace pool sized by the job's thread slice (the serve
+        // scheduler pins one via threads::with_budget); worker count
+        // never changes the bits, only the wall clock.
+        let pool = if cfg.opt_threads > 0 { cfg.opt_threads } else { threads::effective_budget() };
+        let host_ws: Vec<Workspace> = (0..pool.max(1)).map(|_| Workspace::new()).collect();
+
+        Ok(HostTrainer {
+            cfg,
+            params,
+            targets,
+            states,
+            rng_data,
+            omega_streams,
+            host_ws,
+            batch: hp.batch,
+            step: 0,
+            last_loss: f32::NAN,
+        })
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.last_loss
+    }
+
+    /// Optimizer-state footprint in bytes (what a checkpoint cadence
+    /// pays per snapshot, on top of the parameters).
+    pub fn opt_state_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.state_bytes()).sum()
+    }
+
+    /// One synthetic training step; returns the mean per-parameter loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let step = self.step;
+        let lr = self.cfg.peak_lr * self.cfg.schedule.factor(step);
+        let t = step + 1;
+        let batch = self.batch;
+
+        // Batch draws happen in fixed parameter order from the single
+        // data stream, so they are independent of the stepping schedule —
+        // the same property the graph trainer's Omega streams have.
+        let mut grads: Vec<Tensor> = Vec::with_capacity(self.params.len());
+        let mut loss_sum = 0.0f64;
+        {
+            let HostTrainer { params, targets, rng_data, .. } = self;
+            for (w, tgt) in params.values.iter().zip(targets.iter()) {
+                if w.shape.len() == 2 {
+                    let (m, n) = w.dims2()?;
+                    let x = rng_data.gaussian_tensor(&[n, batch], 1.0);
+                    let mut diff = w.clone();
+                    for (d, ti) in diff.data.iter_mut().zip(&tgt.data) {
+                        *d -= ti;
+                    }
+                    let r = matmul(&diff, &x); // m x batch residual
+                    loss_sum += (r.norm_fro() as f64).powi(2) / (m * batch) as f64;
+                    let mut g = matmul_a_bt(&r, &x); // m x n
+                    let inv_b = 1.0 / batch as f32;
+                    for gi in g.data.iter_mut() {
+                        *gi *= inv_b;
+                    }
+                    grads.push(g);
+                } else {
+                    let mut g = w.clone();
+                    for (gi, ti) in g.data.iter_mut().zip(&tgt.data) {
+                        *gi -= ti;
+                    }
+                    loss_sum +=
+                        g.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+                            / g.len().max(1) as f64;
+                    grads.push(g);
+                }
+            }
+        }
+        let loss = (loss_sum / self.params.len().max(1) as f64) as f32;
+
+        // GaLore projector cadence, mirroring Trainer::apply_updates_host.
+        if step % self.cfg.galore_update_freq == 0 {
+            for state in self.states.iter_mut() {
+                if let OptState::Galore { refreshed, .. } = state {
+                    *refreshed = false;
+                }
+            }
+        }
+
+        let HostTrainer { params, states, omega_streams, host_ws, .. } = self;
+        let mut jobs: Vec<HostStepJob> = params
+            .values
+            .iter_mut()
+            .zip(states.iter_mut())
+            .zip(omega_streams.iter_mut())
+            .zip(grads.into_iter())
+            .map(|(((w, state), rng), grad)| HostStepJob { w, grad, state, rng, lr, t })
+            .collect();
+        host_step_all(&mut jobs, host_ws)?;
+        drop(jobs);
+        for ws in host_ws.iter_mut() {
+            ws.trim(HOST_WS_TRIM_BYTES);
+        }
+
+        self.step += 1;
+        self.last_loss = loss;
+        Ok(loss)
+    }
+
+    /// Write a full v2 snapshot into the rotated checkpoint root.
+    pub fn save_checkpoint(&self, root: &Path) -> Result<()> {
+        let opt: Vec<(String, &OptState)> = self
+            .params
+            .specs
+            .iter()
+            .zip(&self.states)
+            .map(|(spec, st)| (spec.name.clone(), st))
+            .collect();
+        let snap = OptSnapshot { opt, rng_data: &self.rng_data, omega: &self.omega_streams };
+        save_checkpoint_v2_rotated(root, self.step, &self.cfg, &self.params, None, &snap)?;
+        Ok(())
+    }
+
+    /// Resume from a v2 checkpoint (direct snapshot dir or rotated
+    /// root); the continued run is bit-identical to an uninterrupted one.
+    pub fn resume_from(&mut self, dir: &Path) -> Result<usize> {
+        let ck = load_for_resume(
+            dir,
+            &self.cfg,
+            &mut self.params,
+            None,
+            self.omega_streams.len(),
+        )?;
+        for (spec, state) in self.params.specs.iter().zip(self.states.iter_mut()) {
+            match ck.opt.get(&spec.name) {
+                Some(st) => *state = st.clone(),
+                None => bail!("checkpoint missing optimizer state for '{}'", spec.name),
+            }
+        }
+        self.omega_streams = ck.omega;
+        self.rng_data = ck.rng_data;
+        self.step = ck.step;
+        Ok(ck.step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, TaskKind};
+
+    fn cfg(method: Method, steps: usize) -> RunConfig {
+        let mut c = RunConfig::new("host-nano", method, TaskKind::MathChain, steps);
+        c.peak_lr = 0.05;
+        c.log_every = 0;
+        c
+    }
+
+    #[test]
+    fn loss_decreases_on_least_squares() {
+        let mut tr = HostTrainer::new(cfg(Method::MlorcAdamW, 40)).unwrap();
+        let first = tr.train_step().unwrap();
+        let mut last = first;
+        for _ in 0..39 {
+            last = tr.train_step().unwrap();
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first * 0.9, "loss did not decrease: {first} -> {last}");
+        assert_eq!(tr.step_count(), 40);
+        assert!(tr.opt_state_bytes() > 0);
+    }
+
+    #[test]
+    fn every_nonlora_method_steps() {
+        for &method in Method::all() {
+            if method.is_lora() {
+                assert!(HostTrainer::new(cfg(method, 2)).is_err());
+                continue;
+            }
+            let mut tr = HostTrainer::new(cfg(method, 2)).unwrap();
+            for _ in 0..2 {
+                let loss = tr.train_step().unwrap_or_else(|e| panic!("{method:?}: {e:#}"));
+                assert!(loss.is_finite(), "{method:?} loss not finite");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_budgets() {
+        let run = |budget: usize| {
+            threads::with_budget(budget, || {
+                let mut tr = HostTrainer::new(cfg(Method::MlorcLion, 6)).unwrap();
+                for _ in 0..6 {
+                    tr.train_step().unwrap();
+                }
+                tr.params.values.clone()
+            })
+        };
+        let base = run(1);
+        for budget in [2usize, 8] {
+            let got = run(budget);
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.data, b.data, "budget {budget} diverged");
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! `mlorc serve` — a multi-job fine-tuning service with crash-safe
+//! compressed-momentum checkpoints.
+//!
+//! MLorc's core observation (paper §3, Table 1) is that the momentum of
+//! matrix parameters compresses to rank-l factors at full-parameter
+//! quality — which means the *entire* optimizer state is small enough to
+//! checkpoint every few steps. That turns cheap preemption/resume into
+//! the natural serving model: a file-backed job spool ([`queue`]), a
+//! scheduler draining it with N concurrent trainers on fair thread
+//! slices ([`scheduler`]), per-job status files plus an aggregator
+//! ([`status`]), and a host-only engine ([`host`]) so the whole service
+//! runs — and is CI-tested — without AOT artifacts.
+//!
+//! Determinism contract: a job served concurrently is bit-identical to
+//! the same config run solo, and a job killed mid-run resumes from its
+//! latest v2 checkpoint to bit-identical final parameters
+//! (`tests/serve_spool.rs`, `tests/checkpoint_v2.rs`).
+
+pub mod host;
+pub mod queue;
+pub mod scheduler;
+pub mod status;
+
+pub use host::{host_preset_names, HostTrainer};
+pub use queue::{Engine, JobSpec, Spool, LIFECYCLE_DIRS};
+pub use scheduler::{serve, ServeOpts, ServeSummary, CRASH_EXIT_CODE};
+pub use status::{aggregate, render_table, JobStatus};

@@ -1,0 +1,356 @@
+//! File-backed job spool with atomic claim-by-rename.
+//!
+//! Layout under the spool root:
+//!
+//! ```text
+//! queue/<id>.json    submitted, unclaimed
+//! running/<id>.json  claimed by a scheduler worker (renamed from queue/)
+//! done/<id>.json     finished successfully
+//! failed/<id>.json   finished with an error (status/<id>.json has why)
+//! status/<id>.json   latest per-job progress (serve::status)
+//! work/<id>/         job scratch: rotated v2 checkpoints, metrics
+//! ```
+//!
+//! Lifecycle is `queued -> running -> done|failed`. The claim is a single
+//! `rename(2)`: exactly one scheduler worker wins a given spec file,
+//! which is the entire concurrency story — no locks, no daemon, no
+//! registry. A `kill -9` leaves at worst a spec stranded in `running/`;
+//! the next scheduler start sweeps those back into `queue/`
+//! ([`Spool::recover_interrupted`]) and the job resumes from its latest
+//! v2 checkpoint under `work/<id>/ckpt/`.
+//!
+//! Deployment note: submitters and status readers can share a spool
+//! freely, but run one *scheduler* per spool — the recovery sweep cannot
+//! tell a crashed scheduler's jobs from a live one's, so a second
+//! scheduler would re-queue work the first is still running.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+/// The four lifecycle directories, in pipeline order.
+pub const LIFECYCLE_DIRS: [&str; 4] = ["queue", "running", "done", "failed"];
+
+/// Which trainer executes a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Synthetic least-squares fine-tuning entirely on the host
+    /// (`serve::HostTrainer`) — no artifacts required.
+    Host,
+    /// The real graph trainer (`coordinator::Trainer`) — needs `make
+    /// artifacts` and a `pjrt`-enabled build.
+    Graph,
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Host => "host",
+            Engine::Graph => "graph",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "host" => Engine::Host,
+            "graph" => Engine::Graph,
+            _ => bail!("unknown engine '{s}' (host | graph)"),
+        })
+    }
+}
+
+/// One queued fine-tuning run: a `RunConfig` plus serve-level knobs.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: String,
+    pub engine: Engine,
+    /// Checkpoint cadence in steps (0 = final snapshot only).
+    pub checkpoint_every: usize,
+    pub cfg: RunConfig,
+}
+
+impl JobSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("engine", Json::str(self.engine.name())),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("config", self.cfg.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        Ok(JobSpec {
+            id: j.req("id")?.as_str()?.to_string(),
+            engine: Engine::parse(j.req("engine")?.as_str()?)?,
+            checkpoint_every: j.req("checkpoint_every")?.as_usize()?,
+            cfg: RunConfig::from_json(j.req("config")?)?,
+        })
+    }
+}
+
+/// Handle on a spool directory. Cheap to open; all state is on disk, so
+/// any number of submitters/schedulers/status readers can share one.
+pub struct Spool {
+    root: PathBuf,
+}
+
+impl Spool {
+    /// Open (creating if needed) a spool rooted at `root`.
+    pub fn open(root: &Path) -> Result<Spool> {
+        for d in ["queue", "running", "done", "failed", "status", "work"] {
+            let p = root.join(d);
+            std::fs::create_dir_all(&p)
+                .with_context(|| format!("creating spool dir {}", p.display()))?;
+        }
+        Ok(Spool { root: root.to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn dir(&self, which: &str) -> PathBuf {
+        self.root.join(which)
+    }
+
+    fn spec_path(&self, state: &str, id: &str) -> PathBuf {
+        self.dir(state).join(format!("{id}.json"))
+    }
+
+    /// Per-job scratch directory (checkpoints, metrics).
+    pub fn work_dir(&self, id: &str) -> PathBuf {
+        self.dir("work").join(id)
+    }
+
+    /// Rotated v2 checkpoint root for a job.
+    pub fn checkpoint_root(&self, id: &str) -> PathBuf {
+        self.work_dir(id).join("ckpt")
+    }
+
+    pub fn status_path(&self, id: &str) -> PathBuf {
+        self.dir("status").join(format!("{id}.json"))
+    }
+
+    /// Enqueue a job. Fails if any lifecycle dir already holds the id.
+    pub fn submit(&self, spec: &JobSpec) -> Result<PathBuf> {
+        if spec.id.is_empty()
+            || spec.id.chars().any(|c| c == '/' || c == '\\')
+            || spec.id.contains("..")
+        {
+            bail!("job id '{}' must be a plain file name", spec.id);
+        }
+        for state in LIFECYCLE_DIRS {
+            if self.spec_path(state, &spec.id).exists() {
+                bail!("job '{}' already exists in {state}/", spec.id);
+            }
+        }
+        let path = self.spec_path("queue", &spec.id);
+        fsutil::write_atomic(&path, spec.to_json().to_string_pretty().as_bytes())?;
+        Ok(path)
+    }
+
+    /// A fresh sequential id `jobNNN_<suffix>` (scans every lifecycle dir
+    /// so ids never collide with finished jobs).
+    pub fn next_job_id(&self, suffix: &str) -> Result<String> {
+        let mut max = 0usize;
+        for state in LIFECYCLE_DIRS {
+            for id in self.jobs_in(state)? {
+                if let Some(rest) = id.strip_prefix("job") {
+                    let digits: String =
+                        rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                    if let Ok(n) = digits.parse::<usize>() {
+                        max = max.max(n);
+                    }
+                }
+            }
+        }
+        Ok(format!("job{:03}_{suffix}", max + 1))
+    }
+
+    /// Sorted job ids currently in a lifecycle dir.
+    pub fn jobs_in(&self, state: &str) -> Result<Vec<String>> {
+        let dir = self.dir(state);
+        let entries =
+            std::fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?;
+        let mut ids = Vec::new();
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(stem) = name.strip_suffix(".json") {
+                ids.push(stem.to_string());
+            }
+        }
+        ids.sort();
+        Ok(ids)
+    }
+
+    /// Load a job spec from a lifecycle dir (the file name is the id of
+    /// record; a drifted `id` field inside the file is overridden).
+    pub fn load_spec(&self, state: &str, id: &str) -> Result<JobSpec> {
+        let path = self.spec_path(state, id);
+        let mut spec = JobSpec::from_json(&Json::from_file(&path)?)
+            .with_context(|| format!("job spec {}", path.display()))?;
+        spec.id = id.to_string();
+        Ok(spec)
+    }
+
+    /// Claim the next queued job by renaming its spec into `running/`.
+    /// Rename is atomic, so under concurrent schedulers each spec is won
+    /// by exactly one caller; losing a race just moves on to the next
+    /// candidate. Returns `None` when the queue is empty.
+    pub fn claim_next(&self) -> Result<Option<JobSpec>> {
+        loop {
+            let mut claimed = None;
+            for id in self.jobs_in("queue")? {
+                let from = self.spec_path("queue", &id);
+                let to = self.spec_path("running", &id);
+                match std::fs::rename(&from, &to) {
+                    Ok(()) => {
+                        claimed = Some(id);
+                        break;
+                    }
+                    // another worker won this spec; try the next one
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                    Err(e) => {
+                        return Err(e).with_context(|| format!("claiming job {id}"));
+                    }
+                }
+            }
+            let Some(id) = claimed else { return Ok(None) };
+            match self.load_spec("running", &id) {
+                Ok(spec) => return Ok(Some(spec)),
+                Err(e) => {
+                    // Quarantine unreadable specs instead of wedging the
+                    // worker; the parse error lands in the log.
+                    log::error!("job {id}: unreadable spec ({e:#}); moving to failed/");
+                    let _ = self.finish(&id, false);
+                }
+            }
+        }
+    }
+
+    /// Move a running job to its terminal state.
+    pub fn finish(&self, id: &str, ok: bool) -> Result<()> {
+        let from = self.spec_path("running", id);
+        let to = self.spec_path(if ok { "done" } else { "failed" }, id);
+        std::fs::rename(&from, &to).with_context(|| format!("finishing job {id}"))?;
+        Ok(())
+    }
+
+    /// Sweep `running/` back into `queue/` — called once at scheduler
+    /// startup, when anything still "running" is a crash leftover. The
+    /// re-queued jobs resume from their latest checkpoint when claimed.
+    pub fn recover_interrupted(&self) -> Result<Vec<String>> {
+        let mut recovered = Vec::new();
+        for id in self.jobs_in("running")? {
+            let from = self.spec_path("running", &id);
+            let to = self.spec_path("queue", &id);
+            match std::fs::rename(&from, &to) {
+                Ok(()) => recovered.push(id),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => {
+                    return Err(e).with_context(|| format!("recovering job {id}"));
+                }
+            }
+        }
+        Ok(recovered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, TaskKind};
+
+    fn tmp_spool(tag: &str) -> (PathBuf, Spool) {
+        let root =
+            std::env::temp_dir().join(format!("mlorc_spool_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let spool = Spool::open(&root).unwrap();
+        (root, spool)
+    }
+
+    fn spec(id: &str) -> JobSpec {
+        JobSpec {
+            id: id.to_string(),
+            engine: Engine::Host,
+            checkpoint_every: 5,
+            cfg: RunConfig::new("host-nano", Method::MlorcAdamW, TaskKind::MathChain, 20),
+        }
+    }
+
+    #[test]
+    fn submit_claim_finish_lifecycle() {
+        let (root, spool) = tmp_spool("life");
+        spool.submit(&spec("job001_a")).unwrap();
+        spool.submit(&spec("job002_b")).unwrap();
+        // duplicate ids are rejected
+        assert!(spool.submit(&spec("job001_a")).is_err());
+        assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_a", "job002_b"]);
+
+        // claims come in sorted order and move the spec to running/
+        let first = spool.claim_next().unwrap().unwrap();
+        assert_eq!(first.id, "job001_a");
+        assert_eq!(first.engine, Engine::Host);
+        assert_eq!(spool.jobs_in("running").unwrap(), vec!["job001_a"]);
+
+        spool.finish("job001_a", true).unwrap();
+        assert_eq!(spool.jobs_in("done").unwrap(), vec!["job001_a"]);
+
+        let second = spool.claim_next().unwrap().unwrap();
+        spool.finish(&second.id, false).unwrap();
+        assert_eq!(spool.jobs_in("failed").unwrap(), vec!["job002_b"]);
+        assert!(spool.claim_next().unwrap().is_none());
+
+        // a finished id cannot be resubmitted
+        assert!(spool.submit(&spec("job002_b")).is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn recover_moves_running_back_to_queue() {
+        let (root, spool) = tmp_spool("recover");
+        spool.submit(&spec("job001_x")).unwrap();
+        let _ = spool.claim_next().unwrap().unwrap();
+        assert!(spool.jobs_in("queue").unwrap().is_empty());
+        // simulate a crash: the running spec is still there on "restart"
+        let recovered = spool.recover_interrupted().unwrap();
+        assert_eq!(recovered, vec!["job001_x"]);
+        assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_x"]);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn next_job_id_scans_all_lifecycle_dirs() {
+        let (root, spool) = tmp_spool("ids");
+        assert_eq!(spool.next_job_id("mlorc_adamw").unwrap(), "job001_mlorc_adamw");
+        spool.submit(&spec("job004_z")).unwrap();
+        let _ = spool.claim_next().unwrap();
+        spool.finish("job004_z", true).unwrap();
+        assert_eq!(spool.next_job_id("lion").unwrap(), "job005_lion");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn spec_json_roundtrip_and_bad_ids() {
+        let s = spec("job007_rt");
+        let back = JobSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.id, s.id);
+        assert_eq!(back.engine, s.engine);
+        assert_eq!(back.checkpoint_every, 5);
+        assert_eq!(back.cfg.method, s.cfg.method);
+        assert!(Engine::parse("tpu").is_err());
+
+        let (root, spool) = tmp_spool("badid");
+        assert!(spool.submit(&spec("../escape")).is_err());
+        assert!(spool.submit(&spec("a/b")).is_err());
+        assert!(spool.submit(&spec("")).is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

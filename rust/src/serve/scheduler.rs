@@ -1,0 +1,284 @@
+//! The serve scheduler: drains the spool with up to `jobs` concurrent
+//! workers, each driving one trainer pinned to a fair slice of the
+//! machine's thread budget.
+//!
+//! Fairness and determinism: every worker wraps its job in
+//! `threads::with_budget(budget / jobs)`, so N concurrent jobs split the
+//! kernel thread budget instead of oversubscribing N-fold — and because
+//! the linalg kernels are bit-deterministic across band counts, a job's
+//! results are bit-identical to running it solo at any budget (pinned by
+//! `tests/serve_spool.rs`).
+//!
+//! Crash safety: workers checkpoint running jobs every
+//! `JobSpec::checkpoint_every` steps through the rotated v2 writer; on
+//! startup the scheduler sweeps crash-stranded `running/` specs back
+//! into the queue, and a re-claimed job resumes from its latest
+//! checkpoint instead of restarting.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{has_checkpoint, Trainer};
+use crate::linalg::threads;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::fsutil;
+
+use super::host::HostTrainer;
+use super::queue::{Engine, JobSpec, Spool};
+use super::status::JobStatus;
+
+/// Exit code of the `--die-after-checkpoints` simulated crash (CI uses it
+/// to tell "crashed as instructed" from a real failure).
+pub const CRASH_EXIT_CODE: i32 = 86;
+
+pub struct ServeOpts {
+    /// Max concurrent jobs.
+    pub jobs: usize,
+    /// Exit once the queue is empty instead of polling for new work.
+    pub drain: bool,
+    /// Idle poll period when not draining.
+    pub poll_ms: u64,
+    /// Test hook: exit the whole process with [`CRASH_EXIT_CODE`] after
+    /// this many cadence checkpoints across all jobs (0 = off). Makes
+    /// the CI kill/restart smoke test deterministic.
+    pub die_after_checkpoints: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { jobs: 2, drain: false, poll_ms: 500, die_after_checkpoints: 0 }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ServeSummary {
+    pub done: usize,
+    pub failed: usize,
+    /// Crash-stranded jobs swept back into the queue at startup.
+    pub recovered: usize,
+}
+
+/// Run the scheduler until the spool drains (`opts.drain`) or forever.
+pub fn serve(spool: &Spool, opts: &ServeOpts) -> Result<ServeSummary> {
+    let recovered = spool.recover_interrupted()?;
+    for id in &recovered {
+        log::info!("serve: recovered interrupted job {id}; it will resume from its latest checkpoint");
+    }
+    let n = opts.jobs.max(1);
+    let slice = (threads::budget() / n).max(1);
+    log::info!(
+        "serve: up to {n} concurrent jobs, {slice} kernel threads each (budget {})",
+        threads::budget()
+    );
+    let counters = Counters::default();
+    std::thread::scope(|s| {
+        for worker in 0..n {
+            let counters = &counters;
+            s.spawn(move || worker_loop(spool, opts, slice, worker, counters));
+        }
+    });
+    // A worker that dies on a spool error must not masquerade as a clean
+    // drain: jobs may still be queued while we report success.
+    let claim_errors = counters.claim_errors.into_inner();
+    if claim_errors > 0 {
+        bail!(
+            "{claim_errors} scheduler worker(s) stopped on spool errors (see log); \
+             the queue may not be drained"
+        );
+    }
+    Ok(ServeSummary {
+        done: counters.done.into_inner(),
+        failed: counters.failed.into_inner(),
+        recovered: recovered.len(),
+    })
+}
+
+/// Cross-worker tallies shared through the scheduler's thread scope.
+#[derive(Default)]
+struct Counters {
+    ckpts: AtomicUsize,
+    done: AtomicUsize,
+    failed: AtomicUsize,
+    claim_errors: AtomicUsize,
+}
+
+fn worker_loop(spool: &Spool, opts: &ServeOpts, slice: usize, worker: usize, counters: &Counters) {
+    loop {
+        let claimed = match spool.claim_next() {
+            Ok(c) => c,
+            Err(e) => {
+                log::error!("serve worker {worker}: claiming from the spool failed: {e:#}");
+                counters.claim_errors.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+        };
+        let Some(spec) = claimed else {
+            if opts.drain {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(opts.poll_ms.max(10)));
+            continue;
+        };
+        log::info!(
+            "serve worker {worker}: job {} ({} / {} / {} steps, engine {})",
+            spec.id,
+            spec.cfg.preset,
+            spec.cfg.method.name(),
+            spec.cfg.steps,
+            spec.engine.name()
+        );
+        let result = threads::with_budget(slice, || run_job(spool, &spec, opts, &counters.ckpts));
+        match result {
+            Ok(status) => {
+                let _ = status.write(spool);
+                if let Err(e) = spool.finish(&spec.id, true) {
+                    log::error!("serve worker {worker}: moving {} to done/: {e:#}", spec.id);
+                }
+                counters.done.fetch_add(1, Ordering::SeqCst);
+                log::info!("serve worker {worker}: job {} done", spec.id);
+            }
+            Err(e) => {
+                let mut status = JobStatus::from_spec(&spec, "failed");
+                status.error = Some(format!("{e:#}"));
+                let _ = status.write(spool);
+                if let Err(e2) = spool.finish(&spec.id, false) {
+                    log::error!("serve worker {worker}: moving {} to failed/: {e2:#}", spec.id);
+                }
+                counters.failed.fetch_add(1, Ordering::SeqCst);
+                log::error!("serve worker {worker}: job {} failed: {e:#}", spec.id);
+            }
+        }
+    }
+}
+
+/// What the drive loop needs from a trainer — implemented by both the
+/// host engine and the graph `Trainer`.
+trait ServeEngine {
+    fn step(&mut self) -> Result<f32>;
+    fn step_count(&self) -> usize;
+    fn save(&self, root: &Path) -> Result<()>;
+    fn resume(&mut self, root: &Path) -> Result<usize>;
+    fn opt_state_bytes(&self) -> usize;
+}
+
+impl ServeEngine for HostTrainer {
+    fn step(&mut self) -> Result<f32> {
+        self.train_step()
+    }
+    fn step_count(&self) -> usize {
+        HostTrainer::step_count(self)
+    }
+    fn save(&self, root: &Path) -> Result<()> {
+        self.save_checkpoint(root)
+    }
+    fn resume(&mut self, root: &Path) -> Result<usize> {
+        self.resume_from(root)
+    }
+    fn opt_state_bytes(&self) -> usize {
+        HostTrainer::opt_state_bytes(self)
+    }
+}
+
+impl ServeEngine for Trainer<'_> {
+    fn step(&mut self) -> Result<f32> {
+        self.train_step()
+    }
+    fn step_count(&self) -> usize {
+        Trainer::step_count(self)
+    }
+    fn save(&self, root: &Path) -> Result<()> {
+        self.save_full_checkpoint(root)
+    }
+    fn resume(&mut self, root: &Path) -> Result<usize> {
+        self.resume_from(root)
+    }
+    fn opt_state_bytes(&self) -> usize {
+        self.memory_measured().opt_state_bytes
+    }
+}
+
+fn run_job(
+    spool: &Spool,
+    spec: &JobSpec,
+    opts: &ServeOpts,
+    ckpts: &AtomicUsize,
+) -> Result<JobStatus> {
+    match spec.engine {
+        Engine::Host => {
+            let mut tr = HostTrainer::new(spec.cfg.clone())?;
+            drive(&mut tr, spool, spec, opts, ckpts)
+        }
+        Engine::Graph => {
+            let dir = fsutil::artifacts_dir()?;
+            if !dir.join("manifest.json").exists() {
+                bail!(
+                    "graph engine needs AOT artifacts at {} (run `make artifacts`), \
+                     or submit with --engine host",
+                    dir.display()
+                );
+            }
+            let manifest = Manifest::load(&dir)?;
+            let rt = Runtime::cpu(&dir)?;
+            let preset = manifest.preset(&spec.cfg.preset)?;
+            let mut tr = Trainer::new(&rt, preset, spec.cfg.clone())?;
+            drive(&mut tr, spool, spec, opts, ckpts)
+        }
+    }
+}
+
+/// Shared step/checkpoint/status loop for both engines.
+fn drive(
+    tr: &mut dyn ServeEngine,
+    spool: &Spool,
+    spec: &JobSpec,
+    opts: &ServeOpts,
+    ckpts: &AtomicUsize,
+) -> Result<JobStatus> {
+    let t0 = Instant::now();
+    let ckpt_root = spool.checkpoint_root(&spec.id);
+    if has_checkpoint(&ckpt_root) {
+        let step = tr.resume(&ckpt_root)?;
+        log::info!("job {}: resuming from step {step}", spec.id);
+    }
+    let mut status = JobStatus::from_spec(spec, "running");
+    status.opt_state_bytes = tr.opt_state_bytes();
+    status.step = tr.step_count();
+    let _ = status.write(spool);
+
+    let mut last_loss = None;
+    while tr.step_count() < spec.cfg.steps {
+        let loss = tr.step()?;
+        last_loss = Some(loss as f64);
+        let s = tr.step_count();
+        if spec.checkpoint_every > 0 && s % spec.checkpoint_every == 0 && s < spec.cfg.steps {
+            tr.save(&ckpt_root)?;
+            note_checkpoint(opts, ckpts, &spec.id);
+            status.step = s;
+            status.loss = last_loss;
+            status.wall_secs = t0.elapsed().as_secs_f64();
+            let _ = status.write(spool);
+        }
+    }
+    // Final snapshot: the job's resumable (and verifiable) result.
+    tr.save(&ckpt_root)?;
+    status.state = "done".to_string();
+    status.step = tr.step_count();
+    status.loss = last_loss;
+    status.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(status)
+}
+
+/// Count a cadence checkpoint; with the `--die-after-checkpoints` test
+/// hook armed, simulate a hard crash once the count is reached.
+fn note_checkpoint(opts: &ServeOpts, ckpts: &AtomicUsize, id: &str) {
+    let n = ckpts.fetch_add(1, Ordering::SeqCst) + 1;
+    if opts.die_after_checkpoints > 0 && n >= opts.die_after_checkpoints {
+        log::warn!(
+            "serve: simulated crash after {n} checkpoints (while running {id}) — exiting {CRASH_EXIT_CODE}"
+        );
+        std::process::exit(CRASH_EXIT_CODE);
+    }
+}

@@ -1,0 +1,258 @@
+//! Per-job status files + the `mlorc status` aggregator.
+//!
+//! Workers write `status/<id>.json` atomically at claim time, on every
+//! cadence checkpoint and at completion, so an external observer (or the
+//! aggregator) always sees a coherent snapshot. The lifecycle directory a
+//! spec sits in is the source of truth for `state`; the status file only
+//! contributes progress numbers.
+
+use anyhow::Result;
+
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+use super::queue::{JobSpec, Spool, LIFECYCLE_DIRS};
+
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    pub id: String,
+    /// queued | running | done | failed
+    pub state: String,
+    pub step: usize,
+    pub steps: usize,
+    pub loss: Option<f64>,
+    pub preset: String,
+    pub method: String,
+    pub task: String,
+    pub engine: String,
+    /// Optimizer-state bytes — what each cadence checkpoint pays on top
+    /// of the parameters (small for MLorc: rank-l momentum factors).
+    pub opt_state_bytes: usize,
+    pub wall_secs: f64,
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    pub fn from_spec(spec: &JobSpec, state: &str) -> JobStatus {
+        JobStatus {
+            id: spec.id.clone(),
+            state: state.to_string(),
+            step: 0,
+            steps: spec.cfg.steps,
+            loss: None,
+            preset: spec.cfg.preset.clone(),
+            method: spec.cfg.method.name().to_string(),
+            task: spec.cfg.task.name(),
+            engine: spec.engine.name().to_string(),
+            opt_state_bytes: 0,
+            wall_secs: 0.0,
+            error: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("state", Json::str(self.state.clone())),
+            ("step", Json::num(self.step as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            (
+                "loss",
+                match self.loss {
+                    Some(x) if x.is_finite() => Json::num(x),
+                    _ => Json::Null,
+                },
+            ),
+            ("preset", Json::str(self.preset.clone())),
+            ("method", Json::str(self.method.clone())),
+            ("task", Json::str(self.task.clone())),
+            ("engine", Json::str(self.engine.clone())),
+            ("opt_state_bytes", Json::num(self.opt_state_bytes as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobStatus> {
+        Ok(JobStatus {
+            id: j.req("id")?.as_str()?.to_string(),
+            state: j.req("state")?.as_str()?.to_string(),
+            step: j.req("step")?.as_usize()?,
+            steps: j.req("steps")?.as_usize()?,
+            loss: match j.req("loss")? {
+                Json::Null => None,
+                v => Some(v.as_f64()?),
+            },
+            preset: j.req("preset")?.as_str()?.to_string(),
+            method: j.req("method")?.as_str()?.to_string(),
+            task: j.req("task")?.as_str()?.to_string(),
+            engine: j.req("engine")?.as_str()?.to_string(),
+            opt_state_bytes: j.req("opt_state_bytes")?.as_usize()?,
+            wall_secs: j.req("wall_secs")?.as_f64()?,
+            error: match j.req("error")? {
+                Json::Null => None,
+                v => Some(v.as_str()?.to_string()),
+            },
+        })
+    }
+
+    pub fn write(&self, spool: &Spool) -> Result<()> {
+        fsutil::write_atomic(
+            &spool.status_path(&self.id),
+            self.to_json().to_string_pretty().as_bytes(),
+        )
+    }
+}
+
+fn state_of_dir(dir: &str) -> &'static str {
+    match dir {
+        "queue" => "queued",
+        "running" => "running",
+        "done" => "done",
+        _ => "failed",
+    }
+}
+
+/// One status row per job in the spool, sorted by id. Unreadable specs
+/// (e.g. a quarantined submission) still get a row carrying the parse
+/// error instead of breaking the whole aggregation.
+pub fn aggregate(spool: &Spool) -> Result<Vec<JobStatus>> {
+    let mut out = Vec::new();
+    for dir in LIFECYCLE_DIRS {
+        let state = state_of_dir(dir);
+        for id in spool.jobs_in(dir)? {
+            let from_status = Json::from_file(&spool.status_path(&id))
+                .ok()
+                .and_then(|j| JobStatus::from_json(&j).ok());
+            let mut st = match from_status {
+                Some(st) => st,
+                None => match spool.load_spec(dir, &id) {
+                    Ok(spec) => JobStatus::from_spec(&spec, state),
+                    Err(e) => {
+                        let mut st = JobStatus {
+                            id: id.clone(),
+                            state: state.to_string(),
+                            step: 0,
+                            steps: 0,
+                            loss: None,
+                            preset: String::new(),
+                            method: String::new(),
+                            task: String::new(),
+                            engine: String::new(),
+                            opt_state_bytes: 0,
+                            wall_secs: 0.0,
+                            error: None,
+                        };
+                        st.error = Some(format!("unreadable job spec: {e:#}"));
+                        st
+                    }
+                },
+            };
+            st.state = state.to_string();
+            out.push(st);
+        }
+    }
+    out.sort_by(|a, b| a.id.cmp(&b.id));
+    Ok(out)
+}
+
+/// Human-readable table + summary line.
+pub fn render_table(rows: &[JobStatus]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<24} {:<8} {:>11} {:>10} {:>10} {:<12} {:<6}",
+        "job", "state", "step", "loss", "opt-state", "method", "engine"
+    );
+    for r in rows {
+        let loss = r.loss.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".to_string());
+        let opt = if r.opt_state_bytes > 0 {
+            format!("{:.1}KB", r.opt_state_bytes as f64 / 1e3)
+        } else {
+            "-".to_string()
+        };
+        let _ = writeln!(
+            s,
+            "{:<24} {:<8} {:>6}/{:<4} {:>10} {:>10} {:<12} {:<6}",
+            r.id, r.state, r.step, r.steps, loss, opt, r.method, r.engine
+        );
+        if let Some(err) = &r.error {
+            let _ = writeln!(s, "    error: {err}");
+        }
+    }
+    let count = |st: &str| rows.iter().filter(|r| r.state == st).count();
+    let _ = write!(
+        s,
+        "jobs: {} total — {} queued, {} running, {} done, {} failed",
+        rows.len(),
+        count("queued"),
+        count("running"),
+        count("done"),
+        count("failed")
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, RunConfig, TaskKind};
+    use crate::serve::queue::Engine;
+
+    fn spec(id: &str) -> JobSpec {
+        JobSpec {
+            id: id.to_string(),
+            engine: Engine::Host,
+            checkpoint_every: 5,
+            cfg: RunConfig::new("host-nano", Method::MlorcLion, TaskKind::MathChain, 30),
+        }
+    }
+
+    #[test]
+    fn status_json_roundtrip() {
+        let mut st = JobStatus::from_spec(&spec("job001_x"), "running");
+        st.step = 12;
+        st.loss = Some(0.25);
+        st.opt_state_bytes = 4096;
+        let back = JobStatus::from_json(&st.to_json()).unwrap();
+        assert_eq!(back.id, "job001_x");
+        assert_eq!(back.step, 12);
+        assert_eq!(back.loss, Some(0.25));
+        assert_eq!(back.error, None);
+        // NaN loss must serialize as null, not invalid JSON
+        st.loss = Some(f64::NAN);
+        let text = st.to_json().to_string_compact();
+        assert!(Json::parse(&text).is_ok(), "unparseable: {text}");
+    }
+
+    #[test]
+    fn aggregate_reads_lifecycle_dirs() {
+        let root =
+            std::env::temp_dir().join(format!("mlorc_status_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let spool = Spool::open(&root).unwrap();
+        spool.submit(&spec("job001_a")).unwrap();
+        spool.submit(&spec("job002_b")).unwrap();
+        let claimed = spool.claim_next().unwrap().unwrap();
+        let mut st = JobStatus::from_spec(&claimed, "running");
+        st.step = 7;
+        st.write(&spool).unwrap();
+
+        let rows = aggregate(&spool).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].state, "running");
+        assert_eq!(rows[0].step, 7);
+        assert_eq!(rows[1].state, "queued");
+        let table = render_table(&rows);
+        assert!(table.contains("1 queued"), "{table}");
+        assert!(table.contains("1 running"), "{table}");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,155 @@
+//! Serve integration: a spool of jobs drains concurrently with per-job
+//! results bit-identical to solo runs at the same thread budget, and an
+//! interrupted job recovers + resumes to bit-identical final params.
+
+use std::path::PathBuf;
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::linalg::threads;
+use mlorc::serve::{aggregate, serve, Engine, HostTrainer, JobSpec, ServeOpts, Spool};
+use mlorc::tensor::Tensor;
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mlorc_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn job_cfg(method: Method, seed: u64, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::new("host-nano", method, TaskKind::MathChain, steps);
+    cfg.peak_lr = 0.03;
+    cfg.log_every = 0;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Final parameters of a finished job, read back through its final v2
+/// checkpoint (the scheduler always writes one).
+fn final_params(spool: &Spool, id: &str) -> Vec<Tensor> {
+    let spec = spool.load_spec("done", id).unwrap();
+    let mut tr = HostTrainer::new(spec.cfg.clone()).unwrap();
+    tr.resume_from(&spool.checkpoint_root(id)).unwrap();
+    assert_eq!(tr.step_count(), spec.cfg.steps, "job {id} final checkpoint not at last step");
+    tr.params.values.clone()
+}
+
+#[test]
+fn spool_drains_concurrently_and_matches_solo() {
+    let root = tmp("drain");
+    let spool = Spool::open(&root).unwrap();
+    let jobs =
+        [(Method::MlorcAdamW, 11u64), (Method::MlorcLion, 22u64), (Method::Galore, 33u64)];
+    for (i, (method, seed)) in jobs.iter().enumerate() {
+        let spec = JobSpec {
+            id: format!("job{:03}_{}", i + 1, method.name()),
+            engine: Engine::Host,
+            checkpoint_every: 4,
+            cfg: job_cfg(*method, *seed, 10),
+        };
+        spool.submit(&spec).unwrap();
+    }
+
+    let opts = ServeOpts { jobs: 2, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    let summary = serve(&spool, &opts).unwrap();
+    assert_eq!(summary.done, 3, "all jobs must drain");
+    assert_eq!(summary.failed, 0);
+    assert_eq!(spool.jobs_in("done").unwrap().len(), 3);
+    assert!(spool.jobs_in("queue").unwrap().is_empty());
+    assert!(spool.jobs_in("running").unwrap().is_empty());
+
+    // Per-job results must be bit-identical to solo runs at the same
+    // thread slice the scheduler gave each job.
+    let slice = (threads::budget() / 2).max(1);
+    for (i, (method, seed)) in jobs.iter().enumerate() {
+        let id = format!("job{:03}_{}", i + 1, method.name());
+        let served = final_params(&spool, &id);
+        let solo = threads::with_budget(slice, || {
+            let mut tr = HostTrainer::new(job_cfg(*method, *seed, 10)).unwrap();
+            for _ in 0..10 {
+                tr.train_step().unwrap();
+            }
+            tr.params.values.clone()
+        });
+        assert_eq!(served.len(), solo.len());
+        for (j, (a, b)) in served.iter().zip(&solo).enumerate() {
+            assert_eq!(a.data, b.data, "job {id} param {j} != solo run");
+        }
+    }
+
+    // status aggregation agrees with the lifecycle dirs
+    let rows = aggregate(&spool).unwrap();
+    assert_eq!(rows.len(), 3);
+    assert!(rows.iter().all(|r| r.state == "done"), "{rows:?}");
+    assert!(rows.iter().all(|r| r.step == 10));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn interrupted_job_recovers_and_resumes_bit_identical() {
+    let root = tmp("crash");
+    let spool = Spool::open(&root).unwrap();
+    let cfg = job_cfg(Method::MlorcAdamW, 7, 12);
+    let spec = JobSpec {
+        id: "job001_crash".to_string(),
+        engine: Engine::Host,
+        checkpoint_every: 5,
+        cfg: cfg.clone(),
+    };
+    spool.submit(&spec).unwrap();
+
+    // Simulate a crashed scheduler: claim the job, run 5 steps, write
+    // the cadence checkpoint, and die without finishing — the spec stays
+    // stranded in running/ exactly as after a kill -9.
+    let claimed = spool.claim_next().unwrap().unwrap();
+    assert_eq!(claimed.id, "job001_crash");
+    let mut tr = HostTrainer::new(claimed.cfg.clone()).unwrap();
+    for _ in 0..5 {
+        tr.train_step().unwrap();
+    }
+    tr.save_checkpoint(&spool.checkpoint_root(&claimed.id)).unwrap();
+    drop(tr);
+
+    // Restart: recovery sweeps running/ back into queue/, the worker
+    // resumes from the checkpoint and completes the job.
+    let opts = ServeOpts { jobs: 2, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    let summary = serve(&spool, &opts).unwrap();
+    assert_eq!(summary.recovered, 1);
+    assert_eq!(summary.done, 1);
+    assert_eq!(summary.failed, 0);
+
+    let served = final_params(&spool, "job001_crash");
+    let mut solo = HostTrainer::new(cfg).unwrap();
+    for _ in 0..12 {
+        solo.train_step().unwrap();
+    }
+    for (j, (a, b)) in served.iter().zip(&solo.params.values).enumerate() {
+        assert_eq!(a.data, b.data, "param {j} != uninterrupted run");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn failing_job_lands_in_failed_with_error_status() {
+    let root = tmp("fail");
+    let spool = Spool::open(&root).unwrap();
+    // The graph engine without artifacts (or without the pjrt feature)
+    // must fail cleanly — failed/ + error in status — not wedge a worker.
+    let spec = JobSpec {
+        id: "job001_graph".to_string(),
+        engine: Engine::Graph,
+        checkpoint_every: 0,
+        cfg: job_cfg(Method::MlorcAdamW, 1, 4),
+    };
+    spool.submit(&spec).unwrap();
+    let opts = ServeOpts { jobs: 1, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    let summary = serve(&spool, &opts).unwrap();
+    // host-nano is not a manifest preset, so the graph engine can never
+    // run this job — with or without artifacts it must fail cleanly
+    assert_eq!(summary.failed, 1);
+    assert_eq!(summary.done, 0);
+    let rows = aggregate(&spool).unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].state, "failed");
+    assert!(rows[0].error.is_some(), "failed job must carry its error");
+    std::fs::remove_dir_all(&root).unwrap();
+}
