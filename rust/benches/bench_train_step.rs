@@ -25,6 +25,10 @@ fn main() {
         "method", "ms/step", "fwd/bwd ms", "opt ms", "tokens/s"
     );
     for &method in Method::all() {
+        if !method.desc().graphed {
+            // host-only registry combos have no lowered step graphs
+            continue;
+        }
         let mut cfg = RunConfig::new("tiny", method, TaskKind::MathChain, steps);
         cfg.log_every = 0;
         cfg.eval_batches = 1;

@@ -99,15 +99,17 @@ impl<'a> Ctx<'a> {
         tr.train()
     }
 
-    /// nano-/tiny-scale LRs (Table 8 sweep confirms these).
+    /// nano-/tiny-scale LRs (Table 8 sweep confirms these). Keyed by
+    /// registry id; unlisted (new) methods fall back to the AdamW-family
+    /// scale.
     fn lr_for(&self, m: Method) -> f32 {
-        match m {
-            Method::FullAdamW | Method::MlorcAdamW | Method::MlorcM | Method::MlorcV => 2e-3,
-            Method::FullLion | Method::MlorcLion => 2e-4,
-            Method::LoraAdamW => 4e-3,
-            Method::LoraLion => 4e-4,
-            Method::Galore => 4e-3,
-            Method::LdAdamW => 1e-3,
+        match m.name() {
+            "full_lion" | "mlorc_lion" | "galore_lion" => 2e-4,
+            "lora_adamw" => 4e-3,
+            "lora_lion" => 4e-4,
+            "galore" => 4e-3,
+            "ldadamw" => 1e-3,
+            _ => 2e-3,
         }
     }
 }

@@ -7,113 +7,11 @@ use crate::util::json::Json;
 
 use super::LrSchedule;
 
-/// Optimization method — the rows of the paper's tables.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Method {
-    FullAdamW,
-    FullLion,
-    MlorcAdamW,
-    MlorcLion,
-    MlorcM, // ablation: compress first moment only (Table 7)
-    MlorcV, // ablation: compress second moment only (Table 7)
-    LoraAdamW,
-    LoraLion,
-    Galore,
-    LdAdamW,
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::FullAdamW => "full_adamw",
-            Method::FullLion => "full_lion",
-            Method::MlorcAdamW => "mlorc_adamw",
-            Method::MlorcLion => "mlorc_lion",
-            Method::MlorcM => "mlorc_m",
-            Method::MlorcV => "mlorc_v",
-            Method::LoraAdamW => "lora_adamw",
-            Method::LoraLion => "lora_lion",
-            Method::Galore => "galore",
-            Method::LdAdamW => "ldadamw",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "full_adamw" | "full" => Method::FullAdamW,
-            "full_lion" => Method::FullLion,
-            "mlorc_adamw" | "mlorc" => Method::MlorcAdamW,
-            "mlorc_lion" => Method::MlorcLion,
-            "mlorc_m" => Method::MlorcM,
-            "mlorc_v" => Method::MlorcV,
-            "lora_adamw" | "lora" => Method::LoraAdamW,
-            "lora_lion" => Method::LoraLion,
-            "galore" => Method::Galore,
-            "ldadamw" => Method::LdAdamW,
-            _ => bail!("unknown method '{s}'"),
-        })
-    }
-
-    /// Uses the LoRA adapter graphs instead of full fwd/bwd.
-    pub fn is_lora(&self) -> bool {
-        matches!(self, Method::LoraAdamW | Method::LoraLion)
-    }
-
-    /// Step-graph method name for *compressed matrix* parameters.
-    pub fn matrix_step(&self) -> &'static str {
-        match self {
-            Method::FullAdamW => "adamw",
-            Method::FullLion => "lion",
-            Method::MlorcAdamW => "mlorc_adamw",
-            Method::MlorcLion => "mlorc_lion",
-            Method::MlorcM => "mlorc_m",
-            Method::MlorcV => "mlorc_v",
-            Method::LoraAdamW => "adamw", // adapters take the plain path
-            Method::LoraLion => "lion",
-            Method::Galore => "galore",
-            Method::LdAdamW => "ldadamw",
-        }
-    }
-
-    /// Step-graph method for vectors/embeddings/heads (always uncompressed).
-    pub fn plain_step(&self) -> &'static str {
-        match self {
-            Method::FullLion | Method::MlorcLion | Method::LoraLion => "lion",
-            _ => "adamw",
-        }
-    }
-
-    /// Paper-tuned default peak LR for the math-chain-style LM task
-    /// (Table 8 analog; confirmed by our own sweep in `table8`).
-    pub fn default_lr(&self) -> f32 {
-        match self {
-            Method::FullAdamW => 4e-4,
-            Method::FullLion => 5e-5,
-            Method::MlorcAdamW => 7e-4,
-            Method::MlorcLion => 5e-5,
-            Method::MlorcM | Method::MlorcV => 7e-4,
-            Method::LoraAdamW => 2e-3,
-            Method::LoraLion => 2e-4,
-            Method::Galore => 3e-3,
-            Method::LdAdamW => 1e-3,
-        }
-    }
-
-    pub fn all() -> &'static [Method] {
-        &[
-            Method::FullAdamW,
-            Method::FullLion,
-            Method::MlorcAdamW,
-            Method::MlorcLion,
-            Method::MlorcM,
-            Method::MlorcV,
-            Method::LoraAdamW,
-            Method::LoraLion,
-            Method::Galore,
-            Method::LdAdamW,
-        ]
-    }
-}
+/// Optimization method — the rows of the paper's tables. The type (and
+/// every id, alias, routing flag and default LR) lives in the optimizer
+/// registry; see `optim::registry` for the method/variant tables and how
+/// to register a new (rule × compressor) combination.
+pub use crate::optim::registry::Method;
 
 /// Which synthetic workload to run (DESIGN.md §2 substitutions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -450,6 +450,20 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
+    /// Build a state with given field tensors through the checkpoint
+    /// decoder (the registry owns construction now).
+    fn state_with(variant: &str, fields: &[(&str, Tensor)]) -> OptState {
+        let meta = Json::obj(vec![("variant", Json::str(variant))]);
+        OptState::from_ckpt(&meta, |name| {
+            fields
+                .iter()
+                .find(|(f, _)| *f == name)
+                .map(|(_, t)| t.clone())
+                .ok_or_else(|| anyhow::anyhow!("missing field {name}"))
+        })
+        .unwrap()
+    }
+
     #[test]
     fn v2_roundtrip_with_opt_state_and_rng() {
         let dir = tmp("v2");
@@ -457,8 +471,12 @@ mod tests {
         let orig = store();
         let mut rng = Rng::new(9);
         let mq = rng.gaussian_tensor(&[2, 2], 1.0);
-        let state = OptState::MlorcLion { mq: mq.clone(), mb: rng.gaussian_tensor(&[2, 3], 1.0) };
-        let vstate = OptState::AdamW { m: Tensor::zeros(&[4]), v: Tensor::full(&[4], 0.5) };
+        let state = state_with(
+            "mlorc_lion",
+            &[("mq", mq.clone()), ("mb", rng.gaussian_tensor(&[2, 3], 1.0))],
+        );
+        let vstate =
+            state_with("adamw", &[("m", Tensor::zeros(&[4])), ("v", Tensor::full(&[4], 0.5))]);
         let mut data_rng = Rng::new(1);
         data_rng.normal(); // advance + populate the Box-Muller spare
         let omega = vec![Rng::new(2), Rng::new(3)];
@@ -477,10 +495,11 @@ mod tests {
         assert_eq!(back.rng_data.snapshot(), data_rng.snapshot());
         assert_eq!(back.omega.len(), 2);
         assert_eq!(back.omega[1].snapshot(), omega[1].snapshot());
-        match back.opt.get("a").unwrap() {
-            OptState::MlorcLion { mq: q, .. } => assert_eq!(q.data, mq.data),
-            other => panic!("wrong variant {other:?}"),
-        }
+        let got = back.opt.get("a").unwrap();
+        assert_eq!(got.variant_name(), "mlorc_lion");
+        let fields = got.tensor_fields();
+        let (_, q) = fields.iter().find(|(n, _)| *n == "mq").expect("mq field");
+        assert_eq!(q.data, mq.data);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -51,20 +51,22 @@ pub struct MemoryAccountant;
 
 impl MemoryAccountant {
     /// Table 1 row for one (m, n) matrix parameter: (weights, opt_state)
-    /// float counts.
+    /// float counts — derived from the registered variant's layout, so
+    /// every (rule × compressor) combination gets its row for free.
     pub fn table1_row(method: Method, m: usize, n: usize, r: usize) -> (usize, usize) {
-        match method {
-            Method::FullAdamW => (m * n, 2 * m * n),
-            Method::FullLion => (m * n, m * n),
-            Method::LoraAdamW => (m * n + m * r + n * r, 2 * m * r + 2 * n * r),
-            Method::LoraLion => (m * n + m * r + n * r, m * r + n * r),
-            Method::Galore => (m * n, m.min(n) * r + 2 * m.max(n) * r),
-            Method::MlorcAdamW => (m * n, 2 * m * r + 2 * n * r),
-            Method::MlorcLion => (m * n, m * r + n * r),
-            Method::MlorcM => (m * n, m * r + n * r + m * n),
-            Method::MlorcV => (m * n, m * r + n * r + m * n),
-            Method::LdAdamW => (m * n, m.min(n) * r + 2 * m.max(n) * r + m * n),
+        use crate::optim::registry;
+        if method.is_lora() {
+            // rank-r adapters carry the gradients; moments are dense on
+            // the adapter shapes
+            let adapters = m * r + n * r;
+            let nm = registry::variant(method.plain_step())
+                .expect("registered methods only reference registered variants")
+                .n_moments();
+            return (m * n + adapters, nm * adapters);
         }
+        let v = registry::variant(method.matrix_step())
+            .expect("registered methods only reference registered variants");
+        (m * n, v.state_floats(m, n, r))
     }
 
     /// Whole-model report under the analytic model.
@@ -95,11 +97,10 @@ impl MemoryAccountant {
                     grads_max = grads_max.max(numel);
                 }
             } else {
-                // uncompressed path: AdamW (2x) or Lion (1x)
-                let factor = match method.plain_step() {
-                    "lion" => 1,
-                    _ => 2,
-                };
+                // uncompressed path: one dense buffer per rule moment
+                let factor = crate::optim::registry::variant(method.plain_step())
+                    .map(|v| v.n_moments())
+                    .unwrap_or(2);
                 if method.is_lora() && p.kind != "head" {
                     // frozen under LoRA: no grads, no state
                 } else {

@@ -1,23 +1,28 @@
 //! Per-parameter optimizer state, mirrored host-side between step-graph
-//! executions. The variant set matches the step graphs in
-//! `python/compile/optim_steps.py`.
+//! executions.
 //!
-//! Besides the graph path, every state — including the projection-based
-//! GaLore/LDAdamW baselines — can step itself entirely on the host
-//! through [`OptState::host_step`], backed by the cross-validated
-//! reference optimizers in `optim` (the same `*_core` free functions the
-//! reference state structs delegate to). [`host_step_all`] fans a batch
-//! of such updates out over the persistent worker pool (`linalg::pool`);
-//! because each job owns its parameter, state and Omega RNG stream, and
-//! the linalg kernels are bit-deterministic across thread counts, the
-//! parallel schedule produces results bit-identical to stepping
-//! sequentially.
+//! Since the optimizer-matrix refactor this is a thin shell over the
+//! trait-based core in `optim`: a parameter is either [`OptState::Frozen`]
+//! (LoRA base weights) or an [`MatrixOpt`] — one registered
+//! (update rule × momentum compressor) variant plus the compressor-owned
+//! state tensors. Every dispatch that used to be a ten-arm `match` here
+//! (stepping, checkpoint fields, state bytes, spectral reconstruction,
+//! graph input/output layout) now delegates to the variant's
+//! `UpdateRule`/`MomentumCompressor`, so registering a new method in
+//! `optim::registry` needs no change in this file or its consumers.
 //!
-//! Every variant also serializes to the v2 checkpoint format
+//! Besides the graph path, every state can step itself entirely on the
+//! host through [`OptState::host_step`], backed by the cross-validated
+//! `*_core` kernels the compressors route to. [`host_step_all`] fans a
+//! batch of such updates out over the persistent worker pool
+//! (`linalg::pool`); because each job owns its parameter, state and Omega
+//! RNG stream, and the linalg kernels are bit-deterministic, the parallel
+//! schedule produces results bit-identical to stepping sequentially.
+//!
+//! Every state also serializes to the v2 checkpoint format
 //! ([`OptState::tensor_fields`] / [`OptState::ckpt_meta`] /
-//! [`OptState::from_ckpt`]) — MLorc's compressed Q/B momentum factors are
-//! the whole first/second-moment state, which is what makes
-//! checkpoint-every-few-steps cheap enough for the serve scheduler.
+//! [`OptState::from_ckpt`]) under the same variant tags and field names
+//! as before the refactor — old v2 checkpoints keep loading byte-for-byte.
 
 use std::sync::Mutex;
 
@@ -25,10 +30,8 @@ use anyhow::{bail, Result};
 
 use crate::config::Method;
 use crate::linalg::{pool, threads, Rng, Workspace};
-use crate::optim::{
-    adamw_host_step, galore_core, galore_refresh_projector, ldadamw_core, lion_host_step,
-    mlorc_adamw_core, mlorc_lion_core, mlorc_m_core, mlorc_v_core, OptHp,
-};
+use crate::optim::registry::{self, MatrixOpt};
+use crate::optim::GaloreProjector;
 use crate::runtime::{ParamSpec, Preset};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -37,14 +40,8 @@ use crate::util::json::Json;
 pub enum OptState {
     /// parameter is frozen (LoRA base weights)
     Frozen,
-    AdamW { m: Tensor, v: Tensor },
-    Lion { m: Tensor },
-    MlorcAdamW { mq: Tensor, mb: Tensor, vq: Tensor, vb: Tensor },
-    MlorcLion { mq: Tensor, mb: Tensor },
-    MlorcM { mq: Tensor, mb: Tensor, v: Tensor },
-    MlorcV { m: Tensor, vq: Tensor, vb: Tensor },
-    Galore { p: Tensor, m_lo: Tensor, v_lo: Tensor, left: bool, refreshed: bool },
-    LdAdamW { p: Tensor, m_lo: Tensor, v_lo: Tensor, e: Tensor, left: bool },
+    /// one registered (rule × compressor) variant with its state
+    Opt(MatrixOpt),
 }
 
 impl OptState {
@@ -59,114 +56,105 @@ impl OptState {
     /// directly — for callers without a manifest preset (the serve host
     /// engine builds its parameter fleet from shapes alone).
     pub fn for_param_with_l(method: Method, spec: &ParamSpec, l: usize) -> Result<OptState> {
-        let shape = &spec.shape;
-        let plain = || -> OptState {
-            match method.plain_step() {
-                "lion" => OptState::Lion { m: Tensor::zeros(shape) },
-                _ => OptState::AdamW { m: Tensor::zeros(shape), v: Tensor::zeros(shape) },
-            }
+        let desc = method.desc();
+        let variant_id = if spec.compressed && spec.shape.len() == 2 {
+            desc.matrix
+        } else {
+            desc.plain
         };
-        if !spec.compressed || shape.len() == 1 {
-            return Ok(plain());
+        let v = registry::variant(variant_id)?;
+        Ok(OptState::Opt(v.build(&spec.shape, l)?))
+    }
+
+    /// Build a fresh zero state for an explicit variant id (tests, tools).
+    pub fn for_variant(variant_id: &str, shape: &[usize], l: usize) -> Result<OptState> {
+        Ok(OptState::Opt(registry::variant(variant_id)?.build(shape, l)?))
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        matches!(self, OptState::Frozen)
+    }
+
+    fn opt(&self) -> Option<&MatrixOpt> {
+        match self {
+            OptState::Frozen => None,
+            OptState::Opt(mo) => Some(mo),
         }
-        let (m, n) = (shape[0], shape[1]);
-        Ok(match method {
-            Method::FullAdamW | Method::LoraAdamW => plain(),
-            Method::FullLion | Method::LoraLion => plain(),
-            Method::MlorcAdamW => OptState::MlorcAdamW {
-                mq: Tensor::zeros(&[m, l]),
-                mb: Tensor::zeros(&[l, n]),
-                vq: Tensor::zeros(&[m, l]),
-                vb: Tensor::zeros(&[l, n]),
-            },
-            Method::MlorcLion => OptState::MlorcLion {
-                mq: Tensor::zeros(&[m, l]),
-                mb: Tensor::zeros(&[l, n]),
-            },
-            Method::MlorcM => OptState::MlorcM {
-                mq: Tensor::zeros(&[m, l]),
-                mb: Tensor::zeros(&[l, n]),
-                v: Tensor::zeros(shape),
-            },
-            Method::MlorcV => OptState::MlorcV {
-                m: Tensor::zeros(shape),
-                vq: Tensor::zeros(&[m, l]),
-                vb: Tensor::zeros(&[l, n]),
-            },
-            Method::Galore => {
-                let left = m <= n;
-                let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
-                OptState::Galore {
-                    p: Tensor::zeros(&pshape),
-                    m_lo: Tensor::zeros(&rshape),
-                    v_lo: Tensor::zeros(&rshape),
-                    left,
-                    refreshed: false,
-                }
-            }
-            Method::LdAdamW => {
-                let left = m <= n;
-                let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
-                OptState::LdAdamW {
-                    p: Tensor::zeros(&pshape),
-                    m_lo: Tensor::zeros(&rshape),
-                    v_lo: Tensor::zeros(&rshape),
-                    e: Tensor::zeros(shape),
-                    left,
-                }
-            }
-        })
     }
 
     /// Which step-graph method name updates this state.
     pub fn step_method(&self) -> Result<&'static str> {
-        Ok(match self {
-            OptState::Frozen => bail!("frozen param has no step"),
-            OptState::AdamW { .. } => "adamw",
-            OptState::Lion { .. } => "lion",
-            OptState::MlorcAdamW { .. } => "mlorc_adamw",
-            OptState::MlorcLion { .. } => "mlorc_lion",
-            OptState::MlorcM { .. } => "mlorc_m",
-            OptState::MlorcV { .. } => "mlorc_v",
-            OptState::Galore { .. } => "galore",
-            OptState::LdAdamW { .. } => "ldadamw",
-        })
+        match self.opt() {
+            None => bail!("frozen param has no step"),
+            Some(mo) => Ok(mo.variant().id),
+        }
     }
 
     /// Stable variant tag used by checkpoint metadata (v2 format).
     pub fn variant_name(&self) -> &'static str {
-        match self {
-            OptState::Frozen => "frozen",
-            OptState::AdamW { .. } => "adamw",
-            OptState::Lion { .. } => "lion",
-            OptState::MlorcAdamW { .. } => "mlorc_adamw",
-            OptState::MlorcLion { .. } => "mlorc_lion",
-            OptState::MlorcM { .. } => "mlorc_m",
-            OptState::MlorcV { .. } => "mlorc_v",
-            OptState::Galore { .. } => "galore",
-            OptState::LdAdamW { .. } => "ldadamw",
+        match self.opt() {
+            None => "frozen",
+            Some(mo) => mo.variant().id,
         }
     }
 
+    /// Whether this state's apply is bias-corrected — decides if its step
+    /// graph takes `c1`/`c2` scalars after `lr`.
+    pub fn bias_corrected(&self) -> bool {
+        self.opt().map(|mo| mo.rule().bias_corrected()).unwrap_or(false)
+    }
+
     /// The state's tensor fields under stable names, in declared order —
-    /// checkpoint v2 stores each as `<param>/<field>` in `opt_state.rten`.
+    /// checkpoint v2 stores each as `<param>/<field>`, and the step graph
+    /// takes them (in this order) right after `w` and `grad`.
     pub fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        match self.opt() {
+            None => vec![],
+            Some(mo) => mo.comp().tensor_fields(),
+        }
+    }
+
+    /// Mutable view of every tensor field, same names and order.
+    pub fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
         match self {
             OptState::Frozen => vec![],
-            OptState::AdamW { m, v } => vec![("m", m), ("v", v)],
-            OptState::Lion { m } => vec![("m", m)],
-            OptState::MlorcAdamW { mq, mb, vq, vb } => {
-                vec![("mq", mq), ("mb", mb), ("vq", vq), ("vb", vb)]
-            }
-            OptState::MlorcLion { mq, mb } => vec![("mq", mq), ("mb", mb)],
-            OptState::MlorcM { mq, mb, v } => vec![("mq", mq), ("mb", mb), ("v", v)],
-            OptState::MlorcV { m, vq, vb } => vec![("m", m), ("vq", vq), ("vb", vb)],
-            OptState::Galore { p, m_lo, v_lo, .. } => {
-                vec![("p", p), ("m_lo", m_lo), ("v_lo", v_lo)]
-            }
-            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
-                vec![("p", p), ("m_lo", m_lo), ("v_lo", v_lo), ("e", e)]
-            }
+            OptState::Opt(mo) => mo.comp_mut().tensor_fields_mut(),
+        }
+    }
+
+    /// The fields this state's step graph returns updated, in output
+    /// order (GaLore's projector is a graph constant and excluded).
+    pub fn graph_output_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        match self {
+            OptState::Frozen => vec![],
+            OptState::Opt(mo) => mo.comp_mut().graph_output_fields_mut(),
+        }
+    }
+
+    /// Shapes of the Gaussian test matrices the step graph takes after
+    /// the state fields, in draw order.
+    pub fn omega_graph_shapes(&self) -> Vec<[usize; 2]> {
+        match self.opt() {
+            None => vec![],
+            Some(mo) => mo.comp().omega_graph_shapes(),
+        }
+    }
+
+    /// Mark a cached projector stale (GaLore refresh cadence); no-op for
+    /// every other layout.
+    pub fn invalidate_projector(&mut self) {
+        if let OptState::Opt(mo) = self {
+            mo.comp_mut().invalidate_projector();
+        }
+    }
+
+    /// Mutable access to a GaLore projector state, if that is this
+    /// state's layout — the trainer's graph path refreshes `p` through
+    /// the dedicated `galore_project` graph.
+    pub fn galore_mut(&mut self) -> Option<&mut GaloreProjector> {
+        match self {
+            OptState::Frozen => None,
+            OptState::Opt(mo) => mo.comp_mut().as_galore_mut(),
         }
     }
 
@@ -174,15 +162,8 @@ impl OptState {
     /// ([`OptState::from_ckpt`] is the inverse).
     pub fn ckpt_meta(&self) -> Json {
         let mut meta = Json::obj(vec![("variant", Json::str(self.variant_name()))]);
-        match self {
-            OptState::Galore { left, refreshed, .. } => {
-                meta.set("left", Json::Bool(*left));
-                meta.set("refreshed", Json::Bool(*refreshed));
-            }
-            OptState::LdAdamW { left, .. } => {
-                meta.set("left", Json::Bool(*left));
-            }
-            _ => {}
+        if let Some(mo) = self.opt() {
+            mo.comp().flags_into(&mut meta);
         }
         meta
     }
@@ -194,93 +175,27 @@ impl OptState {
         mut take: impl FnMut(&'static str) -> Result<Tensor>,
     ) -> Result<OptState> {
         let variant = meta.req("variant")?.as_str()?;
-        Ok(match variant {
-            "frozen" => OptState::Frozen,
-            "adamw" => OptState::AdamW { m: take("m")?, v: take("v")? },
-            "lion" => OptState::Lion { m: take("m")? },
-            "mlorc_adamw" => OptState::MlorcAdamW {
-                mq: take("mq")?,
-                mb: take("mb")?,
-                vq: take("vq")?,
-                vb: take("vb")?,
-            },
-            "mlorc_lion" => OptState::MlorcLion { mq: take("mq")?, mb: take("mb")? },
-            "mlorc_m" => OptState::MlorcM { mq: take("mq")?, mb: take("mb")?, v: take("v")? },
-            "mlorc_v" => OptState::MlorcV { m: take("m")?, vq: take("vq")?, vb: take("vb")? },
-            "galore" => OptState::Galore {
-                p: take("p")?,
-                m_lo: take("m_lo")?,
-                v_lo: take("v_lo")?,
-                left: meta.req("left")?.as_bool()?,
-                refreshed: meta.req("refreshed")?.as_bool()?,
-            },
-            "ldadamw" => OptState::LdAdamW {
-                p: take("p")?,
-                m_lo: take("m_lo")?,
-                v_lo: take("v_lo")?,
-                e: take("e")?,
-                left: meta.req("left")?.as_bool()?,
-            },
-            other => bail!("unknown optimizer state variant '{other}' in checkpoint"),
-        })
+        if variant == "frozen" {
+            return Ok(OptState::Frozen);
+        }
+        let desc = registry::variant(variant)
+            .map_err(|_| anyhow::anyhow!("unknown optimizer state variant '{variant}' in checkpoint"))?;
+        Ok(OptState::Opt(desc.decode(meta, &mut take)?))
     }
 
     /// Optimizer-state footprint in bytes (the Table 1/3 quantity).
     pub fn state_bytes(&self) -> usize {
-        match self {
-            OptState::Frozen => 0,
-            OptState::AdamW { m, v } => m.size_bytes() + v.size_bytes(),
-            OptState::Lion { m } => m.size_bytes(),
-            OptState::MlorcAdamW { mq, mb, vq, vb } => {
-                mq.size_bytes() + mb.size_bytes() + vq.size_bytes() + vb.size_bytes()
-            }
-            OptState::MlorcLion { mq, mb } => mq.size_bytes() + mb.size_bytes(),
-            OptState::MlorcM { mq, mb, v } => mq.size_bytes() + mb.size_bytes() + v.size_bytes(),
-            OptState::MlorcV { m, vq, vb } => m.size_bytes() + vq.size_bytes() + vb.size_bytes(),
-            OptState::Galore { p, m_lo, v_lo, .. } => {
-                p.size_bytes() + m_lo.size_bytes() + v_lo.size_bytes()
-            }
-            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
-                p.size_bytes() + m_lo.size_bytes() + v_lo.size_bytes() + e.size_bytes()
-            }
-        }
+        self.opt().map(|mo| mo.comp().state_bytes()).unwrap_or(0)
     }
 
     /// Reconstructed first moment (spectral probe).
     pub fn first_moment(&self) -> Option<Tensor> {
-        match self {
-            OptState::AdamW { m, .. } | OptState::MlorcV { m, .. } => Some(m.clone()),
-            OptState::Lion { m } => Some(m.clone()),
-            OptState::MlorcAdamW { mq, mb, .. }
-            | OptState::MlorcLion { mq, mb }
-            | OptState::MlorcM { mq, mb, .. } => Some(crate::linalg::matmul(mq, mb)),
-            _ => None,
-        }
+        self.opt().and_then(|mo| mo.comp().first_moment())
     }
 
     /// Reconstructed second moment (spectral probe).
     pub fn second_moment(&self) -> Option<Tensor> {
-        match self {
-            OptState::AdamW { v, .. } | OptState::MlorcM { v, .. } => Some(v.clone()),
-            OptState::MlorcAdamW { vq, vb, .. } | OptState::MlorcV { vq, vb, .. } => {
-                Some(crate::linalg::matmul(vq, vb))
-            }
-            _ => None,
-        }
-    }
-
-    /// Hyper-parameters of the step this state takes — identical to the
-    /// manifest hparams of the matching step graph (pinned by
-    /// `cross_validate::hparams_match_rust_defaults`).
-    pub fn host_hp(&self) -> OptHp {
-        match self {
-            OptState::Lion { .. } => OptHp::lion(),
-            OptState::MlorcLion { .. } => OptHp::lion(),
-            OptState::MlorcAdamW { .. } | OptState::MlorcM { .. } | OptState::MlorcV { .. } => {
-                OptHp::mlorc_adamw()
-            }
-            _ => OptHp::adamw(),
-        }
+        self.opt().and_then(|mo| mo.comp().second_moment())
     }
 
     /// One optimizer step entirely on the host, using the reference
@@ -296,54 +211,10 @@ impl OptState {
         rng: &mut Rng,
         ws: &mut Workspace,
     ) -> Result<()> {
-        let hp = self.host_hp();
         match self {
-            OptState::Frozen => {}
-            OptState::AdamW { m, v } => adamw_host_step(w, g, m, v, lr, t, &hp),
-            OptState::Lion { m } => lion_host_step(w, g, m, lr, &hp),
-            OptState::MlorcAdamW { mq, mb, vq, vb } => {
-                let (_, n) = w.dims2()?;
-                let l = mq.shape[1];
-                let om_m = rng.gaussian_tensor(&[n, l], 1.0);
-                let om_v = rng.gaussian_tensor(&[n, l], 1.0);
-                mlorc_adamw_core(w, g, mq, mb, vq, vb, t, lr, &hp, &om_m, &om_v, ws);
-            }
-            OptState::MlorcLion { mq, mb } => {
-                let (_, n) = w.dims2()?;
-                let l = mq.shape[1];
-                let om = rng.gaussian_tensor(&[n, l], 1.0);
-                mlorc_lion_core(w, g, mq, mb, lr, &hp, &om, ws);
-            }
-            OptState::MlorcM { mq, mb, v } => {
-                let (_, n) = w.dims2()?;
-                let l = mq.shape[1];
-                let om = rng.gaussian_tensor(&[n, l], 1.0);
-                mlorc_m_core(w, g, mq, mb, v, t, lr, &hp, &om, ws);
-            }
-            OptState::MlorcV { m, vq, vb } => {
-                let (_, n) = w.dims2()?;
-                let l = vq.shape[1];
-                let om = rng.gaussian_tensor(&[n, l], 1.0);
-                mlorc_v_core(w, g, m, vq, vb, t, lr, &hp, &om, ws);
-            }
-            OptState::Galore { p, m_lo, v_lo, left, refreshed } => {
-                // Refresh cadence lives with the caller (the trainer clears
-                // `refreshed` every `galore_update_freq` steps, mirroring
-                // the graph path); the Omega draw happens only on refresh,
-                // keeping the per-parameter stream schedule-independent.
-                let l = p.shape[1];
-                if !*refreshed {
-                    galore_refresh_projector(p, g, *left, l, rng);
-                    *refreshed = true;
-                }
-                galore_core(w, g, p, m_lo, v_lo, *left, t, lr, &hp);
-            }
-            OptState::LdAdamW { p, m_lo, v_lo, e, left } => {
-                let l = p.shape[1];
-                ldadamw_core(w, g, p, m_lo, v_lo, e, *left, l, t, lr, &hp, rng);
-            }
+            OptState::Frozen => Ok(()),
+            OptState::Opt(mo) => mo.step(w, g, lr, t, rng, ws),
         }
-        Ok(())
     }
 }
 
@@ -364,8 +235,8 @@ pub struct HostStepJob<'a> {
 /// bands — no per-call thread spawns. Band closures run their linalg
 /// kernels in serial mode to avoid nested oversubscription; since the
 /// kernels are bit-deterministic across thread counts and jobs are fully
-/// independent, the result is bit-identical to sequential stepping in job
-/// order (asserted by `tests/host_parallel.rs`).
+/// independent, the parallel schedule is bit-identical to stepping
+/// sequentially in job order (asserted by `tests/host_parallel.rs`).
 pub fn host_step_all(jobs: &mut [HostStepJob], workspaces: &mut [Workspace]) -> Result<()> {
     if jobs.is_empty() {
         return Ok(());
@@ -476,6 +347,9 @@ mod tests {
         assert!(galore < full / 10);
         assert!(ld > 64 * 256 * 4, "error feedback dominates");
         assert_eq!(bytes(Method::MlorcLion), 4 * (64 + 256) * 4);
+        // the registry combos for free: SGDM momenta are single-moment
+        assert_eq!(bytes(Method::MlorcSgdM), 4 * (64 + 256) * 4);
+        assert_eq!(bytes(Method::FullSgdM), 64 * 256 * 4);
     }
 
     #[test]
@@ -491,13 +365,16 @@ mod tests {
         assert_eq!(st.step_method().unwrap(), "adamw");
         let st = OptState::for_param(Method::MlorcLion, &vec_spec, &preset).unwrap();
         assert_eq!(st.step_method().unwrap(), "lion");
+        let st = OptState::for_param(Method::MlorcSgdM, &vec_spec, &preset).unwrap();
+        assert_eq!(st.step_method().unwrap(), "sgdm");
     }
 
     #[test]
     fn ckpt_meta_roundtrip_all_variants() {
-        // Every variant must survive meta + tensor-field serialization;
-        // flags (left/refreshed) and tensor shapes are the load-bearing
-        // part, byte-exactness is covered by tests/checkpoint_v2.rs.
+        // Every registered method's state must survive meta + tensor-field
+        // serialization; flags (left/refreshed) and tensor shapes are the
+        // load-bearing part, byte-exactness is covered by
+        // tests/checkpoint_v2.rs and tests/optim_matrix.rs.
         let preset = fake_preset(4);
         let spec = mat_spec(12, 40);
         for &method in Method::all() {
@@ -522,13 +399,13 @@ mod tests {
     #[test]
     fn galore_projects_short_side() {
         let preset = fake_preset(4);
-        let tall = OptState::for_param(Method::Galore, &mat_spec(256, 64), &preset).unwrap();
-        match tall {
-            OptState::Galore { p, left, .. } => {
-                assert!(!left);
-                assert_eq!(p.shape, vec![64, 4]);
-            }
-            _ => panic!(),
-        }
+        let mut tall = OptState::for_param(Method::Galore, &mat_spec(256, 64), &preset).unwrap();
+        let gal = tall.galore_mut().expect("galore layout");
+        assert!(!gal.left);
+        assert_eq!(gal.p.shape, vec![64, 4]);
+        // non-projector layouts have no galore surface
+        let mut mlorc =
+            OptState::for_param(Method::MlorcAdamW, &mat_spec(256, 64), &preset).unwrap();
+        assert!(mlorc.galore_mut().is_none());
     }
 }

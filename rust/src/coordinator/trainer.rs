@@ -82,6 +82,15 @@ impl<'rt> Trainer<'rt> {
         // Normalize once so both the graph path and the host path see a
         // sane refresh cadence (freq 0 would be a div-by-zero at use).
         cfg.galore_update_freq = cfg.galore_update_freq.max(1);
+        // Registry combos without lowered step graphs are host-only for
+        // now; fail at construction instead of at the first step.
+        if !cfg.method.desc().graphed && !cfg.host_opt {
+            bail!(
+                "method '{}' has no lowered step graphs yet — run it with --host-opt \
+                 (host stepping) or through the serve host engine",
+                cfg.method.name()
+            );
+        }
         let mut rng = Rng::new(cfg.seed);
         let mut init_rng = rng.split(1);
         let rng_data = rng.split(2);
@@ -363,6 +372,13 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Update one trainable parameter via its step graph.
+    ///
+    /// The input/output layout is variant-generic (no per-method match):
+    /// inputs are `w, grad, <state fields in declared order>, <omega
+    /// draws>, lr[, c1, c2]` (the bias-correction scalars only for
+    /// bias-corrected rules), outputs are `w'` followed by the state
+    /// fields the graph updates — exactly the convention every lowered
+    /// step graph already follows.
     fn apply_update(&mut self, i: usize, grad: Tensor, lr: f32, step: usize) -> Result<()> {
         let spec = self.trainable_spec(i).clone();
         // Perf (§Perf L3): 1-D parameters are a few hundred floats — a PJRT
@@ -370,6 +386,9 @@ impl<'rt> Trainer<'rt> {
         // cross-validated rust mirror of the same step.
         if spec.shape.len() == 1 {
             return self.apply_vector_update_host(i, &grad, lr, step);
+        }
+        if self.states[i].is_frozen() {
+            return Ok(());
         }
         let key = spec.shape_key();
         let method = self.states[i].step_method()?;
@@ -383,168 +402,73 @@ impl<'rt> Trainer<'rt> {
         let c2_t = Tensor::scalar(c2);
         let l = self.preset.model.l();
 
-        // GaLore projector refresh on schedule (its own graph).
-        if let OptState::Galore { p, left, refreshed, .. } = &mut self.states[i] {
-            if !*refreshed || step % self.cfg.galore_update_freq == 0 {
-                let proj_spec = self.preset.opt_step("galore_project", &key)?.clone();
-                let om_shape = if *left {
-                    [spec.shape[1], l]
+        // GaLore projector refresh on schedule (its own graph; the step
+        // graph treats `p` as a constant).
+        let refresh_left = match self.states[i].galore_mut() {
+            Some(gal) => {
+                if !gal.refreshed || step % self.cfg.galore_update_freq == 0 {
+                    Some(gal.left)
                 } else {
-                    [spec.shape[0], l]
-                };
-                let om = self.omega_streams[i].gaussian_tensor(&om_shape, 1.0);
-                let outs = self
-                    .rt
-                    .run_refs(&proj_spec, &[(&grad).into(), (&om).into()])?;
-                *p = outs.into_iter().next().unwrap().into_f32()?;
-                *refreshed = true;
+                    None
+                }
             }
+            None => None,
+        };
+        if let Some(left) = refresh_left {
+            let proj_spec = self.preset.opt_step("galore_project", &key)?.clone();
+            let om_shape = if left {
+                [spec.shape[1], l]
+            } else {
+                [spec.shape[0], l]
+            };
+            let om = self.omega_streams[i].gaussian_tensor(&om_shape, 1.0);
+            let outs = self
+                .rt
+                .run_refs(&proj_spec, &[(&grad).into(), (&om).into()])?;
+            let gal = self.states[i].galore_mut().expect("layout cannot change mid-step");
+            gal.p = outs.into_iter().next().unwrap().into_f32()?;
+            gal.refreshed = true;
         }
 
-        let n = *spec.shape.last().unwrap();
-        let m0 = spec.shape[0];
-
-        // Pre-draw the Gaussian test matrices this state needs (the RNG is
-        // a disjoint field, but `trainable_value` borrows all of self).
-        let (om_a, om_b): (Option<Tensor>, Option<Tensor>) = {
-            let need = match &self.states[i] {
-                OptState::MlorcAdamW { .. } => 2,
-                OptState::MlorcLion { .. } | OptState::MlorcM { .. } | OptState::MlorcV { .. } => 1,
-                OptState::LdAdamW { left, .. } => {
-                    if *left {
-                        1
-                    } else {
-                        3 // sentinel: one draw with [m0, l]
-                    }
-                }
-                _ => 0,
-            };
+        // Pre-draw the Gaussian test matrices this state's graph takes
+        // (the RNG is a disjoint field, but `trainable_value` borrows all
+        // of self).
+        let omegas: Vec<Tensor> = {
+            let shapes = self.states[i].omega_graph_shapes();
             let stream = &mut self.omega_streams[i];
-            match need {
-                2 => (
-                    Some(stream.gaussian_tensor(&[n, l], 1.0)),
-                    Some(stream.gaussian_tensor(&[n, l], 1.0)),
-                ),
-                1 => (Some(stream.gaussian_tensor(&[n, l], 1.0)), None),
-                3 => (Some(stream.gaussian_tensor(&[m0, l], 1.0)), None),
-                _ => (None, None),
-            }
+            shapes.iter().map(|s| stream.gaussian_tensor(s, 1.0)).collect()
         };
-
-        let w = self.trainable_value(i);
 
         // Assemble inputs per the step-graph convention and execute.
-        let outs = match &self.states[i] {
-            OptState::Frozen => return Ok(()),
-            OptState::AdamW { m, v } => self.rt.run_refs(
-                &sg,
-                &[w.into(), (&grad).into(), m.into(), v.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into()],
-            )?,
-            OptState::Lion { m } => self
-                .rt
-                .run_refs(&sg, &[w.into(), (&grad).into(), m.into(), (&lr_t).into()])?,
-            OptState::MlorcAdamW { mq, mb, vq, vb } => {
-                let om_m = om_a.as_ref().unwrap();
-                let om_v = om_b.as_ref().unwrap();
-                self.rt.run_refs(
-                    &sg,
-                    &[
-                        w.into(), (&grad).into(),
-                        mq.into(), mb.into(), vq.into(), vb.into(),
-                        om_m.into(), om_v.into(),
-                        (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
-                    ],
-                )?
-            }
-            OptState::MlorcLion { mq, mb } => {
-                let om = om_a.as_ref().unwrap();
-                self.rt.run_refs(
-                    &sg,
-                    &[w.into(), (&grad).into(), mq.into(), mb.into(), om.into(), (&lr_t).into()],
-                )?
-            }
-            OptState::MlorcM { mq, mb, v } => {
-                let om = om_a.as_ref().unwrap();
-                self.rt.run_refs(
-                    &sg,
-                    &[
-                        w.into(), (&grad).into(), mq.into(), mb.into(), v.into(),
-                        om.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
-                    ],
-                )?
-            }
-            OptState::MlorcV { m, vq, vb } => {
-                let om = om_a.as_ref().unwrap();
-                self.rt.run_refs(
-                    &sg,
-                    &[
-                        w.into(), (&grad).into(), m.into(), vq.into(), vb.into(),
-                        om.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
-                    ],
-                )?
-            }
-            OptState::Galore { p, m_lo, v_lo, .. } => self.rt.run_refs(
-                &sg,
-                &[
-                    w.into(), (&grad).into(), p.into(), m_lo.into(), v_lo.into(),
-                    (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
-                ],
-            )?,
-            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
-                let om = om_a.as_ref().unwrap();
-                self.rt.run_refs(
-                    &sg,
-                    &[
-                        w.into(), (&grad).into(), p.into(), m_lo.into(), v_lo.into(), e.into(),
-                        om.into(), (&lr_t).into(), (&c1_t).into(), (&c2_t).into(),
-                    ],
-                )?
-            }
-        };
+        let w = self.trainable_value(i);
+        let state = &self.states[i];
+        let mut inputs: Vec<ValRef> = Vec::with_capacity(4 + 6 + omegas.len());
+        inputs.push(w.into());
+        inputs.push((&grad).into());
+        for (_, tensor) in state.tensor_fields() {
+            inputs.push(tensor.into());
+        }
+        for om in &omegas {
+            inputs.push(om.into());
+        }
+        inputs.push((&lr_t).into());
+        if state.bias_corrected() {
+            inputs.push((&c1_t).into());
+            inputs.push((&c2_t).into());
+        }
+        let outs = self.rt.run_refs(&sg, &inputs)?;
+        drop(inputs);
 
-        // Scatter outputs back: w', then state in declared order.
+        // Scatter outputs back: w', then the graph-updated fields in
+        // declared order.
         let mut it = outs.into_iter();
         let w_new = it.next().context("step graph returned nothing")?.into_f32()?;
         self.set_trainable_value(i, w_new);
-        match &mut self.states[i] {
-            OptState::Frozen => {}
-            OptState::AdamW { m, v } => {
-                *m = it.next().context("m")?.into_f32()?;
-                *v = it.next().context("v")?.into_f32()?;
-            }
-            OptState::Lion { m } => {
-                *m = it.next().context("m")?.into_f32()?;
-            }
-            OptState::MlorcAdamW { mq, mb, vq, vb } => {
-                *mq = it.next().context("mq")?.into_f32()?;
-                *mb = it.next().context("mb")?.into_f32()?;
-                *vq = it.next().context("vq")?.into_f32()?;
-                *vb = it.next().context("vb")?.into_f32()?;
-            }
-            OptState::MlorcLion { mq, mb } => {
-                *mq = it.next().context("mq")?.into_f32()?;
-                *mb = it.next().context("mb")?.into_f32()?;
-            }
-            OptState::MlorcM { mq, mb, v } => {
-                *mq = it.next().context("mq")?.into_f32()?;
-                *mb = it.next().context("mb")?.into_f32()?;
-                *v = it.next().context("v")?.into_f32()?;
-            }
-            OptState::MlorcV { m, vq, vb } => {
-                *m = it.next().context("m")?.into_f32()?;
-                *vq = it.next().context("vq")?.into_f32()?;
-                *vb = it.next().context("vb")?.into_f32()?;
-            }
-            OptState::Galore { m_lo, v_lo, .. } => {
-                *m_lo = it.next().context("M")?.into_f32()?;
-                *v_lo = it.next().context("V")?.into_f32()?;
-            }
-            OptState::LdAdamW { p, m_lo, v_lo, e, .. } => {
-                *p = it.next().context("p")?.into_f32()?;
-                *m_lo = it.next().context("M")?.into_f32()?;
-                *v_lo = it.next().context("V")?.into_f32()?;
-                *e = it.next().context("e")?.into_f32()?;
-            }
+        for (name, slot) in self.states[i].graph_output_fields_mut() {
+            *slot = it
+                .next()
+                .with_context(|| format!("step graph '{method}' missing output '{name}'"))?
+                .into_f32()?;
         }
         Ok(())
     }
@@ -557,13 +481,12 @@ impl<'rt> Trainer<'rt> {
         let t = step + 1;
         let galore_refresh_due = step % self.cfg.galore_update_freq == 0;
         let Trainer { params, adapters, states, omega_streams, trainable, host_ws, .. } = self;
-        // GaLore projector cadence, mirroring the graph path: clearing the
-        // flag makes `host_step` re-derive P from this step's gradient.
+        // GaLore projector cadence, mirroring the graph path: a stale
+        // projector makes `host_step` re-derive P from this step's
+        // gradient (no-op for layouts without one).
         if galore_refresh_due {
             for state in states.iter_mut() {
-                if let OptState::Galore { refreshed, .. } = state {
-                    *refreshed = false;
-                }
+                state.invalidate_projector();
             }
         }
         let mut base_refs: Vec<Option<&mut Tensor>> =
@@ -579,7 +502,7 @@ impl<'rt> Trainer<'rt> {
             .zip(trainable.iter())
             .zip(grads.into_iter());
         for (((state, rng), store), grad) in zipped {
-            if matches!(state, OptState::Frozen) {
+            if state.is_frozen() {
                 continue;
             }
             let w = match store {
@@ -600,24 +523,21 @@ impl<'rt> Trainer<'rt> {
         Ok(())
     }
 
-    /// Host-side update for 1-D params (same math as the adamw/lion step
+    /// Host-side update for 1-D params (same math as the plain step
     /// graphs; agreement enforced by `optim` unit tests + cross-validation).
+    /// Plain states are `Dense` layouts, so `host_step` draws nothing from
+    /// the Omega stream — identical stream schedule to the graph path.
     fn apply_vector_update_host(&mut self, i: usize, g: &Tensor, lr: f32, step: usize) -> Result<()> {
-        let t = (step + 1) as i32;
+        let t = step + 1;
         let mut w = match self.trainable[i] {
             Store::Base(j) => std::mem::replace(&mut self.params.values[j], Tensor::zeros(&[0])),
             Store::Adapter(j) => {
                 std::mem::replace(&mut self.adapters.as_mut().unwrap().values[j], Tensor::zeros(&[0]))
             }
         };
-        match &mut self.states[i] {
-            OptState::AdamW { m, v } => {
-                crate::optim::adamw_host_step(&mut w, g, m, v, lr, t as usize, &OptHp::adamw())
-            }
-            OptState::Lion { m } => {
-                crate::optim::lion_host_step(&mut w, g, m, lr, &OptHp::lion())
-            }
-            other => bail!("vector param with non-plain state {other:?}"),
+        {
+            let Trainer { states, omega_streams, host_ws, .. } = self;
+            states[i].host_step(&mut w, g, lr, t, &mut omega_streams[i], &mut host_ws[0])?;
         }
         self.set_trainable_value(i, w);
         Ok(())

@@ -5,6 +5,7 @@
 //!   submit  — enqueue a fine-tuning job into a serve spool
 //!   serve   — drain a spool with N concurrent jobs (crash-safe resume)
 //!   status  — aggregate per-job status across a spool
+//!   cancel  — tombstone a queued job (atomic rename into cancelled/)
 //!   bench   — regenerate a paper table/figure (see DESIGN.md §5)
 //!   info    — artifact/manifest inventory
 //!   memory  — analytic memory report for a preset (Table 1 style)
@@ -35,6 +36,7 @@ fn run() -> Result<()> {
         Some("submit") => cmd_submit(&args),
         Some("serve") => cmd_serve(&args),
         Some("status") => cmd_status(&args),
+        Some("cancel") => cmd_cancel(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         Some("memory") => cmd_memory(&args),
@@ -59,9 +61,10 @@ USAGE: mlorc <subcommand> [--options]
          [--checkpoint-dir ckpt/] [--checkpoint-every N] [--resume ckpt/]
   submit --spool spool/ --method mlorc_adamw --steps 200
          [--engine host|graph] [--preset <name>] [--task <t>] [--lr X]
-         [--seed N] [--checkpoint-every N] [--id jobNNN_name]
+         [--seed N] [--checkpoint-every N] [--priority N] [--id jobNNN_name]
   serve  --spool spool/ [--jobs 2] [--drain] [--poll-ms 500]
   status --spool spool/ [--json] [--expect-all-done]
+  cancel <job-id> [--spool spool/]
   bench  --experiment <id> [--quick] [--steps N] [--seeds K]
          ids: {ids}
   memory --preset tiny [--per-layer]
@@ -174,6 +177,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
     cfg.host_opt = args.flag("host-opt");
     cfg.log_every = 0;
     let checkpoint_every = args.get_usize("checkpoint-every", 10)?;
+    let priority = args.get_i64("priority", 0)?;
     let id = args.get("id").map(|s| s.to_string());
     args.reject_unknown()?;
 
@@ -182,9 +186,26 @@ fn cmd_submit(args: &Args) -> Result<()> {
         Some(i) => i,
         None => spool.next_job_id(method.name())?,
     };
-    let spec = JobSpec { id, engine, checkpoint_every, cfg };
+    let spec = JobSpec { id, engine, checkpoint_every, priority, cfg };
     let path = spool.submit(&spec)?;
     println!("submitted {} -> {}", spec.id, path.display());
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let spool_dir = args.get_or("spool", "spool").to_string();
+    // accept the id either positionally (`mlorc cancel job001_x`) or as
+    // `--id job001_x` — read the option unconditionally so reject_unknown
+    // never mislabels the documented --id as unknown
+    let opt_id = args.get("id").map(|s| s.to_string());
+    let id = args.positional.first().cloned().or(opt_id);
+    args.reject_unknown()?;
+    let Some(id) = id else {
+        bail!("usage: mlorc cancel <job-id> [--spool dir]");
+    };
+    let spool = Spool::open(Path::new(&spool_dir))?;
+    spool.cancel(&id)?;
+    println!("cancelled {id} (tombstoned in {spool_dir}/cancelled/)");
     Ok(())
 }
 
@@ -230,7 +251,10 @@ fn cmd_status(args: &Args) -> Result<()> {
         if rows.is_empty() {
             bail!("spool {spool_dir} has no jobs");
         }
-        let not_done = rows.iter().filter(|r| r.state != "done").count();
+        // cancelled jobs were tombstoned on purpose; they don't block a
+        // clean drain
+        let not_done =
+            rows.iter().filter(|r| r.state != "done" && r.state != "cancelled").count();
         if not_done > 0 {
             bail!("{not_done} job(s) not done");
         }

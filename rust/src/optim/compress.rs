@@ -1,0 +1,648 @@
+//! `MomentumCompressor` — the *storage* axis of the optimizer matrix.
+//!
+//! A compressor owns the per-parameter optimizer state and decides how an
+//! update rule's moment buffers are kept between steps:
+//!
+//!  * [`Dense`] — uncompressed passthrough (any tensor shape; the vector
+//!    path and the Full baselines);
+//!  * [`RsvdQb`] — MLorc's factored Q/B recompression, with a per-moment
+//!    factored/dense mask so the Table 7 ablations (compress-m-only /
+//!    compress-v-only) are just different masks;
+//!  * [`GaloreProjector`] — GaLore's gradient-subspace projection with a
+//!    cadence-refreshed projector;
+//!  * [`LdProj`] — LDAdamW's per-step projector + error-feedback buffer.
+//!
+//! `step` owns the fused reconstruct-apply routing: each (rule × layout)
+//! pair dispatches to the exact pre-refactor `*_core` kernel
+//! (`mlorc_adamw_core`, `galore_core`, `ldadamw_core`, ...), including
+//! the Omega draw order from the parameter's RNG stream — which is what
+//! keeps every pre-existing method bit-identical through the trait seam
+//! (pinned by `tests/optim_matrix.rs`). Combinations without a kernel
+//! fail loudly at step time rather than silently approximating.
+
+// `step` threads (rule, hp, w, g, lr, t, rng, ws) through one seam on
+// purpose — it is the single dispatch surface of the optimizer matrix.
+#![allow(clippy::too_many_arguments)]
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{matmul, Rng, Workspace};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::rules::{RuleKind, UpdateRule};
+use super::{
+    galore_core, galore_lion_core, galore_refresh_projector, ldadamw_core, mlorc_adamw_core,
+    mlorc_lion_core, mlorc_m_core, mlorc_sgdm_core, mlorc_v_core, OptHp,
+};
+
+/// How one parameter's momentum is stored and stepped. Implementations
+/// also own the checkpoint-v2 surface of the state: stable tensor field
+/// names (in declared order) plus any non-tensor flags.
+#[allow(clippy::too_many_arguments)]
+pub trait MomentumCompressor: std::fmt::Debug + Send + Sync {
+    /// Stable id (`dense` | `rsvd_qb` | `galore` | `ldproj`).
+    fn id(&self) -> &'static str;
+
+    /// The state's tensor fields under stable names, in declared order —
+    /// checkpoint v2 stores each as `<param>/<field>`, and the step
+    /// graphs take them (in this order) right after `w` and `grad`.
+    fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)>;
+
+    /// Mutable view of every tensor field, same names and order.
+    fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)>;
+
+    /// The fields a step graph returns updated, in output order.
+    /// Projector compressors exclude fields the graph treats as
+    /// constants (GaLore's `p` is refreshed by its own graph).
+    fn graph_output_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        self.tensor_fields_mut()
+    }
+
+    /// Non-tensor flags for checkpoint metadata (inverse lives in the
+    /// registry's variant decoder).
+    fn flags_into(&self, _meta: &mut Json) {}
+
+    /// Optimizer-state footprint in bytes (the Table 1/3 quantity).
+    fn state_bytes(&self) -> usize {
+        self.tensor_fields().iter().map(|(_, t)| t.size_bytes()).sum()
+    }
+
+    /// Reconstructed first moment, if the layout has one (spectral probe).
+    fn first_moment(&self) -> Option<Tensor> {
+        None
+    }
+
+    /// Reconstructed second moment, if the layout has one.
+    fn second_moment(&self) -> Option<Tensor> {
+        None
+    }
+
+    /// Shapes of the Gaussian test matrices the *step graph* takes after
+    /// the state fields, in draw order. Host-side draws happen inside
+    /// `step` (same count and order).
+    fn omega_graph_shapes(&self) -> Vec<[usize; 2]> {
+        vec![]
+    }
+
+    /// Cadence hook: mark a cached projector stale so the next step
+    /// re-derives it from that step's gradient. No-op for compressors
+    /// without one.
+    fn invalidate_projector(&mut self) {}
+
+    /// Downcast hook for the trainer's graph-path projector refresh.
+    fn as_galore_mut(&mut self) -> Option<&mut GaloreProjector> {
+        None
+    }
+
+    /// One optimizer step entirely on the host: route (rule × layout) to
+    /// the matching fused kernel. `t` is 1-based; `rng` is the
+    /// parameter's own Omega stream; scratch comes from `ws`.
+    fn step(
+        &mut self,
+        rule: &'static dyn UpdateRule,
+        hp: &OptHp,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<()>;
+
+    fn clone_box(&self) -> Box<dyn MomentumCompressor>;
+}
+
+// ---------------------------------------------------------------- dense
+
+/// Uncompressed passthrough: one dense buffer per rule moment. Works on
+/// any tensor shape; this is the vector path and the Full baselines.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    names: &'static [&'static str],
+    moments: Vec<Tensor>,
+}
+
+impl Dense {
+    pub fn new(rule: &dyn UpdateRule, shape: &[usize]) -> Dense {
+        Dense {
+            names: rule.moment_names(),
+            moments: (0..rule.n_moments()).map(|_| Tensor::zeros(shape)).collect(),
+        }
+    }
+
+    /// Rebuild from checkpoint tensors (names must match the rule's).
+    pub fn from_parts(names: &'static [&'static str], moments: Vec<Tensor>) -> Dense {
+        Dense { names, moments }
+    }
+}
+
+impl MomentumCompressor for Dense {
+    fn id(&self) -> &'static str {
+        "dense"
+    }
+
+    fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        self.names.iter().copied().zip(self.moments.iter()).collect()
+    }
+
+    fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        self.names.iter().copied().zip(self.moments.iter_mut()).collect()
+    }
+
+    fn first_moment(&self) -> Option<Tensor> {
+        self.moments.first().cloned()
+    }
+
+    fn second_moment(&self) -> Option<Tensor> {
+        // only rules whose second buffer is a second moment ("v")
+        if self.names.get(1) == Some(&"v") {
+            self.moments.get(1).cloned()
+        } else {
+            None
+        }
+    }
+
+    fn step(
+        &mut self,
+        rule: &'static dyn UpdateRule,
+        hp: &OptHp,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        _rng: &mut Rng,
+        _ws: &mut Workspace,
+    ) -> Result<()> {
+        let mut refs: Vec<&mut Tensor> = self.moments.iter_mut().collect();
+        rule.dense_step(w, g, &mut refs, lr, t, hp)
+    }
+
+    fn clone_box(&self) -> Box<dyn MomentumCompressor> {
+        Box::new(self.clone())
+    }
+}
+
+// --------------------------------------------------------------- rsvd_qb
+
+/// Storage of one rule moment under [`RsvdQb`].
+#[derive(Debug, Clone)]
+pub enum MomentStore {
+    /// Rank-l factors: `q` is (m, l), `b` is (l, n).
+    Factored { q: Tensor, b: Tensor },
+    /// Kept dense (the uncompressed half of a Table 7 ablation).
+    Dense(Tensor),
+}
+
+/// Checkpoint field names per moment slot: (dense, q-factor, b-factor).
+/// Shared with the registry's variant decoder so encode and decode can
+/// never disagree.
+pub(crate) const QB_NAMES: [(&str, &str, &str); 2] = [("m", "mq", "mb"), ("v", "vq", "vb")];
+
+/// MLorc's factored Q/B recompression with a per-moment factored/dense
+/// mask: `[true, true]` is MLorc-AdamW, `[true]` MLorc-Lion/SGDM, and
+/// `[true, false]` / `[false, true]` the Table 7 ablations.
+#[derive(Debug, Clone)]
+pub struct RsvdQb {
+    stores: Vec<MomentStore>,
+}
+
+impl RsvdQb {
+    pub fn new(factored: &[bool], shape: &[usize], l: usize) -> Result<RsvdQb> {
+        if shape.len() != 2 {
+            bail!("rsvd_qb compression needs a 2-D parameter, got shape {shape:?}");
+        }
+        if factored.len() > QB_NAMES.len() {
+            bail!("rsvd_qb supports at most {} moments", QB_NAMES.len());
+        }
+        let (m, n) = (shape[0], shape[1]);
+        let stores = factored
+            .iter()
+            .map(|&f| {
+                if f {
+                    MomentStore::Factored {
+                        q: Tensor::zeros(&[m, l]),
+                        b: Tensor::zeros(&[l, n]),
+                    }
+                } else {
+                    MomentStore::Dense(Tensor::zeros(&[m, n]))
+                }
+            })
+            .collect();
+        Ok(RsvdQb { stores })
+    }
+
+    pub fn from_stores(stores: Vec<MomentStore>) -> RsvdQb {
+        RsvdQb { stores }
+    }
+}
+
+impl MomentumCompressor for RsvdQb {
+    fn id(&self) -> &'static str {
+        "rsvd_qb"
+    }
+
+    fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        let mut out = Vec::new();
+        for (k, store) in self.stores.iter().enumerate() {
+            let (dense, qn, bn) = QB_NAMES[k];
+            match store {
+                MomentStore::Factored { q, b } => {
+                    out.push((qn, q));
+                    out.push((bn, b));
+                }
+                MomentStore::Dense(t) => out.push((dense, t)),
+            }
+        }
+        out
+    }
+
+    fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        let mut out = Vec::new();
+        for (k, store) in self.stores.iter_mut().enumerate() {
+            let (dense, qn, bn) = QB_NAMES[k];
+            match store {
+                MomentStore::Factored { q, b } => {
+                    out.push((qn, &mut *q));
+                    out.push((bn, &mut *b));
+                }
+                MomentStore::Dense(t) => out.push((dense, &mut *t)),
+            }
+        }
+        out
+    }
+
+    fn first_moment(&self) -> Option<Tensor> {
+        match self.stores.first()? {
+            MomentStore::Factored { q, b } => Some(matmul(q, b)),
+            MomentStore::Dense(t) => Some(t.clone()),
+        }
+    }
+
+    fn second_moment(&self) -> Option<Tensor> {
+        match self.stores.get(1)? {
+            MomentStore::Factored { q, b } => Some(matmul(q, b)),
+            MomentStore::Dense(t) => Some(t.clone()),
+        }
+    }
+
+    fn omega_graph_shapes(&self) -> Vec<[usize; 2]> {
+        self.stores
+            .iter()
+            .filter_map(|s| match s {
+                MomentStore::Factored { q, b } => Some([b.shape[1], q.shape[1]]),
+                MomentStore::Dense(_) => None,
+            })
+            .collect()
+    }
+
+    fn step(
+        &mut self,
+        rule: &'static dyn UpdateRule,
+        hp: &OptHp,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        use MomentStore::{Dense as D, Factored as F};
+        let (_, n) = w.dims2()?;
+        // Fused reconstruct-apply routing. Omega draws happen here, right
+        // before the kernel, in moment order — the exact pre-refactor
+        // stream schedule.
+        match (rule.kind(), &mut self.stores[..]) {
+            (RuleKind::AdamW, [F { q: mq, b: mb }, F { q: vq, b: vb }]) => {
+                let l = mq.shape[1];
+                let om_m = rng.gaussian_tensor(&[n, l], 1.0);
+                let om_v = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_adamw_core(w, g, mq, mb, vq, vb, t, lr, hp, &om_m, &om_v, ws);
+            }
+            (RuleKind::AdamW, [F { q: mq, b: mb }, D(v)]) => {
+                let l = mq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_m_core(w, g, mq, mb, v, t, lr, hp, &om, ws);
+            }
+            (RuleKind::AdamW, [D(m), F { q: vq, b: vb }]) => {
+                let l = vq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_v_core(w, g, m, vq, vb, t, lr, hp, &om, ws);
+            }
+            (RuleKind::Lion, [F { q: mq, b: mb }]) => {
+                let l = mq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_lion_core(w, g, mq, mb, lr, hp, &om, ws);
+            }
+            (RuleKind::SgdM, [F { q: mq, b: mb }]) => {
+                let l = mq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_sgdm_core(w, g, mq, mb, lr, hp, &om, ws);
+            }
+            _ => bail!(
+                "no fused kernel for rule '{}' with this rsvd_qb moment layout",
+                rule.id()
+            ),
+        }
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn MomentumCompressor> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------- galore
+
+/// GaLore: moments live in a low-rank subspace spanned by a projector `p`
+/// refreshed from the gradient on a cadence the *caller* owns (the
+/// trainer clears `refreshed` every `galore_update_freq` steps).
+#[derive(Debug, Clone)]
+pub struct GaloreProjector {
+    /// (m, l) when `left` (m <= n), else (n, l).
+    pub p: Tensor,
+    /// Low-dim moment buffers, one per rule moment (`m_lo`[, `v_lo`]).
+    lo: Vec<Tensor>,
+    pub left: bool,
+    pub refreshed: bool,
+}
+
+/// Low-dim moment field names per slot.
+const LO_NAMES: [&str; 2] = ["m_lo", "v_lo"];
+
+impl GaloreProjector {
+    pub fn new(n_moments: usize, shape: &[usize], l: usize) -> Result<GaloreProjector> {
+        if shape.len() != 2 {
+            bail!("galore projection needs a 2-D parameter, got shape {shape:?}");
+        }
+        if n_moments > LO_NAMES.len() {
+            bail!("galore supports at most {} moments", LO_NAMES.len());
+        }
+        let (m, n) = (shape[0], shape[1]);
+        let left = m <= n;
+        let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
+        Ok(GaloreProjector {
+            p: Tensor::zeros(&pshape),
+            lo: (0..n_moments).map(|_| Tensor::zeros(&rshape)).collect(),
+            left,
+            refreshed: false,
+        })
+    }
+
+    pub fn from_parts(p: Tensor, lo: Vec<Tensor>, left: bool, refreshed: bool) -> GaloreProjector {
+        GaloreProjector { p, lo, left, refreshed }
+    }
+}
+
+impl MomentumCompressor for GaloreProjector {
+    fn id(&self) -> &'static str {
+        "galore"
+    }
+
+    fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        let mut out = vec![("p", &self.p)];
+        for (k, t) in self.lo.iter().enumerate() {
+            out.push((LO_NAMES[k], t));
+        }
+        out
+    }
+
+    fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        let mut out = vec![("p", &mut self.p)];
+        for (k, t) in self.lo.iter_mut().enumerate() {
+            out.push((LO_NAMES[k], t));
+        }
+        out
+    }
+
+    fn graph_output_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        // The step graph treats the projector as a constant; it is
+        // refreshed by its own `galore_project` graph.
+        self.tensor_fields_mut().into_iter().filter(|(name, _)| *name != "p").collect()
+    }
+
+    fn flags_into(&self, meta: &mut Json) {
+        meta.set("left", Json::Bool(self.left));
+        meta.set("refreshed", Json::Bool(self.refreshed));
+    }
+
+    fn invalidate_projector(&mut self) {
+        self.refreshed = false;
+    }
+
+    fn as_galore_mut(&mut self) -> Option<&mut GaloreProjector> {
+        Some(self)
+    }
+
+    fn step(
+        &mut self,
+        rule: &'static dyn UpdateRule,
+        hp: &OptHp,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        _ws: &mut Workspace,
+    ) -> Result<()> {
+        // Refresh cadence lives with the caller (it clears `refreshed`
+        // every `galore_update_freq` steps, mirroring the graph path);
+        // the Omega draw happens only on refresh, keeping the
+        // per-parameter stream schedule-independent.
+        let l = self.p.shape[1];
+        if !self.refreshed {
+            galore_refresh_projector(&mut self.p, g, self.left, l, rng);
+            self.refreshed = true;
+        }
+        match (rule.kind(), &mut self.lo[..]) {
+            (RuleKind::AdamW, [m_lo, v_lo]) => {
+                galore_core(w, g, &self.p, m_lo, v_lo, self.left, t, lr, hp);
+            }
+            (RuleKind::Lion, [m_lo]) => {
+                galore_lion_core(w, g, &self.p, m_lo, self.left, lr, hp);
+            }
+            _ => bail!(
+                "no subspace kernel for rule '{}' with {} galore moment(s)",
+                rule.id(),
+                self.lo.len()
+            ),
+        }
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn MomentumCompressor> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------- ldproj
+
+/// LDAdamW: per-step projector from the error-compensated gradient,
+/// rotation-aware low-dim Adam state, full-size error-feedback buffer.
+/// The rotation's `|·|` on the second moment is Adam-specific, so this
+/// compressor only pairs with the AdamW rule.
+#[derive(Debug, Clone)]
+pub struct LdProj {
+    pub p: Tensor,
+    pub m_lo: Tensor,
+    pub v_lo: Tensor,
+    /// full-size error feedback — the memory cost Table 3 exposes
+    pub e: Tensor,
+    pub left: bool,
+}
+
+impl LdProj {
+    pub fn new(shape: &[usize], l: usize) -> Result<LdProj> {
+        if shape.len() != 2 {
+            bail!("ldproj compression needs a 2-D parameter, got shape {shape:?}");
+        }
+        let (m, n) = (shape[0], shape[1]);
+        let left = m <= n;
+        let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
+        Ok(LdProj {
+            p: Tensor::zeros(&pshape),
+            m_lo: Tensor::zeros(&rshape),
+            v_lo: Tensor::zeros(&rshape),
+            e: Tensor::zeros(shape),
+            left,
+        })
+    }
+}
+
+impl MomentumCompressor for LdProj {
+    fn id(&self) -> &'static str {
+        "ldproj"
+    }
+
+    fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        vec![("p", &self.p), ("m_lo", &self.m_lo), ("v_lo", &self.v_lo), ("e", &self.e)]
+    }
+
+    fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        vec![
+            ("p", &mut self.p),
+            ("m_lo", &mut self.m_lo),
+            ("v_lo", &mut self.v_lo),
+            ("e", &mut self.e),
+        ]
+    }
+
+    fn flags_into(&self, meta: &mut Json) {
+        meta.set("left", Json::Bool(self.left));
+    }
+
+    fn omega_graph_shapes(&self) -> Vec<[usize; 2]> {
+        let l = self.p.shape[1];
+        let (m, n) = (self.e.shape[0], self.e.shape[1]);
+        if self.left {
+            vec![[n, l]]
+        } else {
+            vec![[m, l]]
+        }
+    }
+
+    fn step(
+        &mut self,
+        rule: &'static dyn UpdateRule,
+        hp: &OptHp,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        _ws: &mut Workspace,
+    ) -> Result<()> {
+        if rule.kind() != RuleKind::AdamW {
+            bail!("ldproj's rotation-aware state is AdamW-specific (got rule '{}')", rule.id());
+        }
+        let l = self.p.shape[1];
+        ldadamw_core(
+            w,
+            g,
+            &mut self.p,
+            &mut self.m_lo,
+            &mut self.v_lo,
+            &mut self.e,
+            self.left,
+            l,
+            t,
+            lr,
+            hp,
+            rng,
+        );
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn MomentumCompressor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::rules::{rule, RuleKind};
+
+    #[test]
+    fn field_names_match_checkpoint_v2_layout() {
+        // The on-disk field names of every layout are a stable contract
+        // (old v2 checkpoints must keep loading).
+        let both = RsvdQb::new(&[true, true], &[6, 8], 2).unwrap();
+        let names: Vec<_> = both.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["mq", "mb", "vq", "vb"]);
+        let m_only = RsvdQb::new(&[true, false], &[6, 8], 2).unwrap();
+        let names: Vec<_> = m_only.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["mq", "mb", "v"]);
+        let v_only = RsvdQb::new(&[false, true], &[6, 8], 2).unwrap();
+        let names: Vec<_> = v_only.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["m", "vq", "vb"]);
+        let gal = GaloreProjector::new(2, &[6, 8], 2).unwrap();
+        let names: Vec<_> = gal.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["p", "m_lo", "v_lo"]);
+        let ld = LdProj::new(&[6, 8], 2).unwrap();
+        let names: Vec<_> = ld.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["p", "m_lo", "v_lo", "e"]);
+        let dense = Dense::new(rule(RuleKind::AdamW), &[6, 8]);
+        let names: Vec<_> = dense.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["m", "v"]);
+    }
+
+    #[test]
+    fn galore_graph_outputs_exclude_projector() {
+        let mut gal = GaloreProjector::new(2, &[6, 8], 2).unwrap();
+        let names: Vec<_> = gal.graph_output_fields_mut().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["m_lo", "v_lo"]);
+    }
+
+    #[test]
+    fn omega_shapes_follow_factored_moments() {
+        let both = RsvdQb::new(&[true, true], &[6, 8], 2).unwrap();
+        assert_eq!(both.omega_graph_shapes(), vec![[8, 2], [8, 2]]);
+        let v_only = RsvdQb::new(&[false, true], &[6, 8], 2).unwrap();
+        assert_eq!(v_only.omega_graph_shapes(), vec![[8, 2]]);
+        // LDAdamW: one draw, on the projected side.
+        let tall = LdProj::new(&[20, 6], 2).unwrap();
+        assert!(!tall.left);
+        assert_eq!(tall.omega_graph_shapes(), vec![[20, 2]]);
+    }
+
+    #[test]
+    fn unsupported_combo_fails_loudly() {
+        let hp = OptHp::lion();
+        let mut rng = Rng::new(0);
+        let mut w = rng.gaussian_tensor(&[6, 8], 1.0);
+        let g = rng.gaussian_tensor(&[6, 8], 1.0);
+        let mut ws = Workspace::new();
+        // Lion (1 moment) against a 2-moment factored layout has no kernel.
+        let mut qb = RsvdQb::new(&[true, true], &[6, 8], 2).unwrap();
+        let err = qb
+            .step(rule(RuleKind::Lion), &hp, &mut w, &g, 1e-2, 1, &mut rng, &mut ws)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("lion"), "{err:#}");
+        // LDAdamW is AdamW-only.
+        let mut ld = LdProj::new(&[6, 8], 2).unwrap();
+        assert!(ld
+            .step(rule(RuleKind::SgdM), &hp, &mut w, &g, 1e-2, 1, &mut rng, &mut ws)
+            .is_err());
+    }
+}

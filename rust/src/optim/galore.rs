@@ -64,6 +64,35 @@ pub fn galore_core(
     }
 }
 
+/// One GaLore × Lion step on raw state tensors (projector already
+/// current): project the gradient, form the Lion interpolant in the
+/// subspace, take its sign *in the subspace*, project back. Momentum is
+/// the single low-dim EMA, decayed with beta2 after the update like the
+/// dense Lion kernel. The combo the trait split makes free.
+#[allow(clippy::too_many_arguments)]
+pub fn galore_lion_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    p: &Tensor,
+    m_lo: &mut Tensor,
+    left: bool,
+    lr: f32,
+    hp: &OptHp,
+) {
+    let r = if left { matmul_at_b(p, g) } else { matmul(g, p) };
+    let mut c = m_lo.clone();
+    for (ci, ri) in c.data.iter_mut().zip(&r.data) {
+        *ci = super::lion::sign(hp.beta1 * *ci + (1.0 - hp.beta1) * ri);
+    }
+    let full = if left { matmul(p, &c) } else { matmul_a_bt(&c, p) };
+    for (wi, fi) in w.data.iter_mut().zip(&full.data) {
+        *wi -= lr * (hp.galore_scale * fi + hp.weight_decay * *wi);
+    }
+    for (mi, ri) in m_lo.data.iter_mut().zip(&r.data) {
+        *mi = hp.beta2 * *mi + (1.0 - hp.beta2) * ri;
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct GaloreState {
     /// projector: (m, l) when left (m <= n), else (n, l)
@@ -141,6 +170,30 @@ mod tests {
         delta.axpy(-1.0, &w0, 1.0);
         let proj = matmul(&st.p, &matmul_at_b(&st.p, &delta));
         assert!(delta.rel_err(&proj) < 1e-4, "rel {}", delta.rel_err(&proj));
+    }
+
+    #[test]
+    fn lion_update_stays_in_projector_range() {
+        // galore_lion_core's update must lie in the projector's range,
+        // same invariant as the AdamW combo.
+        let hp = OptHp::lion();
+        let mut rng = Rng::new(3);
+        let g = rng.gaussian_tensor(&[6, 24], 1.0);
+        let mut p = Tensor::zeros(&[6, 2]);
+        galore_refresh_projector(&mut p, &g, true, 2, &mut rng);
+        let w0 = rng.gaussian_tensor(&[6, 24], 1.0);
+        let mut w = w0.clone();
+        let mut m_lo = Tensor::zeros(&[2, 24]);
+        galore_lion_core(&mut w, &g, &p, &mut m_lo, true, 0.1, &hp);
+        let mut delta = w.clone();
+        delta.axpy(-1.0, &w0, 1.0);
+        let proj = matmul(&p, &matmul_at_b(&p, &delta));
+        assert!(delta.rel_err(&proj) < 1e-4, "rel {}", delta.rel_err(&proj));
+        // momentum decayed with beta2 from zero: (1 - beta2) * r
+        let r = matmul_at_b(&p, &g);
+        for (mi, ri) in m_lo.data.iter().zip(&r.data) {
+            assert!((mi - (1.0 - hp.beta2) * ri).abs() < 1e-6);
+        }
     }
 
     #[test]

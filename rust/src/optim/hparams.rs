@@ -34,13 +34,17 @@ impl OptHp {
         OptHp { beta1: 0.9, beta2: 0.99, ..OptHp::adamw() }
     }
 
+    /// SGD with EMA momentum: only `beta1` and `weight_decay` are read.
+    pub fn sgdm() -> OptHp {
+        OptHp::adamw()
+    }
+
+    /// Host hyper-parameters of a method's matrix step — resolved
+    /// through the registry's variant table instead of a match ladder.
     pub fn for_method(method: crate::config::Method) -> OptHp {
-        use crate::config::Method::*;
-        match method {
-            FullAdamW | LoraAdamW | Galore | LdAdamW => OptHp::adamw(),
-            MlorcAdamW | MlorcM | MlorcV => OptHp::mlorc_adamw(),
-            FullLion | MlorcLion | LoraLion => OptHp::lion(),
-        }
+        let v = crate::optim::registry::variant(method.matrix_step())
+            .expect("registered methods only reference registered variants");
+        (v.hp)()
     }
 
     /// From a manifest step-graph hparams blob.

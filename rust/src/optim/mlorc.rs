@@ -255,6 +255,107 @@ pub fn fused_lion_band(
     }
 }
 
+/// Fused reconstruction + SGD-momentum apply: per element
+/// `m_t = beta1·(mq mb) + (1−beta1)·g`, `w -= lr·(m_t + wd·w)` — the
+/// exact m_t from the old factors, like the AdamW fused apply.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_recon_sgdm_apply(
+    w: &mut Tensor,
+    g: &Tensor,
+    mq: &Tensor,
+    mb: &Tensor,
+    beta1: f32,
+    lr: f32,
+    hp: &OptHp,
+    ws: &mut Workspace,
+) {
+    let (m, n) = w.dims2().expect("fused sgdm weight");
+    let (_, l) = mq.dims2().expect("fused sgdm mq");
+    flops::record("fused_recon_sgdm", m, l, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let madds = m * n * (l + 2);
+    let (nbands, _) = pool::plan(m, madds);
+    let mut scratch = ws.take(nbands * n);
+    {
+        let w_bands = BandedMut::new(&mut w.data);
+        let s_bands = BandedMut::new(&mut scratch);
+        let (gd, mqd, mbd) = (&g.data[..], &mq.data[..], &mb.data[..]);
+        pool::par_row_bands(m, madds, move |band, r| {
+            let w_band = unsafe { w_bands.rows(r.clone(), n) };
+            let row_buf = unsafe { s_bands.rows(band..band + 1, n) };
+            fused_sgdm_band(
+                w_band,
+                &gd[r.start * n..r.end * n],
+                &mqd[r.start * l..r.end * l],
+                mbd,
+                row_buf,
+                l,
+                n,
+                beta1,
+                lr,
+                hp,
+            );
+        });
+    }
+    ws.give(scratch);
+}
+
+/// One band of the fused SGD-momentum apply.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_sgdm_band(
+    w: &mut [f32],
+    g: &[f32],
+    mq: &[f32],
+    mb: &[f32],
+    row: &mut [f32],
+    l: usize,
+    n: usize,
+    beta1: f32,
+    lr: f32,
+    hp: &OptHp,
+) {
+    let rows = w.len() / n;
+    let row = &mut row[..n];
+    for i in 0..rows {
+        row.fill(0.0);
+        let arow = &mq[i * l..(i + 1) * l];
+        for (p, &av) in arow.iter().enumerate() {
+            simd::axpy(row, av, &mb[p * n..(p + 1) * n]);
+        }
+        let wrow = &mut w[i * n..(i + 1) * n];
+        let grow = &g[i * n..(i + 1) * n];
+        for ((wi, &gi), &ri) in wrow.iter_mut().zip(grow).zip(row.iter()) {
+            let mt = beta1 * ri + (1.0 - beta1) * gi;
+            *wi -= lr * (mt + hp.weight_decay * *wi);
+        }
+    }
+}
+
+/// One MLorc-SGDM step on raw state tensors: the momentum is a single
+/// linear EMA, so (like Lion's) it rides the factored recompression, and
+/// the apply fuses the exact-m_t reconstruction. The combo the trait
+/// split makes free — no paper algorithm box, same kernel skeleton.
+#[allow(clippy::too_many_arguments)]
+pub fn mlorc_sgdm_core(
+    w: &mut Tensor,
+    g: &Tensor,
+    mq: &mut Tensor,
+    mb: &mut Tensor,
+    lr: f32,
+    hp: &OptHp,
+    om: &Tensor,
+    ws: &mut Workspace,
+) {
+    // apply from the exact m_t = beta1 recon + (1-beta1) g (old factors)
+    fused_recon_sgdm_apply(w, g, mq, mb, hp.beta1, lr, hp, ws);
+    // recompress the same m_t, factored
+    let (mq2, mb2) = rsvd_qb_factored(mq, mb, hp.beta1, g, om, ws);
+    ws.give_tensor(std::mem::replace(mq, mq2));
+    ws.give_tensor(std::mem::replace(mb, mb2));
+}
+
 /// One MLorc-AdamW step (Algorithm 1, lines 5-15) on raw state tensors.
 #[allow(clippy::too_many_arguments)]
 pub fn mlorc_adamw_core(
@@ -593,6 +694,28 @@ mod tests {
             let g = rng.gaussian_tensor(&shape, 1.0);
             mlorc.step(&mut w1, &g, 1e-2, &hp, &mut om_rng);
             adamw.step(&mut w2, &g, 1e-2, &hp);
+            assert!(w1.rel_err(&w2) < 1e-4, "rel {}", w1.rel_err(&w2));
+        }
+    }
+
+    #[test]
+    fn full_rank_mlorc_sgdm_equals_dense_sgdm() {
+        // l = min(m, n): compression is lossless, so the factored SGDM
+        // step must track the dense reference kernel.
+        let hp = OptHp::sgdm();
+        let shape = [9usize, 9];
+        let mut rng = Rng::new(4);
+        let mut w1 = rng.gaussian_tensor(&shape, 1.0);
+        let mut w2 = w1.clone();
+        let (mut mq, mut mb) = (Tensor::zeros(&[9, 9]), Tensor::zeros(&[9, 9]));
+        let mut m_dense = Tensor::zeros(&shape);
+        let mut ws = Workspace::new();
+        let mut om_rng = Rng::new(77);
+        for _ in 0..5 {
+            let g = rng.gaussian_tensor(&shape, 1.0);
+            let om = om_rng.gaussian_tensor(&[9, 9], 1.0);
+            mlorc_sgdm_core(&mut w1, &g, &mut mq, &mut mb, 1e-2, &hp, &om, &mut ws);
+            crate::optim::sgdm_host_step(&mut w2, &g, &mut m_dense, 1e-2, &hp);
             assert!(w1.rel_err(&w2) < 1e-4, "rel {}", w1.rel_err(&w2));
         }
     }

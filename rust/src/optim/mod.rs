@@ -11,24 +11,38 @@
 //!    updates per-parameter states through the `*_core` functions below in
 //!    parallel across a thread pool;
 //!  * unit/property tests of algebraic invariants with no PJRT dependency.
+//!
+//! Since the optimizer-matrix refactor the module also owns the
+//! trait-based dispatch core: [`rules`] (the `UpdateRule` axis),
+//! [`compress`] (the `MomentumCompressor` axis, which routes each
+//! rule × layout pair to the `*_core` kernels) and [`registry`] (the
+//! method/variant tables everything resolves through, plus the
+//! [`Method`] handle re-exported as `config::Method`).
 
 mod adamw;
+pub mod compress;
 mod galore;
 mod hparams;
 mod ldadamw;
 mod lion;
 mod mlorc;
+pub mod registry;
+pub mod rules;
 
 pub use adamw::AdamWState;
-pub use galore::{galore_core, galore_refresh_projector, GaloreState};
+pub use compress::{Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb};
+pub use galore::{galore_core, galore_lion_core, galore_refresh_projector, GaloreState};
 pub use hparams::OptHp;
 pub use ldadamw::{ldadamw_core, LdAdamWState};
 pub use lion::LionState;
 pub use mlorc::{
     fused_adamw_band, fused_lion_band, fused_recon_adamw_apply, fused_recon_lion_apply,
-    mlorc_adamw_core, mlorc_adamw_step_direct, mlorc_lion_core, mlorc_m_core, mlorc_v_core,
-    zeta_fix, MlorcAdamWState, MlorcLionState, MlorcMState, MlorcVState,
+    fused_recon_sgdm_apply, fused_sgdm_band, mlorc_adamw_core, mlorc_adamw_step_direct,
+    mlorc_lion_core, mlorc_m_core, mlorc_sgdm_core, mlorc_v_core, zeta_fix, MlorcAdamWState,
+    MlorcLionState, MlorcMState, MlorcVState,
 };
+pub use registry::{CompKind, MatrixOpt, Method, MethodDesc, VariantDesc};
+pub use rules::{rule, sgdm_host_step, RuleKind, UpdateRule};
 
 use crate::tensor::Tensor;
 

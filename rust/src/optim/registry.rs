@@ -1,0 +1,589 @@
+//! The optimizer registry: every (update rule × momentum compressor)
+//! combination the system serves, as data.
+//!
+//! Two tables:
+//!
+//!  * [`VARIANTS`] — one [`VariantDesc`] per concrete state layout. A
+//!    variant id is simultaneously the checkpoint-v2 `variant` tag and
+//!    the step-graph method name, and carries the rule tag, the
+//!    compressor layout and the host hyper-parameters. The variant is
+//!    the single constructor/decoder for per-parameter state
+//!    ([`VariantDesc::build`] / [`VariantDesc::decode`]).
+//!  * [`METHODS`] — one [`MethodDesc`] per CLI-level method id (the rows
+//!    of the paper's tables): which variant compressed matrix parameters
+//!    take, which variant the plain path (vectors, embeddings, heads,
+//!    LoRA adapters) takes, the LoRA routing flag and the default LR.
+//!
+//! The CLI, trainer, checkpoint loader, serve host engine and bench
+//! harness all resolve methods through [`Method`] — adding a method is
+//! one `MethodDesc` line here (plus, for a genuinely new rule or
+//! compressor, one impl in `rules.rs` / `compress.rs`). `mlorc_sgdm`,
+//! `galore_lion` and the dense `full_sgdm` baseline exist exactly this
+//! way.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::compress::{
+    Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb,
+};
+use super::rules::{self, RuleKind, UpdateRule};
+use super::OptHp;
+
+// ------------------------------------------------------------- variants
+
+/// Compressor layout tag — const-constructible so the variant table can
+/// be a static. `RsvdQb`'s mask says which rule moments are factored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompKind {
+    Dense,
+    RsvdQb { factored: &'static [bool] },
+    Galore,
+    LdProj,
+}
+
+/// One concrete (rule × compressor) state layout.
+#[derive(Debug)]
+pub struct VariantDesc {
+    /// Checkpoint `variant` tag == step-graph method name.
+    pub id: &'static str,
+    pub rule: RuleKind,
+    pub comp: CompKind,
+    /// Host-path hyper-parameters (the graph path reads the manifest's).
+    pub hp: fn() -> OptHp,
+}
+
+pub static VARIANTS: &[VariantDesc] = &[
+    VariantDesc { id: "adamw", rule: RuleKind::AdamW, comp: CompKind::Dense, hp: OptHp::adamw },
+    VariantDesc { id: "lion", rule: RuleKind::Lion, comp: CompKind::Dense, hp: OptHp::lion },
+    VariantDesc { id: "sgdm", rule: RuleKind::SgdM, comp: CompKind::Dense, hp: OptHp::sgdm },
+    VariantDesc {
+        id: "mlorc_adamw",
+        rule: RuleKind::AdamW,
+        comp: CompKind::RsvdQb { factored: &[true, true] },
+        hp: OptHp::mlorc_adamw,
+    },
+    VariantDesc {
+        id: "mlorc_m",
+        rule: RuleKind::AdamW,
+        comp: CompKind::RsvdQb { factored: &[true, false] },
+        hp: OptHp::mlorc_adamw,
+    },
+    VariantDesc {
+        id: "mlorc_v",
+        rule: RuleKind::AdamW,
+        comp: CompKind::RsvdQb { factored: &[false, true] },
+        hp: OptHp::mlorc_adamw,
+    },
+    VariantDesc {
+        id: "mlorc_lion",
+        rule: RuleKind::Lion,
+        comp: CompKind::RsvdQb { factored: &[true] },
+        hp: OptHp::lion,
+    },
+    VariantDesc {
+        id: "mlorc_sgdm",
+        rule: RuleKind::SgdM,
+        comp: CompKind::RsvdQb { factored: &[true] },
+        hp: OptHp::sgdm,
+    },
+    VariantDesc { id: "galore", rule: RuleKind::AdamW, comp: CompKind::Galore, hp: OptHp::adamw },
+    VariantDesc {
+        id: "galore_lion",
+        rule: RuleKind::Lion,
+        comp: CompKind::Galore,
+        hp: OptHp::lion,
+    },
+    VariantDesc { id: "ldadamw", rule: RuleKind::AdamW, comp: CompKind::LdProj, hp: OptHp::adamw },
+];
+
+/// Look a state layout up by its stable id.
+pub fn variant(id: &str) -> Result<&'static VariantDesc> {
+    VARIANTS
+        .iter()
+        .find(|v| v.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer state variant '{id}'"))
+}
+
+impl VariantDesc {
+    pub fn rule(&self) -> &'static dyn UpdateRule {
+        rules::rule(self.rule)
+    }
+
+    pub fn n_moments(&self) -> usize {
+        self.rule().n_moments()
+    }
+
+    /// Fresh zero state for a parameter of `shape`; `l` is the sketch /
+    /// projector rank.
+    pub fn build(&'static self, shape: &[usize], l: usize) -> Result<MatrixOpt> {
+        let rule = self.rule();
+        let comp: Box<dyn MomentumCompressor> = match self.comp {
+            CompKind::Dense => Box::new(Dense::new(rule, shape)),
+            CompKind::RsvdQb { factored } => {
+                if factored.len() != rule.n_moments() {
+                    bail!(
+                        "variant '{}': {} factored-mask entries for a {}-moment rule",
+                        self.id,
+                        factored.len(),
+                        rule.n_moments()
+                    );
+                }
+                Box::new(RsvdQb::new(factored, shape, l)?)
+            }
+            CompKind::Galore => Box::new(GaloreProjector::new(rule.n_moments(), shape, l)?),
+            CompKind::LdProj => Box::new(LdProj::new(shape, l)?),
+        };
+        Ok(MatrixOpt { variant: self, comp })
+    }
+
+    /// Rebuild state from checkpoint metadata plus a tensor lookup
+    /// (`take(field)` yields the stored `<param>/<field>` tensor). The
+    /// inverse of `MatrixOpt::{tensor_fields, ckpt_meta_into}`.
+    pub fn decode(
+        &'static self,
+        meta: &Json,
+        take: &mut dyn FnMut(&'static str) -> Result<Tensor>,
+    ) -> Result<MatrixOpt> {
+        let rule = self.rule();
+        let comp: Box<dyn MomentumCompressor> = match self.comp {
+            CompKind::Dense => {
+                let names = rule.moment_names();
+                let moments =
+                    names.iter().map(|&n| take(n)).collect::<Result<Vec<_>>>()?;
+                Box::new(Dense::from_parts(names, moments))
+            }
+            CompKind::RsvdQb { factored } => {
+                let mut stores = Vec::with_capacity(factored.len());
+                for (k, &f) in factored.iter().enumerate() {
+                    // same table the encode side (RsvdQb::tensor_fields) uses
+                    let (dense, qn, bn) = super::compress::QB_NAMES[k];
+                    stores.push(if f {
+                        MomentStore::Factored { q: take(qn)?, b: take(bn)? }
+                    } else {
+                        MomentStore::Dense(take(dense)?)
+                    });
+                }
+                Box::new(RsvdQb::from_stores(stores))
+            }
+            CompKind::Galore => {
+                let p = take("p")?;
+                let mut lo = vec![take("m_lo")?];
+                if rule.n_moments() > 1 {
+                    lo.push(take("v_lo")?);
+                }
+                Box::new(GaloreProjector::from_parts(
+                    p,
+                    lo,
+                    meta.req("left")?.as_bool()?,
+                    meta.req("refreshed")?.as_bool()?,
+                ))
+            }
+            CompKind::LdProj => Box::new(LdProj {
+                p: take("p")?,
+                m_lo: take("m_lo")?,
+                v_lo: take("v_lo")?,
+                e: take("e")?,
+                left: meta.req("left")?.as_bool()?,
+            }),
+        };
+        Ok(MatrixOpt { variant: self, comp })
+    }
+
+    /// Optimizer-state float count for one (m, n) matrix at rank `r` —
+    /// the closed-form Table 1 column, derived from the layout instead of
+    /// hand-written per method.
+    pub fn state_floats(&self, m: usize, n: usize, r: usize) -> usize {
+        let nm = self.n_moments();
+        match self.comp {
+            CompKind::Dense => nm * m * n,
+            CompKind::RsvdQb { factored } => factored
+                .iter()
+                .map(|&f| if f { r * (m + n) } else { m * n })
+                .sum(),
+            // projector on the short side + nm low-dim moments
+            CompKind::Galore => m.min(n) * r + nm * m.max(n) * r,
+            // like galore, plus the full-size error-feedback buffer
+            CompKind::LdProj => m.min(n) * r + nm * m.max(n) * r + m * n,
+        }
+    }
+}
+
+// ------------------------------------------------------------ MatrixOpt
+
+/// One parameter's optimizer: a variant (rule × compressor) plus the
+/// compressor-owned state. Owns the checkpoint-v2 surface, `state_bytes`,
+/// RNG-stream handling (draws are delegated to the compressor so the
+/// schedule is layout-defined) and the fused reconstruct-apply routing.
+#[derive(Debug)]
+pub struct MatrixOpt {
+    variant: &'static VariantDesc,
+    comp: Box<dyn MomentumCompressor>,
+}
+
+impl Clone for MatrixOpt {
+    fn clone(&self) -> MatrixOpt {
+        MatrixOpt { variant: self.variant, comp: self.comp.clone_box() }
+    }
+}
+
+impl MatrixOpt {
+    pub fn variant(&self) -> &'static VariantDesc {
+        self.variant
+    }
+
+    pub fn rule(&self) -> &'static dyn UpdateRule {
+        self.variant.rule()
+    }
+
+    /// Host-path hyper-parameters of this state's step.
+    pub fn hp(&self) -> OptHp {
+        (self.variant.hp)()
+    }
+
+    pub fn comp(&self) -> &dyn MomentumCompressor {
+        self.comp.as_ref()
+    }
+
+    pub fn comp_mut(&mut self) -> &mut dyn MomentumCompressor {
+        self.comp.as_mut()
+    }
+
+    /// One optimizer step entirely on the host. `t` is 1-based; `rng` is
+    /// this parameter's own Omega stream.
+    pub fn step(
+        &mut self,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut crate::linalg::Rng,
+        ws: &mut crate::linalg::Workspace,
+    ) -> Result<()> {
+        let hp = self.hp();
+        self.comp.step(self.variant.rule(), &hp, w, g, lr, t, rng, ws)
+    }
+}
+
+// -------------------------------------------------------------- methods
+
+/// One CLI-level optimization method — a row of the paper's tables.
+#[derive(Debug)]
+pub struct MethodDesc {
+    pub id: &'static str,
+    pub aliases: &'static [&'static str],
+    /// Variant for *compressed matrix* parameters.
+    pub matrix: &'static str,
+    /// Variant for vectors/embeddings/heads (and LoRA adapters).
+    pub plain: &'static str,
+    /// Uses the LoRA adapter graphs instead of full fwd/bwd.
+    pub lora: bool,
+    /// Whether AOT-lowered step graphs exist for this method's variants.
+    /// Host-only methods (the post-refactor combos) need `--host-opt` or
+    /// the serve host engine until their graphs are lowered.
+    pub graphed: bool,
+    /// Paper-tuned default peak LR for the math-chain-style LM task.
+    pub default_lr: f32,
+}
+
+pub const FULL_ADAMW: MethodDesc = MethodDesc {
+    id: "full_adamw",
+    aliases: &["full", "adamw"],
+    matrix: "adamw",
+    plain: "adamw",
+    lora: false,
+    graphed: true,
+    default_lr: 4e-4,
+};
+pub const FULL_LION: MethodDesc = MethodDesc {
+    id: "full_lion",
+    aliases: &["lion"],
+    matrix: "lion",
+    plain: "lion",
+    lora: false,
+    graphed: true,
+    default_lr: 5e-5,
+};
+pub const MLORC_ADAMW: MethodDesc = MethodDesc {
+    id: "mlorc_adamw",
+    aliases: &["mlorc"],
+    matrix: "mlorc_adamw",
+    plain: "adamw",
+    lora: false,
+    graphed: true,
+    default_lr: 7e-4,
+};
+pub const MLORC_LION: MethodDesc = MethodDesc {
+    id: "mlorc_lion",
+    aliases: &[],
+    matrix: "mlorc_lion",
+    plain: "lion",
+    lora: false,
+    graphed: true,
+    default_lr: 5e-5,
+};
+pub const MLORC_M: MethodDesc = MethodDesc {
+    id: "mlorc_m",
+    aliases: &[],
+    matrix: "mlorc_m",
+    plain: "adamw",
+    lora: false,
+    graphed: true,
+    default_lr: 7e-4,
+};
+pub const MLORC_V: MethodDesc = MethodDesc {
+    id: "mlorc_v",
+    aliases: &[],
+    matrix: "mlorc_v",
+    plain: "adamw",
+    lora: false,
+    graphed: true,
+    default_lr: 7e-4,
+};
+pub const LORA_ADAMW: MethodDesc = MethodDesc {
+    id: "lora_adamw",
+    aliases: &["lora"],
+    matrix: "adamw",
+    plain: "adamw",
+    lora: true,
+    graphed: true,
+    default_lr: 2e-3,
+};
+pub const LORA_LION: MethodDesc = MethodDesc {
+    id: "lora_lion",
+    aliases: &[],
+    matrix: "lion",
+    plain: "lion",
+    lora: true,
+    graphed: true,
+    default_lr: 2e-4,
+};
+pub const GALORE: MethodDesc = MethodDesc {
+    id: "galore",
+    aliases: &[],
+    matrix: "galore",
+    plain: "adamw",
+    lora: false,
+    graphed: true,
+    default_lr: 3e-3,
+};
+pub const LDADAMW: MethodDesc = MethodDesc {
+    id: "ldadamw",
+    aliases: &[],
+    matrix: "ldadamw",
+    plain: "adamw",
+    lora: false,
+    graphed: true,
+    default_lr: 1e-3,
+};
+// Combinations the trait split makes free: SGD-momentum under MLorc
+// compression, a dense SGDM baseline, and GaLore × Lion.
+pub const FULL_SGDM: MethodDesc = MethodDesc {
+    id: "full_sgdm",
+    aliases: &["sgdm"],
+    matrix: "sgdm",
+    plain: "sgdm",
+    lora: false,
+    graphed: false,
+    default_lr: 1e-2,
+};
+pub const MLORC_SGDM: MethodDesc = MethodDesc {
+    id: "mlorc_sgdm",
+    aliases: &[],
+    matrix: "mlorc_sgdm",
+    plain: "sgdm",
+    lora: false,
+    graphed: false,
+    default_lr: 1e-2,
+};
+pub const GALORE_LION: MethodDesc = MethodDesc {
+    id: "galore_lion",
+    aliases: &[],
+    matrix: "galore_lion",
+    plain: "lion",
+    lora: false,
+    graphed: false,
+    default_lr: 2e-4,
+};
+
+/// Every registered method, pre-existing ids first (table/report order).
+pub static METHODS: &[&MethodDesc] = &[
+    &FULL_ADAMW,
+    &FULL_LION,
+    &MLORC_ADAMW,
+    &MLORC_LION,
+    &MLORC_M,
+    &MLORC_V,
+    &LORA_ADAMW,
+    &LORA_LION,
+    &GALORE,
+    &LDADAMW,
+    &FULL_SGDM,
+    &MLORC_SGDM,
+    &GALORE_LION,
+];
+
+/// Optimization method handle — compares, hashes and prints by id, so
+/// the descriptor constants below can live anywhere in memory.
+#[derive(Clone, Copy)]
+pub struct Method(&'static MethodDesc);
+
+impl PartialEq for Method {
+    fn eq(&self, other: &Method) -> bool {
+        std::ptr::eq(self.0, other.0) || self.0.id == other.0.id
+    }
+}
+
+impl Eq for Method {}
+
+impl std::hash::Hash for Method {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.0.id.hash(state);
+    }
+}
+
+impl std::fmt::Debug for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.0.id)
+    }
+}
+
+#[allow(non_upper_case_globals)]
+impl Method {
+    // Named handles, kept under the historical variant spellings so
+    // expression-position call sites read unchanged.
+    pub const FullAdamW: Method = Method(&FULL_ADAMW);
+    pub const FullLion: Method = Method(&FULL_LION);
+    pub const FullSgdM: Method = Method(&FULL_SGDM);
+    pub const MlorcAdamW: Method = Method(&MLORC_ADAMW);
+    pub const MlorcLion: Method = Method(&MLORC_LION);
+    pub const MlorcM: Method = Method(&MLORC_M);
+    pub const MlorcV: Method = Method(&MLORC_V);
+    pub const MlorcSgdM: Method = Method(&MLORC_SGDM);
+    pub const LoraAdamW: Method = Method(&LORA_ADAMW);
+    pub const LoraLion: Method = Method(&LORA_LION);
+    pub const Galore: Method = Method(&GALORE);
+    pub const GaloreLion: Method = Method(&GALORE_LION);
+    pub const LdAdamW: Method = Method(&LDADAMW);
+
+    pub fn name(&self) -> &'static str {
+        self.0.id
+    }
+
+    pub fn desc(&self) -> &'static MethodDesc {
+        self.0
+    }
+
+    /// Resolve a method id or alias through the registry.
+    pub fn parse(s: &str) -> Result<Method> {
+        for &d in METHODS {
+            if d.id == s || d.aliases.iter().any(|a| *a == s) {
+                return Ok(Method(d));
+            }
+        }
+        bail!("unknown method '{s}'")
+    }
+
+    /// Every registered method, registry order.
+    pub fn all() -> &'static [Method] {
+        static ALL: OnceLock<Vec<Method>> = OnceLock::new();
+        ALL.get_or_init(|| METHODS.iter().map(|&d| Method(d)).collect())
+    }
+
+    /// Uses the LoRA adapter graphs instead of full fwd/bwd.
+    pub fn is_lora(&self) -> bool {
+        self.0.lora
+    }
+
+    /// Variant (== step-graph method name) for *compressed matrix*
+    /// parameters.
+    pub fn matrix_step(&self) -> &'static str {
+        self.0.matrix
+    }
+
+    /// Variant for vectors/embeddings/heads (always uncompressed).
+    pub fn plain_step(&self) -> &'static str {
+        self.0.plain
+    }
+
+    /// Paper-tuned default peak LR for the math-chain-style LM task
+    /// (Table 8 analog; confirmed by our own sweep in `table8`).
+    pub fn default_lr(&self) -> f32 {
+        self.0.default_lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_method_resolves_to_registered_variants() {
+        for &m in Method::all() {
+            let d = m.desc();
+            assert!(variant(d.matrix).is_ok(), "{}: matrix variant '{}'", d.id, d.matrix);
+            assert!(variant(d.plain).is_ok(), "{}: plain variant '{}'", d.id, d.plain);
+            // plain-path layouts must be dense (vectors can't be factored)
+            assert_eq!(variant(d.plain).unwrap().comp, CompKind::Dense, "{}", d.id);
+            assert_eq!(Method::parse(d.id).unwrap(), m);
+            for alias in d.aliases {
+                assert_eq!(Method::parse(alias).unwrap(), m, "alias '{alias}'");
+            }
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn acceptance_ids_resolve() {
+        // The five pre-existing ids the issue pins, plus the new combos.
+        for id in ["mlorc_adamw", "mlorc_lion", "galore", "ldadamw", "adamw"] {
+            assert!(Method::parse(id).is_ok(), "{id}");
+        }
+        assert_eq!(Method::parse("adamw").unwrap(), Method::FullAdamW);
+        assert_eq!(Method::parse("mlorc_sgdm").unwrap(), Method::MlorcSgdM);
+        assert_eq!(Method::parse("galore_lion").unwrap(), Method::GaloreLion);
+    }
+
+    #[test]
+    fn variant_masks_are_rule_consistent() {
+        for v in VARIANTS {
+            if let CompKind::RsvdQb { factored } = v.comp {
+                assert_eq!(
+                    factored.len(),
+                    v.n_moments(),
+                    "variant '{}' mask length vs rule moments",
+                    v.id
+                );
+            }
+            // every variant must build on a representative matrix shape
+            assert!(v.build(&[8, 6], 2).is_ok(), "variant '{}' build", v.id);
+        }
+    }
+
+    #[test]
+    fn state_floats_match_table1_formulas() {
+        let (m, n, r) = (1024usize, 4096usize, 4usize);
+        assert_eq!(variant("adamw").unwrap().state_floats(m, n, r), 2 * m * n);
+        assert_eq!(variant("lion").unwrap().state_floats(m, n, r), m * n);
+        assert_eq!(variant("sgdm").unwrap().state_floats(m, n, r), m * n);
+        assert_eq!(
+            variant("mlorc_adamw").unwrap().state_floats(m, n, r),
+            2 * r * (m + n)
+        );
+        assert_eq!(variant("mlorc_lion").unwrap().state_floats(m, n, r), r * (m + n));
+        assert_eq!(
+            variant("mlorc_m").unwrap().state_floats(m, n, r),
+            r * (m + n) + m * n
+        );
+        assert_eq!(variant("galore").unwrap().state_floats(m, n, r), m * r + 2 * n * r);
+        assert_eq!(variant("galore_lion").unwrap().state_floats(m, n, r), m * r + n * r);
+        assert_eq!(
+            variant("ldadamw").unwrap().state_floats(m, n, r),
+            m * r + 2 * n * r + m * n
+        );
+    }
+}

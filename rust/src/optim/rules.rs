@@ -1,0 +1,301 @@
+//! `UpdateRule` — the *update-rule* axis of the optimizer matrix.
+//!
+//! The paper's claim is that momentum compression "generalizes well
+//! across different optimizers": the compression strategy (how momentum
+//! is *stored*) and the update rule (how the step is *computed* from
+//! momentum) are orthogonal. This module owns the second axis. A rule
+//! declares how many EMA moment buffers it tracks, whether its apply is
+//! bias-corrected (so the step graphs take `c1`/`c2` scalars), and the
+//! dense reference step over raw moment tensors — the kernel the
+//! [`Dense`](super::compress::Dense) passthrough compressor and the
+//! trainer's 1-D vector path call.
+//!
+//! Compressed paths do not go through `dense_step`: each
+//! `MomentumCompressor` routes (rule × layout) to the fused `*_core`
+//! kernels (`mlorc_adamw_core`, `galore_core`, ...) so the pre-refactor
+//! bit patterns are preserved exactly (pinned by
+//! `tests/optim_matrix.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::{adamw_host_step, lion_host_step, OptHp};
+
+/// The registered update rules. A `Copy` tag (rather than a trait object
+/// in every state) so the registry's variant table is const-constructible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleKind {
+    AdamW,
+    Lion,
+    /// SGD with (EMA-form) momentum: `m = β1·m + (1−β1)·g`,
+    /// `w -= lr·(m + wd·w)`.
+    SgdM,
+}
+
+/// One optimizer update rule — AdamW, Lion, SGD-momentum. Implementations
+/// are stateless unit structs; per-parameter state lives in the
+/// compressor (`MomentumCompressor`), which decides how the rule's moment
+/// buffers are stored.
+pub trait UpdateRule: std::fmt::Debug + Send + Sync {
+    fn kind(&self) -> RuleKind;
+
+    /// Stable id (`adamw` | `lion` | `sgdm`).
+    fn id(&self) -> &'static str;
+
+    /// How many EMA moment buffers the rule tracks (AdamW: 2, Lion: 1,
+    /// SGDM: 1).
+    fn n_moments(&self) -> usize;
+
+    /// Checkpoint/graph field names of the dense moment buffers, in
+    /// declared order (`["m", "v"]` for AdamW, `["m"]` for Lion/SGDM).
+    fn moment_names(&self) -> &'static [&'static str];
+
+    /// Whether the apply is bias-corrected — decides if the step graphs
+    /// (and the scalar tail of their input list) carry `c1`/`c2`.
+    fn bias_corrected(&self) -> bool;
+
+    /// One dense reference step over raw state tensors of any shape —
+    /// the host mirror of the rule's plain step graph. `moments` come in
+    /// `moment_names` order; `t` is 1-based.
+    fn dense_step(
+        &self,
+        w: &mut Tensor,
+        g: &Tensor,
+        moments: &mut [&mut Tensor],
+        lr: f32,
+        t: usize,
+        hp: &OptHp,
+    ) -> Result<()>;
+}
+
+/// One plain SGD-momentum step over raw state tensors (EMA form, so the
+/// factored recompression `β·QB + (1−β)·G` applies verbatim to its
+/// momentum). Shared by [`SgdMomentumRule`] and `mlorc_sgdm_core`'s
+/// cross-validation tests.
+pub fn sgdm_host_step(w: &mut Tensor, g: &Tensor, m: &mut Tensor, lr: f32, hp: &OptHp) {
+    for (mi, gi) in m.data.iter_mut().zip(&g.data) {
+        *mi = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+    }
+    for (wi, mi) in w.data.iter_mut().zip(&m.data) {
+        *wi -= lr * (*mi + hp.weight_decay * *wi);
+    }
+}
+
+#[derive(Debug)]
+pub struct AdamWRule;
+
+impl UpdateRule for AdamWRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::AdamW
+    }
+
+    fn id(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn n_moments(&self) -> usize {
+        2
+    }
+
+    fn moment_names(&self) -> &'static [&'static str] {
+        &["m", "v"]
+    }
+
+    fn bias_corrected(&self) -> bool {
+        true
+    }
+
+    fn dense_step(
+        &self,
+        w: &mut Tensor,
+        g: &Tensor,
+        moments: &mut [&mut Tensor],
+        lr: f32,
+        t: usize,
+        hp: &OptHp,
+    ) -> Result<()> {
+        match moments {
+            [m, v] => {
+                adamw_host_step(w, g, m, v, lr, t, hp);
+                Ok(())
+            }
+            _ => bail!("adamw rule wants 2 moment buffers, got {}", moments.len()),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct LionRule;
+
+impl UpdateRule for LionRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Lion
+    }
+
+    fn id(&self) -> &'static str {
+        "lion"
+    }
+
+    fn n_moments(&self) -> usize {
+        1
+    }
+
+    fn moment_names(&self) -> &'static [&'static str] {
+        &["m"]
+    }
+
+    fn bias_corrected(&self) -> bool {
+        false
+    }
+
+    fn dense_step(
+        &self,
+        w: &mut Tensor,
+        g: &Tensor,
+        moments: &mut [&mut Tensor],
+        lr: f32,
+        _t: usize,
+        hp: &OptHp,
+    ) -> Result<()> {
+        match moments {
+            [m] => {
+                lion_host_step(w, g, m, lr, hp);
+                Ok(())
+            }
+            _ => bail!("lion rule wants 1 moment buffer, got {}", moments.len()),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct SgdMomentumRule;
+
+impl UpdateRule for SgdMomentumRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::SgdM
+    }
+
+    fn id(&self) -> &'static str {
+        "sgdm"
+    }
+
+    fn n_moments(&self) -> usize {
+        1
+    }
+
+    fn moment_names(&self) -> &'static [&'static str] {
+        &["m"]
+    }
+
+    fn bias_corrected(&self) -> bool {
+        false
+    }
+
+    fn dense_step(
+        &self,
+        w: &mut Tensor,
+        g: &Tensor,
+        moments: &mut [&mut Tensor],
+        lr: f32,
+        _t: usize,
+        hp: &OptHp,
+    ) -> Result<()> {
+        match moments {
+            [m] => {
+                sgdm_host_step(w, g, m, lr, hp);
+                Ok(())
+            }
+            _ => bail!("sgdm rule wants 1 moment buffer, got {}", moments.len()),
+        }
+    }
+}
+
+static ADAMW: AdamWRule = AdamWRule;
+static LION: LionRule = LionRule;
+static SGDM: SgdMomentumRule = SgdMomentumRule;
+
+/// The shared rule instance for a tag (rules are stateless).
+pub fn rule(kind: RuleKind) -> &'static dyn UpdateRule {
+    match kind {
+        RuleKind::AdamW => &ADAMW,
+        RuleKind::Lion => &LION,
+        RuleKind::SgdM => &SGDM,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    #[test]
+    fn rule_tags_and_moment_counts() {
+        for (kind, id, n, bc) in [
+            (RuleKind::AdamW, "adamw", 2, true),
+            (RuleKind::Lion, "lion", 1, false),
+            (RuleKind::SgdM, "sgdm", 1, false),
+        ] {
+            let r = rule(kind);
+            assert_eq!(r.kind(), kind);
+            assert_eq!(r.id(), id);
+            assert_eq!(r.n_moments(), n);
+            assert_eq!(r.moment_names().len(), n);
+            assert_eq!(r.bias_corrected(), bc);
+            assert_eq!(r.moment_names()[0], "m");
+        }
+    }
+
+    #[test]
+    fn dense_steps_match_reference_kernels() {
+        let mut rng = Rng::new(3);
+        let g = rng.gaussian_tensor(&[5, 7], 1.0);
+
+        // AdamW through the trait == adamw_host_step directly.
+        let hp = OptHp::adamw();
+        let mut w1 = rng.gaussian_tensor(&[5, 7], 1.0);
+        let mut w2 = w1.clone();
+        let (mut m1, mut v1) = (Tensor::zeros(&[5, 7]), Tensor::zeros(&[5, 7]));
+        let (mut m2, mut v2) = (Tensor::zeros(&[5, 7]), Tensor::zeros(&[5, 7]));
+        for t in 1..=3 {
+            rule(RuleKind::AdamW)
+                .dense_step(&mut w1, &g, &mut [&mut m1, &mut v1], 1e-2, t, &hp)
+                .unwrap();
+            adamw_host_step(&mut w2, &g, &mut m2, &mut v2, 1e-2, t, &hp);
+            assert_eq!(w1.data, w2.data);
+        }
+
+        // Wrong moment count is a loud error, not a silent misstep.
+        let err = rule(RuleKind::AdamW).dense_step(&mut w1, &g, &mut [&mut m1], 1e-2, 1, &hp);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn sgdm_first_step_is_scaled_gradient() {
+        let hp = OptHp::sgdm();
+        let mut rng = Rng::new(1);
+        let g = rng.gaussian_tensor(&[4, 4], 1.0);
+        let mut w = Tensor::zeros(&[4, 4]);
+        let mut m = Tensor::zeros(&[4, 4]);
+        sgdm_host_step(&mut w, &g, &mut m, 0.1, &hp);
+        for ((wi, mi), gi) in w.data.iter().zip(&m.data).zip(&g.data) {
+            assert!((mi - (1.0 - hp.beta1) * gi).abs() < 1e-7);
+            assert!((wi + 0.1 * mi).abs() < 1e-7, "w must move by -lr*m");
+        }
+    }
+
+    #[test]
+    fn sgdm_converges_on_quadratic() {
+        let hp = OptHp::sgdm();
+        let mut rng = Rng::new(2);
+        let target = rng.gaussian_tensor(&[6, 6], 1.0);
+        let mut w = Tensor::zeros(&[6, 6]);
+        let mut m = Tensor::zeros(&[6, 6]);
+        for _ in 0..400 {
+            let mut g = w.clone();
+            g.axpy(-1.0, &target, 1.0);
+            sgdm_host_step(&mut w, &g, &mut m, 0.05, &hp);
+        }
+        assert!(w.rel_err(&target) < 0.05, "rel {}", w.rel_err(&target));
+    }
+}

@@ -165,6 +165,13 @@ impl HostTrainer {
         self.states.iter().map(|s| s.state_bytes()).sum()
     }
 
+    /// Per-parameter optimizer states, in parameter order — the
+    /// registry combo-matrix test inspects checkpoint roundtrips
+    /// field-by-field through this.
+    pub fn opt_states(&self) -> &[OptState] {
+        &self.states
+    }
+
     /// One synthetic training step; returns the mean per-parameter loss.
     pub fn train_step(&mut self) -> Result<f32> {
         let step = self.step;
@@ -209,12 +216,11 @@ impl HostTrainer {
         }
         let loss = (loss_sum / self.params.len().max(1) as f64) as f32;
 
-        // GaLore projector cadence, mirroring Trainer::apply_updates_host.
+        // GaLore projector cadence, mirroring Trainer::apply_updates_host
+        // (no-op for layouts without a cached projector).
         if step % self.cfg.galore_update_freq == 0 {
             for state in self.states.iter_mut() {
-                if let OptState::Galore { refreshed, .. } = state {
-                    *refreshed = false;
-                }
+                state.invalidate_projector();
             }
         }
 

@@ -3,21 +3,24 @@
 //! Layout under the spool root:
 //!
 //! ```text
-//! queue/<id>.json    submitted, unclaimed
-//! running/<id>.json  claimed by a scheduler worker (renamed from queue/)
-//! done/<id>.json     finished successfully
-//! failed/<id>.json   finished with an error (status/<id>.json has why)
-//! status/<id>.json   latest per-job progress (serve::status)
-//! work/<id>/         job scratch: rotated v2 checkpoints, metrics
+//! queue/<id>.json      submitted, unclaimed
+//! running/<id>.json    claimed by a scheduler worker (renamed from queue/)
+//! done/<id>.json       finished successfully
+//! failed/<id>.json     finished with an error (status/<id>.json has why)
+//! cancelled/<id>.json  tombstoned while queued (`mlorc cancel`)
+//! status/<id>.json     latest per-job progress (serve::status)
+//! work/<id>/           job scratch: rotated v2 checkpoints, metrics
 //! ```
 //!
-//! Lifecycle is `queued -> running -> done|failed`. The claim is a single
-//! `rename(2)`: exactly one scheduler worker wins a given spec file,
-//! which is the entire concurrency story — no locks, no daemon, no
-//! registry. A `kill -9` leaves at worst a spec stranded in `running/`;
-//! the next scheduler start sweeps those back into `queue/`
-//! ([`Spool::recover_interrupted`]) and the job resumes from its latest
-//! v2 checkpoint under `work/<id>/ckpt/`.
+//! Lifecycle is `queued -> running -> done|failed`, with a side exit
+//! `queued -> cancelled`. Claims and cancellations are each a single
+//! `rename(2)`: exactly one scheduler worker (or canceller) wins a given
+//! spec file, which is the entire concurrency story — no locks, no
+//! daemon, no registry. Claim order is (priority desc, id asc), so
+//! late-submitted urgent jobs overtake the backlog. A `kill -9` leaves
+//! at worst a spec stranded in `running/`; the next scheduler start
+//! sweeps those back into `queue/` ([`Spool::recover_interrupted`]) and
+//! the job resumes from its latest v2 checkpoint under `work/<id>/ckpt/`.
 //!
 //! Deployment note: submitters and status readers can share a spool
 //! freely, but run one *scheduler* per spool — the recovery sweep cannot
@@ -32,8 +35,8 @@ use crate::config::RunConfig;
 use crate::util::fsutil;
 use crate::util::json::Json;
 
-/// The four lifecycle directories, in pipeline order.
-pub const LIFECYCLE_DIRS: [&str; 4] = ["queue", "running", "done", "failed"];
+/// The lifecycle directories, in pipeline order.
+pub const LIFECYCLE_DIRS: [&str; 5] = ["queue", "running", "done", "failed", "cancelled"];
 
 /// Which trainer executes a job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,15 +73,26 @@ pub struct JobSpec {
     pub engine: Engine,
     /// Checkpoint cadence in steps (0 = final snapshot only).
     pub checkpoint_every: usize,
+    /// Claim priority: higher claims first; ties break by id (ascending).
+    /// 0 is the default for jobs that don't care. Stored as a JSON number
+    /// (f64), so values are clamped to the exactly-representable integer
+    /// range (±2^53) on both serialize and parse — a spec always
+    /// roundtrips to the priority the claim order actually uses.
+    pub priority: i64,
     pub cfg: RunConfig,
 }
 
+/// Largest priority magnitude that survives the JSON f64 encoding exactly.
+const PRIORITY_CLAMP: i64 = 1 << 53;
+
 impl JobSpec {
     pub fn to_json(&self) -> Json {
+        let priority = self.priority.clamp(-PRIORITY_CLAMP, PRIORITY_CLAMP);
         Json::obj(vec![
             ("id", Json::str(self.id.clone())),
             ("engine", Json::str(self.engine.name())),
             ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("priority", Json::num(priority as f64)),
             ("config", self.cfg.to_json()),
         ])
     }
@@ -88,6 +102,12 @@ impl JobSpec {
             id: j.req("id")?.as_str()?.to_string(),
             engine: Engine::parse(j.req("engine")?.as_str()?)?,
             checkpoint_every: j.req("checkpoint_every")?.as_usize()?,
+            // optional for specs submitted before priorities existed
+            priority: match j.get("priority") {
+                Some(v) => (v.as_f64()?.clamp(-(PRIORITY_CLAMP as f64), PRIORITY_CLAMP as f64))
+                    as i64,
+                None => 0,
+            },
             cfg: RunConfig::from_json(j.req("config")?)?,
         })
     }
@@ -102,7 +122,7 @@ pub struct Spool {
 impl Spool {
     /// Open (creating if needed) a spool rooted at `root`.
     pub fn open(root: &Path) -> Result<Spool> {
-        for d in ["queue", "running", "done", "failed", "status", "work"] {
+        for d in ["queue", "running", "done", "failed", "cancelled", "status", "work"] {
             let p = root.join(d);
             std::fs::create_dir_all(&p)
                 .with_context(|| format!("creating spool dir {}", p.display()))?;
@@ -201,13 +221,30 @@ impl Spool {
     }
 
     /// Claim the next queued job by renaming its spec into `running/`.
-    /// Rename is atomic, so under concurrent schedulers each spec is won
-    /// by exactly one caller; losing a race just moves on to the next
-    /// candidate. Returns `None` when the queue is empty.
+    /// Candidates are tried in (priority desc, id asc) order — the spec
+    /// is re-read under `running/` after the rename, so a priority edit
+    /// racing the claim can at worst reorder, never corrupt. Rename is
+    /// atomic, so under concurrent schedulers each spec is won by exactly
+    /// one caller; losing a race just moves on to the next candidate.
+    /// Returns `None` when the queue is empty.
     pub fn claim_next(&self) -> Result<Option<JobSpec>> {
         loop {
-            let mut claimed = None;
+            // Order the snapshot by (priority desc, id asc). A spec that
+            // vanishes (claimed elsewhere) or fails to parse sorts at
+            // priority 0; the parse error resurfaces on claim and the
+            // spec is quarantined below. This parses every queued spec
+            // per claim — O(queue) per poll, fine for the tens-of-jobs
+            // spools this serves; cache (mtime -> priority) here if
+            // spools ever grow to thousands of queued specs.
+            let mut candidates: Vec<(i64, String)> = Vec::new();
             for id in self.jobs_in("queue")? {
+                let priority =
+                    self.load_spec("queue", &id).map(|s| s.priority).unwrap_or(0);
+                candidates.push((priority, id));
+            }
+            candidates.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+            let mut claimed = None;
+            for (_, id) in candidates {
                 let from = self.spec_path("queue", &id);
                 let to = self.spec_path("running", &id);
                 match std::fs::rename(&from, &to) {
@@ -232,6 +269,27 @@ impl Spool {
                     let _ = self.finish(&id, false);
                 }
             }
+        }
+    }
+
+    /// Tombstone a queued job: one atomic rename into `cancelled/`, so a
+    /// cancel racing a scheduler claim is won by exactly one side. Only
+    /// queued jobs can be cancelled; anything else reports where the job
+    /// actually is.
+    pub fn cancel(&self, id: &str) -> Result<()> {
+        let from = self.spec_path("queue", id);
+        let to = self.spec_path("cancelled", id);
+        match std::fs::rename(&from, &to) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                for state in ["running", "done", "failed", "cancelled"] {
+                    if self.spec_path(state, id).exists() {
+                        bail!("job '{id}' is in {state}/ — only queued jobs can be cancelled");
+                    }
+                }
+                bail!("no queued job '{id}' in this spool")
+            }
+            Err(e) => Err(e).with_context(|| format!("cancelling job {id}")),
         }
     }
 
@@ -277,10 +335,15 @@ mod tests {
     }
 
     fn spec(id: &str) -> JobSpec {
+        spec_pri(id, 0)
+    }
+
+    fn spec_pri(id: &str, priority: i64) -> JobSpec {
         JobSpec {
             id: id.to_string(),
             engine: Engine::Host,
             checkpoint_every: 5,
+            priority,
             cfg: RunConfig::new("host-nano", Method::MlorcAdamW, TaskKind::MathChain, 20),
         }
     }
@@ -338,14 +401,64 @@ mod tests {
     }
 
     #[test]
+    fn claim_order_is_priority_then_id() {
+        let (root, spool) = tmp_spool("prio");
+        spool.submit(&spec_pri("job001_low", -1)).unwrap();
+        spool.submit(&spec_pri("job002_default", 0)).unwrap();
+        spool.submit(&spec_pri("job003_urgent", 7)).unwrap();
+        spool.submit(&spec_pri("job004_urgent_too", 7)).unwrap();
+        let order: Vec<String> = (0..4)
+            .map(|_| spool.claim_next().unwrap().unwrap().id)
+            .collect();
+        // highest priority first; equal priorities fall back to id order
+        assert_eq!(
+            order,
+            vec!["job003_urgent", "job004_urgent_too", "job002_default", "job001_low"]
+        );
+        assert!(spool.claim_next().unwrap().is_none());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn cancel_tombstones_queued_jobs_only() {
+        let (root, spool) = tmp_spool("cancel");
+        spool.submit(&spec("job001_a")).unwrap();
+        spool.submit(&spec("job002_b")).unwrap();
+        spool.cancel("job001_a").unwrap();
+        assert_eq!(spool.jobs_in("cancelled").unwrap(), vec!["job001_a"]);
+        assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job002_b"]);
+        // a cancelled job is never claimed
+        let claimed = spool.claim_next().unwrap().unwrap();
+        assert_eq!(claimed.id, "job002_b");
+        assert!(spool.claim_next().unwrap().is_none());
+        // cannot cancel running/missing/already-cancelled jobs
+        let err = spool.cancel("job002_b").unwrap_err();
+        assert!(format!("{err:#}").contains("running"), "{err:#}");
+        assert!(spool.cancel("job009_nope").is_err());
+        let err = spool.cancel("job001_a").unwrap_err();
+        assert!(format!("{err:#}").contains("cancelled"), "{err:#}");
+        // a cancelled id stays burned (no resubmission)
+        assert!(spool.submit(&spec("job001_a")).is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
     fn spec_json_roundtrip_and_bad_ids() {
-        let s = spec("job007_rt");
+        let s = spec_pri("job007_rt", 3);
         let back = JobSpec::from_json(&s.to_json()).unwrap();
         assert_eq!(back.id, s.id);
         assert_eq!(back.engine, s.engine);
         assert_eq!(back.checkpoint_every, 5);
+        assert_eq!(back.priority, 3);
         assert_eq!(back.cfg.method, s.cfg.method);
         assert!(Engine::parse("tpu").is_err());
+
+        // specs submitted before priorities existed default to 0
+        let mut j = spec("job008_old").to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("priority");
+        }
+        assert_eq!(JobSpec::from_json(&j).unwrap().priority, 0);
 
         let (root, spool) = tmp_spool("badid");
         assert!(spool.submit(&spec("../escape")).is_err());

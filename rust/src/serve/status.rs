@@ -115,6 +115,7 @@ fn state_of_dir(dir: &str) -> &'static str {
         "queue" => "queued",
         "running" => "running",
         "done" => "done",
+        "cancelled" => "cancelled",
         _ => "failed",
     }
 }
@@ -190,12 +191,13 @@ pub fn render_table(rows: &[JobStatus]) -> String {
     let count = |st: &str| rows.iter().filter(|r| r.state == st).count();
     let _ = write!(
         s,
-        "jobs: {} total — {} queued, {} running, {} done, {} failed",
+        "jobs: {} total — {} queued, {} running, {} done, {} failed, {} cancelled",
         rows.len(),
         count("queued"),
         count("running"),
         count("done"),
-        count("failed")
+        count("failed"),
+        count("cancelled")
     );
     s
 }
@@ -211,6 +213,7 @@ mod tests {
             id: id.to_string(),
             engine: Engine::Host,
             checkpoint_every: 5,
+            priority: 0,
             cfg: RunConfig::new("host-nano", Method::MlorcLion, TaskKind::MathChain, 30),
         }
     }
@@ -240,19 +243,23 @@ mod tests {
         let spool = Spool::open(&root).unwrap();
         spool.submit(&spec("job001_a")).unwrap();
         spool.submit(&spec("job002_b")).unwrap();
+        spool.submit(&spec("job003_c")).unwrap();
         let claimed = spool.claim_next().unwrap().unwrap();
         let mut st = JobStatus::from_spec(&claimed, "running");
         st.step = 7;
         st.write(&spool).unwrap();
+        spool.cancel("job003_c").unwrap();
 
         let rows = aggregate(&spool).unwrap();
-        assert_eq!(rows.len(), 2);
+        assert_eq!(rows.len(), 3);
         assert_eq!(rows[0].state, "running");
         assert_eq!(rows[0].step, 7);
         assert_eq!(rows[1].state, "queued");
+        assert_eq!(rows[2].state, "cancelled");
         let table = render_table(&rows);
         assert!(table.contains("1 queued"), "{table}");
         assert!(table.contains("1 running"), "{table}");
+        assert!(table.contains("1 cancelled"), "{table}");
         std::fs::remove_dir_all(&root).unwrap();
     }
 }

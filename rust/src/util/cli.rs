@@ -87,6 +87,13 @@ impl Args {
         }
     }
 
+    pub fn get_i64(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.consumed.borrow_mut().push(name.to_string());
         self.flags.iter().any(|f| f == name)

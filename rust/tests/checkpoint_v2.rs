@@ -32,53 +32,25 @@ fn dummy_store() -> ParamStore {
     }
 }
 
-/// One randomly-filled state per variant, under stable names.
+/// One randomly-filled state per registered variant: build the zero state
+/// through the registry, then overwrite every tensor field — so any newly
+/// registered (rule × compressor) combo is covered here automatically.
 fn rand_states(rng: &mut Rng) -> Vec<(String, OptState)> {
     let (m, n, l) = (10usize, 14usize, 4usize);
-    let mut g = |shape: &[usize]| rng.gaussian_tensor(shape, 1.0);
-    vec![
-        ("frozen".to_string(), OptState::Frozen),
-        ("adamw".to_string(), OptState::AdamW { m: g(&[m, n]), v: g(&[m, n]) }),
-        ("lion".to_string(), OptState::Lion { m: g(&[m, n]) }),
-        (
-            "mlorc_adamw".to_string(),
-            OptState::MlorcAdamW {
-                mq: g(&[m, l]),
-                mb: g(&[l, n]),
-                vq: g(&[m, l]),
-                vb: g(&[l, n]),
-            },
-        ),
-        ("mlorc_lion".to_string(), OptState::MlorcLion { mq: g(&[m, l]), mb: g(&[l, n]) }),
-        (
-            "mlorc_m".to_string(),
-            OptState::MlorcM { mq: g(&[m, l]), mb: g(&[l, n]), v: g(&[m, n]) },
-        ),
-        (
-            "mlorc_v".to_string(),
-            OptState::MlorcV { m: g(&[m, n]), vq: g(&[m, l]), vb: g(&[l, n]) },
-        ),
-        (
-            "galore".to_string(),
-            OptState::Galore {
-                p: g(&[m, l]),
-                m_lo: g(&[l, n]),
-                v_lo: g(&[l, n]),
-                left: true,
-                refreshed: true,
-            },
-        ),
-        (
-            "ldadamw".to_string(),
-            OptState::LdAdamW {
-                p: g(&[n, l]),
-                m_lo: g(&[m, l]),
-                v_lo: g(&[m, l]),
-                e: g(&[m, n]),
-                left: false,
-            },
-        ),
-    ]
+    let mut out = vec![("frozen".to_string(), OptState::Frozen)];
+    for v in mlorc::optim::registry::VARIANTS {
+        let mut st = OptState::for_variant(v.id, &[m, n], l).unwrap();
+        for (_, t) in st.tensor_fields_mut() {
+            let shape = t.shape.clone();
+            *t = rng.gaussian_tensor(&shape, 1.0);
+        }
+        // exercise a non-default flag on the galore layouts
+        if let Some(gal) = st.galore_mut() {
+            gal.refreshed = true;
+        }
+        out.push((v.id.to_string(), st));
+    }
+    out
 }
 
 #[test]
@@ -143,8 +115,10 @@ fn v1_directory_rejected_with_structured_error() {
 
 /// Kill at step k, resume, finish: final params must be bit-identical to
 /// a run that was never interrupted. Exercised for both MLorc flavors
-/// the issue pins plus the projection baselines (whose projector state +
-/// refresh flags must survive the checkpoint).
+/// the issue pins, the projection baselines (whose projector state +
+/// refresh flags must survive the checkpoint), and the post-refactor
+/// registry combos (`mlorc_sgdm`, `galore_lion`) — end-to-end train +
+/// checkpoint-resume bit-identity for the new methods.
 #[test]
 fn kill_and_resume_bit_identical() {
     for (method, tag) in [
@@ -152,6 +126,8 @@ fn kill_and_resume_bit_identical() {
         (Method::MlorcLion, "ml"),
         (Method::Galore, "ga"),
         (Method::LdAdamW, "ld"),
+        (Method::MlorcSgdM, "ms"),
+        (Method::GaloreLion, "gl"),
     ] {
         let mut cfg = RunConfig::new("host-nano", method, TaskKind::MathChain, 14);
         cfg.peak_lr = 0.03;

@@ -14,30 +14,10 @@ struct Fleet {
     rngs: Vec<Rng>,
 }
 
-/// A zero-initialized GaLore state shaped like `OptState::for_param`.
-fn galore_state(m: usize, n: usize, l: usize) -> OptState {
-    let left = m <= n;
-    let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
-    OptState::Galore {
-        p: Tensor::zeros(&pshape),
-        m_lo: Tensor::zeros(&rshape),
-        v_lo: Tensor::zeros(&rshape),
-        left,
-        refreshed: false,
-    }
-}
-
-/// A zero-initialized LDAdamW state shaped like `OptState::for_param`.
-fn ldadamw_state(m: usize, n: usize, l: usize) -> OptState {
-    let left = m <= n;
-    let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
-    OptState::LdAdamW {
-        p: Tensor::zeros(&pshape),
-        m_lo: Tensor::zeros(&rshape),
-        v_lo: Tensor::zeros(&rshape),
-        e: Tensor::zeros(&[m, n]),
-        left,
-    }
+/// A zero-initialized state for a registered variant (the registry owns
+/// construction since the optimizer-matrix refactor).
+fn state(variant: &str, m: usize, n: usize, l: usize) -> OptState {
+    OptState::for_variant(variant, &[m, n], l).unwrap()
 }
 
 /// A mixed bag of parameters: MLorc-AdamW matrices of several shapes,
@@ -62,19 +42,11 @@ fn fleet(seed: u64) -> (Fleet, Vec<Tensor>) {
         weights.push(rng.gaussian_tensor(shape, 0.5));
         grads.push(rng.gaussian_tensor(shape, 1.0));
         states.push(match i % 6 {
-            0 | 1 => OptState::MlorcAdamW {
-                mq: Tensor::zeros(&[m, l]),
-                mb: Tensor::zeros(&[l, n]),
-                vq: Tensor::zeros(&[m, l]),
-                vb: Tensor::zeros(&[l, n]),
-            },
-            2 => OptState::MlorcLion {
-                mq: Tensor::zeros(&[m, l]),
-                mb: Tensor::zeros(&[l, n]),
-            },
-            3 => galore_state(m, n, l),
-            4 => ldadamw_state(m, n, l),
-            _ => OptState::AdamW { m: Tensor::zeros(shape), v: Tensor::zeros(shape) },
+            0 | 1 => state("mlorc_adamw", m, n, l),
+            2 => state("mlorc_lion", m, n, l),
+            3 => state("galore", m, n, l),
+            4 => state("ldadamw", m, n, l),
+            _ => state("adamw", m, n, l),
         });
         // each parameter owns an independent Omega stream
         rngs.push(rng.split(100 + i as u64));
@@ -193,7 +165,7 @@ fn galore_host_step_matches_reference() {
         let mut w_ref = data_rng.gaussian_tensor(&shape, 0.5);
         let mut w_host = w_ref.clone();
         let mut ref_st = GaloreState::new(&shape, l, freq);
-        let mut host_st = galore_state(m, n, l);
+        let mut host_st = state("galore", m, n, l);
         let mut rng_ref = Rng::new(11);
         let mut rng_host = Rng::new(11);
         let mut ws = Workspace::new();
@@ -201,9 +173,7 @@ fn galore_host_step_matches_reference() {
             let g = data_rng.gaussian_tensor(&shape, 1.0);
             ref_st.step(&mut w_ref, &g, 1e-2, &hp, &mut rng_ref);
             if step % freq == 0 {
-                if let OptState::Galore { refreshed, .. } = &mut host_st {
-                    *refreshed = false;
-                }
+                host_st.invalidate_projector();
             }
             host_st
                 .host_step(&mut w_host, &g, 1e-2, step + 1, &mut rng_host, &mut ws)
@@ -227,7 +197,7 @@ fn ldadamw_host_step_matches_reference() {
         let mut w_ref = data_rng.gaussian_tensor(&shape, 0.5);
         let mut w_host = w_ref.clone();
         let mut ref_st = LdAdamWState::new(&shape, l);
-        let mut host_st = ldadamw_state(m, n, l);
+        let mut host_st = state("ldadamw", m, n, l);
         let mut rng_ref = Rng::new(13);
         let mut rng_host = Rng::new(13);
         let mut ws = Workspace::new();

@@ -1,0 +1,351 @@
+//! The optimizer-matrix refactor's acceptance gates.
+//!
+//! 1. **Bit-exactness vs the pre-refactor dispatch**: `legacy` below is a
+//!    verbatim transcription of the old `OptState::host_step` match
+//!    ladder (same `*_core` kernels, same hyper-parameters, same Omega
+//!    draw order). Every pre-existing method id, resolved through the new
+//!    registry, must reproduce it bit-for-bit over a ≥10-step run —
+//!    weights *and* every state tensor.
+//! 2. **Combo matrix**: every registered (rule × compressor) method runs
+//!    5 host steps, checkpoints, and roundtrips the checkpoint
+//!    byte-exactly — newly registered methods get this coverage
+//!    automatically, and the resumed trainer must continue bit-identically.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::{load_checkpoint_v2, OptState};
+use mlorc::linalg::{Rng, Workspace};
+use mlorc::optim::{
+    adamw_host_step, galore_core, galore_refresh_projector, ldadamw_core, lion_host_step,
+    mlorc_adamw_core, mlorc_lion_core, mlorc_m_core, mlorc_v_core, OptHp,
+};
+use mlorc::runtime::ParamSpec;
+use mlorc::serve::HostTrainer;
+use mlorc::tensor::Tensor;
+
+// ------------------------------------------------------- legacy oracle
+
+/// The pre-refactor per-parameter state, as the enum used to hold it.
+enum Legacy {
+    AdamW { m: Tensor, v: Tensor },
+    Lion { m: Tensor },
+    MlorcAdamW { mq: Tensor, mb: Tensor, vq: Tensor, vb: Tensor },
+    MlorcLion { mq: Tensor, mb: Tensor },
+    MlorcM { mq: Tensor, mb: Tensor, v: Tensor },
+    MlorcV { m: Tensor, vq: Tensor, vb: Tensor },
+    Galore { p: Tensor, m_lo: Tensor, v_lo: Tensor, left: bool, refreshed: bool },
+    LdAdamW { p: Tensor, m_lo: Tensor, v_lo: Tensor, e: Tensor, left: bool },
+}
+
+impl Legacy {
+    /// Zero state exactly as the old `OptState::for_param_with_l` built it.
+    fn new(method: &str, m: usize, n: usize, l: usize) -> Legacy {
+        let left = m <= n;
+        let (pshape, rshape) = if left { ([m, l], [l, n]) } else { ([n, l], [m, l]) };
+        match method {
+            "full_adamw" => {
+                Legacy::AdamW { m: Tensor::zeros(&[m, n]), v: Tensor::zeros(&[m, n]) }
+            }
+            "full_lion" => Legacy::Lion { m: Tensor::zeros(&[m, n]) },
+            "mlorc_adamw" => Legacy::MlorcAdamW {
+                mq: Tensor::zeros(&[m, l]),
+                mb: Tensor::zeros(&[l, n]),
+                vq: Tensor::zeros(&[m, l]),
+                vb: Tensor::zeros(&[l, n]),
+            },
+            "mlorc_lion" => Legacy::MlorcLion {
+                mq: Tensor::zeros(&[m, l]),
+                mb: Tensor::zeros(&[l, n]),
+            },
+            "mlorc_m" => Legacy::MlorcM {
+                mq: Tensor::zeros(&[m, l]),
+                mb: Tensor::zeros(&[l, n]),
+                v: Tensor::zeros(&[m, n]),
+            },
+            "mlorc_v" => Legacy::MlorcV {
+                m: Tensor::zeros(&[m, n]),
+                vq: Tensor::zeros(&[m, l]),
+                vb: Tensor::zeros(&[l, n]),
+            },
+            "galore" => Legacy::Galore {
+                p: Tensor::zeros(&pshape),
+                m_lo: Tensor::zeros(&rshape),
+                v_lo: Tensor::zeros(&rshape),
+                left,
+                refreshed: false,
+            },
+            "ldadamw" => Legacy::LdAdamW {
+                p: Tensor::zeros(&pshape),
+                m_lo: Tensor::zeros(&rshape),
+                v_lo: Tensor::zeros(&rshape),
+                e: Tensor::zeros(&[m, n]),
+                left,
+            },
+            other => panic!("no legacy oracle for '{other}'"),
+        }
+    }
+
+    /// Verbatim transcription of the old `OptState::host_hp`.
+    fn hp(&self) -> OptHp {
+        match self {
+            Legacy::Lion { .. } | Legacy::MlorcLion { .. } => OptHp::lion(),
+            Legacy::MlorcAdamW { .. } | Legacy::MlorcM { .. } | Legacy::MlorcV { .. } => {
+                OptHp::mlorc_adamw()
+            }
+            _ => OptHp::adamw(),
+        }
+    }
+
+    /// Verbatim transcription of the old `OptState::host_step` dispatch.
+    fn host_step(
+        &mut self,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) {
+        let hp = self.hp();
+        match self {
+            Legacy::AdamW { m, v } => adamw_host_step(w, g, m, v, lr, t, &hp),
+            Legacy::Lion { m } => lion_host_step(w, g, m, lr, &hp),
+            Legacy::MlorcAdamW { mq, mb, vq, vb } => {
+                let (_, n) = w.dims2().unwrap();
+                let l = mq.shape[1];
+                let om_m = rng.gaussian_tensor(&[n, l], 1.0);
+                let om_v = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_adamw_core(w, g, mq, mb, vq, vb, t, lr, &hp, &om_m, &om_v, ws);
+            }
+            Legacy::MlorcLion { mq, mb } => {
+                let (_, n) = w.dims2().unwrap();
+                let l = mq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_lion_core(w, g, mq, mb, lr, &hp, &om, ws);
+            }
+            Legacy::MlorcM { mq, mb, v } => {
+                let (_, n) = w.dims2().unwrap();
+                let l = mq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_m_core(w, g, mq, mb, v, t, lr, &hp, &om, ws);
+            }
+            Legacy::MlorcV { m, vq, vb } => {
+                let (_, n) = w.dims2().unwrap();
+                let l = vq.shape[1];
+                let om = rng.gaussian_tensor(&[n, l], 1.0);
+                mlorc_v_core(w, g, m, vq, vb, t, lr, &hp, &om, ws);
+            }
+            Legacy::Galore { p, m_lo, v_lo, left, refreshed } => {
+                let l = p.shape[1];
+                if !*refreshed {
+                    galore_refresh_projector(p, g, *left, l, rng);
+                    *refreshed = true;
+                }
+                galore_core(w, g, p, m_lo, v_lo, *left, t, lr, &hp);
+            }
+            Legacy::LdAdamW { p, m_lo, v_lo, e, left } => {
+                let l = p.shape[1];
+                ldadamw_core(w, g, p, m_lo, v_lo, e, *left, l, t, lr, &hp, rng);
+            }
+        }
+    }
+
+    fn clear_galore_refresh(&mut self) {
+        if let Legacy::Galore { refreshed, .. } = self {
+            *refreshed = false;
+        }
+    }
+
+    /// Field name -> tensor, matching the checkpoint-v2 names.
+    fn fields(&self) -> BTreeMap<&'static str, &Tensor> {
+        let mut out = BTreeMap::new();
+        match self {
+            Legacy::AdamW { m, v } => {
+                out.insert("m", m);
+                out.insert("v", v);
+            }
+            Legacy::Lion { m } => {
+                out.insert("m", m);
+            }
+            Legacy::MlorcAdamW { mq, mb, vq, vb } => {
+                out.insert("mq", mq);
+                out.insert("mb", mb);
+                out.insert("vq", vq);
+                out.insert("vb", vb);
+            }
+            Legacy::MlorcLion { mq, mb } => {
+                out.insert("mq", mq);
+                out.insert("mb", mb);
+            }
+            Legacy::MlorcM { mq, mb, v } => {
+                out.insert("mq", mq);
+                out.insert("mb", mb);
+                out.insert("v", v);
+            }
+            Legacy::MlorcV { m, vq, vb } => {
+                out.insert("m", m);
+                out.insert("vq", vq);
+                out.insert("vb", vb);
+            }
+            Legacy::Galore { p, m_lo, v_lo, .. } => {
+                out.insert("p", p);
+                out.insert("m_lo", m_lo);
+                out.insert("v_lo", v_lo);
+            }
+            Legacy::LdAdamW { p, m_lo, v_lo, e, .. } => {
+                out.insert("p", p);
+                out.insert("m_lo", m_lo);
+                out.insert("v_lo", v_lo);
+                out.insert("e", e);
+            }
+        }
+        out
+    }
+}
+
+fn mat_spec(m: usize, n: usize) -> ParamSpec {
+    ParamSpec { name: "w".into(), shape: vec![m, n], kind: "matrix".into(), compressed: true }
+}
+
+/// Every pre-existing method id, stepped through the new registry path
+/// and the legacy oracle with identical gradients and Omega streams, must
+/// agree to the bit — weights and every state tensor, every step.
+#[test]
+fn registry_path_is_bit_identical_to_prerefactor_dispatch() {
+    const STEPS: usize = 12;
+    const GALORE_FREQ: usize = 4;
+    let methods = [
+        "full_adamw",
+        "full_lion",
+        "mlorc_adamw",
+        "mlorc_lion",
+        "mlorc_m",
+        "mlorc_v",
+        "galore",
+        "ldadamw",
+    ];
+    for method in methods {
+        for (m, n) in [(20usize, 12usize), (12usize, 20usize)] {
+            let l = 4;
+            let seed = 1000 + m as u64;
+            let mut data_rng = Rng::new(seed);
+            let mut w_new = data_rng.gaussian_tensor(&[m, n], 0.5);
+            let mut w_old = w_new.clone();
+
+            let parsed = Method::parse(method).unwrap();
+            let mut st_new =
+                OptState::for_param_with_l(parsed, &mat_spec(m, n), l).unwrap();
+            let mut st_old = Legacy::new(method, m, n, l);
+
+            let mut rng_new = Rng::new(77 ^ seed);
+            let mut rng_old = Rng::new(77 ^ seed);
+            let mut ws_new = Workspace::new();
+            let mut ws_old = Workspace::new();
+
+            for step in 0..STEPS {
+                let g = data_rng.gaussian_tensor(&[m, n], 1.0);
+                // projector cadence, mirroring the trainer on both sides
+                if step % GALORE_FREQ == 0 {
+                    st_new.invalidate_projector();
+                    st_old.clear_galore_refresh();
+                }
+                st_new
+                    .host_step(&mut w_new, &g, 1e-2, step + 1, &mut rng_new, &mut ws_new)
+                    .unwrap();
+                st_old.host_step(&mut w_old, &g, 1e-2, step + 1, &mut rng_old, &mut ws_old);
+                assert_eq!(
+                    w_new.data, w_old.data,
+                    "{method} ({m}x{n}) step {step}: weights diverged from pre-refactor path"
+                );
+                // the two Omega streams must stay in lock-step too
+                assert_eq!(
+                    rng_new.snapshot(),
+                    rng_old.snapshot(),
+                    "{method} ({m}x{n}) step {step}: omega stream schedule changed"
+                );
+            }
+
+            let old_fields = st_old.fields();
+            let new_fields = st_new.tensor_fields();
+            assert_eq!(new_fields.len(), old_fields.len(), "{method}: field count");
+            for (name, t) in new_fields {
+                let old = old_fields.get(name).unwrap_or_else(|| {
+                    panic!("{method}: field '{name}' missing from legacy state")
+                });
+                assert_eq!(t.data, old.data, "{method} ({m}x{n}): state field '{name}'");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- combo matrix
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mlorc_matrix_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// Every registered (rule × compressor) method: 5 host steps, a v2
+/// checkpoint, a byte-exact roundtrip of every state field, and a
+/// bit-identical continuation — automatically covering methods registered
+/// in the future.
+#[test]
+fn combo_matrix_checkpoint_roundtrip_bit_exact() {
+    for &method in Method::all() {
+        if method.is_lora() {
+            continue; // host engine has no adapter graphs
+        }
+        let mut cfg = RunConfig::new("host-nano", method, TaskKind::MathChain, 8);
+        cfg.peak_lr = 0.02;
+        cfg.log_every = 0;
+        cfg.seed = 21;
+        cfg.galore_update_freq = 3;
+        let mut tr = HostTrainer::new(cfg.clone()).unwrap();
+        for _ in 0..5 {
+            tr.train_step().unwrap();
+        }
+        let dir = tmp(method.name());
+        tr.save_checkpoint(&dir).unwrap();
+
+        // Roundtrip: every state field byte-exact through the v2 format.
+        let snap = mlorc::coordinator::resolve_checkpoint_dir(&dir).unwrap();
+        let mut scratch = HostTrainer::new(cfg.clone()).unwrap();
+        let ck = load_checkpoint_v2(&snap, &mut scratch.params, None).unwrap();
+        assert_eq!(ck.step, 5, "{method:?}");
+        for (spec, live) in tr.params.specs.iter().zip(tr.opt_states()) {
+            let stored: &OptState = ck
+                .opt
+                .get(&spec.name)
+                .unwrap_or_else(|| panic!("{method:?}: no stored state for {}", spec.name));
+            assert_eq!(stored.variant_name(), live.variant_name(), "{method:?}");
+            assert_eq!(
+                stored.ckpt_meta().to_string_compact(),
+                live.ckpt_meta().to_string_compact(),
+                "{method:?} {} flags",
+                spec.name
+            );
+            let (a, b) = (live.tensor_fields(), stored.tensor_fields());
+            assert_eq!(a.len(), b.len(), "{method:?} {} field count", spec.name);
+            for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
+                assert_eq!(na, nb, "{method:?} {} field order", spec.name);
+                assert_eq!(ta.shape, tb.shape, "{method:?} {}/{na} shape", spec.name);
+                assert_eq!(ta.data, tb.data, "{method:?} {}/{na} bytes", spec.name);
+            }
+        }
+
+        // Continuation: resumed trainer == uninterrupted trainer, to the bit.
+        let mut resumed = HostTrainer::new(cfg.clone()).unwrap();
+        assert_eq!(resumed.resume_from(&dir).unwrap(), 5, "{method:?}");
+        for _ in 0..3 {
+            tr.train_step().unwrap();
+            resumed.train_step().unwrap();
+        }
+        for (j, (a, b)) in tr.params.values.iter().zip(&resumed.params.values).enumerate() {
+            assert_eq!(a.data, b.data, "{method:?} param {j} diverged after resume");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -44,6 +44,7 @@ fn spool_drains_concurrently_and_matches_solo() {
             id: format!("job{:03}_{}", i + 1, method.name()),
             engine: Engine::Host,
             checkpoint_every: 4,
+            priority: 0,
             cfg: job_cfg(*method, *seed, 10),
         };
         spool.submit(&spec).unwrap();
@@ -93,6 +94,7 @@ fn interrupted_job_recovers_and_resumes_bit_identical() {
         id: "job001_crash".to_string(),
         engine: Engine::Host,
         checkpoint_every: 5,
+        priority: 0,
         cfg: cfg.clone(),
     };
     spool.submit(&spec).unwrap();
@@ -138,6 +140,7 @@ fn failing_job_lands_in_failed_with_error_status() {
         id: "job001_graph".to_string(),
         engine: Engine::Graph,
         checkpoint_every: 0,
+        priority: 0,
         cfg: job_cfg(Method::MlorcAdamW, 1, 4),
     };
     spool.submit(&spec).unwrap();
@@ -151,5 +154,51 @@ fn failing_job_lands_in_failed_with_error_status() {
     assert_eq!(rows.len(), 1);
     assert_eq!(rows[0].state, "failed");
     assert!(rows[0].error.is_some(), "failed job must carry its error");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn priorities_and_cancellation_shape_the_drain() {
+    // An urgent late submission overtakes the backlog, a cancelled job is
+    // never claimed, and the drain still reports a clean spool. Runs the
+    // post-refactor registry combos end-to-end through the scheduler.
+    let root = tmp("prio");
+    let spool = Spool::open(&root).unwrap();
+    let mk = |id: &str, method: Method, priority: i64| JobSpec {
+        id: id.to_string(),
+        engine: Engine::Host,
+        checkpoint_every: 0,
+        priority,
+        cfg: job_cfg(method, 5, 6),
+    };
+    spool.submit(&mk("job001_doomed", Method::MlorcAdamW, 0)).unwrap();
+    spool.submit(&mk("job002_backlog", Method::MlorcSgdM, 0)).unwrap();
+    spool.submit(&mk("job003_urgent", Method::GaloreLion, 9)).unwrap();
+    spool.cancel("job001_doomed").unwrap();
+
+    // Single worker: claim order is fully deterministic — urgent first.
+    let first = spool.claim_next().unwrap().unwrap();
+    assert_eq!(first.id, "job003_urgent");
+    assert_eq!(first.priority, 9);
+    // put it back so the scheduler drains everything itself
+    spool.recover_interrupted().unwrap();
+
+    let opts = ServeOpts { jobs: 1, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    let summary = serve(&spool, &opts).unwrap();
+    assert_eq!(summary.done, 2);
+    assert_eq!(summary.failed, 0);
+    assert_eq!(spool.jobs_in("cancelled").unwrap(), vec!["job001_doomed"]);
+
+    let rows = aggregate(&spool).unwrap();
+    assert_eq!(rows.len(), 3);
+    let state_of = |id: &str| {
+        rows.iter().find(|r| r.id == id).map(|r| r.state.clone()).unwrap()
+    };
+    assert_eq!(state_of("job001_doomed"), "cancelled");
+    assert_eq!(state_of("job002_backlog"), "done");
+    assert_eq!(state_of("job003_urgent"), "done");
+    // both new registry combos produced resumable final checkpoints
+    assert!(!final_params(&spool, "job002_backlog").is_empty());
+    assert!(!final_params(&spool, "job003_urgent").is_empty());
     std::fs::remove_dir_all(&root).unwrap();
 }

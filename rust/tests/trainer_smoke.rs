@@ -20,10 +20,9 @@ fn short_run(method: Method, task: TaskKind, steps: usize) -> RunConfig {
     cfg.log_every = 0;
     cfg.eval_batches = 2;
     // nano-scale LRs: higher than the 7B-scale defaults
-    cfg.peak_lr = match method {
-        Method::FullLion | Method::MlorcLion | Method::LoraLion => 1e-3,
-        Method::LoraAdamW => 5e-3,
-        Method::Galore => 5e-3,
+    cfg.peak_lr = match method.name() {
+        "full_lion" | "mlorc_lion" | "lora_lion" | "galore_lion" => 1e-3,
+        "lora_adamw" | "galore" => 5e-3,
         _ => 3e-3,
     };
     cfg
@@ -49,6 +48,10 @@ fn every_method_runs_three_steps_lm() {
     let Some((manifest, rt)) = setup() else { return };
     let preset = manifest.preset("nano").unwrap();
     for &method in Method::all() {
+        if !method.desc().graphed {
+            // host-only registry combos have no lowered step graphs yet
+            continue;
+        }
         let cfg = short_run(method, TaskKind::MathChain, 3);
         let mut tr = Trainer::new(&rt, preset, cfg).unwrap();
         for _ in 0..3 {
