@@ -358,6 +358,39 @@ fn pool_vs_spawn_bench(rng: &mut Rng) -> (Json, f64) {
     )
 }
 
+/// Momentum-state footprint at the acceptance shape (512x128, r=4):
+/// layout formula (`VariantDesc::state_bytes`) cross-checked against a
+/// live state's `state_bytes()`, and the PR-5 gate — `mlorc_q8` momentum
+/// state at most 0.3x dense AdamW (it lands near 0.01x: 1-byte codes on
+/// rank-4 factors vs two dense f32 moments).
+fn state_bytes_bench() -> Json {
+    use mlorc::coordinator::OptState;
+    use mlorc::optim::registry;
+    let (m, n, r) = (512usize, 128usize, 4usize);
+    let dense = registry::variant("adamw").unwrap().state_bytes(m, n, r);
+    let mut rows: BTreeMap<String, Json> = BTreeMap::new();
+    println!("\nmomentum state bytes (512x128, r=4):");
+    for id in ["adamw", "mlorc_adamw", "mlorc_adarank", "mlorc_q8"] {
+        let formula = registry::variant(id).unwrap().state_bytes(m, n, r);
+        let live = OptState::for_variant(id, &[m, n], r).unwrap().state_bytes();
+        assert_eq!(live, formula, "{id}: live state bytes vs layout formula");
+        println!("{id:>16} {formula:>9}B  ({:.4}x dense adamw)", formula as f64 / dense as f64);
+        rows.insert(
+            id.to_string(),
+            Json::obj(vec![
+                ("bytes", Json::num(formula as f64)),
+                ("vs_dense_adamw", Json::num(formula as f64 / dense as f64)),
+            ]),
+        );
+    }
+    let q8 = registry::variant("mlorc_q8").unwrap().state_bytes(m, n, r);
+    assert!(
+        10 * q8 <= 3 * dense,
+        "acceptance: mlorc_q8 momentum state {q8}B must be <= 0.3x dense AdamW {dense}B"
+    );
+    Json::Obj(rows)
+}
+
 /// GEMM-shape audit of the 512x128 fast step (the FLOP-count acceptance
 /// assertion): per moment exactly one dense O(m·n·l) reconstruction, thin
 /// sketches/projections everywhere else.
@@ -572,6 +605,7 @@ fn main() {
     let (host, speedup_512) = host_bench(&mut rng);
     let (pvs_json, pvs_speedup) = pool_vs_spawn_bench(&mut rng);
     let audit = gemm_audit(&mut rng);
+    let state_bytes = state_bytes_bench();
     let graphs = graph_bench(&mut rng);
 
     println!("\n512x128 mlorc_adamw speedup vs pre-change scalar step: {speedup_512:.2}x");
@@ -585,6 +619,7 @@ fn main() {
         ("host_us_per_step", host.clone()),
         ("pool_vs_spawn_512x128_r4", pvs_json),
         ("gemm_audit_512x128", audit),
+        ("state_bytes_512x128_r4", state_bytes),
         ("speedup_512x128_vs_scalar", Json::num(speedup_512)),
     ];
     if let Some(g) = graphs {

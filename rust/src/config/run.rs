@@ -69,6 +69,9 @@ pub struct RunConfig {
     pub galore_update_freq: usize,
     /// spectral probe cadence (0 = off) — Figures 1/4
     pub spectral_every: usize,
+    /// adaptive-rank floor for AdaRank layouts (`--rank-min`; fixed-rank
+    /// layouts ignore it)
+    pub rank_min: usize,
     /// free gradient buffers eagerly, layer by layer (per-layer updates)
     pub per_layer_updates: bool,
     /// step optimizer states on the host (rust reference mirrors, factored
@@ -93,6 +96,7 @@ impl RunConfig {
             eval_batches: 8,
             galore_update_freq: 50,
             spectral_every: 0,
+            rank_min: 1,
             per_layer_updates: true,
             host_opt: false,
             opt_threads: 0,
@@ -123,6 +127,7 @@ impl RunConfig {
             ("eval_batches", Json::num(self.eval_batches as f64)),
             ("galore_update_freq", Json::num(self.galore_update_freq as f64)),
             ("spectral_every", Json::num(self.spectral_every as f64)),
+            ("rank_min", Json::num(self.rank_min as f64)),
             ("per_layer_updates", Json::Bool(self.per_layer_updates)),
             ("host_opt", Json::Bool(self.host_opt)),
             ("opt_threads", Json::num(self.opt_threads as f64)),
@@ -143,6 +148,11 @@ impl RunConfig {
             eval_batches: j.req("eval_batches")?.as_usize()?,
             galore_update_freq: j.req("galore_update_freq")?.as_usize()?,
             spectral_every: j.req("spectral_every")?.as_usize()?,
+            // optional for checkpoints/specs written before adaptive rank
+            rank_min: match j.get("rank_min") {
+                Some(v) => v.as_usize()?,
+                None => 1,
+            },
             per_layer_updates: j.req("per_layer_updates")?.as_bool()?,
             // optional for checkpoints written before host stepping existed
             host_opt: match j.get("host_opt") {

@@ -29,7 +29,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::linalg::Rng;
-use crate::tensor::{read_rten, write_rten, Tensor};
+use crate::tensor::{
+    read_rten, read_rten_entries, write_rten, write_rten_entries, RtenEntry, Tensor,
+};
 use crate::util::fsutil;
 use crate::util::json::Json;
 
@@ -140,15 +142,19 @@ pub fn save_checkpoint_v2(
     let tensors = collect_params(params, adapters);
     write_rten(&dir.join("params.rten"), &tensors)?;
 
-    let mut opt_tensors = BTreeMap::new();
+    let mut opt_tensors: BTreeMap<String, RtenEntry> = BTreeMap::new();
     let mut opt_meta = Json::Obj(BTreeMap::new());
     for (name, state) in &snap.opt {
         opt_meta.set(name, state.ckpt_meta());
         for (field, t) in state.tensor_fields() {
-            opt_tensors.insert(format!("{name}/{field}"), t.clone());
+            opt_tensors.insert(format!("{name}/{field}"), RtenEntry::F32(t.clone()));
+        }
+        // quantized layouts add their u8 code planes as dtype-2 entries
+        for (field, t) in state.u8_fields() {
+            opt_tensors.insert(format!("{name}/{field}"), RtenEntry::U8(t.clone()));
         }
     }
-    write_rten(&dir.join("opt_state.rten"), &opt_tensors)?;
+    write_rten_entries(&dir.join("opt_state.rten"), &opt_tensors)?;
 
     let omega = Json::arr(snap.omega.iter().map(rng_to_json));
     let meta = Json::obj(vec![
@@ -206,17 +212,29 @@ pub fn load_checkpoint_v2(
         restore_store(&tensors, a)?;
     }
 
-    let opt_tensors = read_rten(&dir.join("opt_state.rten"))
+    let opt_tensors = read_rten_entries(&dir.join("opt_state.rten"))
         .with_context(|| format!("checkpoint at {}", dir.display()))?;
     let mut opt = BTreeMap::new();
     for (name, state_meta) in meta.req("opt_states")?.as_obj()? {
-        let state = OptState::from_ckpt(state_meta, |field| {
-            let key = format!("{name}/{field}");
-            opt_tensors
-                .get(&key)
-                .cloned()
-                .with_context(|| format!("checkpoint missing optimizer tensor '{key}'"))
-        })
+        let state = OptState::from_ckpt_full(
+            state_meta,
+            |field| {
+                let key = format!("{name}/{field}");
+                match opt_tensors.get(&key) {
+                    Some(RtenEntry::F32(t)) => Ok(t.clone()),
+                    Some(RtenEntry::U8(_)) => bail!("optimizer tensor '{key}' is u8, wanted f32"),
+                    None => bail!("checkpoint missing optimizer tensor '{key}'"),
+                }
+            },
+            |field| {
+                let key = format!("{name}/{field}");
+                match opt_tensors.get(&key) {
+                    Some(RtenEntry::U8(t)) => Ok(t.clone()),
+                    Some(RtenEntry::F32(_)) => bail!("optimizer tensor '{key}' is f32, wanted u8"),
+                    None => bail!("checkpoint missing optimizer tensor '{key}'"),
+                }
+            },
+        )
         .with_context(|| format!("optimizer state for '{name}'"))?;
         opt.insert(name.clone(), state);
     }

@@ -69,11 +69,26 @@ impl MemoryAccountant {
         (m * n, v.state_floats(m, n, r))
     }
 
+    /// Optimizer-state *bytes* for one compressed (m, n) matrix — what
+    /// Table 1 actually compares once quantized layouts exist (their
+    /// elements are 1-byte codes, so a float count under-represents the
+    /// savings by 4x).
+    pub fn table1_row_opt_bytes(method: Method, m: usize, n: usize, r: usize) -> usize {
+        use crate::optim::registry;
+        if method.is_lora() {
+            let (_, o) = Self::table1_row(method, m, n, r);
+            return 4 * o;
+        }
+        registry::variant(method.matrix_step())
+            .expect("registered methods only reference registered variants")
+            .state_bytes(m, n, r)
+    }
+
     /// Whole-model report under the analytic model.
     pub fn analytic(preset: &Preset, method: Method, per_layer: bool, with_head: bool) -> MemoryReport {
         let r = preset.model.rank + preset.model.oversample;
         let mut weights = 0usize;
-        let mut opt = 0usize;
+        let mut opt_bytes = 0usize;
         let mut grads_all = 0usize;
         let mut grads_max = 0usize;
         let mut lora_extra = 0usize;
@@ -85,8 +100,9 @@ impl MemoryAccountant {
             weights += numel;
             if p.compressed && p.shape.len() == 2 {
                 let (m, n) = (p.shape[0], p.shape[1]);
-                let (w, o) = Self::table1_row(method, m, n, r);
-                opt += o;
+                let (w, _) = Self::table1_row(method, m, n, r);
+                // byte-accurate: quantized layouts store 1-byte codes
+                opt_bytes += Self::table1_row_opt_bytes(method, m, n, r);
                 lora_extra += w - m * n; // nonzero only for LoRA
                 if method.is_lora() {
                     // only adapters get gradients
@@ -104,7 +120,7 @@ impl MemoryAccountant {
                 if method.is_lora() && p.kind != "head" {
                     // frozen under LoRA: no grads, no state
                 } else {
-                    opt += factor * numel;
+                    opt_bytes += 4 * factor * numel;
                     grads_all += numel;
                     grads_max = grads_max.max(numel);
                 }
@@ -118,7 +134,7 @@ impl MemoryAccountant {
         MemoryReport {
             method: method.name().to_string(),
             weights_bytes: 4 * weights,
-            opt_state_bytes: 4 * opt,
+            opt_state_bytes: opt_bytes,
             grads_peak_bytes: 4 * if per_layer { grads_max } else { grads_all },
             activations_bytes: 4 * act * preset.model.n_layers.min(2), // checkpointed
             lora_extra_weights_bytes: 4 * lora_extra,
@@ -155,5 +171,23 @@ mod tests {
         // and LDAdamW pays the full-size error buffer on top
         let (_, ld) = MemoryAccountant::table1_row(Method::LdAdamW, m, n, r);
         assert!(ld > m * n);
+    }
+
+    #[test]
+    fn quantized_row_is_quarter_of_factored_bytes() {
+        // mlorc_q8 stores 1-byte codes + per-block scales: ~1/4 of the
+        // f32 factored row, and far under the 0.3x-of-dense-AdamW line.
+        let (m, n, r) = (512, 128, 4);
+        let f32_row = MemoryAccountant::table1_row_opt_bytes(Method::MlorcAdamW, m, n, r);
+        let q8_row = MemoryAccountant::table1_row_opt_bytes(Method::MlorcQ8, m, n, r);
+        let dense_row = MemoryAccountant::table1_row_opt_bytes(Method::FullAdamW, m, n, r);
+        assert!(q8_row < f32_row / 3, "q8 {q8_row}B vs f32 factored {f32_row}B");
+        assert!(
+            10 * q8_row <= 3 * dense_row,
+            "q8 {q8_row}B must be <= 0.3x dense AdamW {dense_row}B"
+        );
+        // adaptive rank starts at the factored footprint (upper bound)
+        let ada = MemoryAccountant::table1_row_opt_bytes(Method::MlorcAdaRank, m, n, r);
+        assert_eq!(ada, f32_row);
     }
 }

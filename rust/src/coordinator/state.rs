@@ -56,6 +56,17 @@ impl OptState {
     /// directly — for callers without a manifest preset (the serve host
     /// engine builds its parameter fleet from shapes alone).
     pub fn for_param_with_l(method: Method, spec: &ParamSpec, l: usize) -> Result<OptState> {
+        OptState::for_param_cfg(method, spec, l, 1)
+    }
+
+    /// Full-control constructor: sketch width `l` plus the adaptive-rank
+    /// floor (`--rank-min`; only adaptive-rank layouts read it).
+    pub fn for_param_cfg(
+        method: Method,
+        spec: &ParamSpec,
+        l: usize,
+        rank_min: usize,
+    ) -> Result<OptState> {
         let desc = method.desc();
         let variant_id = if spec.compressed && spec.shape.len() == 2 {
             desc.matrix
@@ -63,7 +74,7 @@ impl OptState {
             desc.plain
         };
         let v = registry::variant(variant_id)?;
-        Ok(OptState::Opt(v.build(&spec.shape, l)?))
+        Ok(OptState::Opt(v.build_opts(&spec.shape, l, rank_min)?))
     }
 
     /// Build a fresh zero state for an explicit variant id (tests, tools).
@@ -122,6 +133,21 @@ impl OptState {
         }
     }
 
+    /// Raw u8 fields (quantized code planes), checkpoint v2's dtype-2
+    /// entries; empty for unquantized layouts.
+    pub fn u8_fields(&self) -> Vec<(&'static str, &crate::tensor::TensorU8)> {
+        match self.opt() {
+            None => vec![],
+            Some(mo) => mo.comp().u8_fields(),
+        }
+    }
+
+    /// How many times this state shrank its factor rank (adaptive-rank
+    /// layouts only).
+    pub fn shrink_events(&self) -> usize {
+        self.opt().map(|mo| mo.comp().shrink_events()).unwrap_or(0)
+    }
+
     /// The fields this state's step graph returns updated, in output
     /// order (GaLore's projector is a graph constant and excluded).
     pub fn graph_output_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
@@ -170,9 +196,22 @@ impl OptState {
 
     /// Rebuild a state from checkpoint metadata plus a tensor lookup
     /// (`take(field)` yields the stored `<param>/<field>` tensor).
+    /// Quantized layouts need [`OptState::from_ckpt_full`].
     pub fn from_ckpt(
         meta: &Json,
+        take: impl FnMut(&'static str) -> Result<Tensor>,
+    ) -> Result<OptState> {
+        OptState::from_ckpt_full(meta, take, |field| {
+            bail!("layout wants u8 tensor '{field}' but this source has only f32 tensors")
+        })
+    }
+
+    /// [`OptState::from_ckpt`] with a u8 lookup for quantized layouts'
+    /// code planes.
+    pub fn from_ckpt_full(
+        meta: &Json,
         mut take: impl FnMut(&'static str) -> Result<Tensor>,
+        mut take_u8: impl FnMut(&'static str) -> Result<crate::tensor::TensorU8>,
     ) -> Result<OptState> {
         let variant = meta.req("variant")?.as_str()?;
         if variant == "frozen" {
@@ -180,7 +219,7 @@ impl OptState {
         }
         let desc = registry::variant(variant)
             .map_err(|_| anyhow::anyhow!("unknown optimizer state variant '{variant}' in checkpoint"))?;
-        Ok(OptState::Opt(desc.decode(meta, &mut take)?))
+        Ok(OptState::Opt(desc.decode(meta, &mut take, &mut take_u8)?))
     }
 
     /// Optimizer-state footprint in bytes (the Table 1/3 quantity).
@@ -382,9 +421,13 @@ mod tests {
             let meta = st.ckpt_meta();
             let fields: std::collections::BTreeMap<&'static str, Tensor> =
                 st.tensor_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
-            let back = OptState::from_ckpt(&meta, |k| {
-                fields.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing field {k}"))
-            })
+            let u8s: std::collections::BTreeMap<&'static str, crate::tensor::TensorU8> =
+                st.u8_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
+            let back = OptState::from_ckpt_full(
+                &meta,
+                |k| fields.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing field {k}")),
+                |k| u8s.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing u8 field {k}")),
+            )
             .unwrap();
             assert_eq!(back.variant_name(), st.variant_name(), "{method:?}");
             assert_eq!(back.state_bytes(), st.state_bytes(), "{method:?}");

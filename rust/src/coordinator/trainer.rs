@@ -134,7 +134,12 @@ impl<'rt> Trainer<'rt> {
                 Store::Base(i) => &params.specs[*i],
                 Store::Adapter(i) => &adapters.as_ref().unwrap().specs[*i],
             };
-            states.push(OptState::for_param(cfg.method, spec, preset)?);
+            states.push(OptState::for_param_cfg(
+                cfg.method,
+                spec,
+                preset.model.l(),
+                cfg.rank_min,
+            )?);
         }
 
         // Independent per-parameter Omega streams (see field docs).
@@ -206,6 +211,12 @@ impl<'rt> Trainer<'rt> {
 
     pub fn step_count(&self) -> usize {
         self.step
+    }
+
+    /// Total adaptive-rank shrink events across all parameter states (0
+    /// for fixed-rank layouts) — surfaced by `mlorc status`.
+    pub fn opt_shrink_events(&self) -> usize {
+        self.states.iter().map(|s| s.shrink_events()).sum()
     }
 
     /// Write a full v2 snapshot (params, every `OptState`, RNG stream

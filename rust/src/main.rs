@@ -56,12 +56,13 @@ USAGE: mlorc <subcommand> [--options]
 
   train  --preset tiny --method mlorc_adamw --task math_chain --steps 200
          [--lr 2e-3] [--seed 0] [--eval-every 50] [--spectral-every 0]
-         [--host-opt] [--opt-threads N]
+         [--host-opt] [--opt-threads N] [--rank-min N]
          [--save-metrics results/run.json]
          [--checkpoint-dir ckpt/] [--checkpoint-every N] [--resume ckpt/]
   submit --spool spool/ --method mlorc_adamw --steps 200
          [--engine host|graph] [--preset <name>] [--task <t>] [--lr X]
-         [--seed N] [--checkpoint-every N] [--priority N] [--id jobNNN_name]
+         [--seed N] [--checkpoint-every N] [--priority N] [--rank-min N]
+         [--id jobNNN_name]
   serve  --spool spool/ [--jobs 2] [--drain] [--poll-ms 500]
   status --spool spool/ [--json] [--expect-all-done]
   cancel <job-id> [--spool spool/]
@@ -102,6 +103,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.eval_batches = args.get_usize("eval-batches", 8)?;
     cfg.spectral_every = args.get_usize("spectral-every", 0)?;
     cfg.galore_update_freq = args.get_usize("galore-freq", 50)?;
+    cfg.rank_min = args.get_usize("rank-min", 1)?;
     cfg.host_opt = args.flag("host-opt");
     cfg.opt_threads = args.get_usize("opt-threads", 0)?;
     cfg.log_every = args.get_usize("log-every", 10)?;
@@ -174,6 +176,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
     cfg.peak_lr = args.get_f64("lr", cfg.peak_lr as f64)? as f32;
     cfg.seed = args.get_u64("seed", 0)?;
     cfg.opt_threads = args.get_usize("opt-threads", 0)?;
+    cfg.rank_min = args.get_usize("rank-min", 1)?;
     cfg.host_opt = args.flag("host-opt");
     cfg.log_every = 0;
     let checkpoint_every = args.get_usize("checkpoint-every", 10)?;

@@ -8,6 +8,11 @@
 //!  * [`RsvdQb`] — MLorc's factored Q/B recompression, with a per-moment
 //!    factored/dense mask so the Table 7 ablations (compress-m-only /
 //!    compress-v-only) are just different masks;
+//!  * [`AdaRank`] — RsvdQb with an online rank schedule: directions in a
+//!    negligible tail of B's spectral energy are dropped, floored at
+//!    `--rank-min` (AdaRankGrad-style);
+//!  * [`QuantQb`](super::quant::QuantQb) — RsvdQb with both factors held
+//!    as 8-bit blockwise-quantized codes between steps (`optim::quant`);
 //!  * [`GaloreProjector`] — GaLore's gradient-subspace projection with a
 //!    cadence-refreshed projector;
 //!  * [`LdProj`] — LDAdamW's per-step projector + error-feedback buffer.
@@ -27,7 +32,7 @@
 use anyhow::{bail, Result};
 
 use crate::linalg::{matmul, Rng, Workspace};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorU8};
 use crate::util::json::Json;
 
 use super::rules::{RuleKind, UpdateRule};
@@ -41,7 +46,8 @@ use super::{
 /// names (in declared order) plus any non-tensor flags.
 #[allow(clippy::too_many_arguments)]
 pub trait MomentumCompressor: std::fmt::Debug + Send + Sync {
-    /// Stable id (`dense` | `rsvd_qb` | `galore` | `ldproj`).
+    /// Stable id (`dense` | `rsvd_qb` | `adarank` | `quant_qb` |
+    /// `galore` | `ldproj`).
     fn id(&self) -> &'static str;
 
     /// The state's tensor fields under stable names, in declared order —
@@ -51,6 +57,24 @@ pub trait MomentumCompressor: std::fmt::Debug + Send + Sync {
 
     /// Mutable view of every tensor field, same names and order.
     fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)>;
+
+    /// Raw u8 tensor fields (8-bit quantized code planes), stored by
+    /// checkpoint v2 as `<param>/<field>` dtype-2 entries next to the f32
+    /// fields. Empty for unquantized layouts.
+    fn u8_fields(&self) -> Vec<(&'static str, &TensorU8)> {
+        vec![]
+    }
+
+    /// Mutable view of every u8 field, same names and order.
+    fn u8_fields_mut(&mut self) -> Vec<(&'static str, &mut TensorU8)> {
+        vec![]
+    }
+
+    /// How many times this state shrank its factor rank (adaptive-rank
+    /// layouts); surfaced through checkpoints and `mlorc status`.
+    fn shrink_events(&self) -> usize {
+        0
+    }
 
     /// The fields a step graph returns updated, in output order.
     /// Projector compressors exclude fields the graph treats as
@@ -63,9 +87,11 @@ pub trait MomentumCompressor: std::fmt::Debug + Send + Sync {
     /// registry's variant decoder).
     fn flags_into(&self, _meta: &mut Json) {}
 
-    /// Optimizer-state footprint in bytes (the Table 1/3 quantity).
+    /// Optimizer-state footprint in bytes (the Table 1/3 quantity): every
+    /// f32 field plus every quantized u8 code plane.
     fn state_bytes(&self) -> usize {
-        self.tensor_fields().iter().map(|(_, t)| t.size_bytes()).sum()
+        self.tensor_fields().iter().map(|(_, t)| t.size_bytes()).sum::<usize>()
+            + self.u8_fields().iter().map(|(_, t)| t.size_bytes()).sum::<usize>()
     }
 
     /// Reconstructed first moment, if the layout has one (spectral probe).
@@ -352,6 +378,199 @@ impl MomentumCompressor for RsvdQb {
     }
 }
 
+// --------------------------------------------------------------- adarank
+
+/// Tail-energy fraction under which [`AdaRank`] drops factor directions:
+/// the largest set of lowest-energy B rows whose cumulative energy is at
+/// most this fraction of the total goes away (AdaRankGrad, 2410.17881:
+/// gradient — and so momentum — rank decays as training converges).
+pub const ADARANK_TAIL_FRAC: f32 = 0.01;
+
+/// `RsvdQb` with an online per-parameter rank schedule. Every moment is
+/// factored; after each recompression the retained spectral energy of the
+/// new B is inspected (Q is column-orthonormal, so direction i's energy
+/// is `||B[i, :]||²`), and directions in a negligible tail are dropped —
+/// Q loses the column, B the row, and the next step's Omega draw shrinks
+/// with them. Rank only ever decreases, floored at `rank_min`
+/// (`--rank-min`); shrink events count into checkpoints and `mlorc
+/// status`.
+#[derive(Debug, Clone)]
+pub struct AdaRank {
+    /// (q, b) per rule moment — always factored.
+    stores: Vec<(Tensor, Tensor)>,
+    pub rank_min: usize,
+    pub shrinks: usize,
+}
+
+impl AdaRank {
+    pub fn new(n_moments: usize, shape: &[usize], l: usize, rank_min: usize) -> Result<AdaRank> {
+        if shape.len() != 2 {
+            bail!("adarank compression needs a 2-D parameter, got shape {shape:?}");
+        }
+        if n_moments > QB_NAMES.len() {
+            bail!("adarank supports at most {} moments", QB_NAMES.len());
+        }
+        let (m, n) = (shape[0], shape[1]);
+        let rank_min = rank_min.clamp(1, l.max(1));
+        let stores = (0..n_moments)
+            .map(|_| (Tensor::zeros(&[m, l]), Tensor::zeros(&[l, n])))
+            .collect();
+        Ok(AdaRank { stores, rank_min, shrinks: 0 })
+    }
+
+    pub fn from_parts(stores: Vec<(Tensor, Tensor)>, rank_min: usize, shrinks: usize) -> AdaRank {
+        AdaRank { stores, rank_min, shrinks }
+    }
+
+    /// Current factor rank of each moment (shapes are the source of truth).
+    pub fn ranks(&self) -> Vec<usize> {
+        self.stores.iter().map(|(q, _)| q.shape[1]).collect()
+    }
+
+    /// Drop the lowest-energy directions of one (q, b) pair whose
+    /// cumulative B-row energy stays within [`ADARANK_TAIL_FRAC`] of the
+    /// total, never going below `rank_min`. Returns true if the rank
+    /// shrank. Deterministic: energies sort by (value, index).
+    fn shrink_pair(q: &mut Tensor, b: &mut Tensor, rank_min: usize) -> bool {
+        let (m, l) = q.dims2().expect("adarank q");
+        let (_, n) = b.dims2().expect("adarank b");
+        if l <= rank_min {
+            return false;
+        }
+        let energy: Vec<f64> = (0..l)
+            .map(|i| b.data[i * n..(i + 1) * n].iter().map(|x| (*x as f64) * (*x as f64)).sum())
+            .collect();
+        let total: f64 = energy.iter().sum();
+        let budget = ADARANK_TAIL_FRAC as f64 * total;
+        let mut order: Vec<usize> = (0..l).collect();
+        order.sort_by(|&a, &bi| {
+            energy[a].partial_cmp(&energy[bi]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&bi))
+        });
+        let mut drop = vec![false; l];
+        let mut cum = 0.0f64;
+        let mut kept = l;
+        for &i in &order {
+            if kept == rank_min || cum + energy[i] > budget {
+                break;
+            }
+            cum += energy[i];
+            drop[i] = true;
+            kept -= 1;
+        }
+        if kept == l {
+            return false;
+        }
+        let mut q2 = Tensor::zeros(&[m, kept]);
+        let mut b2 = Tensor::zeros(&[kept, n]);
+        let keep: Vec<usize> = (0..l).filter(|i| !drop[*i]).collect();
+        for (jn, &jo) in keep.iter().enumerate() {
+            for r in 0..m {
+                q2.data[r * kept + jn] = q.data[r * l + jo];
+            }
+            b2.data[jn * n..(jn + 1) * n].copy_from_slice(&b.data[jo * n..(jo + 1) * n]);
+        }
+        *q = q2;
+        *b = b2;
+        true
+    }
+}
+
+impl MomentumCompressor for AdaRank {
+    fn id(&self) -> &'static str {
+        "adarank"
+    }
+
+    fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        let mut out = Vec::new();
+        for (k, (q, b)) in self.stores.iter().enumerate() {
+            let (_, qn, bn) = QB_NAMES[k];
+            out.push((qn, q));
+            out.push((bn, b));
+        }
+        out
+    }
+
+    fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        let mut out = Vec::new();
+        for (k, (q, b)) in self.stores.iter_mut().enumerate() {
+            let (_, qn, bn) = QB_NAMES[k];
+            out.push((qn, &mut *q));
+            out.push((bn, &mut *b));
+        }
+        out
+    }
+
+    fn flags_into(&self, meta: &mut Json) {
+        meta.set("rank_min", Json::num(self.rank_min as f64));
+        meta.set("shrinks", Json::num(self.shrinks as f64));
+    }
+
+    fn shrink_events(&self) -> usize {
+        self.shrinks
+    }
+
+    fn first_moment(&self) -> Option<Tensor> {
+        self.stores.first().map(|(q, b)| matmul(q, b))
+    }
+
+    fn second_moment(&self) -> Option<Tensor> {
+        self.stores.get(1).map(|(q, b)| matmul(q, b))
+    }
+
+    fn omega_graph_shapes(&self) -> Vec<[usize; 2]> {
+        self.stores.iter().map(|(q, b)| [b.shape[1], q.shape[1]]).collect()
+    }
+
+    fn step(
+        &mut self,
+        rule: &'static dyn UpdateRule,
+        hp: &OptHp,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let (_, n) = w.dims2()?;
+        // Same kernels and Omega schedule as RsvdQb at each moment's
+        // *current* rank, then the adaptation pass.
+        match (rule.kind(), &mut self.stores[..]) {
+            (RuleKind::AdamW, [(mq, mb), (vq, vb)]) => {
+                let om_m = rng.gaussian_tensor(&[n, mq.shape[1]], 1.0);
+                let om_v = rng.gaussian_tensor(&[n, vq.shape[1]], 1.0);
+                mlorc_adamw_core(w, g, mq, mb, vq, vb, t, lr, hp, &om_m, &om_v, ws);
+            }
+            (RuleKind::Lion, [(mq, mb)]) => {
+                let om = rng.gaussian_tensor(&[n, mq.shape[1]], 1.0);
+                mlorc_lion_core(w, g, mq, mb, lr, hp, &om, ws);
+            }
+            (RuleKind::SgdM, [(mq, mb)]) => {
+                let om = rng.gaussian_tensor(&[n, mq.shape[1]], 1.0);
+                mlorc_sgdm_core(w, g, mq, mb, lr, hp, &om, ws);
+            }
+            _ => bail!(
+                "no adaptive-rank kernel for rule '{}' with {} moment(s)",
+                rule.id(),
+                self.stores.len()
+            ),
+        }
+        let rank_min = self.rank_min;
+        let mut shrank = false;
+        for (q, b) in self.stores.iter_mut() {
+            shrank |= AdaRank::shrink_pair(q, b, rank_min);
+        }
+        if shrank {
+            self.shrinks += 1;
+        }
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn MomentumCompressor> {
+        Box::new(self.clone())
+    }
+}
+
 // ---------------------------------------------------------------- galore
 
 /// GaLore: moments live in a low-rank subspace spanned by a projector `p`
@@ -605,6 +824,11 @@ mod tests {
         let dense = Dense::new(rule(RuleKind::AdamW), &[6, 8]);
         let names: Vec<_> = dense.tensor_fields().iter().map(|(n, _)| *n).collect();
         assert_eq!(names, vec!["m", "v"]);
+        // adaptive rank reuses the factored slot names (shapes carry the
+        // live rank)
+        let ada = AdaRank::new(2, &[6, 8], 2, 1).unwrap();
+        let names: Vec<_> = ada.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["mq", "mb", "vq", "vb"]);
     }
 
     #[test]

@@ -26,11 +26,15 @@ mod hparams;
 mod ldadamw;
 mod lion;
 mod mlorc;
+pub mod quant;
 pub mod registry;
 pub mod rules;
 
 pub use adamw::AdamWState;
-pub use compress::{Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb};
+pub use compress::{
+    AdaRank, Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb,
+    ADARANK_TAIL_FRAC,
+};
 pub use galore::{galore_core, galore_lion_core, galore_refresh_projector, GaloreState};
 pub use hparams::OptHp;
 pub use ldadamw::{ldadamw_core, LdAdamWState};
@@ -41,6 +45,7 @@ pub use mlorc::{
     mlorc_lion_core, mlorc_m_core, mlorc_sgdm_core, mlorc_v_core, zeta_fix, MlorcAdamWState,
     MlorcLionState, MlorcMState, MlorcVState,
 };
+pub use quant::{QTensor, QuantQb, Q8_BLOCK};
 pub use registry::{CompKind, MatrixOpt, Method, MethodDesc, VariantDesc};
 pub use rules::{rule, sgdm_host_step, RuleKind, UpdateRule};
 

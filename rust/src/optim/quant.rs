@@ -1,0 +1,410 @@
+//! 8-bit blockwise quantization of MLorc's momentum factors.
+//!
+//! MLorc already cuts the momentum of an (m, n) matrix from O(m·n) to the
+//! rank-l factor pair Q (m, l) / B (l, n). [`QuantQb`] pushes that budget
+//! ~4x further ("Taming Momentum", arXiv:2602.24283): between steps each
+//! factor is held as symmetric int8 codes with one f32 absmax scale per
+//! [`Q8_BLOCK`]-element block, and the step dequantizes the factors into
+//! pooled scratch, runs the *same* fused reconstruct-apply kernels as
+//! [`RsvdQb`](super::compress::RsvdQb) (`mlorc_adamw_core`,
+//! `mlorc_lion_core`, `mlorc_sgdm_core`), and requantizes the fresh
+//! factors. Because the stored state *is* the quantized form, a
+//! checkpoint roundtrip of codes + scales resumes bit-identically — the
+//! property `tests/optim_matrix.rs` pins for every registered method.
+//!
+//! Quantization error is bounded per element by half a code step,
+//! `absmax(block) / 254`, verified as a property test in
+//! `tests/quant_adarank.rs`.
+
+// `step` threads the same 8-argument seam as every other compressor (see
+// compress.rs — it is the single dispatch surface of the optimizer
+// matrix).
+#![allow(clippy::too_many_arguments)]
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{matmul, Rng, Workspace};
+use crate::tensor::{Tensor, TensorU8};
+use crate::util::json::Json;
+
+use super::compress::MomentumCompressor;
+use super::rules::{RuleKind, UpdateRule};
+use super::{mlorc_adamw_core, mlorc_lion_core, mlorc_sgdm_core, OptHp};
+
+/// Elements per quantization block (one f32 absmax scale each). 64 keeps
+/// the scale overhead at 1/16th of the code bytes.
+pub const Q8_BLOCK: usize = 64;
+
+/// One blockwise-quantized f32 tensor: symmetric int8 codes (stored as
+/// raw bytes) plus one f32 scale per block of [`Q8_BLOCK`] consecutive
+/// row-major elements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    /// int8 codes in two's complement, same shape as the logical tensor.
+    pub codes: TensorU8,
+    /// per-block scales, shape `[ceil(len / block)]`.
+    pub scales: Tensor,
+    pub block: usize,
+}
+
+impl QTensor {
+    /// Quantize `t`: per block, `scale = absmax / 127`,
+    /// `code = round(x / scale)` clamped to ±127. An all-zero block gets
+    /// scale 0 and zero codes.
+    pub fn quantize(t: &Tensor, block: usize) -> QTensor {
+        assert!(block > 0, "quantization block must be positive");
+        let n = t.data.len();
+        let nblocks = n.div_ceil(block).max(1);
+        let mut q = QTensor {
+            codes: TensorU8 { shape: t.shape.clone(), data: vec![0u8; n] },
+            scales: Tensor { shape: vec![nblocks], data: vec![0f32; nblocks] },
+            block,
+        };
+        q.quantize_into(t);
+        q
+    }
+
+    /// Requantize `t` into this tensor's existing code/scale buffers
+    /// (same shape) — the steady-state path allocates nothing, matching
+    /// the repo's Workspace-pooled hot-path discipline.
+    pub fn quantize_into(&mut self, t: &Tensor) {
+        assert_eq!(t.shape, self.codes.shape, "quantize_into shape mismatch");
+        for (bi, chunk) in t.data.chunks(self.block).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            let base = bi * self.block;
+            if absmax == 0.0 {
+                self.scales.data[bi] = 0.0;
+                self.codes.data[base..base + chunk.len()].fill(0);
+                continue;
+            }
+            let scale = absmax / 127.0;
+            self.scales.data[bi] = scale;
+            let inv = 1.0 / scale;
+            for (j, &x) in chunk.iter().enumerate() {
+                let c = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                self.codes.data[base + j] = c as u8;
+            }
+        }
+    }
+
+    /// Rebuild from checkpoint fields; validates the scale count.
+    pub fn from_parts(codes: TensorU8, scales: Tensor, block: usize) -> Result<QTensor> {
+        if block == 0 {
+            bail!("quantization block must be positive");
+        }
+        let want = codes.len().div_ceil(block).max(1);
+        if scales.len() != want {
+            bail!(
+                "quantized tensor with {} codes at block {block} wants {want} scales, got {}",
+                codes.len(),
+                want,
+                scales.len()
+            );
+        }
+        Ok(QTensor { codes, scales, block })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.codes.shape
+    }
+
+    /// Dequantize into a pre-shaped tensor: `x = i8(code) * scale`.
+    pub fn dequantize_into(&self, out: &mut Tensor) {
+        assert_eq!(out.shape, self.codes.shape, "dequantize shape mismatch");
+        for (bi, chunk) in self.codes.data.chunks(self.block).enumerate() {
+            let scale = self.scales.data[bi];
+            let base = bi * self.block;
+            for (j, &c) in chunk.iter().enumerate() {
+                out.data[base + j] = (c as i8) as f32 * scale;
+            }
+        }
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        let mut out = Tensor::zeros(&self.codes.shape);
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// 1 byte per code + 4 per block scale — the Table 1/3 quantity.
+    pub fn size_bytes(&self) -> usize {
+        self.codes.size_bytes() + self.scales.size_bytes()
+    }
+}
+
+// --------------------------------------------------------------- quant_qb
+
+/// Checkpoint field names per moment slot:
+/// (q codes, q scales, b codes, b scales). Shared with the registry's
+/// variant decoder so encode and decode can never disagree.
+pub(crate) const Q8_NAMES: [(&str, &str, &str, &str); 2] =
+    [("mq_q8", "mq_sc", "mb_q8", "mb_sc"), ("vq_q8", "vq_sc", "vb_q8", "vb_sc")];
+
+/// One rule moment held as a quantized Q/B factor pair.
+#[derive(Debug, Clone)]
+pub struct QMoment {
+    pub q: QTensor,
+    pub b: QTensor,
+}
+
+/// MLorc's factored recompression with both factors of every moment
+/// blockwise-quantized to 8 bits between steps. Composes with any rule
+/// whose moments are linear EMAs through the same fused kernels as
+/// `RsvdQb`; the state layout (and so `state_bytes`) is ~1/4 of the f32
+/// factored one.
+#[derive(Debug, Clone)]
+pub struct QuantQb {
+    moments: Vec<QMoment>,
+    block: usize,
+}
+
+impl QuantQb {
+    pub fn new(n_moments: usize, shape: &[usize], l: usize) -> Result<QuantQb> {
+        if shape.len() != 2 {
+            bail!("q8 compression needs a 2-D parameter, got shape {shape:?}");
+        }
+        if n_moments > Q8_NAMES.len() {
+            bail!("q8 supports at most {} moments", Q8_NAMES.len());
+        }
+        let (m, n) = (shape[0], shape[1]);
+        let moments = (0..n_moments)
+            .map(|_| QMoment {
+                q: QTensor::quantize(&Tensor::zeros(&[m, l]), Q8_BLOCK),
+                b: QTensor::quantize(&Tensor::zeros(&[l, n]), Q8_BLOCK),
+            })
+            .collect();
+        Ok(QuantQb { moments, block: Q8_BLOCK })
+    }
+
+    pub fn from_moments(moments: Vec<QMoment>, block: usize) -> QuantQb {
+        QuantQb { moments, block }
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Dequantize one moment's factors into pooled scratch.
+    fn dequantized(&self, k: usize, ws: &mut Workspace) -> (Tensor, Tensor) {
+        let mm = &self.moments[k];
+        let mut q = ws.take_tensor(mm.q.shape());
+        let mut b = ws.take_tensor(mm.b.shape());
+        mm.q.dequantize_into(&mut q);
+        mm.b.dequantize_into(&mut b);
+        (q, b)
+    }
+
+    /// Requantize one moment from freshly updated factors, in place —
+    /// QuantQb's factor shapes are fixed, so the existing code/scale
+    /// buffers are reused (no per-step allocation).
+    fn requantize(&mut self, k: usize, q: &Tensor, b: &Tensor) {
+        self.moments[k].q.quantize_into(q);
+        self.moments[k].b.quantize_into(b);
+    }
+}
+
+impl MomentumCompressor for QuantQb {
+    fn id(&self) -> &'static str {
+        "quant_qb"
+    }
+
+    fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        let mut out = Vec::new();
+        for (k, mm) in self.moments.iter().enumerate() {
+            let (_, q_sc, _, b_sc) = Q8_NAMES[k];
+            out.push((q_sc, &mm.q.scales));
+            out.push((b_sc, &mm.b.scales));
+        }
+        out
+    }
+
+    fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        let mut out = Vec::new();
+        for (k, mm) in self.moments.iter_mut().enumerate() {
+            let (_, q_sc, _, b_sc) = Q8_NAMES[k];
+            out.push((q_sc, &mut mm.q.scales));
+            out.push((b_sc, &mut mm.b.scales));
+        }
+        out
+    }
+
+    fn u8_fields(&self) -> Vec<(&'static str, &TensorU8)> {
+        let mut out = Vec::new();
+        for (k, mm) in self.moments.iter().enumerate() {
+            let (q_q8, _, b_q8, _) = Q8_NAMES[k];
+            out.push((q_q8, &mm.q.codes));
+            out.push((b_q8, &mm.b.codes));
+        }
+        out
+    }
+
+    fn u8_fields_mut(&mut self) -> Vec<(&'static str, &mut TensorU8)> {
+        let mut out = Vec::new();
+        for (k, mm) in self.moments.iter_mut().enumerate() {
+            let (q_q8, _, b_q8, _) = Q8_NAMES[k];
+            out.push((q_q8, &mut mm.q.codes));
+            out.push((b_q8, &mut mm.b.codes));
+        }
+        out
+    }
+
+    fn flags_into(&self, meta: &mut Json) {
+        meta.set("q8_block", Json::num(self.block as f64));
+    }
+
+    fn first_moment(&self) -> Option<Tensor> {
+        let mm = self.moments.first()?;
+        Some(matmul(&mm.q.dequantize(), &mm.b.dequantize()))
+    }
+
+    fn second_moment(&self) -> Option<Tensor> {
+        let mm = self.moments.get(1)?;
+        Some(matmul(&mm.q.dequantize(), &mm.b.dequantize()))
+    }
+
+    fn omega_graph_shapes(&self) -> Vec<[usize; 2]> {
+        self.moments
+            .iter()
+            .map(|mm| [mm.b.shape()[1], mm.q.shape()[1]])
+            .collect()
+    }
+
+    fn step(
+        &mut self,
+        rule: &'static dyn UpdateRule,
+        hp: &OptHp,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let (_, n) = w.dims2()?;
+        // Same Omega draw schedule as RsvdQb: one [n, l] draw per moment,
+        // in moment order, right before the kernel.
+        match (rule.kind(), self.moments.len()) {
+            (RuleKind::AdamW, 2) => {
+                let (mut mq, mut mb) = self.dequantized(0, ws);
+                let (mut vq, mut vb) = self.dequantized(1, ws);
+                let l_m = mq.shape[1];
+                let l_v = vq.shape[1];
+                let om_m = rng.gaussian_tensor(&[n, l_m], 1.0);
+                let om_v = rng.gaussian_tensor(&[n, l_v], 1.0);
+                mlorc_adamw_core(
+                    w, g, &mut mq, &mut mb, &mut vq, &mut vb, t, lr, hp, &om_m, &om_v, ws,
+                );
+                self.requantize(0, &mq, &mb);
+                self.requantize(1, &vq, &vb);
+                for buf in [mq, mb, vq, vb] {
+                    ws.give_tensor(buf);
+                }
+            }
+            (RuleKind::Lion, 1) => {
+                let (mut mq, mut mb) = self.dequantized(0, ws);
+                let om = rng.gaussian_tensor(&[n, mq.shape[1]], 1.0);
+                mlorc_lion_core(w, g, &mut mq, &mut mb, lr, hp, &om, ws);
+                self.requantize(0, &mq, &mb);
+                ws.give_tensor(mq);
+                ws.give_tensor(mb);
+            }
+            (RuleKind::SgdM, 1) => {
+                let (mut mq, mut mb) = self.dequantized(0, ws);
+                let om = rng.gaussian_tensor(&[n, mq.shape[1]], 1.0);
+                mlorc_sgdm_core(w, g, &mut mq, &mut mb, lr, hp, &om, ws);
+                self.requantize(0, &mq, &mb);
+                ws.give_tensor(mq);
+                ws.give_tensor(mb);
+            }
+            _ => bail!(
+                "no quantized kernel for rule '{}' with {} q8 moment(s)",
+                rule.id(),
+                self.moments.len()
+            ),
+        }
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn MomentumCompressor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::rules::rule;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut rng = Rng::new(11);
+        let t = rng.gaussian_tensor(&[13, 17], 2.0);
+        let q = QTensor::quantize(&t, Q8_BLOCK);
+        let back = q.dequantize();
+        for (bi, chunk) in t.data.chunks(Q8_BLOCK).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            for (j, &x) in chunk.iter().enumerate() {
+                let err = (x - back.data[bi * Q8_BLOCK + j]).abs();
+                assert!(err <= absmax / 253.0, "block {bi} elem {j}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_blocks_stay_zero() {
+        let t = Tensor::zeros(&[4, 40]);
+        let q = QTensor::quantize(&t, Q8_BLOCK);
+        assert!(q.scales.data.iter().all(|s| *s == 0.0));
+        assert_eq!(q.dequantize().data, t.data);
+    }
+
+    #[test]
+    fn quantize_into_resets_stale_state() {
+        // The in-place hot path must fully overwrite the previous step's
+        // codes and scales — including blocks that became all-zero.
+        let mut rng = Rng::new(21);
+        let a = rng.gaussian_tensor(&[3, 50], 1.0);
+        let b = rng.gaussian_tensor(&[3, 50], 0.3);
+        let mut q = QTensor::quantize(&a, Q8_BLOCK);
+        q.quantize_into(&b);
+        let fresh = QTensor::quantize(&b, Q8_BLOCK);
+        assert_eq!(q, fresh, "in-place requantize must equal a fresh quantize");
+        q.quantize_into(&Tensor::zeros(&[3, 50]));
+        assert!(q.scales.data.iter().all(|s| *s == 0.0));
+        assert!(q.codes.data.iter().all(|c| *c == 0));
+    }
+
+    #[test]
+    fn state_bytes_quarter_of_f32_factors() {
+        let q8 = QuantQb::new(2, &[512, 128], 4).unwrap();
+        let f32_bytes = 2 * 4 * (512 + 128) * 4; // RsvdQb: 2 moments of r(m+n) floats
+        let got = q8.state_bytes();
+        assert!(
+            got < f32_bytes / 3,
+            "q8 state {got}B vs f32 factored {f32_bytes}B"
+        );
+    }
+
+    #[test]
+    fn field_names_are_stable() {
+        let q8 = QuantQb::new(2, &[6, 8], 2).unwrap();
+        let names: Vec<_> = q8.tensor_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["mq_sc", "mb_sc", "vq_sc", "vb_sc"]);
+        let names: Vec<_> = q8.u8_fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["mq_q8", "mb_q8", "vq_q8", "vb_q8"]);
+    }
+
+    #[test]
+    fn unsupported_combo_fails_loudly() {
+        let hp = OptHp::lion();
+        let mut rng = Rng::new(0);
+        let mut w = rng.gaussian_tensor(&[6, 8], 1.0);
+        let g = rng.gaussian_tensor(&[6, 8], 1.0);
+        let mut ws = Workspace::new();
+        let mut q8 = QuantQb::new(2, &[6, 8], 2).unwrap();
+        let err = q8
+            .step(rule(RuleKind::Lion), &hp, &mut w, &g, 1e-2, 1, &mut rng, &mut ws)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("lion"), "{err:#}");
+    }
+}

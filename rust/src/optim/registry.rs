@@ -25,12 +25,13 @@ use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorU8};
 use crate::util::json::Json;
 
 use super::compress::{
-    Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb,
+    AdaRank, Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb,
 };
+use super::quant::{QMoment, QTensor, QuantQb, Q8_BLOCK, Q8_NAMES};
 use super::rules::{self, RuleKind, UpdateRule};
 use super::OptHp;
 
@@ -42,6 +43,11 @@ use super::OptHp;
 pub enum CompKind {
     Dense,
     RsvdQb { factored: &'static [bool] },
+    /// RsvdQb with an online per-parameter rank schedule (all moments
+    /// factored; rank only shrinks, floored at `--rank-min`).
+    AdaRank,
+    /// RsvdQb with 8-bit blockwise-quantized factors (all moments).
+    QuantQb,
     Galore,
     LdProj,
 }
@@ -91,6 +97,30 @@ pub static VARIANTS: &[VariantDesc] = &[
         comp: CompKind::RsvdQb { factored: &[true] },
         hp: OptHp::sgdm,
     },
+    VariantDesc {
+        id: "mlorc_adarank",
+        rule: RuleKind::AdamW,
+        comp: CompKind::AdaRank,
+        hp: OptHp::mlorc_adamw,
+    },
+    VariantDesc {
+        id: "mlorc_adarank_lion",
+        rule: RuleKind::Lion,
+        comp: CompKind::AdaRank,
+        hp: OptHp::lion,
+    },
+    VariantDesc {
+        id: "mlorc_q8",
+        rule: RuleKind::AdamW,
+        comp: CompKind::QuantQb,
+        hp: OptHp::mlorc_adamw,
+    },
+    VariantDesc {
+        id: "mlorc_q8_lion",
+        rule: RuleKind::Lion,
+        comp: CompKind::QuantQb,
+        hp: OptHp::lion,
+    },
     VariantDesc { id: "galore", rule: RuleKind::AdamW, comp: CompKind::Galore, hp: OptHp::adamw },
     VariantDesc {
         id: "galore_lion",
@@ -119,8 +149,20 @@ impl VariantDesc {
     }
 
     /// Fresh zero state for a parameter of `shape`; `l` is the sketch /
-    /// projector rank.
+    /// projector rank. Adaptive-rank layouts floor at rank 1 here — use
+    /// [`VariantDesc::build_opts`] to set `--rank-min`.
     pub fn build(&'static self, shape: &[usize], l: usize) -> Result<MatrixOpt> {
+        self.build_opts(shape, l, 1)
+    }
+
+    /// [`VariantDesc::build`] with the adaptive-rank floor given
+    /// explicitly (ignored by fixed-rank layouts).
+    pub fn build_opts(
+        &'static self,
+        shape: &[usize],
+        l: usize,
+        rank_min: usize,
+    ) -> Result<MatrixOpt> {
         let rule = self.rule();
         let comp: Box<dyn MomentumCompressor> = match self.comp {
             CompKind::Dense => Box::new(Dense::new(rule, shape)),
@@ -135,19 +177,23 @@ impl VariantDesc {
                 }
                 Box::new(RsvdQb::new(factored, shape, l)?)
             }
+            CompKind::AdaRank => Box::new(AdaRank::new(rule.n_moments(), shape, l, rank_min)?),
+            CompKind::QuantQb => Box::new(QuantQb::new(rule.n_moments(), shape, l)?),
             CompKind::Galore => Box::new(GaloreProjector::new(rule.n_moments(), shape, l)?),
             CompKind::LdProj => Box::new(LdProj::new(shape, l)?),
         };
         Ok(MatrixOpt { variant: self, comp })
     }
 
-    /// Rebuild state from checkpoint metadata plus a tensor lookup
-    /// (`take(field)` yields the stored `<param>/<field>` tensor). The
-    /// inverse of `MatrixOpt::{tensor_fields, ckpt_meta_into}`.
+    /// Rebuild state from checkpoint metadata plus tensor lookups
+    /// (`take(field)` yields the stored `<param>/<field>` f32 tensor,
+    /// `take_u8` its u8 counterpart for quantized layouts). The inverse
+    /// of `MatrixOpt::{tensor_fields, u8_fields, ckpt_meta_into}`.
     pub fn decode(
         &'static self,
         meta: &Json,
         take: &mut dyn FnMut(&'static str) -> Result<Tensor>,
+        take_u8: &mut dyn FnMut(&'static str) -> Result<TensorU8>,
     ) -> Result<MatrixOpt> {
         let rule = self.rule();
         let comp: Box<dyn MomentumCompressor> = match self.comp {
@@ -169,6 +215,34 @@ impl VariantDesc {
                     });
                 }
                 Box::new(RsvdQb::from_stores(stores))
+            }
+            CompKind::AdaRank => {
+                let mut stores = Vec::with_capacity(rule.n_moments());
+                for k in 0..rule.n_moments() {
+                    let (_, qn, bn) = super::compress::QB_NAMES[k];
+                    // shapes carry the current (possibly shrunken) rank
+                    stores.push((take(qn)?, take(bn)?));
+                }
+                Box::new(AdaRank::from_parts(
+                    stores,
+                    meta.req("rank_min")?.as_usize()?,
+                    meta.req("shrinks")?.as_usize()?,
+                ))
+            }
+            CompKind::QuantQb => {
+                let block = match meta.get("q8_block") {
+                    Some(v) => v.as_usize()?,
+                    None => Q8_BLOCK,
+                };
+                let mut moments = Vec::with_capacity(rule.n_moments());
+                for k in 0..rule.n_moments() {
+                    let (q_q8, q_sc, b_q8, b_sc) = Q8_NAMES[k];
+                    moments.push(QMoment {
+                        q: QTensor::from_parts(take_u8(q_q8)?, take(q_sc)?, block)?,
+                        b: QTensor::from_parts(take_u8(b_q8)?, take(b_sc)?, block)?,
+                    });
+                }
+                Box::new(QuantQb::from_moments(moments, block))
             }
             CompKind::Galore => {
                 let p = take("p")?;
@@ -194,9 +268,12 @@ impl VariantDesc {
         Ok(MatrixOpt { variant: self, comp })
     }
 
-    /// Optimizer-state float count for one (m, n) matrix at rank `r` —
-    /// the closed-form Table 1 column, derived from the layout instead of
-    /// hand-written per method.
+    /// Optimizer-state *element* count for one (m, n) matrix at rank `r`
+    /// — the closed-form Table 1 column, derived from the layout instead
+    /// of hand-written per method. For quantized layouts the elements are
+    /// codes, not floats — use [`VariantDesc::state_bytes`] for memory;
+    /// for adaptive-rank layouts this is the upper bound at the initial
+    /// rank (the live rank only shrinks).
     pub fn state_floats(&self, m: usize, n: usize, r: usize) -> usize {
         let nm = self.n_moments();
         match self.comp {
@@ -205,10 +282,28 @@ impl VariantDesc {
                 .iter()
                 .map(|&f| if f { r * (m + n) } else { m * n })
                 .sum(),
+            // every moment factored (rank shrinks at runtime) / quantized
+            CompKind::AdaRank | CompKind::QuantQb => nm * r * (m + n),
             // projector on the short side + nm low-dim moments
             CompKind::Galore => m.min(n) * r + nm * m.max(n) * r,
             // like galore, plus the full-size error-feedback buffer
             CompKind::LdProj => m.min(n) * r + nm * m.max(n) * r + m * n,
+        }
+    }
+
+    /// Optimizer-state footprint in *bytes* for one (m, n) matrix at rank
+    /// `r` — 4x [`VariantDesc::state_floats`] for f32 layouts; quantized
+    /// layouts pay 1 byte per code plus one f32 scale per
+    /// [`Q8_BLOCK`]-element block of each factor.
+    pub fn state_bytes(&self, m: usize, n: usize, r: usize) -> usize {
+        match self.comp {
+            CompKind::QuantQb => {
+                let (q_elems, b_elems) = (m * r, r * n);
+                let scales =
+                    q_elems.div_ceil(Q8_BLOCK).max(1) + b_elems.div_ceil(Q8_BLOCK).max(1);
+                self.n_moments() * (q_elems + b_elems + 4 * scales)
+            }
+            _ => 4 * self.state_floats(m, n, r),
         }
     }
 }
@@ -409,6 +504,46 @@ pub const GALORE_LION: MethodDesc = MethodDesc {
     graphed: false,
     default_lr: 2e-4,
 };
+// The second wave of compressors the trait seam was built for: an
+// adaptive-rank RsvdQb (rank shrinks online from the retained spectral
+// energy of B) and 8-bit blockwise-quantized factors — each composed
+// with both AdamW and Lion in one line here.
+pub const MLORC_ADARANK: MethodDesc = MethodDesc {
+    id: "mlorc_adarank",
+    aliases: &["adarank"],
+    matrix: "mlorc_adarank",
+    plain: "adamw",
+    lora: false,
+    graphed: false,
+    default_lr: 7e-4,
+};
+pub const MLORC_ADARANK_LION: MethodDesc = MethodDesc {
+    id: "mlorc_adarank_lion",
+    aliases: &[],
+    matrix: "mlorc_adarank_lion",
+    plain: "lion",
+    lora: false,
+    graphed: false,
+    default_lr: 5e-5,
+};
+pub const MLORC_Q8: MethodDesc = MethodDesc {
+    id: "mlorc_q8",
+    aliases: &["q8"],
+    matrix: "mlorc_q8",
+    plain: "adamw",
+    lora: false,
+    graphed: false,
+    default_lr: 7e-4,
+};
+pub const MLORC_Q8_LION: MethodDesc = MethodDesc {
+    id: "mlorc_q8_lion",
+    aliases: &[],
+    matrix: "mlorc_q8_lion",
+    plain: "lion",
+    lora: false,
+    graphed: false,
+    default_lr: 5e-5,
+};
 
 /// Every registered method, pre-existing ids first (table/report order).
 pub static METHODS: &[&MethodDesc] = &[
@@ -425,6 +560,10 @@ pub static METHODS: &[&MethodDesc] = &[
     &FULL_SGDM,
     &MLORC_SGDM,
     &GALORE_LION,
+    &MLORC_ADARANK,
+    &MLORC_ADARANK_LION,
+    &MLORC_Q8,
+    &MLORC_Q8_LION,
 ];
 
 /// Optimization method handle — compares, hashes and prints by id, so
@@ -469,6 +608,8 @@ impl Method {
     pub const Galore: Method = Method(&GALORE);
     pub const GaloreLion: Method = Method(&GALORE_LION);
     pub const LdAdamW: Method = Method(&LDADAMW);
+    pub const MlorcAdaRank: Method = Method(&MLORC_ADARANK);
+    pub const MlorcQ8: Method = Method(&MLORC_Q8);
 
     pub fn name(&self) -> &'static str {
         self.0.id
@@ -546,6 +687,14 @@ mod tests {
         assert_eq!(Method::parse("adamw").unwrap(), Method::FullAdamW);
         assert_eq!(Method::parse("mlorc_sgdm").unwrap(), Method::MlorcSgdM);
         assert_eq!(Method::parse("galore_lion").unwrap(), Method::GaloreLion);
+        // PR 5 registrations: adaptive-rank + quantized compressors, each
+        // composed with AdamW and Lion.
+        assert_eq!(Method::parse("mlorc_adarank").unwrap(), Method::MlorcAdaRank);
+        assert_eq!(Method::parse("adarank").unwrap(), Method::MlorcAdaRank);
+        assert_eq!(Method::parse("mlorc_q8").unwrap(), Method::MlorcQ8);
+        assert_eq!(Method::parse("q8").unwrap(), Method::MlorcQ8);
+        assert!(Method::parse("mlorc_adarank_lion").is_ok());
+        assert!(Method::parse("mlorc_q8_lion").is_ok());
     }
 
     #[test]
@@ -584,6 +733,20 @@ mod tests {
         assert_eq!(
             variant("ldadamw").unwrap().state_floats(m, n, r),
             m * r + 2 * n * r + m * n
+        );
+        // new layouts: adaptive rank counts its initial-rank upper bound,
+        // quantized counts codes (so bytes, not 4x elements)
+        assert_eq!(
+            variant("mlorc_adarank").unwrap().state_floats(m, n, r),
+            2 * r * (m + n)
+        );
+        assert_eq!(variant("mlorc_q8").unwrap().state_floats(m, n, r), 2 * r * (m + n));
+        let q8_bytes = variant("mlorc_q8").unwrap().state_bytes(m, n, r);
+        assert!(q8_bytes < 4 * 2 * r * (m + n) / 3, "q8 bytes {q8_bytes}");
+        // f32 layouts: bytes are exactly 4x the element count
+        assert_eq!(
+            variant("mlorc_adamw").unwrap().state_bytes(m, n, r),
+            4 * 2 * r * (m + n)
         );
     }
 }

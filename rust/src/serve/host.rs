@@ -76,6 +76,32 @@ pub fn host_preset_names() -> Vec<&'static str> {
     vec!["host-nano", "host-tiny", "host-small"]
 }
 
+/// Analytic momentum-state bytes of a (host preset × method) job,
+/// derived from the registered variant layouts
+/// (`VariantDesc::state_bytes`, which knows the quantized layouts'
+/// 1-byte codes). `None` for non-host presets. This is what `mlorc
+/// status` reports for jobs that have not produced a live measurement
+/// yet, so the memory-savings story is observable straight from the
+/// queue.
+pub fn preset_momentum_bytes(preset: &str, method: crate::config::Method) -> Option<usize> {
+    use crate::optim::registry;
+    let hp = host_preset(preset).ok()?;
+    let desc = method.desc();
+    let matrix = registry::variant(desc.matrix).ok()?;
+    let plain = registry::variant(desc.plain).ok()?;
+    let mut bytes = 0usize;
+    for shape in hp.shapes {
+        match shape {
+            [m, n] => bytes += matrix.state_bytes(*m, *n, hp.l),
+            other => {
+                let numel: usize = other.iter().product();
+                bytes += 4 * plain.n_moments() * numel;
+            }
+        }
+    }
+    Some(bytes)
+}
+
 /// A self-contained host-side trainer: same step/checkpoint/resume
 /// surface as `coordinator::Trainer`, no runtime or artifacts.
 pub struct HostTrainer {
@@ -127,7 +153,7 @@ impl HostTrainer {
         let states = params
             .specs
             .iter()
-            .map(|s| OptState::for_param_with_l(cfg.method, s, hp.l))
+            .map(|s| OptState::for_param_cfg(cfg.method, s, hp.l, cfg.rank_min))
             .collect::<Result<Vec<_>>>()?;
         let omega_streams: Vec<Rng> =
             (0..params.len()).map(|i| rng_omega.split(i as u64 + 1)).collect();
@@ -170,6 +196,12 @@ impl HostTrainer {
     /// field-by-field through this.
     pub fn opt_states(&self) -> &[OptState] {
         &self.states
+    }
+
+    /// Total adaptive-rank shrink events across all parameters (0 for
+    /// fixed-rank layouts) — surfaced by `mlorc status`.
+    pub fn shrink_events(&self) -> usize {
+        self.states.iter().map(|s| s.shrink_events()).sum()
     }
 
     /// One synthetic training step; returns the mean per-parameter loss.

@@ -21,7 +21,7 @@ pub mod queue;
 pub mod scheduler;
 pub mod status;
 
-pub use host::{host_preset_names, HostTrainer};
+pub use host::{host_preset_names, preset_momentum_bytes, HostTrainer};
 pub use queue::{Engine, JobSpec, Spool, LIFECYCLE_DIRS};
 pub use scheduler::{serve, ServeOpts, ServeSummary, CRASH_EXIT_CODE};
 pub use status::{aggregate, render_table, JobStatus};

@@ -162,6 +162,8 @@ trait ServeEngine {
     fn save(&self, root: &Path) -> Result<()>;
     fn resume(&mut self, root: &Path) -> Result<usize>;
     fn opt_state_bytes(&self) -> usize;
+    /// Adaptive-rank shrink events so far (0 for fixed-rank layouts).
+    fn shrink_events(&self) -> usize;
 }
 
 impl ServeEngine for HostTrainer {
@@ -180,6 +182,9 @@ impl ServeEngine for HostTrainer {
     fn opt_state_bytes(&self) -> usize {
         HostTrainer::opt_state_bytes(self)
     }
+    fn shrink_events(&self) -> usize {
+        HostTrainer::shrink_events(self)
+    }
 }
 
 impl ServeEngine for Trainer<'_> {
@@ -197,6 +202,9 @@ impl ServeEngine for Trainer<'_> {
     }
     fn opt_state_bytes(&self) -> usize {
         self.memory_measured().opt_state_bytes
+    }
+    fn shrink_events(&self) -> usize {
+        Trainer::opt_shrink_events(self)
     }
 }
 
@@ -245,6 +253,7 @@ fn drive(
     }
     let mut status = JobStatus::from_spec(spec, "running");
     status.opt_state_bytes = tr.opt_state_bytes();
+    status.rank_shrink_events = tr.shrink_events();
     status.step = tr.step_count();
     let _ = status.write(spool);
 
@@ -258,6 +267,9 @@ fn drive(
             note_checkpoint(opts, ckpts, &spec.id);
             status.step = s;
             status.loss = last_loss;
+            // adaptive-rank layouts shrink their state over the run
+            status.opt_state_bytes = tr.opt_state_bytes();
+            status.rank_shrink_events = tr.shrink_events();
             status.wall_secs = t0.elapsed().as_secs_f64();
             let _ = status.write(spool);
         }
@@ -267,6 +279,8 @@ fn drive(
     status.state = "done".to_string();
     status.step = tr.step_count();
     status.loss = last_loss;
+    status.opt_state_bytes = tr.opt_state_bytes();
+    status.rank_shrink_events = tr.shrink_events();
     status.wall_secs = t0.elapsed().as_secs_f64();
     Ok(status)
 }

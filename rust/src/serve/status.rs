@@ -27,7 +27,15 @@ pub struct JobStatus {
     pub engine: String,
     /// Optimizer-state bytes — what each cadence checkpoint pays on top
     /// of the parameters (small for MLorc: rank-l momentum factors).
+    /// 0 until a worker measures the live states.
     pub opt_state_bytes: usize,
+    /// Analytic momentum-state bytes from the registered variant layouts
+    /// (`VariantDesc::state_bytes`, quantized layouts included) — known
+    /// at submit time, so queued jobs report their memory budget too.
+    pub momentum_state_bytes: usize,
+    /// Adaptive-rank shrink events across the job's parameters (0 for
+    /// fixed-rank layouts).
+    pub rank_shrink_events: usize,
     pub wall_secs: f64,
     pub error: Option<String>,
 }
@@ -45,6 +53,12 @@ impl JobStatus {
             task: spec.cfg.task.name(),
             engine: spec.engine.name().to_string(),
             opt_state_bytes: 0,
+            momentum_state_bytes: super::host::preset_momentum_bytes(
+                &spec.cfg.preset,
+                spec.cfg.method,
+            )
+            .unwrap_or(0),
+            rank_shrink_events: 0,
             wall_secs: 0.0,
             error: None,
         }
@@ -68,6 +82,8 @@ impl JobStatus {
             ("task", Json::str(self.task.clone())),
             ("engine", Json::str(self.engine.clone())),
             ("opt_state_bytes", Json::num(self.opt_state_bytes as f64)),
+            ("momentum_state_bytes", Json::num(self.momentum_state_bytes as f64)),
+            ("rank_shrink_events", Json::num(self.rank_shrink_events as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
             (
                 "error",
@@ -94,6 +110,15 @@ impl JobStatus {
             task: j.req("task")?.as_str()?.to_string(),
             engine: j.req("engine")?.as_str()?.to_string(),
             opt_state_bytes: j.req("opt_state_bytes")?.as_usize()?,
+            // optional: status files written before these fields existed
+            momentum_state_bytes: match j.get("momentum_state_bytes") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
+            rank_shrink_events: match j.get("rank_shrink_events") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
             wall_secs: j.req("wall_secs")?.as_f64()?,
             error: match j.req("error")? {
                 Json::Null => None,
@@ -147,6 +172,8 @@ pub fn aggregate(spool: &Spool) -> Result<Vec<JobStatus>> {
                             task: String::new(),
                             engine: String::new(),
                             opt_state_bytes: 0,
+                            momentum_state_bytes: 0,
+                            rank_shrink_events: 0,
                             wall_secs: 0.0,
                             error: None,
                         };
@@ -174,8 +201,12 @@ pub fn render_table(rows: &[JobStatus]) -> String {
     );
     for r in rows {
         let loss = r.loss.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".to_string());
+        // live measurement once a worker ran; analytic layout estimate
+        // ("~") before that, so queued jobs still show their budget
         let opt = if r.opt_state_bytes > 0 {
             format!("{:.1}KB", r.opt_state_bytes as f64 / 1e3)
+        } else if r.momentum_state_bytes > 0 {
+            format!("~{:.1}KB", r.momentum_state_bytes as f64 / 1e3)
         } else {
             "-".to_string()
         };

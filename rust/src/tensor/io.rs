@@ -7,10 +7,14 @@
 //! u32    n_entries
 //! per entry:
 //!   u32  name_len, name bytes (utf-8)
-//!   u8   dtype (0 = f32, 1 = i32)
+//!   u8   dtype (0 = f32, 1 = i32, 2 = u8)
 //!   u32  rank, u64 dims[rank]
-//!   raw  data (dims product * 4 bytes)
+//!   raw  data (dims product * dtype size bytes)
 //! ```
+//!
+//! dtype 2 (u8) carries the 8-bit quantized optimizer-state codes of
+//! checkpoint v2 (`docs/checkpoint-v2.md`); readers predating it reject
+//! the entry's dtype byte loudly instead of misparsing the stream.
 //!
 //! No compression — checkpoints are local scratch, and `write_atomic`
 //! protects against torn files.
@@ -21,31 +25,77 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::Tensor;
+use super::{Tensor, TensorU8};
 use crate::util::fsutil;
 
 const MAGIC: &[u8; 8] = b"RTEN1\0\0\0";
 
-pub fn write_rten(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+/// One stored tensor — f32 (parameters, moments, scales) or raw u8
+/// (quantized codes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RtenEntry {
+    F32(Tensor),
+    U8(TensorU8),
+}
+
+impl RtenEntry {
+    fn dtype(&self) -> u8 {
+        match self {
+            RtenEntry::F32(_) => 0,
+            RtenEntry::U8(_) => 2,
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            RtenEntry::F32(t) => &t.shape,
+            RtenEntry::U8(t) => &t.shape,
+        }
+    }
+}
+
+/// Serialize one entry header + payload; shared by both writers so the
+/// all-f32 path never has to materialize an owned `RtenEntry` map.
+fn write_entry(
+    buf: &mut Vec<u8>,
+    name: &str,
+    dtype: u8,
+    shape: &[usize],
+    payload: &mut dyn FnMut(&mut Vec<u8>) -> Result<()>,
+) -> Result<()> {
+    buf.write_all(&(name.len() as u32).to_le_bytes())?;
+    buf.write_all(name.as_bytes())?;
+    buf.push(dtype);
+    buf.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for d in shape {
+        buf.write_all(&(*d as u64).to_le_bytes())?;
+    }
+    payload(buf)
+}
+
+/// Write a mixed f32/u8 tensor map.
+pub fn write_rten_entries(path: &Path, entries: &BTreeMap<String, RtenEntry>) -> Result<()> {
     let mut buf: Vec<u8> = Vec::new();
     buf.write_all(MAGIC)?;
-    buf.write_all(&(tensors.len() as u32).to_le_bytes())?;
-    for (name, t) in tensors {
-        buf.write_all(&(name.len() as u32).to_le_bytes())?;
-        buf.write_all(name.as_bytes())?;
-        buf.push(0u8); // dtype f32
-        buf.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-        for d in &t.shape {
-            buf.write_all(&(*d as u64).to_le_bytes())?;
-        }
-        for x in &t.data {
-            buf.write_all(&x.to_le_bytes())?;
-        }
+    buf.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, e) in entries {
+        write_entry(&mut buf, name, e.dtype(), e.shape(), &mut |buf| {
+            match e {
+                RtenEntry::F32(t) => {
+                    for x in &t.data {
+                        buf.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                RtenEntry::U8(t) => buf.write_all(&t.data)?,
+            }
+            Ok(())
+        })?;
     }
     fsutil::write_atomic(path, &buf)
 }
 
-pub fn read_rten(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+/// Read a mixed f32/u8 tensor map.
+pub fn read_rten_entries(path: &Path) -> Result<BTreeMap<String, RtenEntry>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     let mut cur = Cursor::new(bytes.as_slice());
     let mut magic = [0u8; 8];
@@ -62,9 +112,6 @@ pub fn read_rten(path: &Path) -> Result<BTreeMap<String, Tensor>> {
         let name = String::from_utf8(name).context("tensor name is not utf-8")?;
         let mut dtype = [0u8; 1];
         cur.read_exact(&mut dtype)?;
-        if dtype[0] != 0 {
-            bail!("unsupported dtype {} for '{name}'", dtype[0]);
-        }
         let rank = read_u32(&mut cur)? as usize;
         if rank > 8 {
             bail!("implausible rank {rank} for '{name}'");
@@ -76,13 +123,59 @@ pub fn read_rten(path: &Path) -> Result<BTreeMap<String, Tensor>> {
             shape.push(u64::from_le_bytes(d) as usize);
         }
         let count: usize = shape.iter().product();
-        let mut data = vec![0f32; count];
-        for x in data.iter_mut() {
-            let mut b = [0u8; 4];
-            cur.read_exact(&mut b)?;
-            *x = f32::from_le_bytes(b);
+        let entry = match dtype[0] {
+            0 => {
+                let mut data = vec![0f32; count];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 4];
+                    cur.read_exact(&mut b)?;
+                    *x = f32::from_le_bytes(b);
+                }
+                RtenEntry::F32(Tensor { shape, data })
+            }
+            2 => {
+                let mut data = vec![0u8; count];
+                cur.read_exact(&mut data)?;
+                RtenEntry::U8(TensorU8 { shape, data })
+            }
+            other => bail!("unsupported dtype {other} for '{name}'"),
+        };
+        out.insert(name, entry);
+    }
+    Ok(out)
+}
+
+/// All-f32 convenience writer (parameters, v1 checkpoints) —
+/// serializes straight from the borrowed map, no owned copy.
+pub fn write_rten(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.write_all(MAGIC)?;
+    buf.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        write_entry(&mut buf, name, 0, &t.shape, &mut |buf| {
+            for x in &t.data {
+                buf.write_all(&x.to_le_bytes())?;
+            }
+            Ok(())
+        })?;
+    }
+    fsutil::write_atomic(path, &buf)
+}
+
+/// All-f32 convenience reader — errors if the file holds a u8 entry.
+pub fn read_rten(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut out = BTreeMap::new();
+    for (name, e) in read_rten_entries(path)? {
+        match e {
+            RtenEntry::F32(t) => {
+                out.insert(name, t);
+            }
+            RtenEntry::U8(_) => bail!(
+                "'{name}' in {} is a u8 tensor; this reader only handles f32 maps \
+                 (use read_rten_entries)",
+                path.display()
+            ),
         }
-        out.insert(name, Tensor { shape, data });
     }
     Ok(out)
 }
@@ -107,6 +200,26 @@ mod tests {
         write_rten(&path, &m).unwrap();
         let back = read_rten(&path).unwrap();
         assert_eq!(back, m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mixed_u8_roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "w/mq_sc".to_string(),
+            RtenEntry::F32(Tensor::new(vec![2], vec![0.5, 0.25]).unwrap()),
+        );
+        m.insert(
+            "w/mq_q8".to_string(),
+            RtenEntry::U8(TensorU8::new(vec![2, 3], vec![0, 127, 255, 1, 2, 3]).unwrap()),
+        );
+        let path = std::env::temp_dir().join(format!("rten_u8_{}.bin", std::process::id()));
+        write_rten_entries(&path, &m).unwrap();
+        let back = read_rten_entries(&path).unwrap();
+        assert_eq!(back, m);
+        // the all-f32 reader refuses the u8 entry instead of misreading it
+        assert!(read_rten(&path).is_err());
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -4,5 +4,5 @@
 mod io;
 mod tensor;
 
-pub use io::{read_rten, write_rten};
-pub use tensor::{Tensor, TensorI32};
+pub use io::{read_rten, read_rten_entries, write_rten, write_rten_entries, RtenEntry};
+pub use tensor::{Tensor, TensorI32, TensorU8};

@@ -18,6 +18,42 @@ pub struct TensorI32 {
     pub data: Vec<i32>,
 }
 
+/// Raw byte tensor — the storage type of 8-bit quantized optimizer state
+/// (`optim::quant`). Carries no scale information itself; quantization
+/// metadata lives with the owner (`QTensor`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorU8 {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl TensorU8 {
+    pub fn new(shape: Vec<usize>, data: Vec<u8>) -> Result<TensorU8> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(TensorU8 { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> TensorU8 {
+        TensorU8 { shape: shape.to_vec(), data: vec![0u8; shape.iter().product()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// One byte per element.
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();

@@ -209,6 +209,17 @@ fn mat_spec(m: usize, n: usize) -> ParamSpec {
     ParamSpec { name: "w".into(), shape: vec![m, n], kind: "matrix".into(), compressed: true }
 }
 
+/// Registration assertions: the PR-5 compressors are in `Method::all()`,
+/// so the combo-matrix + kill/resume coverage below picks them up with no
+/// further edits to this file.
+#[test]
+fn adaptive_and_quantized_compressors_are_registered() {
+    for id in ["mlorc_adarank", "mlorc_adarank_lion", "mlorc_q8", "mlorc_q8_lion"] {
+        let m = Method::parse(id).unwrap_or_else(|e| panic!("{id} not registered: {e:#}"));
+        assert!(Method::all().contains(&m), "{id} missing from Method::all()");
+    }
+}
+
 /// Every pre-existing method id, stepped through the new registry path
 /// and the legacy oracle with identical gradients and Omega streams, must
 /// agree to the bit — weights and every state tensor, every step.

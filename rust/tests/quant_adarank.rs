@@ -1,0 +1,256 @@
+//! Acceptance tests for the PR-5 compressors.
+//!
+//! * `QuantQb`: dequantize∘quantize error is bounded per element by half
+//!   a code step — `absmax(block) / 254` (we allow /253 for f32 rounding
+//!   slack) — as a property over random tensors, and the quantized
+//!   optimizer tracks its f32 twin on the synthetic least-squares task.
+//! * `AdaRank`: the factor rank never increases, shrinks to `--rank-min`
+//!   when the momentum is genuinely low-rank, and final weights stay
+//!   within tolerance of fixed-rank `RsvdQb` on the synthetic
+//!   least-squares task.
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::OptState;
+use mlorc::linalg::{Rng, Workspace};
+use mlorc::optim::{QTensor, Q8_BLOCK};
+use mlorc::serve::HostTrainer;
+use mlorc::tensor::Tensor;
+use mlorc::testing::prop;
+
+// ----------------------------------------------------------------- quant
+
+#[test]
+fn quantize_error_bounded_by_block_absmax() {
+    prop::check(32, |rng| {
+        let m = rng.range(1, 40);
+        let n = rng.range(1, 40);
+        let scale = (0.1 + 10.0 * rng.uniform()) as f32;
+        let t = rng.gaussian_tensor(&[m, n], scale);
+        let q = QTensor::quantize(&t, Q8_BLOCK);
+        let back = q.dequantize();
+        for (bi, chunk) in t.data.chunks(Q8_BLOCK).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            for (j, (&x, &y)) in
+                chunk.iter().zip(&back.data[bi * Q8_BLOCK..bi * Q8_BLOCK + chunk.len()]).enumerate()
+            {
+                let err = (x - y).abs() as f64;
+                let bound = absmax as f64 / 253.0;
+                if err > bound {
+                    return Err(format!("block {bi} elem {j}: err {err} > bound {bound}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn q8_checkpoint_fields_roundtrip_codes_and_scales() {
+    // The state's checkpoint surface must carry both planes: f32 scales
+    // via tensor_fields, u8 codes via u8_fields, recombined by the
+    // registry decoder.
+    let mut st = OptState::for_variant("mlorc_q8", &[12, 20], 4).unwrap();
+    // run one real step so codes are nonzero
+    let mut rng = Rng::new(3);
+    let mut w = rng.gaussian_tensor(&[12, 20], 0.5);
+    let g = rng.gaussian_tensor(&[12, 20], 1.0);
+    let mut ws = Workspace::new();
+    st.host_step(&mut w, &g, 1e-2, 1, &mut rng, &mut ws).unwrap();
+    assert!(
+        st.u8_fields().iter().any(|(_, t)| t.data.iter().any(|&c| c != 0)),
+        "a real step must produce nonzero codes"
+    );
+
+    let fields: std::collections::BTreeMap<&'static str, Tensor> =
+        st.tensor_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
+    let u8s: std::collections::BTreeMap<&'static str, mlorc::tensor::TensorU8> =
+        st.u8_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
+    assert_eq!(
+        fields.keys().copied().collect::<Vec<_>>(),
+        vec!["mb_sc", "mq_sc", "vb_sc", "vq_sc"]
+    );
+    assert_eq!(
+        u8s.keys().copied().collect::<Vec<_>>(),
+        vec!["mb_q8", "mq_q8", "vb_q8", "vq_q8"]
+    );
+    let back = OptState::from_ckpt_full(
+        &st.ckpt_meta(),
+        |k| fields.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing {k}")),
+        |k| u8s.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing u8 {k}")),
+    )
+    .unwrap();
+    assert_eq!(back.variant_name(), "mlorc_q8");
+    assert_eq!(back.state_bytes(), st.state_bytes());
+    for ((na, ta), (nb, tb)) in back.u8_fields().iter().zip(st.u8_fields().iter()) {
+        assert_eq!(na, nb);
+        assert_eq!(ta.data, tb.data, "codes must roundtrip byte-exact");
+    }
+}
+
+#[test]
+fn q8_state_is_fraction_of_f32_factored() {
+    let q8 = OptState::for_variant("mlorc_q8", &[512, 128], 4).unwrap();
+    let f32v = OptState::for_variant("mlorc_adamw", &[512, 128], 4).unwrap();
+    let dense = OptState::for_variant("adamw", &[512, 128], 4).unwrap();
+    assert!(q8.state_bytes() < f32v.state_bytes() / 3);
+    assert!(
+        10 * q8.state_bytes() <= 3 * dense.state_bytes(),
+        "q8 {}B vs dense {}B",
+        q8.state_bytes(),
+        dense.state_bytes()
+    );
+}
+
+#[test]
+fn q8_tracks_f32_mlorc_on_least_squares() {
+    // The quantized optimizer must still train: loss decreases, and the
+    // final parameters stay close to the f32 factored run (quantization
+    // noise is bounded per step, not accumulated catastrophically).
+    let mk = |method: Method| {
+        let mut cfg = RunConfig::new("host-nano", method, TaskKind::MathChain, 30);
+        cfg.peak_lr = 0.05;
+        cfg.log_every = 0;
+        cfg.seed = 9;
+        cfg
+    };
+    let mut q8 = HostTrainer::new(mk(Method::MlorcQ8)).unwrap();
+    let mut f32t = HostTrainer::new(mk(Method::MlorcAdamW)).unwrap();
+    let first = q8.train_step().unwrap();
+    f32t.train_step().unwrap();
+    let mut last = first;
+    for _ in 0..29 {
+        last = q8.train_step().unwrap();
+        f32t.train_step().unwrap();
+    }
+    assert!(last < first * 0.9, "q8 loss did not decrease: {first} -> {last}");
+    for (a, b) in q8.params.values.iter().zip(&f32t.params.values) {
+        let rel = a.rel_err(b);
+        assert!(rel < 0.1, "q8 diverged from f32 mlorc: rel {rel}");
+    }
+}
+
+// --------------------------------------------------------------- adarank
+
+/// Per-moment factor ranks of a state (from the stored tensor shapes).
+fn ranks(st: &OptState) -> Vec<usize> {
+    st.tensor_fields()
+        .iter()
+        .filter(|(name, _)| name.ends_with('q') && *name != "q") // mq / vq
+        .map(|(_, t)| t.shape[1])
+        .collect()
+}
+
+#[test]
+fn adarank_rank_never_increases_and_shrinks_on_lowrank_momentum() {
+    // A constant rank-1 gradient g = u v^T keeps both momenta exactly
+    // rank 1 (the second moment's elementwise square u²(v²)^T is rank 1
+    // too), so the tail energy of B collapses and the rank must shrink
+    // to the floor — and never go back up. The factor recompression
+    // depends only on g and the factors, so no training loop is needed.
+    let (m, n, l, rank_min) = (24usize, 16usize, 6usize, 2usize);
+    let v = mlorc::optim::registry::variant("mlorc_adarank").unwrap();
+    let mut st = OptState::Opt(v.build_opts(&[m, n], l, rank_min).unwrap());
+
+    let mut rng = Rng::new(5);
+    let u = rng.gaussian_tensor(&[m, 1], 1.0);
+    let vt = rng.gaussian_tensor(&[1, n], 1.0);
+    let g = mlorc::linalg::matmul(&u, &vt);
+    let mut w = Tensor::zeros(&[m, n]);
+    let mut ws = Workspace::new();
+    let mut om_rng = Rng::new(7);
+    let mut prev = ranks(&st);
+    assert_eq!(prev, vec![l, l]);
+    for t in 1..=40 {
+        st.host_step(&mut w, &g, 0.05, t, &mut om_rng, &mut ws).unwrap();
+        let cur = ranks(&st);
+        for (c, p) in cur.iter().zip(&prev) {
+            assert!(c <= p, "rank increased: {prev:?} -> {cur:?} at step {t}");
+        }
+        for &c in &cur {
+            assert!(c >= rank_min, "rank fell below the floor: {cur:?}");
+        }
+        prev = cur;
+    }
+    assert!(
+        prev.iter().all(|&r| r == rank_min),
+        "rank-1 momentum must shrink to rank_min {rank_min}: {prev:?}"
+    );
+    assert!(st.shrink_events() > 0, "shrinks must be counted");
+
+    // The shrunken (variable-rank) state must decode back from its own
+    // checkpoint surface: shapes carry the live rank, flags carry the
+    // floor and the shrink counter.
+    let fields: std::collections::BTreeMap<&'static str, Tensor> =
+        st.tensor_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
+    let back = OptState::from_ckpt(&st.ckpt_meta(), |k| {
+        fields.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing {k}"))
+    })
+    .unwrap();
+    assert_eq!(ranks(&back), ranks(&st));
+    assert_eq!(back.shrink_events(), st.shrink_events());
+    for ((na, ta), (nb, tb)) in back.tensor_fields().iter().zip(st.tensor_fields().iter()) {
+        assert_eq!(na, nb);
+        assert_eq!(ta.data, tb.data, "field {na} must roundtrip byte-exact");
+    }
+}
+
+#[test]
+fn adarank_matches_fixed_rank_on_least_squares() {
+    // On the full-rank synthetic least-squares task the directions all
+    // carry non-negligible energy. While no shrink fires, AdaRank's step
+    // is the *same* kernel sequence and Omega schedule as fixed-rank
+    // RsvdQb, so the runs must be bit-identical; if a borderline shrink
+    // does fire (it drops < 1% of the momentum energy), final weights
+    // must still stay within tolerance.
+    let mk = |method: Method| {
+        let mut cfg = RunConfig::new("host-nano", method, TaskKind::MathChain, 25);
+        cfg.peak_lr = 0.05;
+        cfg.log_every = 0;
+        cfg.seed = 13;
+        cfg
+    };
+    let mut ada = HostTrainer::new(mk(Method::MlorcAdaRank)).unwrap();
+    let mut fixed = HostTrainer::new(mk(Method::MlorcAdamW)).unwrap();
+    for _ in 0..25 {
+        ada.train_step().unwrap();
+        fixed.train_step().unwrap();
+    }
+    for (a, b) in ada.params.values.iter().zip(&fixed.params.values) {
+        if ada.shrink_events() == 0 {
+            assert_eq!(a.data, b.data, "no shrink: adarank must equal fixed-rank to the bit");
+        } else {
+            let rel = a.rel_err(b);
+            assert!(rel < 0.05, "adarank drifted from fixed-rank rsvd_qb: rel {rel}");
+        }
+    }
+}
+
+#[test]
+fn adarank_shrunken_state_resumes_bit_identical() {
+    // A shrink mid-run must survive the checkpoint: variable-rank shapes
+    // + rank_min + shrink counter roundtrip, and the continuation is
+    // bit-identical to the uninterrupted run.
+    let dir = std::env::temp_dir()
+        .join(format!("mlorc_adarank_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = RunConfig::new("host-nano", Method::MlorcAdaRank, TaskKind::MathChain, 12);
+    cfg.peak_lr = 0.03;
+    cfg.log_every = 0;
+    cfg.seed = 4;
+    cfg.rank_min = 2;
+    let mut tr = HostTrainer::new(cfg.clone()).unwrap();
+    for _ in 0..6 {
+        tr.train_step().unwrap();
+    }
+    tr.save_checkpoint(&dir).unwrap();
+    let mut resumed = HostTrainer::new(cfg).unwrap();
+    assert_eq!(resumed.resume_from(&dir).unwrap(), 6);
+    for _ in 0..6 {
+        tr.train_step().unwrap();
+        resumed.train_step().unwrap();
+    }
+    for (j, (a, b)) in tr.params.values.iter().zip(&resumed.params.values).enumerate() {
+        assert_eq!(a.data, b.data, "param {j} diverged after adarank resume");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

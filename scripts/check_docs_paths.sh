@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI gate for the docs book: every repo path referenced in docs/*.md
+# must exist, so the paper→code map can never silently rot. A "repo
+# path" is any slash-containing token ending in a source-ish extension;
+# bare filenames (meta.json, LATEST, ...) and obvious globs are skipped.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for doc in docs/*.md; do
+  # tokens like rust/src/optim/mlorc.rs, python/compile/optim_steps.py,
+  # docs/cli.md, scripts/check_docs_paths.sh — optionally with a :line
+  # suffix, which is stripped before the existence check
+  # `|| true`: a prose-only page with zero path tokens is fine, and must
+  # not abort the whole check via set -e
+  refs=$(grep -oE '[A-Za-z0-9_.-]+(/[A-Za-z0-9_.-]+)+\.(rs|py|md|sh|yml|json|toml)' "$doc" | sort -u || true)
+  for ref in $refs; do
+    case "$ref" in
+      *'*'*) continue ;; # glob examples, not concrete paths
+    esac
+    if [ ! -e "$ref" ]; then
+      echo "MISSING: $doc references '$ref' which does not exist" >&2
+      fail=1
+    fi
+  done
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "docs path check FAILED — fix the references above" >&2
+  exit 1
+fi
+echo "docs path check OK: all referenced paths exist"
