@@ -8,10 +8,17 @@
 //! blocked kernels and (b) the pre-change scalar-kernel baseline, plus
 //! Lion/AdamW references, across the tiny-preset matrix shapes. Emits the
 //! machine-readable `BENCH_OPT.json` at the repo root, appends a run
-//! record to the committed `BENCH_HISTORY.json` (warning on >10%
-//! slowdowns vs the previous entry — non-fatal unless
-//! `MLORC_BENCH_STRICT=1`, since shared runners are noisy), and *asserts*
-//! the acceptance criteria:
+//! record to the committed `BENCH_HISTORY.json` (printing the appended
+//! entry so CI logs carry it), and *asserts* the acceptance criteria:
+//!
+//! History gating: absolute µs comparisons against the previous entry
+//! are always warnings — they mix machines and are meaningless across
+//! runners. The machine-normalized *ratios* (`speedup_512x128_vs_scalar`,
+//! `pool_vs_spawn_512x128_r4`) are comparable anywhere; a drop below
+//! 0.9x the previous entry's ratio fails the run under
+//! `MLORC_BENCH_STRICT=1` (the CI bench job sets it).
+//!
+//! Acceptance criteria:
 //!
 //!  * GEMM audit: one dense O(m·n·l) reconstruction per moment on the
 //!    512x128 step (fused m-moment + v-moment), thin sketch/projections;
@@ -518,9 +525,10 @@ fn graph_bench(rng: &mut Rng) -> Option<Json> {
 
 // -------------------------------------------------------- history tracking
 
-/// Append this run to `BENCH_HISTORY.json` and compare the headline
-/// timings against the previous entry. Returns true when a >10% slowdown
-/// was detected (callers print the warnings as they go).
+/// Append this run to `BENCH_HISTORY.json` and compare against the
+/// previous entry: absolute µs drifts (machine-dependent) are printed as
+/// warnings, machine-normalized ratio drops below 0.9x the previous
+/// entry are returned as the strict-gate regression flag.
 fn track_history(host: &Json, speedup_512: f64, pool_vs_spawn: f64) -> bool {
     let path = match fsutil::find_repo_root() {
         Ok(root) => root.join("BENCH_HISTORY.json"),
@@ -553,6 +561,8 @@ fn track_history(host: &Json, speedup_512: f64, pool_vs_spawn: f64) -> bool {
 
     let mut regressed = false;
     if let Some(prev) = entries.last() {
+        // absolute µs: warn only — a different runner legitimately moves
+        // every number
         let prev_host = prev.get("host_us_per_step");
         for &(m, n) in &SHAPES {
             let key = format!("{m}x{n}");
@@ -566,11 +576,26 @@ fn track_history(host: &Json, speedup_512: f64, pool_vs_spawn: f64) -> bool {
                 .and_then(|v| v.as_f64().ok());
             if let (Some(p), Some(c)) = (prev_us, cur_us) {
                 if c > 1.10 * p {
+                    println!(
+                        "WARNING (absolute, machine-dependent): mlorc_adamw {key} host step \
+                         {c:.1}us vs {p:.1}us in the previous entry (+{:.0}%)",
+                        (c / p - 1.0) * 100.0
+                    );
+                }
+            }
+        }
+        // normalized ratios: comparable across machines — these gate CI
+        for (name, cur) in [
+            ("speedup_512x128_vs_scalar", speedup_512),
+            ("pool_vs_spawn_512x128_r4", pool_vs_spawn),
+        ] {
+            if let Some(p) = prev.get(name).and_then(|v| v.as_f64().ok()) {
+                if cur < 0.9 * p {
                     regressed = true;
                     println!(
-                        "REGRESSION WARNING: mlorc_adamw {key} host step {c:.1}us vs {p:.1}us \
-                         in the previous entry (+{:.0}%)",
-                        (c / p - 1.0) * 100.0
+                        "REGRESSION: {name} is {cur:.2} vs {p:.2} in the previous entry \
+                         ({:.0}% drop, >10% gate)",
+                        (1.0 - cur / p) * 100.0
                     );
                 }
             }
@@ -581,14 +606,16 @@ fn track_history(host: &Json, speedup_512: f64, pool_vs_spawn: f64) -> bool {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    entries.push(Json::obj(vec![
+    let entry = Json::obj(vec![
         ("unix_time", Json::num(unix_time as f64)),
         ("thread_budget", Json::num(threads::budget() as f64)),
         ("simd_tier", Json::str(simd::simd_tier())),
         ("speedup_512x128_vs_scalar", Json::num(speedup_512)),
         ("pool_vs_spawn_512x128_r4", Json::num(pool_vs_spawn)),
         ("host_us_per_step", host.clone()),
-    ]));
+    ]);
+    println!("appended BENCH_HISTORY entry:\n{}", entry.to_string_pretty());
+    entries.push(entry);
     let hist = Json::obj(vec![
         ("schema", Json::str("bench_history/v1")),
         ("entries", Json::Arr(entries)),
@@ -660,7 +687,10 @@ fn main() {
         }
     }
     if regressed && strict {
-        eprintln!("FAIL (MLORC_BENCH_STRICT=1): >10% slowdown vs previous BENCH_HISTORY entry");
+        eprintln!(
+            "FAIL (MLORC_BENCH_STRICT=1): >10% normalized-ratio regression vs the previous \
+             BENCH_HISTORY entry"
+        );
         failed = true;
     }
     if failed {

@@ -21,6 +21,15 @@
 //! `step-NNNNNNNN/` subdirectory, flipping the `LATEST` pointer only
 //! after the snapshot is fully on disk — a kill mid-write can never
 //! corrupt the snapshot a restart resumes from.
+//!
+//! Integrity: every RTEN file carries a CRC-32 footer, and each v2
+//! snapshot additionally writes `manifest.json` — per-file byte counts
+//! and checksums plus a hash over the whole file list — before the
+//! `meta.json` commit marker. [`verify_snapshot`] replays those checks,
+//! and [`resolve_checkpoint_dir_verified`] degrades gracefully: when
+//! `LATEST` is torn or its target fails verification, resume falls back
+//! to the newest intact `step-*` snapshot instead of crashing or loading
+//! garbage (`docs/checkpoint-v2.md`).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -30,7 +39,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 use crate::linalg::Rng;
 use crate::tensor::{
-    read_rten, read_rten_entries, write_rten, write_rten_entries, RtenEntry, Tensor,
+    read_rten, read_rten_entries, rten_bytes, rten_entry_bytes, write_rten, RtenEntry, Tensor,
 };
 use crate::util::fsutil;
 use crate::util::json::Json;
@@ -140,7 +149,8 @@ pub fn save_checkpoint_v2(
     }
     std::fs::create_dir_all(dir)?;
     let tensors = collect_params(params, adapters);
-    write_rten(&dir.join("params.rten"), &tensors)?;
+    let params_bytes = rten_bytes(&tensors)?;
+    fsutil::write_atomic_site(&dir.join("params.rten"), &params_bytes, "ckpt_write")?;
 
     let mut opt_tensors: BTreeMap<String, RtenEntry> = BTreeMap::new();
     let mut opt_meta = Json::Obj(BTreeMap::new());
@@ -154,7 +164,8 @@ pub fn save_checkpoint_v2(
             opt_tensors.insert(format!("{name}/{field}"), RtenEntry::U8(t.clone()));
         }
     }
-    write_rten_entries(&dir.join("opt_state.rten"), &opt_tensors)?;
+    let opt_bytes = rten_entry_bytes(&opt_tensors)?;
+    fsutil::write_atomic_site(&dir.join("opt_state.rten"), &opt_bytes, "ckpt_write")?;
 
     let omega = Json::arr(snap.omega.iter().map(rng_to_json));
     let meta = Json::obj(vec![
@@ -168,7 +179,96 @@ pub fn save_checkpoint_v2(
             Json::obj(vec![("data", rng_to_json(snap.rng_data)), ("omega", omega)]),
         ),
     ]);
-    fsutil::write_atomic(&dir.join("meta.json"), meta.to_string_pretty().as_bytes())
+    let meta_bytes = meta.to_string_pretty().into_bytes();
+
+    // manifest before meta: the commit marker lands last, so a snapshot
+    // with meta.json always has a manifest to verify against. Checksums
+    // come from the in-memory payloads, not a read-back — a torn write
+    // therefore cannot forge a matching manifest.
+    let manifest = snapshot_manifest(&[
+        ("meta.json", &meta_bytes),
+        ("opt_state.rten", &opt_bytes),
+        ("params.rten", &params_bytes),
+    ]);
+    fsutil::write_atomic_site(
+        &dir.join("manifest.json"),
+        manifest.to_string_pretty().as_bytes(),
+        "ckpt_write",
+    )?;
+    fsutil::write_atomic_site(&dir.join("meta.json"), &meta_bytes, "ckpt_write")
+}
+
+/// Build the `manifest.json` document: per-file byte counts + CRC-32,
+/// plus a snapshot-wide hash over the sorted `name:crc` list.
+fn snapshot_manifest(files: &[(&str, &[u8])]) -> Json {
+    let mut entries: Vec<(&str, Json)> = Vec::new();
+    let mut lines = String::new();
+    for &(name, bytes) in files {
+        let crc = fsutil::crc32(bytes);
+        entries.push((
+            name,
+            Json::obj(vec![
+                ("bytes", Json::num(bytes.len() as f64)),
+                ("crc32", Json::str(format!("{crc:08x}"))),
+            ]),
+        ));
+        lines.push_str(&format!("{name}:{crc:08x}\n"));
+    }
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("files", Json::obj(entries)),
+        ("snapshot_crc32", Json::str(format!("{:08x}", fsutil::crc32(lines.as_bytes())))),
+    ])
+}
+
+/// Replay a snapshot's integrity checks: `meta.json` must exist and
+/// parse, and when `manifest.json` is present (every snapshot written
+/// since it was introduced) each listed file must match its recorded
+/// byte count and CRC-32, and the file list must match the snapshot
+/// hash. Pre-manifest snapshots pass on a parsable `meta.json` alone.
+pub fn verify_snapshot(dir: &Path) -> Result<()> {
+    let meta_path = dir.join("meta.json");
+    if !meta_path.exists() {
+        bail!("snapshot {} has no meta.json (incomplete or not a snapshot)", dir.display());
+    }
+    Json::from_file(&meta_path).with_context(|| format!("parsing {}", meta_path.display()))?;
+    let man_path = dir.join("manifest.json");
+    if !man_path.exists() {
+        return Ok(()); // pre-manifest snapshot: nothing more to check
+    }
+    let man = Json::from_file(&man_path)
+        .with_context(|| format!("parsing {}", man_path.display()))?;
+    let mut lines = String::new();
+    for (name, entry) in man.req("files")?.as_obj()? {
+        let fpath = dir.join(name);
+        let bytes = std::fs::read(&fpath)
+            .with_context(|| format!("manifest lists {} but it is unreadable", fpath.display()))?;
+        let want_len = entry.req("bytes")?.as_usize()?;
+        if bytes.len() != want_len {
+            bail!(
+                "{}: {} bytes on disk, manifest says {} — torn or corrupt",
+                fpath.display(),
+                bytes.len(),
+                want_len
+            );
+        }
+        let want_crc =
+            u32::from_str_radix(entry.req("crc32")?.as_str()?, 16).context("manifest crc32")?;
+        let got = fsutil::crc32(&bytes);
+        if got != want_crc {
+            bail!(
+                "{}: CRC-32 {got:08x} != manifest {want_crc:08x} — torn or corrupt",
+                fpath.display()
+            );
+        }
+        lines.push_str(&format!("{name}:{want_crc:08x}\n"));
+    }
+    let want_hash = u32::from_str_radix(man.req("snapshot_crc32")?.as_str()?, 16)
+        .context("manifest snapshot_crc32")?;
+    if fsutil::crc32(lines.as_bytes()) != want_hash {
+        bail!("snapshot {}: manifest file-list hash mismatch", dir.display());
+    }
+    Ok(())
 }
 
 /// Load a v2 checkpoint: parameters (and adapters) are restored in place,
@@ -266,7 +366,7 @@ pub fn load_for_resume(
     adapters: Option<&mut ParamStore>,
     n_streams: usize,
 ) -> Result<CheckpointV2> {
-    let snap_dir = resolve_checkpoint_dir(dir)?;
+    let snap_dir = resolve_checkpoint_dir_verified(dir)?;
     let ck = load_checkpoint_v2(&snap_dir, params, adapters)?;
     if ck.config.method != cfg.method
         || ck.config.preset != cfg.preset
@@ -323,7 +423,7 @@ pub fn save_checkpoint_v2_rotated(
     let name = snapshot_name(step);
     let dir = root.join(&name);
     save_checkpoint_v2(&dir, step, cfg, params, adapters, snap)?;
-    fsutil::write_atomic(&root.join("LATEST"), name.as_bytes())?;
+    fsutil::write_atomic_site(&root.join("LATEST"), name.as_bytes(), "latest_write")?;
     prune_snapshots(root, &name);
     Ok(dir)
 }
@@ -376,6 +476,80 @@ pub fn resolve_checkpoint_dir(dir: &Path) -> Result<PathBuf> {
         return Ok(snap);
     }
     bail!("no checkpoint at {} (neither meta.json nor LATEST found)", dir.display())
+}
+
+/// [`resolve_checkpoint_dir`] with integrity verification and graceful
+/// degradation: a direct snapshot must verify; a rotated root first tries
+/// the `LATEST` target and, when `LATEST` is torn or its target fails
+/// verification, falls back to the newest `step-*` snapshot that passes
+/// [`verify_snapshot`]. Errors only when no intact snapshot exists.
+pub fn resolve_checkpoint_dir_verified(dir: &Path) -> Result<PathBuf> {
+    if dir.join("meta.json").exists() {
+        verify_snapshot(dir).with_context(|| format!("checkpoint at {}", dir.display()))?;
+        return Ok(dir.to_path_buf());
+    }
+    let latest = dir.join("LATEST");
+    if !latest.exists() {
+        bail!("no checkpoint at {} (neither meta.json nor LATEST found)", dir.display());
+    }
+    let mut tried: Option<String> = None;
+    match std::fs::read_to_string(&latest) {
+        Ok(name) => {
+            let name = name.trim().to_string();
+            match verify_snapshot(&dir.join(&name)) {
+                Ok(()) => return Ok(dir.join(&name)),
+                Err(e) => {
+                    log::warn!(
+                        "checkpoint root {}: LATEST -> '{}' failed verification ({e:#}); \
+                         scanning for the newest intact snapshot",
+                        dir.display(),
+                        name
+                    );
+                    tried = Some(name);
+                }
+            }
+        }
+        Err(e) => {
+            log::warn!(
+                "checkpoint root {}: LATEST is unreadable ({e}); \
+                 scanning for the newest intact snapshot",
+                dir.display()
+            );
+        }
+    }
+    let mut snaps: Vec<String> = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .flatten()
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("step-"))
+        .collect();
+    snaps.sort();
+    for name in snaps.iter().rev() {
+        if tried.as_deref() == Some(name.as_str()) {
+            continue;
+        }
+        let snap = dir.join(name);
+        match verify_snapshot(&snap) {
+            Ok(()) => {
+                log::warn!(
+                    "checkpoint root {}: resuming from intact snapshot '{name}'",
+                    dir.display()
+                );
+                return Ok(snap);
+            }
+            Err(e) => {
+                log::warn!(
+                    "checkpoint root {}: snapshot '{name}' failed verification ({e:#})",
+                    dir.display()
+                );
+            }
+        }
+    }
+    bail!(
+        "checkpoint root {} has no intact snapshot \
+         (LATEST and every step-* candidate failed verification)",
+        dir.display()
+    )
 }
 
 // ------------------------------------------------------------ rng <-> json
@@ -538,6 +712,45 @@ mod tests {
         let mut loaded = store();
         let back = load_checkpoint_v2(&resolved, &mut loaded, None).unwrap();
         assert_eq!(back.step, 15);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn manifest_verification_and_torn_latest_fallback() {
+        let root = tmp("verify");
+        let _ = std::fs::remove_dir_all(&root);
+        let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
+        let orig = store();
+        let rng = Rng::new(0);
+        let snap = OptSnapshot { opt: vec![], rng_data: &rng, omega: &[] };
+        for step in [5usize, 10] {
+            save_checkpoint_v2_rotated(&root, step, &cfg, &orig, None, &snap).unwrap();
+        }
+        // intact snapshots verify and resolve to the LATEST target
+        verify_snapshot(&root.join("step-00000010")).unwrap();
+        let resolved = resolve_checkpoint_dir_verified(&root).unwrap();
+        assert!(resolved.ends_with("step-00000010"));
+
+        // garbage LATEST: fall back to the newest intact snapshot
+        std::fs::write(root.join("LATEST"), b"step-999").unwrap();
+        let resolved = resolve_checkpoint_dir_verified(&root).unwrap();
+        assert!(resolved.ends_with("step-00000010"));
+
+        // corrupt the newest snapshot's payload: verification catches it
+        // and resolution degrades to the previous snapshot
+        let victim = root.join("step-00000010/params.rten");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        assert!(verify_snapshot(&root.join("step-00000010")).is_err());
+        std::fs::write(root.join("LATEST"), b"step-00000010").unwrap();
+        let resolved = resolve_checkpoint_dir_verified(&root).unwrap();
+        assert!(resolved.ends_with("step-00000005"), "{resolved:?}");
+
+        // no intact snapshot left: structured error, not garbage
+        std::fs::remove_dir_all(root.join("step-00000005")).unwrap();
+        assert!(resolve_checkpoint_dir_verified(&root).is_err());
         std::fs::remove_dir_all(&root).unwrap();
     }
 }

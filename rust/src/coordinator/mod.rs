@@ -14,7 +14,8 @@ mod trainer;
 
 pub use checkpoint::{
     has_checkpoint, load_checkpoint, load_checkpoint_v2, load_for_resume, resolve_checkpoint_dir,
-    save_checkpoint, save_checkpoint_v2, save_checkpoint_v2_rotated, CheckpointV2, OptSnapshot,
+    resolve_checkpoint_dir_verified, save_checkpoint, save_checkpoint_v2,
+    save_checkpoint_v2_rotated, verify_snapshot, CheckpointV2, OptSnapshot,
 };
 pub use memory::{MemoryAccountant, MemoryReport};
 pub use metrics::{EvalRecord, MetricsLog, StepRecord};

@@ -6,6 +6,7 @@
 //!   serve   — drain a spool with N concurrent jobs (crash-safe resume)
 //!   status  — aggregate per-job status across a spool
 //!   cancel  — tombstone a queued job (atomic rename into cancelled/)
+//!   fsck    — verify (and repair) a spool's checkpoint snapshots
 //!   bench   — regenerate a paper table/figure (see DESIGN.md §5)
 //!   info    — artifact/manifest inventory
 //!   memory  — analytic memory report for a preset (Table 1 style)
@@ -37,6 +38,7 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("status") => cmd_status(&args),
         Some("cancel") => cmd_cancel(&args),
+        Some("fsck") => cmd_fsck(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         Some("memory") => cmd_memory(&args),
@@ -64,8 +66,11 @@ USAGE: mlorc <subcommand> [--options]
          [--seed N] [--checkpoint-every N] [--priority N] [--rank-min N]
          [--id jobNNN_name]
   serve  --spool spool/ [--jobs 2] [--drain] [--poll-ms 500]
+         [--max-retries 2] [--retry-backoff-ms 500]
+         [--lease-timeout-ms 30000] [--failpoint site:action@N]
   status --spool spool/ [--json] [--expect-all-done]
   cancel <job-id> [--spool spool/]
+  fsck   <spool/> [--repair] [--json]
   bench  --experiment <id> [--quick] [--steps N] [--seeds K]
          ids: {ids}
   memory --preset tiny [--per-layer]
@@ -189,7 +194,8 @@ fn cmd_submit(args: &Args) -> Result<()> {
         Some(i) => i,
         None => spool.next_job_id(method.name())?,
     };
-    let spec = JobSpec { id, engine, checkpoint_every, priority, cfg };
+    let spec =
+        JobSpec { id, engine, checkpoint_every, priority, attempts: Vec::new(), not_before_unix_ms: 0, cfg };
     let path = spool.submit(&spec)?;
     println!("submitted {} -> {}", spec.id, path.display());
     Ok(())
@@ -212,6 +218,31 @@ fn cmd_cancel(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fsck(args: &Args) -> Result<()> {
+    // accept the spool either positionally (`mlorc fsck spool/`) or as
+    // `--spool spool/`, defaulting like the other subcommands
+    let opt_spool = args.get("spool").map(|s| s.to_string());
+    let spool_dir =
+        args.positional.first().cloned().or(opt_spool).unwrap_or_else(|| "spool".to_string());
+    let repair = args.flag("repair");
+    let as_json = args.flag("json");
+    args.reject_unknown()?;
+    let spool = Spool::open(Path::new(&spool_dir))?;
+    let report = serve::fsck(&spool, repair)?;
+    if as_json {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("{}", serve::render_report(&report));
+    }
+    if !report.clean() {
+        bail!(
+            "spool {spool_dir} has integrity problems{}",
+            if repair { " that could not be repaired" } else { " (re-run with --repair)" }
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let spool_dir = args.get_or("spool", "spool").to_string();
     let opts = ServeOpts {
@@ -219,14 +250,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         drain: args.flag("drain"),
         poll_ms: args.get_u64("poll-ms", 500)?,
         die_after_checkpoints: args.get_usize("die-after-checkpoints", 0)?,
+        max_retries: args.get_usize("max-retries", 2)?,
+        retry_backoff_ms: args.get_u64("retry-backoff-ms", 500)?,
+        lease_timeout_ms: args.get_u64("lease-timeout-ms", 30_000)?,
     };
+    // fault-injection hook (same grammar as MLORC_FAILPOINT)
+    if let Some(spec) = args.get("failpoint") {
+        fsutil::failpoints::arm(spec)?;
+    }
     args.reject_unknown()?;
     let spool = Spool::open(Path::new(&spool_dir))?;
     let summary = serve::serve(&spool, &opts)?;
     log::info!(
-        "serve: {} done, {} failed ({} recovered at startup)",
+        "serve: {} done, {} failed, {} retried ({} recovered at startup)",
         summary.done,
         summary.failed,
+        summary.retried,
         summary.recovered
     );
     if summary.failed > 0 {

@@ -1,0 +1,207 @@
+//! `mlorc fsck` — offline spool integrity checker.
+//!
+//! Walks every job's `work/<id>/ckpt/` tree and verifies each snapshot
+//! against its checksum manifest (`coordinator::verify_snapshot`), flags
+//! `LATEST` pointers that dangle or target a corrupt snapshot, and
+//! reports orphaned `work/<id>/` scratch dirs whose job spec is gone
+//! from every lifecycle dir (the residue of a quarantined unreadable
+//! submission). With `repair`, corrupt snapshots are dropped, `LATEST`
+//! is repointed to the newest intact snapshot, and orphaned work dirs
+//! are reaped — i.e. the spool is rolled back to its last good state
+//! rather than patched forward.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::verify_snapshot;
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+use super::queue::{Spool, LIFECYCLE_DIRS};
+
+/// One corrupt (or dangling) snapshot found under a job's checkpoint root.
+#[derive(Debug, Clone)]
+pub struct SnapshotProblem {
+    pub job: String,
+    /// Snapshot dir name (`step-NNNNNNNN`), or `LATEST` for a dangling
+    /// pointer with no intact target to repoint at.
+    pub snapshot: String,
+    pub error: String,
+    /// What repair did: "dropped", "repointed", or "" when running
+    /// report-only (or nothing could be done).
+    pub action: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FsckReport {
+    /// Job ids whose checkpoint tree was examined (jobs that never ran
+    /// have no work dir and are skipped).
+    pub jobs_checked: usize,
+    /// Snapshots that passed manifest + checksum verification.
+    pub snapshots_ok: usize,
+    pub problems: Vec<SnapshotProblem>,
+    /// `work/<id>/` dirs with no spec in any lifecycle dir.
+    pub orphans: Vec<String>,
+    pub orphans_reaped: bool,
+}
+
+impl FsckReport {
+    /// True when the spool needs no attention.
+    pub fn clean(&self) -> bool {
+        self.problems.is_empty() && (self.orphans.is_empty() || self.orphans_reaped)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs_checked", Json::num(self.jobs_checked as f64)),
+            ("snapshots_ok", Json::num(self.snapshots_ok as f64)),
+            (
+                "problems",
+                Json::arr(self.problems.iter().map(|p| {
+                    Json::obj(vec![
+                        ("job", Json::str(p.job.clone())),
+                        ("snapshot", Json::str(p.snapshot.clone())),
+                        ("error", Json::str(p.error.clone())),
+                        ("action", Json::str(p.action.clone())),
+                    ])
+                })),
+            ),
+            ("orphans", Json::arr(self.orphans.iter().map(|o| Json::str(o.clone())))),
+            ("orphans_reaped", Json::Bool(self.orphans_reaped)),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+}
+
+/// Verify every checkpoint snapshot in the spool; with `repair`, drop
+/// broken snapshots back to the last intact one and reap orphaned work
+/// dirs.
+pub fn fsck(spool: &Spool, repair: bool) -> Result<FsckReport> {
+    let mut report = FsckReport::default();
+    let mut ids = Vec::new();
+    for dir in LIFECYCLE_DIRS {
+        ids.extend(spool.jobs_in(dir)?);
+    }
+    ids.sort();
+    ids.dedup();
+    for id in &ids {
+        let root = spool.checkpoint_root(id);
+        if !root.exists() {
+            continue;
+        }
+        report.jobs_checked += 1;
+        check_ckpt_root(id, &root, repair, &mut report)?;
+    }
+    report.orphans = spool.orphan_work_dirs()?;
+    if repair && !report.orphans.is_empty() {
+        for id in &report.orphans {
+            std::fs::remove_dir_all(spool.work_dir(id))?;
+        }
+        report.orphans_reaped = true;
+    }
+    Ok(report)
+}
+
+fn check_ckpt_root(id: &str, root: &Path, repair: bool, report: &mut FsckReport) -> Result<()> {
+    let latest_path = root.join("LATEST");
+    if !latest_path.exists() {
+        // direct (un-rotated) snapshot: verify in place; there is no
+        // older snapshot to fall back to, so repair can only report
+        if root.join("meta.json").exists() {
+            match verify_snapshot(root) {
+                Ok(()) => report.snapshots_ok += 1,
+                Err(e) => report.problems.push(SnapshotProblem {
+                    job: id.to_string(),
+                    snapshot: ".".to_string(),
+                    error: format!("{e:#}"),
+                    action: String::new(),
+                }),
+            }
+        }
+        return Ok(());
+    }
+    // rotated root: verify every step-* snapshot
+    let mut names: Vec<String> = std::fs::read_dir(root)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("step-"))
+        .collect();
+    names.sort(); // zero-padded step numbers: lexical == numeric order
+    let mut intact = Vec::new();
+    for name in &names {
+        match verify_snapshot(&root.join(name)) {
+            Ok(()) => {
+                report.snapshots_ok += 1;
+                intact.push(name.clone());
+            }
+            Err(e) => {
+                let action = if repair {
+                    std::fs::remove_dir_all(root.join(name))?;
+                    "dropped".to_string()
+                } else {
+                    String::new()
+                };
+                report.problems.push(SnapshotProblem {
+                    job: id.to_string(),
+                    snapshot: name.clone(),
+                    error: format!("{e:#}"),
+                    action,
+                });
+            }
+        }
+    }
+    // LATEST must name an intact snapshot
+    let target = std::fs::read_to_string(&latest_path)
+        .map(|s| s.trim().to_string())
+        .unwrap_or_default();
+    if !intact.iter().any(|n| n == &target) {
+        let error = format!(
+            "LATEST -> '{target}' is not an intact snapshot ({} intact candidate(s))",
+            intact.len()
+        );
+        let action = if repair {
+            if let Some(newest) = intact.last() {
+                fsutil::write_atomic(&latest_path, newest.as_bytes())?;
+                format!("repointed to {newest}")
+            } else {
+                String::new()
+            }
+        } else {
+            String::new()
+        };
+        report.problems.push(SnapshotProblem {
+            job: id.to_string(),
+            snapshot: "LATEST".to_string(),
+            error,
+            action,
+        });
+    }
+    Ok(())
+}
+
+/// Human-readable report.
+pub fn render_report(r: &FsckReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "fsck: {} job(s) with checkpoints, {} intact snapshot(s)",
+        r.jobs_checked, r.snapshots_ok
+    );
+    for p in &r.problems {
+        let action = if p.action.is_empty() { String::new() } else { format!(" [{}]", p.action) };
+        let _ = writeln!(s, "  CORRUPT {}/{}: {}{}", p.job, p.snapshot, p.error, action);
+    }
+    if !r.orphans.is_empty() {
+        let _ = writeln!(
+            s,
+            "  ORPHANS {} work dir(s) with no spec: {}{}",
+            r.orphans.len(),
+            r.orphans.join(", "),
+            if r.orphans_reaped { " [reaped]" } else { " (use --repair to reap)" }
+        );
+    }
+    let _ = write!(s, "{}", if r.clean() { "spool is clean" } else { "spool needs attention" });
+    s
+}

@@ -9,19 +9,25 @@
 //! scheduler draining it with N concurrent trainers on fair thread
 //! slices ([`scheduler`]), per-job status files plus an aggregator
 //! ([`status`]), and a host-only engine ([`host`]) so the whole service
-//! runs — and is CI-tested — without AOT artifacts.
+//! runs — and is CI-tested — without AOT artifacts. Claims are backed
+//! by heartbeat-refreshed leases so multiple schedulers can share one
+//! spool, failed jobs are retried with exponential backoff before
+//! quarantine, and [`fsck`] verifies (and repairs) the checksummed
+//! checkpoint snapshots offline.
 //!
 //! Determinism contract: a job served concurrently is bit-identical to
 //! the same config run solo, and a job killed mid-run resumes from its
 //! latest v2 checkpoint to bit-identical final parameters
 //! (`tests/serve_spool.rs`, `tests/checkpoint_v2.rs`).
 
+pub mod fsck;
 pub mod host;
 pub mod queue;
 pub mod scheduler;
 pub mod status;
 
+pub use fsck::{fsck, render_report, FsckReport, SnapshotProblem};
 pub use host::{host_preset_names, preset_momentum_bytes, HostTrainer};
-pub use queue::{Engine, JobSpec, Spool, LIFECYCLE_DIRS};
+pub use queue::{Attempt, Engine, JobSpec, Lease, Spool, LIFECYCLE_DIRS};
 pub use scheduler::{serve, ServeOpts, ServeSummary, CRASH_EXIT_CODE};
 pub use status::{aggregate, render_table, JobStatus};

@@ -9,23 +9,28 @@
 //! failed/<id>.json     finished with an error (status/<id>.json has why)
 //! cancelled/<id>.json  tombstoned while queued (`mlorc cancel`)
 //! status/<id>.json     latest per-job progress (serve::status)
+//! leases/<id>.json     owner + heartbeat of the worker running the job
 //! work/<id>/           job scratch: rotated v2 checkpoints, metrics
 //! ```
 //!
 //! Lifecycle is `queued -> running -> done|failed`, with a side exit
-//! `queued -> cancelled`. Claims and cancellations are each a single
-//! `rename(2)`: exactly one scheduler worker (or canceller) wins a given
-//! spec file, which is the entire concurrency story — no locks, no
-//! daemon, no registry. Claim order is (priority desc, id asc), so
-//! late-submitted urgent jobs overtake the backlog. A `kill -9` leaves
-//! at worst a spec stranded in `running/`; the next scheduler start
-//! sweeps those back into `queue/` ([`Spool::recover_interrupted`]) and
-//! the job resumes from its latest v2 checkpoint under `work/<id>/ckpt/`.
+//! `queued -> cancelled` and a retry edge `running -> queue` (attempt
+//! history + exponential backoff recorded in the spec). Claims and
+//! cancellations are each a single `rename(2)`: exactly one scheduler
+//! worker (or canceller) wins a given spec file, which is the entire
+//! concurrency story — no locks, no daemon, no registry. Claim order is
+//! (priority desc, id asc), so late-submitted urgent jobs overtake the
+//! backlog.
 //!
-//! Deployment note: submitters and status readers can share a spool
-//! freely, but run one *scheduler* per spool — the recovery sweep cannot
-//! tell a crashed scheduler's jobs from a live one's, so a second
-//! scheduler would re-queue work the first is still running.
+//! Deployment note: any number of submitters, status readers *and
+//! schedulers* can share one spool. Each claim is backed by a lease
+//! (`leases/<id>.json`, heartbeat-refreshed by the worker), and the
+//! recovery sweep ([`Spool::recover_interrupted`]) only re-queues a
+//! running job once both its lease heartbeat and its claim rename are
+//! older than the lease timeout (plus a deterministic per-id jitter) —
+//! so a crashed scheduler's jobs are stolen after the timeout, while a
+//! live peer's jobs are left alone. The re-queued job resumes from its
+//! latest intact v2 checkpoint under `work/<id>/ckpt/` when re-claimed.
 
 use std::path::{Path, PathBuf};
 
@@ -66,6 +71,34 @@ impl Engine {
     }
 }
 
+/// One failed run of a job, recorded in its spec when the scheduler
+/// re-queues it for retry (or quarantines it to `failed/`).
+#[derive(Debug, Clone)]
+pub struct Attempt {
+    pub at_unix_ms: u64,
+    pub error: String,
+    /// Backoff applied after this failure (0 for the terminal one).
+    pub backoff_ms: u64,
+}
+
+impl Attempt {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_unix_ms", Json::num(self.at_unix_ms as f64)),
+            ("error", Json::str(self.error.clone())),
+            ("backoff_ms", Json::num(self.backoff_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Attempt> {
+        Ok(Attempt {
+            at_unix_ms: j.req("at_unix_ms")?.as_usize()? as u64,
+            error: j.req("error")?.as_str()?.to_string(),
+            backoff_ms: j.req("backoff_ms")?.as_usize()? as u64,
+        })
+    }
+}
+
 /// One queued fine-tuning run: a `RunConfig` plus serve-level knobs.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -79,6 +112,11 @@ pub struct JobSpec {
     /// range (±2^53) on both serialize and parse — a spec always
     /// roundtrips to the priority the claim order actually uses.
     pub priority: i64,
+    /// Failed-run history, oldest first ([`Spool::requeue_failed`]).
+    pub attempts: Vec<Attempt>,
+    /// Retry backoff gate: the spec is not claimable before this time
+    /// (ms since epoch; 0 = no gate).
+    pub not_before_unix_ms: u64,
     pub cfg: RunConfig,
 }
 
@@ -93,6 +131,8 @@ impl JobSpec {
             ("engine", Json::str(self.engine.name())),
             ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
             ("priority", Json::num(priority as f64)),
+            ("attempts", Json::arr(self.attempts.iter().map(Attempt::to_json))),
+            ("not_before_unix_ms", Json::num(self.not_before_unix_ms as f64)),
             ("config", self.cfg.to_json()),
         ])
     }
@@ -108,9 +148,31 @@ impl JobSpec {
                     as i64,
                 None => 0,
             },
+            // both optional: specs submitted before retries existed
+            attempts: match j.get("attempts") {
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(Attempt::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
+            not_before_unix_ms: match j.get("not_before_unix_ms") {
+                Some(v) => v.as_usize()? as u64,
+                None => 0,
+            },
             cfg: RunConfig::from_json(j.req("config")?)?,
         })
     }
+}
+
+/// Ownership record for a running job: which scheduler worker holds it
+/// and when it last proved it was alive.
+#[derive(Debug, Clone)]
+pub struct Lease {
+    pub owner: String,
+    pub heartbeat_unix_ms: u64,
+    pub timeout_ms: u64,
 }
 
 /// Handle on a spool directory. Cheap to open; all state is on disk, so
@@ -122,7 +184,7 @@ pub struct Spool {
 impl Spool {
     /// Open (creating if needed) a spool rooted at `root`.
     pub fn open(root: &Path) -> Result<Spool> {
-        for d in ["queue", "running", "done", "failed", "cancelled", "status", "work"] {
+        for d in ["queue", "running", "done", "failed", "cancelled", "status", "leases", "work"] {
             let p = root.join(d);
             std::fs::create_dir_all(&p)
                 .with_context(|| format!("creating spool dir {}", p.display()))?;
@@ -154,6 +216,40 @@ impl Spool {
 
     pub fn status_path(&self, id: &str) -> PathBuf {
         self.dir("status").join(format!("{id}.json"))
+    }
+
+    fn lease_path(&self, id: &str) -> PathBuf {
+        self.dir("leases").join(format!("{id}.json"))
+    }
+
+    /// Write (or heartbeat-refresh) the lease for a running job.
+    pub fn write_lease(&self, id: &str, owner: &str, timeout_ms: u64) -> Result<()> {
+        let j = Json::obj(vec![
+            ("owner", Json::str(owner)),
+            ("heartbeat_unix_ms", Json::num(fsutil::unix_ms() as f64)),
+            ("timeout_ms", Json::num(timeout_ms as f64)),
+        ]);
+        fsutil::write_atomic_site(
+            &self.lease_path(id),
+            j.to_string_pretty().as_bytes(),
+            "lease_write",
+        )
+    }
+
+    /// Read a job's lease; `None` when absent or unreadable (an
+    /// unreadable lease counts as no lease — recovery treats the job as
+    /// unowned once its claim is old enough).
+    pub fn read_lease(&self, id: &str) -> Option<Lease> {
+        let j = Json::from_file(&self.lease_path(id)).ok()?;
+        Some(Lease {
+            owner: j.req("owner").ok()?.as_str().ok()?.to_string(),
+            heartbeat_unix_ms: j.req("heartbeat_unix_ms").ok()?.as_usize().ok()? as u64,
+            timeout_ms: j.req("timeout_ms").ok()?.as_usize().ok()? as u64,
+        })
+    }
+
+    fn remove_lease(&self, id: &str) {
+        let _ = std::fs::remove_file(self.lease_path(id));
     }
 
     /// Enqueue a job. Fails if any lifecycle dir already holds the id.
@@ -226,27 +322,45 @@ impl Spool {
     /// racing the claim can at worst reorder, never corrupt. Rename is
     /// atomic, so under concurrent schedulers each spec is won by exactly
     /// one caller; losing a race just moves on to the next candidate.
-    /// Returns `None` when the queue is empty.
+    /// Returns `None` when the queue is empty (or holds only jobs still
+    /// inside their retry backoff window).
     pub fn claim_next(&self) -> Result<Option<JobSpec>> {
+        self.claim_next_as(None, 0)
+    }
+
+    /// [`Spool::claim_next`] with lease bookkeeping: when `owner` is
+    /// given, the winning claim writes `leases/<id>.json` so concurrent
+    /// schedulers' recovery sweeps leave this job alone until the lease
+    /// expires.
+    pub fn claim_next_as(
+        &self,
+        owner: Option<&str>,
+        lease_timeout_ms: u64,
+    ) -> Result<Option<JobSpec>> {
         loop {
             // Order the snapshot by (priority desc, id asc). A spec that
             // vanishes (claimed elsewhere) or fails to parse sorts at
             // priority 0; the parse error resurfaces on claim and the
-            // spec is quarantined below. This parses every queued spec
+            // spec is quarantined below. Specs still inside their retry
+            // backoff window are skipped. This parses every queued spec
             // per claim — O(queue) per poll, fine for the tens-of-jobs
             // spools this serves; cache (mtime -> priority) here if
             // spools ever grow to thousands of queued specs.
+            let now = fsutil::unix_ms();
             let mut candidates: Vec<(i64, String)> = Vec::new();
             for id in self.jobs_in("queue")? {
-                let priority =
-                    self.load_spec("queue", &id).map(|s| s.priority).unwrap_or(0);
-                candidates.push((priority, id));
+                match self.load_spec("queue", &id) {
+                    Ok(s) if s.not_before_unix_ms > now => continue,
+                    Ok(s) => candidates.push((s.priority, id)),
+                    Err(_) => candidates.push((0, id)),
+                }
             }
             candidates.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
             let mut claimed = None;
             for (_, id) in candidates {
                 let from = self.spec_path("queue", &id);
                 let to = self.spec_path("running", &id);
+                fsutil::failpoint("spool_rename")?;
                 match std::fs::rename(&from, &to) {
                     Ok(()) => {
                         claimed = Some(id);
@@ -260,6 +374,14 @@ impl Spool {
                 }
             }
             let Some(id) = claimed else { return Ok(None) };
+            if let Some(owner) = owner {
+                // the claim rename's ctime shields the job from recovery
+                // until the lease lands, so a failed write only narrows
+                // the protection window rather than losing the claim
+                if let Err(e) = self.write_lease(&id, owner, lease_timeout_ms) {
+                    log::warn!("job {id}: could not write lease ({e:#})");
+                }
+            }
             match self.load_spec("running", &id) {
                 Ok(spec) => return Ok(Some(spec)),
                 Err(e) => {
@@ -297,20 +419,110 @@ impl Spool {
     pub fn finish(&self, id: &str, ok: bool) -> Result<()> {
         let from = self.spec_path("running", id);
         let to = self.spec_path(if ok { "done" } else { "failed" }, id);
+        fsutil::failpoint("spool_rename")?;
         std::fs::rename(&from, &to).with_context(|| format!("finishing job {id}"))?;
+        self.remove_lease(id);
         Ok(())
     }
 
-    /// Sweep `running/` back into `queue/` — called once at scheduler
-    /// startup, when anything still "running" is a crash leftover. The
-    /// re-queued jobs resume from their latest checkpoint when claimed.
-    pub fn recover_interrupted(&self) -> Result<Vec<String>> {
+    /// Re-queue a failed running job for retry: its spec gains an
+    /// [`Attempt`] record and a `not_before` backoff gate, then moves
+    /// `running/ -> queue/`. Returns the updated spec (for status).
+    pub fn requeue_failed(&self, spec: &JobSpec, error: &str, backoff_ms: u64) -> Result<JobSpec> {
+        let now = fsutil::unix_ms();
+        let mut updated = spec.clone();
+        updated
+            .attempts
+            .push(Attempt { at_unix_ms: now, error: error.to_string(), backoff_ms });
+        updated.not_before_unix_ms = now + backoff_ms;
+        let from = self.spec_path("running", &spec.id);
+        fsutil::write_atomic(&from, updated.to_json().to_string_pretty().as_bytes())?;
+        fsutil::failpoint("spool_rename")?;
+        std::fs::rename(&from, self.spec_path("queue", &spec.id))
+            .with_context(|| format!("re-queueing job {}", spec.id))?;
+        self.remove_lease(&spec.id);
+        Ok(updated)
+    }
+
+    /// Quarantine a running job whose retry budget is exhausted: the
+    /// final [`Attempt`] is recorded and the spec moves to `failed/`
+    /// with its full attempt history. Returns the updated spec.
+    pub fn fail_terminal(&self, spec: &JobSpec, error: &str) -> Result<JobSpec> {
+        let mut updated = spec.clone();
+        updated.attempts.push(Attempt {
+            at_unix_ms: fsutil::unix_ms(),
+            error: error.to_string(),
+            backoff_ms: 0,
+        });
+        updated.not_before_unix_ms = 0;
+        let from = self.spec_path("running", &spec.id);
+        fsutil::write_atomic(&from, updated.to_json().to_string_pretty().as_bytes())?;
+        fsutil::failpoint("spool_rename")?;
+        std::fs::rename(&from, self.spec_path("failed", &spec.id))
+            .with_context(|| format!("quarantining job {}", spec.id))?;
+        self.remove_lease(&spec.id);
+        Ok(updated)
+    }
+
+    /// Age of a running job's claim (the `queue/ -> running/` rename),
+    /// from the spec file's change time. This shields a freshly claimed
+    /// job from recovery even before its lease file lands.
+    fn claim_age_ms(&self, id: &str, now: u64) -> u64 {
+        let path = self.spec_path("running", id);
+        let Ok(meta) = std::fs::metadata(&path) else {
+            return u64::MAX; // vanished: the recovery rename will no-op
+        };
+        #[cfg(unix)]
+        let stamp_ms = {
+            use std::os::unix::fs::MetadataExt;
+            (meta.ctime().max(0) as u64) * 1000 + (meta.ctime_nsec().max(0) as u64) / 1_000_000
+        };
+        #[cfg(not(unix))]
+        let stamp_ms = meta
+            .modified()
+            .ok()
+            .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        now.saturating_sub(stamp_ms)
+    }
+
+    /// Sweep expired `running/` jobs back into `queue/`. With
+    /// `lease_timeout_ms == 0` this is the legacy single-scheduler
+    /// startup sweep: every lease-less running job is a crash leftover
+    /// and is re-queued immediately (leased jobs are left alone). With a
+    /// timeout, a job is only recovered once both its lease heartbeat
+    /// and its claim rename are older than the timeout plus a
+    /// deterministic per-id jitter — safe to call from concurrent
+    /// schedulers mid-drain. Re-queued jobs resume from their latest
+    /// intact checkpoint when re-claimed.
+    pub fn recover_interrupted(&self, lease_timeout_ms: u64) -> Result<Vec<String>> {
+        let now = fsutil::unix_ms();
         let mut recovered = Vec::new();
         for id in self.jobs_in("running")? {
+            let lease = self.read_lease(&id);
+            if lease_timeout_ms == 0 {
+                if lease.is_some() {
+                    continue;
+                }
+            } else {
+                let expiry = lease_timeout_ms + lease_jitter(&id, lease_timeout_ms);
+                let hb_age = match &lease {
+                    Some(l) => now.saturating_sub(l.heartbeat_unix_ms),
+                    None => u64::MAX,
+                };
+                if hb_age.min(self.claim_age_ms(&id, now)) <= expiry {
+                    continue;
+                }
+            }
             let from = self.spec_path("running", &id);
             let to = self.spec_path("queue", &id);
+            fsutil::failpoint("spool_rename")?;
             match std::fs::rename(&from, &to) {
-                Ok(()) => recovered.push(id),
+                Ok(()) => {
+                    self.remove_lease(&id);
+                    recovered.push(id);
+                }
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
                 Err(e) => {
                     return Err(e).with_context(|| format!("recovering job {id}"));
@@ -319,6 +531,45 @@ impl Spool {
         }
         Ok(recovered)
     }
+
+    /// Append one line to `work/<id>/claims.log` — the exactly-once
+    /// audit trail the multi-scheduler tests assert on.
+    pub fn note_claim(&self, id: &str, owner: &str, attempt: usize) -> Result<()> {
+        use std::io::Write;
+        let dir = self.work_dir(id);
+        std::fs::create_dir_all(&dir)?;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join("claims.log"))?;
+        writeln!(f, "{} {owner} attempt={attempt}", fsutil::unix_ms())?;
+        Ok(())
+    }
+
+    /// `work/<id>/` directories whose id no longer exists in any
+    /// lifecycle dir — scratch left behind by quarantined unreadable
+    /// specs (or manual deletion). `mlorc fsck --repair` reaps these.
+    pub fn orphan_work_dirs(&self) -> Result<Vec<String>> {
+        let dir = self.dir("work");
+        let entries =
+            std::fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?;
+        let mut orphans = Vec::new();
+        for entry in entries.flatten() {
+            let Ok(name) = entry.file_name().into_string() else { continue };
+            if LIFECYCLE_DIRS.iter().all(|state| !self.spec_path(state, &name).exists()) {
+                orphans.push(name);
+            }
+        }
+        orphans.sort();
+        Ok(orphans)
+    }
+}
+
+/// Deterministic per-id recovery jitter (up to a quarter of the
+/// timeout): keeps a pack of schedulers from stampeding the same
+/// expired jobs at the same instant.
+fn lease_jitter(id: &str, timeout_ms: u64) -> u64 {
+    fsutil::fnv1a64(id.as_bytes()) % (timeout_ms / 4 + 1)
 }
 
 #[cfg(test)]
@@ -344,6 +595,8 @@ mod tests {
             engine: Engine::Host,
             checkpoint_every: 5,
             priority,
+            attempts: Vec::new(),
+            not_before_unix_ms: 0,
             cfg: RunConfig::new("host-nano", Method::MlorcAdamW, TaskKind::MathChain, 20),
         }
     }
@@ -383,9 +636,82 @@ mod tests {
         let _ = spool.claim_next().unwrap().unwrap();
         assert!(spool.jobs_in("queue").unwrap().is_empty());
         // simulate a crash: the running spec is still there on "restart"
-        let recovered = spool.recover_interrupted().unwrap();
+        let recovered = spool.recover_interrupted(0).unwrap();
         assert_eq!(recovered, vec!["job001_x"]);
         assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_x"]);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn leases_gate_recovery() {
+        let (root, spool) = tmp_spool("lease");
+        spool.submit(&spec("job001_leased")).unwrap();
+        let claimed = spool.claim_next_as(Some("sched-A"), 50).unwrap().unwrap();
+        assert_eq!(claimed.id, "job001_leased");
+        let lease = spool.read_lease("job001_leased").unwrap();
+        assert_eq!(lease.owner, "sched-A");
+        assert_eq!(lease.timeout_ms, 50);
+
+        // a leased job is invisible to the legacy startup sweep...
+        assert!(spool.recover_interrupted(0).unwrap().is_empty());
+        // ...and to a timed sweep while the heartbeat is fresh
+        assert!(spool.recover_interrupted(50).unwrap().is_empty());
+        assert_eq!(spool.jobs_in("running").unwrap(), vec!["job001_leased"]);
+
+        // once the heartbeat AND the claim are stale past
+        // timeout + jitter (jitter <= timeout/4), the job is stolen
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let recovered = spool.recover_interrupted(50).unwrap();
+        assert_eq!(recovered, vec!["job001_leased"]);
+        assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_leased"]);
+        assert!(spool.read_lease("job001_leased").is_none(), "recovery must drop the lease");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn retry_requeue_records_attempts_and_backoff() {
+        let (root, spool) = tmp_spool("retry");
+        spool.submit(&spec("job001_flaky")).unwrap();
+        let claimed = spool.claim_next().unwrap().unwrap();
+
+        // first failure: re-queued with a long backoff -> not claimable
+        let updated = spool.requeue_failed(&claimed, "injected ENOSPC", 60_000).unwrap();
+        assert_eq!(updated.attempts.len(), 1);
+        assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_flaky"]);
+        assert!(spool.claim_next().unwrap().is_none(), "backoff gate must hold");
+        let on_disk = spool.load_spec("queue", "job001_flaky").unwrap();
+        assert_eq!(on_disk.attempts.len(), 1);
+        assert!(on_disk.attempts[0].error.contains("ENOSPC"));
+        assert_eq!(on_disk.attempts[0].backoff_ms, 60_000);
+        assert!(on_disk.not_before_unix_ms > fsutil::unix_ms());
+
+        // zero the gate (as if the backoff elapsed) and fail again,
+        // terminally this time: full history lands in failed/
+        let mut ungated = on_disk.clone();
+        ungated.not_before_unix_ms = 0;
+        fsutil::write_atomic(
+            &spool.spec_path("queue", "job001_flaky"),
+            ungated.to_json().to_string_pretty().as_bytes(),
+        )
+        .unwrap();
+        let again = spool.claim_next().unwrap().unwrap();
+        assert_eq!(again.attempts.len(), 1);
+        let terminal = spool.fail_terminal(&again, "injected ENOSPC again").unwrap();
+        assert_eq!(terminal.attempts.len(), 2);
+        assert_eq!(spool.jobs_in("failed").unwrap(), vec!["job001_flaky"]);
+        let dead = spool.load_spec("failed", "job001_flaky").unwrap();
+        assert_eq!(dead.attempts.len(), 2);
+        assert!(dead.attempts[1].error.contains("again"));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn orphan_work_dirs_are_reported() {
+        let (root, spool) = tmp_spool("orphan");
+        spool.submit(&spec("job001_live")).unwrap();
+        std::fs::create_dir_all(spool.work_dir("job001_live")).unwrap();
+        std::fs::create_dir_all(spool.work_dir("job999_ghost")).unwrap();
+        assert_eq!(spool.orphan_work_dirs().unwrap(), vec!["job999_ghost"]);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -10,10 +10,14 @@
 //! `tests/serve_spool.rs`).
 //!
 //! Crash safety: workers checkpoint running jobs every
-//! `JobSpec::checkpoint_every` steps through the rotated v2 writer; on
-//! startup the scheduler sweeps crash-stranded `running/` specs back
-//! into the queue, and a re-claimed job resumes from its latest
-//! checkpoint instead of restarting.
+//! `JobSpec::checkpoint_every` steps through the rotated v2 writer, and
+//! every claim is backed by a heartbeat-refreshed lease. Expired leases
+//! are swept back into the queue (at startup and whenever a worker goes
+//! idle), so any number of `mlorc serve` processes can share one spool:
+//! a crashed peer's jobs are stolen after the lease timeout and resume
+//! from their latest intact checkpoint. Failed jobs are retried with
+//! exponential backoff up to `max_retries` before quarantine in
+//! `failed/`, with the attempt history recorded in the spec.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -30,9 +34,10 @@ use super::host::HostTrainer;
 use super::queue::{Engine, JobSpec, Spool};
 use super::status::JobStatus;
 
-/// Exit code of the `--die-after-checkpoints` simulated crash (CI uses it
-/// to tell "crashed as instructed" from a real failure).
-pub const CRASH_EXIT_CODE: i32 = 86;
+/// Exit code of an injected-kill crash (`--die-after-checkpoints`, any
+/// `kill` failpoint) — CI uses it to tell "crashed as instructed" from a
+/// real failure.
+pub const CRASH_EXIT_CODE: i32 = fsutil::KILL_EXIT_CODE;
 
 pub struct ServeOpts {
     /// Max concurrent jobs.
@@ -42,42 +47,79 @@ pub struct ServeOpts {
     /// Idle poll period when not draining.
     pub poll_ms: u64,
     /// Test hook: exit the whole process with [`CRASH_EXIT_CODE`] after
-    /// this many cadence checkpoints across all jobs (0 = off). Makes
-    /// the CI kill/restart smoke test deterministic.
+    /// this many cadence checkpoints across all jobs (0 = off). Sugar
+    /// for arming the `ckpt_cadence:kill@N` failpoint.
     pub die_after_checkpoints: usize,
+    /// Failed-job retry budget: a job is re-queued with backoff until it
+    /// has failed `max_retries + 1` times, then quarantined to `failed/`.
+    pub max_retries: usize,
+    /// Base retry backoff; doubles per recorded attempt.
+    pub retry_backoff_ms: u64,
+    /// Lease liveness window. 0 = legacy single-scheduler mode: claims
+    /// carry no liveness promise, and recovery (startup only) re-queues
+    /// every unprotected running job immediately. > 0 = multi-scheduler
+    /// mode: workers heartbeat their leases and sweep expired peers'
+    /// jobs back into the queue mid-drain.
+    pub lease_timeout_ms: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { jobs: 2, drain: false, poll_ms: 500, die_after_checkpoints: 0 }
+        ServeOpts {
+            jobs: 2,
+            drain: false,
+            poll_ms: 500,
+            die_after_checkpoints: 0,
+            max_retries: 2,
+            retry_backoff_ms: 500,
+            lease_timeout_ms: 30_000,
+        }
     }
 }
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServeSummary {
     pub done: usize,
+    /// Jobs quarantined to `failed/` with their retry budget exhausted.
     pub failed: usize,
-    /// Crash-stranded jobs swept back into the queue at startup.
+    /// Interrupted jobs swept back into the queue at startup.
     pub recovered: usize,
+    /// Failed runs re-queued for retry (not terminal).
+    pub retried: usize,
 }
 
 /// Run the scheduler until the spool drains (`opts.drain`) or forever.
 pub fn serve(spool: &Spool, opts: &ServeOpts) -> Result<ServeSummary> {
-    let recovered = spool.recover_interrupted()?;
+    if opts.die_after_checkpoints > 0 {
+        fsutil::failpoints::arm(&format!("ckpt_cadence:kill@{}", opts.die_after_checkpoints))?;
+    }
+    let recovered = spool.recover_interrupted(opts.lease_timeout_ms)?;
     for id in &recovered {
         log::info!("serve: recovered interrupted job {id}; it will resume from its latest checkpoint");
     }
+    match spool.orphan_work_dirs() {
+        Ok(orphans) if !orphans.is_empty() => log::warn!(
+            "serve: {} orphaned work dir(s) with no spec in any lifecycle dir \
+             (run `mlorc fsck --repair` to reap): {}",
+            orphans.len(),
+            orphans.join(", ")
+        ),
+        Ok(_) => {}
+        Err(e) => log::warn!("serve: orphan sweep failed: {e:#}"),
+    }
+    let owner = format!("sched-{}-{:x}", std::process::id(), fsutil::unix_ms());
     let n = opts.jobs.max(1);
     let slice = (threads::budget() / n).max(1);
     log::info!(
-        "serve: up to {n} concurrent jobs, {slice} kernel threads each (budget {})",
+        "serve: up to {n} concurrent jobs, {slice} kernel threads each (budget {}), owner {owner}",
         threads::budget()
     );
     let counters = Counters::default();
     std::thread::scope(|s| {
         for worker in 0..n {
             let counters = &counters;
-            s.spawn(move || worker_loop(spool, opts, slice, worker, counters));
+            let owner = owner.as_str();
+            s.spawn(move || worker_loop(spool, opts, slice, worker, owner, counters));
         }
     });
     // A worker that dies on a spool error must not masquerade as a clean
@@ -93,6 +135,7 @@ pub fn serve(spool: &Spool, opts: &ServeOpts) -> Result<ServeSummary> {
         done: counters.done.into_inner(),
         failed: counters.failed.into_inner(),
         recovered: recovered.len(),
+        retried: counters.retried.into_inner(),
     })
 }
 
@@ -102,12 +145,26 @@ struct Counters {
     ckpts: AtomicUsize,
     done: AtomicUsize,
     failed: AtomicUsize,
+    retried: AtomicUsize,
     claim_errors: AtomicUsize,
 }
 
-fn worker_loop(spool: &Spool, opts: &ServeOpts, slice: usize, worker: usize, counters: &Counters) {
+/// Exponential backoff for the `attempts`-th retry (0-based).
+fn backoff_ms(base: u64, attempts: usize) -> u64 {
+    base.saturating_mul(1u64 << attempts.min(16) as u32)
+}
+
+fn worker_loop(
+    spool: &Spool,
+    opts: &ServeOpts,
+    slice: usize,
+    worker: usize,
+    owner: &str,
+    counters: &Counters,
+) {
+    let worker_owner = format!("{owner}/w{worker}");
     loop {
-        let claimed = match spool.claim_next() {
+        let claimed = match spool.claim_next_as(Some(&worker_owner), opts.lease_timeout_ms) {
             Ok(c) => c,
             Err(e) => {
                 log::error!("serve worker {worker}: claiming from the spool failed: {e:#}");
@@ -116,21 +173,53 @@ fn worker_loop(spool: &Spool, opts: &ServeOpts, slice: usize, worker: usize, cou
             }
         };
         let Some(spec) = claimed else {
+            // nothing claimable; a dead peer's expired leases may still
+            // be holding jobs hostage in running/ (only meaningful in
+            // lease mode — with timeout 0 our own claims would look
+            // expired, so the sweep runs at startup only)
+            if opts.lease_timeout_ms > 0 {
+                match spool.recover_interrupted(opts.lease_timeout_ms) {
+                    Ok(r) if !r.is_empty() => {
+                        log::info!(
+                            "serve worker {worker}: recovered {} expired-lease job(s)",
+                            r.len()
+                        );
+                        continue;
+                    }
+                    Ok(_) => {}
+                    Err(e) => {
+                        log::warn!("serve worker {worker}: recovery sweep failed: {e:#}");
+                    }
+                }
+            }
             if opts.drain {
-                return;
+                // the drain is only complete once nothing is queued
+                // (retry backoffs included) and nothing is running
+                // (here or on a peer)
+                let busy = spool.jobs_in("queue").map(|v| !v.is_empty()).unwrap_or(true)
+                    || spool.jobs_in("running").map(|v| !v.is_empty()).unwrap_or(true);
+                if !busy {
+                    return;
+                }
             }
             std::thread::sleep(Duration::from_millis(opts.poll_ms.max(10)));
             continue;
         };
+        if let Err(e) = spool.note_claim(&spec.id, &worker_owner, spec.attempts.len()) {
+            log::warn!("serve worker {worker}: claims.log append failed for {}: {e:#}", spec.id);
+        }
         log::info!(
-            "serve worker {worker}: job {} ({} / {} / {} steps, engine {})",
+            "serve worker {worker}: job {} ({} / {} / {} steps, engine {}, attempt {})",
             spec.id,
             spec.cfg.preset,
             spec.cfg.method.name(),
             spec.cfg.steps,
-            spec.engine.name()
+            spec.engine.name(),
+            spec.attempts.len() + 1
         );
-        let result = threads::with_budget(slice, || run_job(spool, &spec, opts, &counters.ckpts));
+        let result = threads::with_budget(slice, || {
+            run_job(spool, &spec, opts, &worker_owner, &counters.ckpts)
+        });
         match result {
             Ok(status) => {
                 let _ = status.write(spool);
@@ -141,14 +230,54 @@ fn worker_loop(spool: &Spool, opts: &ServeOpts, slice: usize, worker: usize, cou
                 log::info!("serve worker {worker}: job {} done", spec.id);
             }
             Err(e) => {
-                let mut status = JobStatus::from_spec(&spec, "failed");
-                status.error = Some(format!("{e:#}"));
-                let _ = status.write(spool);
-                if let Err(e2) = spool.finish(&spec.id, false) {
-                    log::error!("serve worker {worker}: moving {} to failed/: {e2:#}", spec.id);
+                let err_text = format!("{e:#}");
+                let failures = spec.attempts.len() + 1;
+                if failures <= opts.max_retries {
+                    let backoff = backoff_ms(opts.retry_backoff_ms, spec.attempts.len());
+                    match spool.requeue_failed(&spec, &err_text, backoff) {
+                        Ok(updated) => {
+                            let mut status = JobStatus::from_spec(&updated, "queued");
+                            status.error = Some(err_text.clone());
+                            let _ = status.write(spool);
+                            counters.retried.fetch_add(1, Ordering::SeqCst);
+                            log::warn!(
+                                "serve worker {worker}: job {} failed (attempt {failures} of {}), \
+                                 retrying in {backoff} ms: {err_text}",
+                                spec.id,
+                                opts.max_retries + 1
+                            );
+                            continue;
+                        }
+                        Err(e2) => {
+                            log::error!(
+                                "serve worker {worker}: could not re-queue {} ({e2:#}); \
+                                 quarantining instead",
+                                spec.id
+                            );
+                        }
+                    }
+                }
+                // retry budget exhausted (or the re-queue itself failed)
+                match spool.fail_terminal(&spec, &err_text) {
+                    Ok(updated) => {
+                        let mut status = JobStatus::from_spec(&updated, "failed");
+                        status.error = Some(err_text.clone());
+                        let _ = status.write(spool);
+                    }
+                    Err(e2) => {
+                        log::error!(
+                            "serve worker {worker}: quarantining {} failed ({e2:#}); \
+                             falling back to a bare finish",
+                            spec.id
+                        );
+                        let mut status = JobStatus::from_spec(&spec, "failed");
+                        status.error = Some(err_text.clone());
+                        let _ = status.write(spool);
+                        let _ = spool.finish(&spec.id, false);
+                    }
                 }
                 counters.failed.fetch_add(1, Ordering::SeqCst);
-                log::error!("serve worker {worker}: job {} failed: {e:#}", spec.id);
+                log::error!("serve worker {worker}: job {} failed terminally: {err_text}", spec.id);
             }
         }
     }
@@ -212,12 +341,13 @@ fn run_job(
     spool: &Spool,
     spec: &JobSpec,
     opts: &ServeOpts,
+    worker_owner: &str,
     ckpts: &AtomicUsize,
 ) -> Result<JobStatus> {
     match spec.engine {
         Engine::Host => {
             let mut tr = HostTrainer::new(spec.cfg.clone())?;
-            drive(&mut tr, spool, spec, opts, ckpts)
+            drive(&mut tr, spool, spec, opts, worker_owner, ckpts)
         }
         Engine::Graph => {
             let dir = fsutil::artifacts_dir()?;
@@ -232,7 +362,7 @@ fn run_job(
             let rt = Runtime::cpu(&dir)?;
             let preset = manifest.preset(&spec.cfg.preset)?;
             let mut tr = Trainer::new(&rt, preset, spec.cfg.clone())?;
-            drive(&mut tr, spool, spec, opts, ckpts)
+            drive(&mut tr, spool, spec, opts, worker_owner, ckpts)
         }
     }
 }
@@ -243,6 +373,7 @@ fn drive(
     spool: &Spool,
     spec: &JobSpec,
     opts: &ServeOpts,
+    worker_owner: &str,
     ckpts: &AtomicUsize,
 ) -> Result<JobStatus> {
     let t0 = Instant::now();
@@ -257,14 +388,29 @@ fn drive(
     status.step = tr.step_count();
     let _ = status.write(spool);
 
+    // Heartbeat at a third of the lease timeout: two missed beats of
+    // headroom before a peer's sweep could consider this job dead.
+    let hb_period = Duration::from_millis((opts.lease_timeout_ms / 3).max(1));
+    let mut last_hb = Instant::now();
+
     let mut last_loss = None;
     while tr.step_count() < spec.cfg.steps {
+        if opts.lease_timeout_ms > 0 && last_hb.elapsed() >= hb_period {
+            if let Err(e) = spool.write_lease(&spec.id, worker_owner, opts.lease_timeout_ms) {
+                log::warn!("job {}: lease heartbeat failed: {e:#}", spec.id);
+            }
+            last_hb = Instant::now();
+        }
         let loss = tr.step()?;
         last_loss = Some(loss as f64);
         let s = tr.step_count();
         if spec.checkpoint_every > 0 && s % spec.checkpoint_every == 0 && s < spec.cfg.steps {
             tr.save(&ckpt_root)?;
-            note_checkpoint(opts, ckpts, &spec.id);
+            ckpts.fetch_add(1, Ordering::SeqCst);
+            // the crash hook (`--die-after-checkpoints` /
+            // MLORC_FAILPOINT=ckpt_cadence:...) fires after the snapshot
+            // is committed, like a real mid-run kill
+            fsutil::failpoint("ckpt_cadence")?;
             status.step = s;
             status.loss = last_loss;
             // adaptive-rank layouts shrink their state over the run
@@ -285,14 +431,16 @@ fn drive(
     Ok(status)
 }
 
-/// Count a cadence checkpoint; with the `--die-after-checkpoints` test
-/// hook armed, simulate a hard crash once the count is reached.
-fn note_checkpoint(opts: &ServeOpts, ckpts: &AtomicUsize, id: &str) {
-    let n = ckpts.fetch_add(1, Ordering::SeqCst) + 1;
-    if opts.die_after_checkpoints > 0 && n >= opts.die_after_checkpoints {
-        log::warn!(
-            "serve: simulated crash after {n} checkpoints (while running {id}) — exiting {CRASH_EXIT_CODE}"
-        );
-        std::process::exit(CRASH_EXIT_CODE);
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_ms(500, 0), 500);
+        assert_eq!(backoff_ms(500, 1), 1000);
+        assert_eq!(backoff_ms(500, 3), 4000);
+        // deep attempt counts must not overflow
+        assert!(backoff_ms(u64::MAX / 2, 40) >= u64::MAX / 2);
     }
 }

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::util::fsutil;
 use crate::util::json::Json;
 
-use super::queue::{JobSpec, Spool, LIFECYCLE_DIRS};
+use super::queue::{Attempt, JobSpec, Spool, LIFECYCLE_DIRS};
 
 #[derive(Debug, Clone)]
 pub struct JobStatus {
@@ -38,6 +38,8 @@ pub struct JobStatus {
     pub rank_shrink_events: usize,
     pub wall_secs: f64,
     pub error: Option<String>,
+    /// Failed-run history from the spec (retry/backoff bookkeeping).
+    pub attempts: Vec<Attempt>,
 }
 
 impl JobStatus {
@@ -61,6 +63,7 @@ impl JobStatus {
             rank_shrink_events: 0,
             wall_secs: 0.0,
             error: None,
+            attempts: spec.attempts.clone(),
         }
     }
 
@@ -92,6 +95,7 @@ impl JobStatus {
                     None => Json::Null,
                 },
             ),
+            ("attempts", Json::arr(self.attempts.iter().map(Attempt::to_json))),
         ])
     }
 
@@ -124,13 +128,23 @@ impl JobStatus {
                 Json::Null => None,
                 v => Some(v.as_str()?.to_string()),
             },
+            // optional: status files written before retries existed
+            attempts: match j.get("attempts") {
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(Attempt::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
         })
     }
 
     pub fn write(&self, spool: &Spool) -> Result<()> {
-        fsutil::write_atomic(
+        fsutil::write_atomic_site(
             &spool.status_path(&self.id),
             self.to_json().to_string_pretty().as_bytes(),
+            "status_write",
         )
     }
 }
@@ -176,6 +190,7 @@ pub fn aggregate(spool: &Spool) -> Result<Vec<JobStatus>> {
                             rank_shrink_events: 0,
                             wall_secs: 0.0,
                             error: None,
+                            attempts: Vec::new(),
                         };
                         st.error = Some(format!("unreadable job spec: {e:#}"));
                         st
@@ -183,6 +198,13 @@ pub fn aggregate(spool: &Spool) -> Result<Vec<JobStatus>> {
                 },
             };
             st.state = state.to_string();
+            // the spec is the attempt history of record: a status file
+            // can lag (or never land, e.g. under injected ENOSPC)
+            if let Ok(spec) = spool.load_spec(dir, &id) {
+                if spec.attempts.len() > st.attempts.len() {
+                    st.attempts = spec.attempts;
+                }
+            }
             out.push(st);
         }
     }
@@ -218,6 +240,15 @@ pub fn render_table(rows: &[JobStatus]) -> String {
         if let Some(err) = &r.error {
             let _ = writeln!(s, "    error: {err}");
         }
+        if !r.attempts.is_empty() {
+            let last = r.attempts.last().unwrap();
+            let _ = writeln!(
+                s,
+                "    attempts: {} failed run(s); last: {}",
+                r.attempts.len(),
+                last.error
+            );
+        }
     }
     let count = |st: &str| rows.iter().filter(|r| r.state == st).count();
     let _ = write!(
@@ -245,6 +276,8 @@ mod tests {
             engine: Engine::Host,
             checkpoint_every: 5,
             priority: 0,
+            attempts: Vec::new(),
+            not_before_unix_ms: 0,
             cfg: RunConfig::new("host-nano", Method::MlorcLion, TaskKind::MathChain, 30),
         }
     }

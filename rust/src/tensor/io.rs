@@ -18,6 +18,13 @@
 //!
 //! No compression — checkpoints are local scratch, and `write_atomic`
 //! protects against torn files.
+//!
+//! Integrity: writers append an 8-byte footer `"CRC1"` + CRC-32 (IEEE,
+//! little-endian) of every preceding byte. Readers verify the checksum
+//! when the footer is present and still accept footer-less files written
+//! by older builds. A checksum mismatch is a hard error — a torn or
+//! bit-flipped checkpoint must never be silently resumed from
+//! (`docs/checkpoint-v2.md`).
 
 use std::collections::BTreeMap;
 use std::io::{Cursor, Read, Write};
@@ -29,6 +36,7 @@ use super::{Tensor, TensorU8};
 use crate::util::fsutil;
 
 const MAGIC: &[u8; 8] = b"RTEN1\0\0\0";
+const FOOTER_MAGIC: &[u8; 4] = b"CRC1";
 
 /// One stored tensor — f32 (parameters, moments, scales) or raw u8
 /// (quantized codes).
@@ -73,8 +81,35 @@ fn write_entry(
     payload(buf)
 }
 
-/// Write a mixed f32/u8 tensor map.
-pub fn write_rten_entries(path: &Path, entries: &BTreeMap<String, RtenEntry>) -> Result<()> {
+/// Append the integrity footer: `"CRC1"` + CRC-32 of everything before it.
+fn push_footer(buf: &mut Vec<u8>) {
+    let crc = fsutil::crc32(buf);
+    buf.extend_from_slice(FOOTER_MAGIC);
+    buf.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Validate and strip the `"CRC1"` footer when present; files written
+/// before the footer existed pass through unchanged.
+fn verify_footer<'a>(bytes: &'a [u8], path: &Path) -> Result<&'a [u8]> {
+    let n = bytes.len();
+    if n < MAGIC.len() + 8 || &bytes[n - 8..n - 4] != FOOTER_MAGIC {
+        return Ok(bytes);
+    }
+    let payload = &bytes[..n - 8];
+    let stored = u32::from_le_bytes([bytes[n - 4], bytes[n - 3], bytes[n - 2], bytes[n - 1]]);
+    let computed = fsutil::crc32(payload);
+    if stored != computed {
+        bail!(
+            "{}: CRC-32 mismatch (footer {stored:08x}, payload {computed:08x}) — \
+             torn or corrupt file",
+            path.display()
+        );
+    }
+    Ok(payload)
+}
+
+/// Serialize a mixed f32/u8 tensor map to RTEN bytes (footer included).
+pub fn rten_entry_bytes(entries: &BTreeMap<String, RtenEntry>) -> Result<Vec<u8>> {
     let mut buf: Vec<u8> = Vec::new();
     buf.write_all(MAGIC)?;
     buf.write_all(&(entries.len() as u32).to_le_bytes())?;
@@ -91,13 +126,20 @@ pub fn write_rten_entries(path: &Path, entries: &BTreeMap<String, RtenEntry>) ->
             Ok(())
         })?;
     }
-    fsutil::write_atomic(path, &buf)
+    push_footer(&mut buf);
+    Ok(buf)
+}
+
+/// Write a mixed f32/u8 tensor map.
+pub fn write_rten_entries(path: &Path, entries: &BTreeMap<String, RtenEntry>) -> Result<()> {
+    fsutil::write_atomic(path, &rten_entry_bytes(entries)?)
 }
 
 /// Read a mixed f32/u8 tensor map.
 pub fn read_rten_entries(path: &Path) -> Result<BTreeMap<String, RtenEntry>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    let mut cur = Cursor::new(bytes.as_slice());
+    let payload = verify_footer(&bytes, path)?;
+    let mut cur = Cursor::new(payload);
     let mut magic = [0u8; 8];
     cur.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -145,9 +187,9 @@ pub fn read_rten_entries(path: &Path) -> Result<BTreeMap<String, RtenEntry>> {
     Ok(out)
 }
 
-/// All-f32 convenience writer (parameters, v1 checkpoints) —
-/// serializes straight from the borrowed map, no owned copy.
-pub fn write_rten(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+/// Serialize an all-f32 tensor map to RTEN bytes (footer included) —
+/// straight from the borrowed map, no owned copy.
+pub fn rten_bytes(tensors: &BTreeMap<String, Tensor>) -> Result<Vec<u8>> {
     let mut buf: Vec<u8> = Vec::new();
     buf.write_all(MAGIC)?;
     buf.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -159,7 +201,13 @@ pub fn write_rten(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()>
             Ok(())
         })?;
     }
-    fsutil::write_atomic(path, &buf)
+    push_footer(&mut buf);
+    Ok(buf)
+}
+
+/// All-f32 convenience writer (parameters, v1 checkpoints).
+pub fn write_rten(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    fsutil::write_atomic(path, &rten_bytes(tensors)?)
 }
 
 /// All-f32 convenience reader — errors if the file holds a u8 entry.
@@ -220,6 +268,27 @@ mod tests {
         assert_eq!(back, m);
         // the all-f32 reader refuses the u8 entry instead of misreading it
         assert!(read_rten(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn checksum_footer_catches_corruption() {
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap());
+        let path = std::env::temp_dir().join(format!("rten_crc_{}.bin", std::process::id()));
+        write_rten(&path, &m).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        assert_eq!(&bytes[n - 8..n - 4], FOOTER_MAGIC, "writer must append the footer");
+        // flip one payload bit: the reader must refuse the file
+        bytes[MAGIC.len() + 5] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_rten(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC-32 mismatch"), "{err:#}");
+        // a footer-less (legacy) file still parses
+        let legacy = rten_bytes(&m).unwrap();
+        std::fs::write(&path, &legacy[..legacy.len() - 8]).unwrap();
+        assert_eq!(read_rten(&path).unwrap(), m);
         std::fs::remove_file(&path).unwrap();
     }
 

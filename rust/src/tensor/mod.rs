@@ -4,5 +4,8 @@
 mod io;
 mod tensor;
 
-pub use io::{read_rten, read_rten_entries, write_rten, write_rten_entries, RtenEntry};
+pub use io::{
+    read_rten, read_rten_entries, rten_bytes, rten_entry_bytes, write_rten, write_rten_entries,
+    RtenEntry,
+};
 pub use tensor::{Tensor, TensorI32, TensorU8};

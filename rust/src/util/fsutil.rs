@@ -1,8 +1,191 @@
-//! Small filesystem helpers shared by checkpointing, metrics and benches.
+//! Small filesystem helpers shared by checkpointing, metrics and benches,
+//! plus the deterministic fault-injection (failpoint) harness that the
+//! robustness tests and the CI fault-matrix drive.
+//!
+//! # Failpoints
+//!
+//! A failpoint is a named site in the IO path (`ckpt_write`,
+//! `latest_write`, `status_write`, `spool_rename`, `lease_write`,
+//! `ckpt_cadence`) where a fault can be injected on the Nth hit. Specs
+//! are armed programmatically ([`failpoints::arm`]) or via the
+//! `MLORC_FAILPOINT` environment variable:
+//!
+//! ```text
+//! MLORC_FAILPOINT="ckpt_write:torn@3,status_write:enospc@1+"
+//! ```
+//!
+//! Grammar: `site:action@N` fires on the Nth hit only; `site:action@N+`
+//! fires on every hit from the Nth on; `@N` defaults to `@1`. Actions:
+//!
+//! * `torn`   — write only the first half of the bytes, report success
+//!   (silent corruption, what a power cut mid-write leaves behind)
+//! * `rename` — leave the `.tmp` file behind and fail the rename
+//! * `enospc` — fail the write as if the disk were full
+//! * `kill`   — abort the process with exit code [`KILL_EXIT_CODE`]
+//!
+//! Hit counters are per-spec and process-global, so `ckpt_write:kill@6`
+//! means "die on the 6th checkpoint file write anywhere in the process" —
+//! which is exactly how a crash lands in production. Tests that arm
+//! failpoints must serialize on a shared lock and [`failpoints::clear`]
+//! when done.
 
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+
+/// Exit code used by the `kill` failpoint action — same code the serve
+/// crash hook uses, so harness scripts can assert on one value.
+pub const KILL_EXIT_CODE: i32 = 86;
+
+/// What an armed failpoint does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailAction {
+    /// Write the first half of the payload to the final path and report
+    /// success.
+    Torn,
+    /// Write the tmp file, then fail the rename.
+    RenameFail,
+    /// Fail as if the device were out of space.
+    Enospc,
+    /// Abort the process with [`KILL_EXIT_CODE`].
+    Kill,
+}
+
+#[derive(Debug, Clone)]
+struct Failpoint {
+    site: String,
+    action: FailAction,
+    /// Fires on the `at`-th hit (1-based).
+    at: u64,
+    /// `@N+`: keep firing on every hit from the `at`-th on.
+    repeat: bool,
+    hits: u64,
+    done: bool,
+}
+
+/// `None` = the `MLORC_FAILPOINT` env var has not been consulted yet.
+static REGISTRY: Mutex<Option<Vec<Failpoint>>> = Mutex::new(None);
+
+pub mod failpoints {
+    use super::*;
+
+    fn parse_one(tok: &str) -> Result<Failpoint> {
+        let (site, rest) = tok
+            .split_once(':')
+            .with_context(|| format!("failpoint '{tok}': want site:action[@N]"))?;
+        let (action_s, count_s) = match rest.split_once('@') {
+            Some((a, c)) => (a, c),
+            None => (rest, "1"),
+        };
+        let action = match action_s {
+            "torn" => FailAction::Torn,
+            "rename" => FailAction::RenameFail,
+            "enospc" => FailAction::Enospc,
+            "kill" => FailAction::Kill,
+            other => bail!(
+                "failpoint '{tok}': unknown action '{other}' \
+                 (want torn|rename|enospc|kill)"
+            ),
+        };
+        let (count_s, repeat) = match count_s.strip_suffix('+') {
+            Some(c) => (c, true),
+            None => (count_s, false),
+        };
+        let at: u64 = count_s
+            .parse()
+            .with_context(|| format!("failpoint '{tok}': bad hit count '{count_s}'"))?;
+        if at == 0 {
+            bail!("failpoint '{tok}': hit count is 1-based");
+        }
+        Ok(Failpoint { site: site.to_string(), action, at, repeat, hits: 0, done: false })
+    }
+
+    fn parse_spec(spec: &str) -> Result<Vec<Failpoint>> {
+        spec.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(parse_one)
+            .collect()
+    }
+
+    fn with_registry<T>(f: impl FnOnce(&mut Vec<Failpoint>) -> T) -> T {
+        let mut guard = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        if guard.is_none() {
+            let mut initial = Vec::new();
+            if let Ok(spec) = std::env::var("MLORC_FAILPOINT") {
+                match parse_spec(&spec) {
+                    Ok(fps) => initial = fps,
+                    Err(e) => log::warn!("ignoring bad MLORC_FAILPOINT: {e:#}"),
+                }
+            }
+            *guard = Some(initial);
+        }
+        f(guard.as_mut().unwrap())
+    }
+
+    /// Arm additional failpoints (same grammar as `MLORC_FAILPOINT`).
+    pub fn arm(spec: &str) -> Result<()> {
+        let fps = parse_spec(spec)?;
+        with_registry(|reg| reg.extend(fps));
+        Ok(())
+    }
+
+    /// Disarm everything (the env var is *not* re-read afterwards).
+    pub fn clear() {
+        let mut guard = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        *guard = Some(Vec::new());
+    }
+
+    /// True if any failpoint is currently armed (fired one-shots count
+    /// as disarmed).
+    pub fn active() -> bool {
+        with_registry(|reg| reg.iter().any(|fp| !fp.done))
+    }
+
+    /// Record one hit on `site`; returns the action to perform if an
+    /// armed failpoint fires. The first non-exhausted spec matching the
+    /// site receives the hit.
+    pub(super) fn hit(site: &str) -> Option<FailAction> {
+        if site.is_empty() {
+            return None;
+        }
+        with_registry(|reg| {
+            for fp in reg.iter_mut() {
+                if fp.done || fp.site != site {
+                    continue;
+                }
+                fp.hits += 1;
+                let fires =
+                    if fp.repeat { fp.hits >= fp.at } else { fp.hits == fp.at };
+                if !fp.repeat && fp.hits >= fp.at {
+                    fp.done = true;
+                }
+                if fires {
+                    return Some(fp.action);
+                }
+                return None;
+            }
+            None
+        })
+    }
+}
+
+fn kill_now(site: &str) -> ! {
+    eprintln!("failpoint '{site}': injected kill (exit {KILL_EXIT_CODE})");
+    std::process::exit(KILL_EXIT_CODE);
+}
+
+/// Generic failpoint trigger for sites that are not file writes (e.g.
+/// `ckpt_cadence`). `kill` aborts the process; every other action
+/// surfaces as an error.
+pub fn failpoint(site: &str) -> Result<()> {
+    match failpoints::hit(site) {
+        None => Ok(()),
+        Some(FailAction::Kill) => kill_now(site),
+        Some(action) => bail!("failpoint '{site}': injected {action:?}"),
+    }
+}
 
 /// Create all parent directories of `path`.
 pub fn ensure_parent(path: &Path) -> Result<()> {
@@ -16,12 +199,109 @@ pub fn ensure_parent(path: &Path) -> Result<()> {
 /// Atomic-ish write: write to `<path>.tmp` then rename. Keeps partially
 /// written metrics/checkpoints from being picked up by a reader.
 pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    write_atomic_site(path, bytes, "")
+}
+
+/// [`write_atomic`] with a failpoint site attached; the checkpoint and
+/// spool writers route through this so faults land on the real IO path.
+pub fn write_atomic_site(path: &Path, bytes: &[u8], site: &str) -> Result<()> {
     ensure_parent(path)?;
+    match failpoints::hit(site) {
+        Some(FailAction::Kill) => kill_now(site),
+        Some(FailAction::Torn) => {
+            // what a power cut mid-write leaves: a half-written file at
+            // the final path, and no error anyone saw
+            let half = &bytes[..bytes.len() / 2];
+            std::fs::write(path, half)
+                .with_context(|| format!("writing {}", path.display()))?;
+            return Ok(());
+        }
+        Some(FailAction::Enospc) => {
+            bail!(
+                "failpoint '{site}': injected ENOSPC (no space left on device) \
+                 writing {}",
+                path.display()
+            );
+        }
+        Some(FailAction::RenameFail) => {
+            let tmp = path.with_extension("tmp");
+            let _ = std::fs::write(&tmp, bytes);
+            bail!("failpoint '{site}': injected rename failure for {}", path.display());
+        }
+        None => {}
+    }
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
     std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
     Ok(())
 }
+
+/// `std::fs::rename` with a failpoint site attached (spool lifecycle
+/// transitions go through this).
+pub fn rename_site(from: &Path, to: &Path, site: &str) -> Result<()> {
+    match failpoints::hit(site) {
+        Some(FailAction::Kill) => kill_now(site),
+        Some(action) => bail!(
+            "failpoint '{site}': injected {action:?} renaming {} -> {}",
+            from.display(),
+            to.display()
+        ),
+        None => {}
+    }
+    std::fs::rename(from, to)
+        .with_context(|| format!("renaming {} -> {}", from.display(), to.display()))?;
+    Ok(())
+}
+
+// --------------------------------------------------------------- hashing
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3) — the integrity checksum of RTEN footers and
+/// snapshot manifests.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// FNV-1a 64-bit — cheap stable hash for per-job lease jitter.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Milliseconds since the Unix epoch (0 if the clock is before it).
+pub fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+// ------------------------------------------------------------ repo paths
 
 /// Locate the repository root (directory containing `artifacts/`) from the
 /// current dir upwards — lets examples and benches run from anywhere in the
@@ -66,4 +346,59 @@ mod tests {
         assert!(!path.with_extension("tmp").exists());
         std::fs::remove_dir_all(&dir).unwrap();
     }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the canonical CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn failpoint_spec_parsing_and_firing() {
+        // NOTE: failpoint state is process-global; this test and
+        // `torn_write_leaves_half_a_file` are the only in-crate users and
+        // both run under the same #[cfg(test)] binary, so serialize them.
+        let _g = FP_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        failpoints::clear();
+        failpoints::arm("siteA:enospc@2, siteB:torn@1+").unwrap();
+        assert!(failpoints::active());
+        // one-shot @2: 1st hit passes, 2nd fires, 3rd passes again
+        assert!(failpoint("siteA").is_ok());
+        assert!(failpoint("siteA").is_err());
+        assert!(failpoint("siteA").is_ok());
+        // repeat @1+: fires every time
+        assert_eq!(failpoints::hit("siteB"), Some(FailAction::Torn));
+        assert_eq!(failpoints::hit("siteB"), Some(FailAction::Torn));
+        // unknown site never fires
+        assert!(failpoint("siteC").is_ok());
+        // bad specs are rejected
+        assert!(failpoints::arm("no_action").is_err());
+        assert!(failpoints::arm("s:explode@1").is_err());
+        assert!(failpoints::arm("s:torn@0").is_err());
+        failpoints::clear();
+        assert!(!failpoints::active());
+    }
+
+    #[test]
+    fn torn_write_leaves_half_a_file() {
+        let _g = FP_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        failpoints::clear();
+        let dir = std::env::temp_dir().join(format!("mlorc_fp_{}", std::process::id()));
+        let path = dir.join("torn.bin");
+        failpoints::arm("t_write:torn@2,t_write:enospc@1").unwrap();
+        // hit 1: torn@2 not yet, so the enospc@1 spec would be next —
+        // but hits land on the first non-exhausted matching spec only
+        assert!(write_atomic_site(&path, b"0123456789", "t_write").is_ok());
+        assert_eq!(std::fs::read(&path).unwrap(), b"0123456789");
+        // hit 2 on the torn spec: half the payload lands, call succeeds
+        assert!(write_atomic_site(&path, b"0123456789", "t_write").is_ok());
+        assert_eq!(std::fs::read(&path).unwrap(), b"01234");
+        // torn spec exhausted; hit lands on the enospc spec (its 1st)
+        assert!(write_atomic_site(&path, b"0123456789", "t_write").is_err());
+        failpoints::clear();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    static FP_TEST_LOCK: Mutex<()> = Mutex::new(());
 }

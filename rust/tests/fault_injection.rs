@@ -1,0 +1,335 @@
+//! Fault-injection acceptance suite (PR 6): torn checkpoint pointers
+//! fall back to the previous intact snapshot bit-identically, injected
+//! IO faults are retried with backoff until the budget is exhausted,
+//! two concurrent schedulers drain one spool exactly once, and
+//! `mlorc fsck` detects + repairs corrupt snapshots and orphaned
+//! scratch dirs.
+//!
+//! Failpoints are process-global, so every test here serializes on
+//! [`FP_LOCK`] and starts from a cleared registry — even the tests that
+//! arm nothing, since they must not run concurrently with a test that
+//! does.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::linalg::threads;
+use mlorc::serve::{
+    aggregate, fsck, render_report, serve, Engine, HostTrainer, JobSpec, ServeOpts, Spool,
+};
+use mlorc::tensor::Tensor;
+use mlorc::util::fsutil::failpoints;
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn fp_guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoints::clear();
+    g
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mlorc_fault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn job_cfg(method: Method, seed: u64, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::new("host-nano", method, TaskKind::MathChain, steps);
+    cfg.peak_lr = 0.03;
+    cfg.log_every = 0;
+    cfg.seed = seed;
+    cfg
+}
+
+fn spec(id: &str, cfg: RunConfig, checkpoint_every: usize) -> JobSpec {
+    JobSpec {
+        id: id.to_string(),
+        engine: Engine::Host,
+        checkpoint_every,
+        priority: 0,
+        attempts: Vec::new(),
+        not_before_unix_ms: 0,
+        cfg,
+    }
+}
+
+fn solo_params(cfg: &RunConfig, budget: usize) -> Vec<Tensor> {
+    threads::with_budget(budget, || {
+        let mut tr = HostTrainer::new(cfg.clone()).unwrap();
+        for _ in 0..cfg.steps {
+            tr.train_step().unwrap();
+        }
+        tr.params.values.clone()
+    })
+}
+
+/// Final params of a finished job, read back through its checkpoint.
+fn final_params(spool: &Spool, id: &str) -> Vec<Tensor> {
+    let spec = spool.load_spec("done", id).unwrap();
+    let mut tr = HostTrainer::new(spec.cfg.clone()).unwrap();
+    tr.resume_from(&spool.checkpoint_root(id)).unwrap();
+    assert_eq!(tr.step_count(), spec.cfg.steps);
+    tr.params.values.clone()
+}
+
+fn flip_byte(path: &std::path::Path) {
+    let mut bytes = std::fs::read(path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x55;
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// Acceptance #1: a torn `LATEST` plus a corrupt newest snapshot resume
+/// from the previous intact snapshot, and the completed run is
+/// bit-identical to one that was never interrupted.
+#[test]
+fn torn_latest_resumes_from_previous_intact_snapshot_bit_identical() {
+    let _g = fp_guard();
+    let root = tmp("torn");
+    let spool = Spool::open(&root).unwrap();
+    let cfg = job_cfg(Method::MlorcAdamW, 7, 12);
+    // uninterrupted reference at the slice a solo serve would use
+    let reference = solo_params(&cfg, threads::budget().max(1));
+
+    spool.submit(&spec("job001_torn", cfg.clone(), 5)).unwrap();
+    // simulate a crashed worker: 10 steps, cadence snapshots at 5 and 10,
+    // with the LATEST flip of the second snapshot torn mid-write
+    let claimed = spool.claim_next().unwrap().unwrap();
+    let ckpt_root = spool.checkpoint_root(&claimed.id);
+    let mut tr = HostTrainer::new(claimed.cfg.clone()).unwrap();
+    for _ in 0..5 {
+        tr.train_step().unwrap();
+    }
+    tr.save_checkpoint(&ckpt_root).unwrap();
+    for _ in 0..5 {
+        tr.train_step().unwrap();
+    }
+    failpoints::arm("latest_write:torn@1").unwrap();
+    tr.save_checkpoint(&ckpt_root).unwrap();
+    failpoints::clear();
+    drop(tr);
+    // the torn LATEST names a half-written garbage target; additionally
+    // corrupt the newest snapshot so the fallback has to reach step-5
+    let latest = std::fs::read_to_string(ckpt_root.join("LATEST")).unwrap();
+    assert_ne!(latest.trim(), "step-00000010", "LATEST should be torn");
+    flip_byte(&ckpt_root.join("step-00000010").join("params.rten"));
+
+    // restart: recovery re-queues the lease-less job, resume falls back
+    // to step-5 and the job completes
+    let opts = ServeOpts {
+        jobs: 1,
+        drain: true,
+        poll_ms: 10,
+        lease_timeout_ms: 0,
+        ..Default::default()
+    };
+    let summary = serve(&spool, &opts).unwrap();
+    assert_eq!(summary.recovered, 1);
+    assert_eq!(summary.done, 1);
+    assert_eq!(summary.failed, 0);
+
+    let served = final_params(&spool, "job001_torn");
+    assert_eq!(served.len(), reference.len());
+    for (j, (a, b)) in served.iter().zip(&reference).enumerate() {
+        assert_eq!(a.data, b.data, "param {j} != uninterrupted run");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Acceptance #2: a job failed by an injected fault is retried (with the
+/// attempt recorded) and completes.
+#[test]
+fn injected_fault_is_retried_and_job_completes() {
+    let _g = fp_guard();
+    let root = tmp("retry");
+    let spool = Spool::open(&root).unwrap();
+    spool.submit(&spec("job001_retry", job_cfg(Method::MlorcLion, 3, 4), 2)).unwrap();
+    // the first checkpoint-file write fails as if the disk were full;
+    // everything after succeeds
+    failpoints::arm("ckpt_write:enospc@1").unwrap();
+    let opts = ServeOpts {
+        jobs: 1,
+        drain: true,
+        poll_ms: 10,
+        max_retries: 2,
+        retry_backoff_ms: 10,
+        ..Default::default()
+    };
+    let summary = serve(&spool, &opts).unwrap();
+    failpoints::clear();
+    assert_eq!(summary.done, 1, "job must complete after the retry");
+    assert_eq!(summary.failed, 0);
+    assert_eq!(summary.retried, 1);
+
+    let done_spec = spool.load_spec("done", "job001_retry").unwrap();
+    assert_eq!(done_spec.attempts.len(), 1, "the failed run must be recorded");
+    assert!(
+        done_spec.attempts[0].error.contains("ENOSPC"),
+        "attempt error should carry the injected fault: {}",
+        done_spec.attempts[0].error
+    );
+    // the audit trail shows exactly two claims: original + retry
+    let log = std::fs::read_to_string(spool.work_dir("job001_retry").join("claims.log")).unwrap();
+    assert_eq!(log.lines().count(), 2, "claims.log:\n{log}");
+    // `mlorc status` surfaces the attempt history
+    let rows = aggregate(&spool).unwrap();
+    assert_eq!(rows[0].state, "done");
+    assert_eq!(rows[0].attempts.len(), 1);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Acceptance #3: two concurrent schedulers on one spool drain a 6-job
+/// backlog with every job run exactly once, and per-job final params
+/// bit-identical to solo runs.
+#[test]
+fn two_schedulers_drain_exactly_once_and_match_solo() {
+    let _g = fp_guard();
+    let root = tmp("dual");
+    let spool = Spool::open(&root).unwrap();
+    let methods = [Method::MlorcAdamW, Method::MlorcLion, Method::MlorcSgdM];
+    let mut ids = Vec::new();
+    for i in 0..6usize {
+        let m = methods[i % methods.len()];
+        let id = format!("job{:03}_{}", i + 1, m.name());
+        spool.submit(&spec(&id, job_cfg(m, 40 + i as u64, 6), 3)).unwrap();
+        ids.push((id, m, 40 + i as u64));
+    }
+
+    let opts = || ServeOpts {
+        jobs: 2,
+        drain: true,
+        poll_ms: 10,
+        lease_timeout_ms: 60_000,
+        ..Default::default()
+    };
+    let (s1, s2) = std::thread::scope(|s| {
+        let a = s.spawn(|| {
+            let spool = Spool::open(&root).unwrap();
+            serve(&spool, &opts()).unwrap()
+        });
+        let b = s.spawn(|| {
+            let spool = Spool::open(&root).unwrap();
+            serve(&spool, &opts()).unwrap()
+        });
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    assert_eq!(s1.done + s2.done, 6, "schedulers: {s1:?} / {s2:?}");
+    assert_eq!(s1.failed + s2.failed, 0);
+    assert_eq!(spool.jobs_in("done").unwrap().len(), 6);
+    assert!(spool.jobs_in("queue").unwrap().is_empty());
+    assert!(spool.jobs_in("running").unwrap().is_empty());
+
+    // exactly once: one claim per job across both schedulers
+    for (id, _, _) in &ids {
+        let log = std::fs::read_to_string(spool.work_dir(id).join("claims.log")).unwrap();
+        assert_eq!(log.lines().count(), 1, "job {id} claimed more than once:\n{log}");
+    }
+    // bit-identical to a solo run at the same per-job thread slice
+    let slice = (threads::budget() / 2).max(1);
+    for (id, m, seed) in &ids {
+        let served = final_params(&spool, id);
+        let solo = solo_params(&job_cfg(*m, *seed, 6), slice);
+        for (j, (a, b)) in served.iter().zip(&solo).enumerate() {
+            assert_eq!(a.data, b.data, "job {id} param {j} != solo run");
+        }
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Acceptance #4: once `--max-retries` is exhausted the job is
+/// quarantined in `failed/` with its full attempt history visible to
+/// `mlorc status --json`.
+#[test]
+fn retry_budget_exhaustion_quarantines_with_attempt_history() {
+    let _g = fp_guard();
+    let root = tmp("exhaust");
+    let spool = Spool::open(&root).unwrap();
+    spool.submit(&spec("job001_doomed", job_cfg(Method::MlorcAdamW, 9, 4), 2)).unwrap();
+    // every checkpoint-file write fails: the job can never finish
+    failpoints::arm("ckpt_write:enospc@1+").unwrap();
+    let opts = ServeOpts {
+        jobs: 1,
+        drain: true,
+        poll_ms: 10,
+        max_retries: 2,
+        retry_backoff_ms: 5,
+        ..Default::default()
+    };
+    let summary = serve(&spool, &opts).unwrap();
+    failpoints::clear();
+    assert_eq!(summary.done, 0);
+    assert_eq!(summary.failed, 1);
+    assert_eq!(summary.retried, 2, "max_retries=2 means two re-queues before quarantine");
+    assert_eq!(spool.jobs_in("failed").unwrap(), vec!["job001_doomed"]);
+
+    // original run + 2 retries = 3 recorded attempts, in the spec and
+    // through the status aggregation (what `mlorc status --json` prints)
+    let failed_spec = spool.load_spec("failed", "job001_doomed").unwrap();
+    assert_eq!(failed_spec.attempts.len(), 3);
+    assert!(failed_spec.attempts[0].backoff_ms > 0);
+    assert_eq!(failed_spec.attempts[2].backoff_ms, 0, "terminal attempt has no backoff");
+    let rows = aggregate(&spool).unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].state, "failed");
+    assert_eq!(rows[0].attempts.len(), 3);
+    let json = rows[0].to_json().to_string_compact();
+    assert!(json.contains("\"attempts\""), "{json}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Satellite: `mlorc fsck` flags corrupt snapshots, dangling LATEST
+/// pointers and orphaned work dirs; `--repair` drops the spool back to
+/// its last intact state.
+#[test]
+fn fsck_detects_and_repairs_corruption_and_orphans() {
+    let _g = fp_guard();
+    let root = tmp("fsck");
+    let spool = Spool::open(&root).unwrap();
+    spool.submit(&spec("job001_ok", job_cfg(Method::MlorcLion, 5, 12), 5)).unwrap();
+    let opts = ServeOpts { jobs: 1, drain: true, poll_ms: 10, ..Default::default() };
+    let summary = serve(&spool, &opts).unwrap();
+    assert_eq!(summary.done, 1);
+
+    // clean spool: fsck passes
+    let report = fsck(&spool, false).unwrap();
+    assert!(report.clean(), "{}", render_report(&report));
+    assert_eq!(report.jobs_checked, 1);
+    assert!(report.snapshots_ok >= 2, "rotation keeps two snapshots");
+
+    // corrupt the newest snapshot (LATEST target) + plant an orphan
+    let ckpt_root = spool.checkpoint_root("job001_ok");
+    flip_byte(&ckpt_root.join("step-00000012").join("params.rten"));
+    std::fs::create_dir_all(spool.work_dir("ghost_job")).unwrap();
+    std::fs::write(spool.work_dir("ghost_job").join("scratch.bin"), b"junk").unwrap();
+
+    let report = fsck(&spool, false).unwrap();
+    assert!(!report.clean());
+    assert!(
+        report.problems.iter().any(|p| p.snapshot == "step-00000012"),
+        "{}",
+        render_report(&report)
+    );
+    assert!(report.problems.iter().any(|p| p.snapshot == "LATEST"));
+    assert_eq!(report.orphans, vec!["ghost_job"]);
+
+    // repair drops the corrupt snapshot, repoints LATEST to the previous
+    // intact one, and reaps the orphan
+    let repaired = fsck(&spool, true).unwrap();
+    assert!(repaired.clean(), "{}", render_report(&repaired));
+    assert!(!ckpt_root.join("step-00000012").exists());
+    assert_eq!(
+        std::fs::read_to_string(ckpt_root.join("LATEST")).unwrap().trim(),
+        "step-00000010"
+    );
+    assert!(!spool.work_dir("ghost_job").exists());
+    let recheck = fsck(&spool, false).unwrap();
+    assert!(recheck.clean(), "{}", render_report(&recheck));
+
+    // the repaired root resumes from the surviving snapshot
+    let done_spec = spool.load_spec("done", "job001_ok").unwrap();
+    let mut tr = HostTrainer::new(done_spec.cfg).unwrap();
+    assert_eq!(tr.resume_from(&ckpt_root).unwrap(), 10);
+    std::fs::remove_dir_all(&root).unwrap();
+}

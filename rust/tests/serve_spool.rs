@@ -45,12 +45,14 @@ fn spool_drains_concurrently_and_matches_solo() {
             engine: Engine::Host,
             checkpoint_every: 4,
             priority: 0,
+            attempts: Vec::new(),
+            not_before_unix_ms: 0,
             cfg: job_cfg(*method, *seed, 10),
         };
         spool.submit(&spec).unwrap();
     }
 
-    let opts = ServeOpts { jobs: 2, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    let opts = ServeOpts { jobs: 2, drain: true, poll_ms: 20, ..Default::default() };
     let summary = serve(&spool, &opts).unwrap();
     assert_eq!(summary.done, 3, "all jobs must drain");
     assert_eq!(summary.failed, 0);
@@ -95,6 +97,8 @@ fn interrupted_job_recovers_and_resumes_bit_identical() {
         engine: Engine::Host,
         checkpoint_every: 5,
         priority: 0,
+        attempts: Vec::new(),
+        not_before_unix_ms: 0,
         cfg: cfg.clone(),
     };
     spool.submit(&spec).unwrap();
@@ -112,8 +116,11 @@ fn interrupted_job_recovers_and_resumes_bit_identical() {
     drop(tr);
 
     // Restart: recovery sweeps running/ back into queue/, the worker
-    // resumes from the checkpoint and completes the job.
-    let opts = ServeOpts { jobs: 2, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    // resumes from the checkpoint and completes the job. The manual
+    // claim above wrote no lease, so legacy mode (lease timeout 0)
+    // recovers it unconditionally at startup.
+    let opts =
+        ServeOpts { jobs: 2, drain: true, poll_ms: 20, lease_timeout_ms: 0, ..Default::default() };
     let summary = serve(&spool, &opts).unwrap();
     assert_eq!(summary.recovered, 1);
     assert_eq!(summary.done, 1);
@@ -141,10 +148,15 @@ fn failing_job_lands_in_failed_with_error_status() {
         engine: Engine::Graph,
         checkpoint_every: 0,
         priority: 0,
+        attempts: Vec::new(),
+        not_before_unix_ms: 0,
         cfg: job_cfg(Method::MlorcAdamW, 1, 4),
     };
     spool.submit(&spec).unwrap();
-    let opts = ServeOpts { jobs: 1, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    // max_retries 0: a deterministic failure goes straight to failed/
+    // (the retry path is pinned by tests/fault_injection.rs)
+    let opts =
+        ServeOpts { jobs: 1, drain: true, poll_ms: 20, max_retries: 0, ..Default::default() };
     let summary = serve(&spool, &opts).unwrap();
     // host-nano is not a manifest preset, so the graph engine can never
     // run this job — with or without artifacts it must fail cleanly
@@ -169,6 +181,8 @@ fn priorities_and_cancellation_shape_the_drain() {
         engine: Engine::Host,
         checkpoint_every: 0,
         priority,
+        attempts: Vec::new(),
+        not_before_unix_ms: 0,
         cfg: job_cfg(method, 5, 6),
     };
     spool.submit(&mk("job001_doomed", Method::MlorcAdamW, 0)).unwrap();
@@ -180,10 +194,11 @@ fn priorities_and_cancellation_shape_the_drain() {
     let first = spool.claim_next().unwrap().unwrap();
     assert_eq!(first.id, "job003_urgent");
     assert_eq!(first.priority, 9);
-    // put it back so the scheduler drains everything itself
-    spool.recover_interrupted().unwrap();
+    // put it back so the scheduler drains everything itself (the manual
+    // claim wrote no lease, so legacy-mode recovery sweeps it)
+    spool.recover_interrupted(0).unwrap();
 
-    let opts = ServeOpts { jobs: 1, drain: true, poll_ms: 20, die_after_checkpoints: 0 };
+    let opts = ServeOpts { jobs: 1, drain: true, poll_ms: 20, ..Default::default() };
     let summary = serve(&spool, &opts).unwrap();
     assert_eq!(summary.done, 2);
     assert_eq!(summary.failed, 0);
