@@ -23,14 +23,18 @@
 //! backlog.
 //!
 //! Deployment note: any number of submitters, status readers *and
-//! schedulers* can share one spool. Each claim is backed by a lease
-//! (`leases/<id>.json`, heartbeat-refreshed by the worker), and the
-//! recovery sweep ([`Spool::recover_interrupted`]) only re-queues a
-//! running job once both its lease heartbeat and its claim rename are
-//! older than the lease timeout (plus a deterministic per-id jitter) —
-//! so a crashed scheduler's jobs are stolen after the timeout, while a
-//! live peer's jobs are left alone. The re-queued job resumes from its
-//! latest intact v2 checkpoint under `work/<id>/ckpt/` when re-claimed.
+//! schedulers* can share one spool. In lease mode (timeout > 0) each
+//! claim is backed by a lease (`leases/<id>.json`, heartbeat-refreshed
+//! by the worker), and the recovery sweep
+//! ([`Spool::recover_interrupted`]) only re-queues a running job once
+//! both its lease heartbeat and its claim rename are older than the
+//! lease timeout (plus a deterministic per-id jitter) — so a crashed
+//! scheduler's jobs are stolen after the timeout, while a live peer's
+//! jobs are left alone. In legacy single-scheduler mode (timeout 0)
+//! claims write no lease at all, and the startup sweep re-queues every
+//! running job immediately — crash recovery needs no timeout to elapse.
+//! The re-queued job resumes from its latest intact v2 checkpoint under
+//! `work/<id>/ckpt/` when re-claimed.
 
 use std::path::{Path, PathBuf};
 
@@ -248,6 +252,13 @@ impl Spool {
         })
     }
 
+    /// True when `owner` may still act on the running job: either it
+    /// holds the lease, or there is no lease to hold (legacy mode, or a
+    /// claim whose lease write failed).
+    pub fn owns_lease(&self, id: &str, owner: &str) -> bool {
+        self.read_lease(id).is_none_or(|l| l.owner == owner)
+    }
+
     fn remove_lease(&self, id: &str) {
         let _ = std::fs::remove_file(self.lease_path(id));
     }
@@ -329,9 +340,12 @@ impl Spool {
     }
 
     /// [`Spool::claim_next`] with lease bookkeeping: when `owner` is
-    /// given, the winning claim writes `leases/<id>.json` so concurrent
-    /// schedulers' recovery sweeps leave this job alone until the lease
-    /// expires.
+    /// given and `lease_timeout_ms > 0`, the winning claim writes
+    /// `leases/<id>.json` so concurrent schedulers' recovery sweeps
+    /// leave this job alone until the lease expires. With a zero
+    /// timeout (legacy single-scheduler mode) no lease is written —
+    /// claims carry no liveness promise, and the startup sweep
+    /// re-queues crash leftovers unconditionally.
     pub fn claim_next_as(
         &self,
         owner: Option<&str>,
@@ -363,6 +377,15 @@ impl Spool {
                 fsutil::failpoint("spool_rename")?;
                 match std::fs::rename(&from, &to) {
                     Ok(()) => {
+                        // rename(2) does not update mtime, so on targets
+                        // without ctime the claim-age fallback would see
+                        // the submit-time stamp; rewrite the spec in
+                        // place (we exclusively own it post-rename) so
+                        // the stamp marks the claim
+                        #[cfg(not(unix))]
+                        if let Ok(bytes) = std::fs::read(&to) {
+                            let _ = std::fs::write(&to, bytes);
+                        }
                         claimed = Some(id);
                         break;
                     }
@@ -374,12 +397,20 @@ impl Spool {
                 }
             }
             let Some(id) = claimed else { return Ok(None) };
-            if let Some(owner) = owner {
-                // the claim rename's ctime shields the job from recovery
-                // until the lease lands, so a failed write only narrows
-                // the protection window rather than losing the claim
-                if let Err(e) = self.write_lease(&id, owner, lease_timeout_ms) {
-                    log::warn!("job {id}: could not write lease ({e:#})");
+            // Legacy single-scheduler mode (timeout 0) must not write a
+            // lease: `recover_interrupted(0)` skips leased jobs, so a
+            // lease surviving a kill -9 would hold the job hostage
+            // forever. The timeout-0 sweep runs at startup only, before
+            // any claim, so the lease-less window is safe.
+            if lease_timeout_ms > 0 {
+                if let Some(owner) = owner {
+                    // the claim rename's ctime shields the job from
+                    // recovery until the lease lands, so a failed write
+                    // only narrows the protection window rather than
+                    // losing the claim
+                    if let Err(e) = self.write_lease(&id, owner, lease_timeout_ms) {
+                        log::warn!("job {id}: could not write lease ({e:#})");
+                    }
                 }
             }
             match self.load_spec("running", &id) {
@@ -415,8 +446,37 @@ impl Spool {
         }
     }
 
-    /// Move a running job to its terminal state.
+    /// Verify that a running job's lease, if present, is held by
+    /// `owner`. A worker whose job was stolen after lease expiry (e.g.
+    /// one step outlived the timeout) must not complete, re-queue or
+    /// quarantine the new claimant's in-flight spec. A missing lease
+    /// passes: legacy timeout-0 mode writes none, and a claim whose
+    /// lease write failed still owns its rename.
+    fn check_lease_owner(&self, id: &str, owner: Option<&str>) -> Result<()> {
+        let Some(owner) = owner else { return Ok(()) };
+        if let Some(lease) = self.read_lease(id) {
+            if lease.owner != owner {
+                bail!(
+                    "job {id}: lease is held by {} (this worker is {owner}); \
+                     the job was stolen after lease expiry — refusing to move it",
+                    lease.owner
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Move a running job to its terminal state (no ownership check —
+    /// single-scheduler callers and the unreadable-spec quarantine).
     pub fn finish(&self, id: &str, ok: bool) -> Result<()> {
+        self.finish_as(id, ok, None)
+    }
+
+    /// [`Spool::finish`] verifying first that `owner` (when given) still
+    /// holds the job's lease, so a stale owner cannot rename a stolen
+    /// job out from under its new claimant.
+    pub fn finish_as(&self, id: &str, ok: bool, owner: Option<&str>) -> Result<()> {
+        self.check_lease_owner(id, owner)?;
         let from = self.spec_path("running", id);
         let to = self.spec_path(if ok { "done" } else { "failed" }, id);
         fsutil::failpoint("spool_rename")?;
@@ -427,8 +487,16 @@ impl Spool {
 
     /// Re-queue a failed running job for retry: its spec gains an
     /// [`Attempt`] record and a `not_before` backoff gate, then moves
-    /// `running/ -> queue/`. Returns the updated spec (for status).
-    pub fn requeue_failed(&self, spec: &JobSpec, error: &str, backoff_ms: u64) -> Result<JobSpec> {
+    /// `running/ -> queue/`. When `owner` is given the caller must still
+    /// hold the job's lease. Returns the updated spec (for status).
+    pub fn requeue_failed(
+        &self,
+        spec: &JobSpec,
+        error: &str,
+        backoff_ms: u64,
+        owner: Option<&str>,
+    ) -> Result<JobSpec> {
+        self.check_lease_owner(&spec.id, owner)?;
         let now = fsutil::unix_ms();
         let mut updated = spec.clone();
         updated
@@ -446,8 +514,15 @@ impl Spool {
 
     /// Quarantine a running job whose retry budget is exhausted: the
     /// final [`Attempt`] is recorded and the spec moves to `failed/`
-    /// with its full attempt history. Returns the updated spec.
-    pub fn fail_terminal(&self, spec: &JobSpec, error: &str) -> Result<JobSpec> {
+    /// with its full attempt history. When `owner` is given the caller
+    /// must still hold the job's lease. Returns the updated spec.
+    pub fn fail_terminal(
+        &self,
+        spec: &JobSpec,
+        error: &str,
+        owner: Option<&str>,
+    ) -> Result<JobSpec> {
+        self.check_lease_owner(&spec.id, owner)?;
         let mut updated = spec.clone();
         updated.attempts.push(Attempt {
             at_unix_ms: fsutil::unix_ms(),
@@ -465,8 +540,11 @@ impl Spool {
     }
 
     /// Age of a running job's claim (the `queue/ -> running/` rename),
-    /// from the spec file's change time. This shields a freshly claimed
-    /// job from recovery even before its lease file lands.
+    /// from the spec file's change time — on non-unix targets, from its
+    /// modified time, which [`Spool::claim_next_as`] refreshes at claim
+    /// time because rename(2) leaves mtime untouched. This shields a
+    /// freshly claimed job from recovery even before its lease file
+    /// lands.
     fn claim_age_ms(&self, id: &str, now: u64) -> u64 {
         let path = self.spec_path("running", id);
         let Ok(meta) = std::fs::metadata(&path) else {
@@ -489,8 +567,11 @@ impl Spool {
 
     /// Sweep expired `running/` jobs back into `queue/`. With
     /// `lease_timeout_ms == 0` this is the legacy single-scheduler
-    /// startup sweep: every lease-less running job is a crash leftover
-    /// and is re-queued immediately (leased jobs are left alone). With a
+    /// startup sweep: every running job is a crash leftover and is
+    /// re-queued immediately — timeout-0 claims write no lease, and a
+    /// stale lease whose own `timeout_ms` is 0 never promised liveness,
+    /// so only a lease with a real timeout (a live lease-mode peer
+    /// sharing the spool) protects a job from this sweep. With a
     /// timeout, a job is only recovered once both its lease heartbeat
     /// and its claim rename are older than the timeout plus a
     /// deterministic per-id jitter — safe to call from concurrent
@@ -502,7 +583,7 @@ impl Spool {
         for id in self.jobs_in("running")? {
             let lease = self.read_lease(&id);
             if lease_timeout_ms == 0 {
-                if lease.is_some() {
+                if lease.as_ref().is_some_and(|l| l.timeout_ms > 0) {
                     continue;
                 }
             } else {
@@ -565,11 +646,14 @@ impl Spool {
     }
 }
 
-/// Deterministic per-id recovery jitter (up to a quarter of the
-/// timeout): keeps a pack of schedulers from stampeding the same
-/// expired jobs at the same instant.
+/// Deterministic per-id recovery jitter, between an eighth and ~three
+/// eighths of the timeout: keeps a pack of schedulers from stampeding
+/// the same expired jobs at the same instant. The floor matters as much
+/// as the spread — a zero jitter would let a sweep steal a job the
+/// moment its heartbeat is exactly one timeout old, leaving no headroom
+/// for a heartbeat that is merely late rather than dead.
 fn lease_jitter(id: &str, timeout_ms: u64) -> u64 {
-    fsutil::fnv1a64(id.as_bytes()) % (timeout_ms / 4 + 1)
+    timeout_ms / 8 + 1 + fsutil::fnv1a64(id.as_bytes()) % (timeout_ms / 4 + 1)
 }
 
 #[cfg(test)]
@@ -652,14 +736,15 @@ mod tests {
         assert_eq!(lease.owner, "sched-A");
         assert_eq!(lease.timeout_ms, 50);
 
-        // a leased job is invisible to the legacy startup sweep...
+        // a live-mode lease (timeout > 0) shields the job from the
+        // legacy startup sweep of a peer running at timeout 0...
         assert!(spool.recover_interrupted(0).unwrap().is_empty());
         // ...and to a timed sweep while the heartbeat is fresh
         assert!(spool.recover_interrupted(50).unwrap().is_empty());
         assert_eq!(spool.jobs_in("running").unwrap(), vec!["job001_leased"]);
 
         // once the heartbeat AND the claim are stale past
-        // timeout + jitter (jitter <= timeout/4), the job is stolen
+        // timeout + jitter (jitter < timeout/2), the job is stolen
         std::thread::sleep(std::time::Duration::from_millis(200));
         let recovered = spool.recover_interrupted(50).unwrap();
         assert_eq!(recovered, vec!["job001_leased"]);
@@ -669,13 +754,71 @@ mod tests {
     }
 
     #[test]
+    fn legacy_claims_write_no_lease_and_recover_unconditionally() {
+        let (root, spool) = tmp_spool("legacy");
+        spool.submit(&spec("job001_legacy")).unwrap();
+        // timeout 0: the claim must NOT write a lease — a lease
+        // surviving a kill -9 would make the startup sweep skip the job
+        // forever (there is no expiry at timeout 0)
+        let claimed = spool.claim_next_as(Some("sched-A"), 0).unwrap().unwrap();
+        assert_eq!(claimed.id, "job001_legacy");
+        assert!(spool.read_lease("job001_legacy").is_none(), "timeout-0 claim wrote a lease");
+        // "crash": restart sweeps the job back immediately
+        assert_eq!(spool.recover_interrupted(0).unwrap(), vec!["job001_legacy"]);
+        assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_legacy"]);
+
+        // a stale timeout-0 lease left behind by an older build never
+        // promised liveness: the legacy sweep ignores it and drops it
+        let again = spool.claim_next_as(Some("sched-A"), 0).unwrap().unwrap();
+        spool.write_lease(&again.id, "sched-A", 0).unwrap();
+        assert_eq!(spool.recover_interrupted(0).unwrap(), vec!["job001_legacy"]);
+        assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_legacy"]);
+        assert!(spool.read_lease("job001_legacy").is_none(), "sweep must drop the stale lease");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn stale_owner_cannot_move_a_stolen_job() {
+        let (root, spool) = tmp_spool("stolen");
+        spool.submit(&spec("job001_hot")).unwrap();
+        let claimed = spool.claim_next_as(Some("sched-A/w0"), 50).unwrap().unwrap();
+        // simulate the steal: A's lease expired, a peer re-queued and
+        // re-claimed the job — running/ now holds B's in-flight spec
+        spool.write_lease(&claimed.id, "sched-B/w1", 50).unwrap();
+
+        // the stale owner must not complete, retry or quarantine it
+        let err = spool.finish_as(&claimed.id, true, Some("sched-A/w0")).unwrap_err();
+        assert!(format!("{err:#}").contains("sched-B/w1"), "{err:#}");
+        assert!(spool.requeue_failed(&claimed, "boom", 10, Some("sched-A/w0")).is_err());
+        assert!(spool.fail_terminal(&claimed, "boom", Some("sched-A/w0")).is_err());
+        assert_eq!(spool.jobs_in("running").unwrap(), vec!["job001_hot"]);
+        assert_eq!(spool.read_lease("job001_hot").unwrap().owner, "sched-B/w1");
+
+        // the live owner finishes it normally
+        spool.finish_as(&claimed.id, true, Some("sched-B/w1")).unwrap();
+        assert_eq!(spool.jobs_in("done").unwrap(), vec!["job001_hot"]);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn lease_jitter_has_a_floor_and_a_cap() {
+        for id in ["job001_a", "job002_b", "job003_c", "x"] {
+            for timeout in [8u64, 50, 1000, 30_000] {
+                let j = lease_jitter(id, timeout);
+                assert!(j >= timeout / 8 + 1, "jitter {j} below floor for {id}@{timeout}");
+                assert!(j <= timeout / 8 + 1 + timeout / 4, "jitter {j} above cap");
+            }
+        }
+    }
+
+    #[test]
     fn retry_requeue_records_attempts_and_backoff() {
         let (root, spool) = tmp_spool("retry");
         spool.submit(&spec("job001_flaky")).unwrap();
         let claimed = spool.claim_next().unwrap().unwrap();
 
         // first failure: re-queued with a long backoff -> not claimable
-        let updated = spool.requeue_failed(&claimed, "injected ENOSPC", 60_000).unwrap();
+        let updated = spool.requeue_failed(&claimed, "injected ENOSPC", 60_000, None).unwrap();
         assert_eq!(updated.attempts.len(), 1);
         assert_eq!(spool.jobs_in("queue").unwrap(), vec!["job001_flaky"]);
         assert!(spool.claim_next().unwrap().is_none(), "backoff gate must hold");
@@ -696,7 +839,7 @@ mod tests {
         .unwrap();
         let again = spool.claim_next().unwrap().unwrap();
         assert_eq!(again.attempts.len(), 1);
-        let terminal = spool.fail_terminal(&again, "injected ENOSPC again").unwrap();
+        let terminal = spool.fail_terminal(&again, "injected ENOSPC again", None).unwrap();
         assert_eq!(terminal.attempts.len(), 2);
         assert_eq!(spool.jobs_in("failed").unwrap(), vec!["job001_flaky"]);
         let dead = spool.load_spec("failed", "job001_flaky").unwrap();

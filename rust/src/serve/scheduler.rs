@@ -11,16 +11,20 @@
 //!
 //! Crash safety: workers checkpoint running jobs every
 //! `JobSpec::checkpoint_every` steps through the rotated v2 writer, and
-//! every claim is backed by a heartbeat-refreshed lease. Expired leases
-//! are swept back into the queue (at startup and whenever a worker goes
-//! idle), so any number of `mlorc serve` processes can share one spool:
-//! a crashed peer's jobs are stolen after the lease timeout and resume
-//! from their latest intact checkpoint. Failed jobs are retried with
-//! exponential backoff up to `max_retries` before quarantine in
-//! `failed/`, with the attempt history recorded in the spec.
+//! in lease mode every claim is backed by a lease that a dedicated
+//! per-job thread heartbeats (so a long step or checkpoint save cannot
+//! starve it). Expired leases are swept back into the queue (at startup
+//! and whenever a worker goes idle), so any number of `mlorc serve`
+//! processes can share one spool: a crashed peer's jobs are stolen
+//! after the lease timeout and resume from their latest intact
+//! checkpoint, and the terminal transitions re-verify lease ownership
+//! so a stale worker can never move a stolen job. Failed jobs are
+//! retried with exponential backoff up to `max_retries` before
+//! quarantine in `failed/`, with the attempt history recorded in the
+//! spec.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -56,10 +60,11 @@ pub struct ServeOpts {
     /// Base retry backoff; doubles per recorded attempt.
     pub retry_backoff_ms: u64,
     /// Lease liveness window. 0 = legacy single-scheduler mode: claims
-    /// carry no liveness promise, and recovery (startup only) re-queues
-    /// every unprotected running job immediately. > 0 = multi-scheduler
-    /// mode: workers heartbeat their leases and sweep expired peers'
-    /// jobs back into the queue mid-drain.
+    /// write no lease, and recovery (startup only) re-queues every
+    /// running job immediately — crash leftovers need no timeout to
+    /// elapse. > 0 = multi-scheduler mode: workers heartbeat their
+    /// leases and sweep expired peers' jobs back into the queue
+    /// mid-drain.
     pub lease_timeout_ms: u64,
 }
 
@@ -220,21 +225,37 @@ fn worker_loop(
         let result = threads::with_budget(slice, || {
             run_job(spool, &spec, opts, &worker_owner, &counters.ckpts)
         });
+        // A run that outlived its lease may have been stolen by a peer's
+        // recovery sweep; its outcome is the thief's to report now. The
+        // owner-checked transitions below re-verify, but bailing here
+        // keeps the done/failed tallies honest.
+        if opts.lease_timeout_ms > 0 && !spool.owns_lease(&spec.id, &worker_owner) {
+            log::error!(
+                "serve worker {worker}: job {} was stolen after its lease expired; \
+                 discarding this run's outcome",
+                spec.id
+            );
+            continue;
+        }
         match result {
             Ok(status) => {
                 let _ = status.write(spool);
-                if let Err(e) = spool.finish(&spec.id, true) {
-                    log::error!("serve worker {worker}: moving {} to done/: {e:#}", spec.id);
+                match spool.finish_as(&spec.id, true, Some(&worker_owner)) {
+                    Ok(()) => {
+                        counters.done.fetch_add(1, Ordering::SeqCst);
+                        log::info!("serve worker {worker}: job {} done", spec.id);
+                    }
+                    Err(e) => {
+                        log::error!("serve worker {worker}: moving {} to done/: {e:#}", spec.id);
+                    }
                 }
-                counters.done.fetch_add(1, Ordering::SeqCst);
-                log::info!("serve worker {worker}: job {} done", spec.id);
             }
             Err(e) => {
                 let err_text = format!("{e:#}");
                 let failures = spec.attempts.len() + 1;
                 if failures <= opts.max_retries {
                     let backoff = backoff_ms(opts.retry_backoff_ms, spec.attempts.len());
-                    match spool.requeue_failed(&spec, &err_text, backoff) {
+                    match spool.requeue_failed(&spec, &err_text, backoff, Some(&worker_owner)) {
                         Ok(updated) => {
                             let mut status = JobStatus::from_spec(&updated, "queued");
                             status.error = Some(err_text.clone());
@@ -258,7 +279,7 @@ fn worker_loop(
                     }
                 }
                 // retry budget exhausted (or the re-queue itself failed)
-                match spool.fail_terminal(&spec, &err_text) {
+                match spool.fail_terminal(&spec, &err_text, Some(&worker_owner)) {
                     Ok(updated) => {
                         let mut status = JobStatus::from_spec(&updated, "failed");
                         status.error = Some(err_text.clone());
@@ -273,7 +294,7 @@ fn worker_loop(
                         let mut status = JobStatus::from_spec(&spec, "failed");
                         status.error = Some(err_text.clone());
                         let _ = status.write(spool);
-                        let _ = spool.finish(&spec.id, false);
+                        let _ = spool.finish_as(&spec.id, false, Some(&worker_owner));
                     }
                 }
                 counters.failed.fetch_add(1, Ordering::SeqCst);
@@ -388,47 +409,71 @@ fn drive(
     status.step = tr.step_count();
     let _ = status.write(spool);
 
-    // Heartbeat at a third of the lease timeout: two missed beats of
-    // headroom before a peer's sweep could consider this job dead.
-    let hb_period = Duration::from_millis((opts.lease_timeout_ms / 3).max(1));
-    let mut last_hb = Instant::now();
-
-    let mut last_loss = None;
-    while tr.step_count() < spec.cfg.steps {
-        if opts.lease_timeout_ms > 0 && last_hb.elapsed() >= hb_period {
-            if let Err(e) = spool.write_lease(&spec.id, worker_owner, opts.lease_timeout_ms) {
-                log::warn!("job {}: lease heartbeat failed: {e:#}", spec.id);
-            }
-            last_hb = Instant::now();
+    // Heartbeat from a dedicated thread at a third of the lease timeout
+    // (two missed beats of headroom before a peer's sweep could consider
+    // this job dead). It must not ride the step loop: a single step or
+    // checkpoint save longer than the timeout would starve the lease and
+    // let a peer steal — and concurrently re-run — a perfectly live job.
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        if opts.lease_timeout_ms > 0 {
+            let stop = &stop;
+            let id = spec.id.as_str();
+            scope.spawn(move || {
+                let hb_period = Duration::from_millis((opts.lease_timeout_ms / 3).max(1));
+                let tick = hb_period.min(Duration::from_millis(25));
+                let mut last_hb = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    if last_hb.elapsed() >= hb_period {
+                        if let Err(e) =
+                            spool.write_lease(id, worker_owner, opts.lease_timeout_ms)
+                        {
+                            log::warn!("job {id}: lease heartbeat failed: {e:#}");
+                        }
+                        last_hb = Instant::now();
+                    }
+                    std::thread::sleep(tick);
+                }
+            });
         }
-        let loss = tr.step()?;
-        last_loss = Some(loss as f64);
-        let s = tr.step_count();
-        if spec.checkpoint_every > 0 && s % spec.checkpoint_every == 0 && s < spec.cfg.steps {
+        // the closure keeps `?`-failures from skipping the stop flag —
+        // an early return from the scope itself would deadlock the join
+        let result = (|| -> Result<JobStatus> {
+            let mut last_loss = None;
+            while tr.step_count() < spec.cfg.steps {
+                let loss = tr.step()?;
+                last_loss = Some(loss as f64);
+                let s = tr.step_count();
+                if spec.checkpoint_every > 0 && s % spec.checkpoint_every == 0 && s < spec.cfg.steps
+                {
+                    tr.save(&ckpt_root)?;
+                    ckpts.fetch_add(1, Ordering::SeqCst);
+                    // the crash hook (`--die-after-checkpoints` /
+                    // MLORC_FAILPOINT=ckpt_cadence:...) fires after the
+                    // snapshot is committed, like a real mid-run kill
+                    fsutil::failpoint("ckpt_cadence")?;
+                    status.step = s;
+                    status.loss = last_loss;
+                    // adaptive-rank layouts shrink their state mid-run
+                    status.opt_state_bytes = tr.opt_state_bytes();
+                    status.rank_shrink_events = tr.shrink_events();
+                    status.wall_secs = t0.elapsed().as_secs_f64();
+                    let _ = status.write(spool);
+                }
+            }
+            // Final snapshot: the job's resumable (and verifiable) result.
             tr.save(&ckpt_root)?;
-            ckpts.fetch_add(1, Ordering::SeqCst);
-            // the crash hook (`--die-after-checkpoints` /
-            // MLORC_FAILPOINT=ckpt_cadence:...) fires after the snapshot
-            // is committed, like a real mid-run kill
-            fsutil::failpoint("ckpt_cadence")?;
-            status.step = s;
+            status.state = "done".to_string();
+            status.step = tr.step_count();
             status.loss = last_loss;
-            // adaptive-rank layouts shrink their state over the run
             status.opt_state_bytes = tr.opt_state_bytes();
             status.rank_shrink_events = tr.shrink_events();
             status.wall_secs = t0.elapsed().as_secs_f64();
-            let _ = status.write(spool);
-        }
-    }
-    // Final snapshot: the job's resumable (and verifiable) result.
-    tr.save(&ckpt_root)?;
-    status.state = "done".to_string();
-    status.step = tr.step_count();
-    status.loss = last_loss;
-    status.opt_state_bytes = tr.opt_state_bytes();
-    status.rank_shrink_events = tr.shrink_events();
-    status.wall_secs = t0.elapsed().as_secs_f64();
-    Ok(status)
+            Ok(status)
+        })();
+        stop.store(true, Ordering::Relaxed);
+        result
+    })
 }
 
 #[cfg(test)]

@@ -23,11 +23,15 @@
 //! * `enospc` — fail the write as if the disk were full
 //! * `kill`   — abort the process with exit code [`KILL_EXIT_CODE`]
 //!
-//! Hit counters are per-spec and process-global, so `ckpt_write:kill@6`
-//! means "die on the 6th checkpoint file write anywhere in the process" —
-//! which is exactly how a crash lands in production. Tests that arm
-//! failpoints must serialize on a shared lock and [`failpoints::clear`]
-//! when done.
+//! Hit counters are per-spec, independent, and process-global: every
+//! armed spec matching a site counts every hit on that site, so
+//! `ckpt_write:kill@6` means "die on the 6th checkpoint file write
+//! anywhere in the process" — which is exactly how a crash lands in
+//! production — and `ckpt_write:torn@1+,ckpt_write:kill@5` tears writes
+//! 1–4 then kills on the 5th (when several specs fire on the same hit, a
+//! one-shot `@N` takes precedence over a repeat `@N+`; ties go to the
+//! earlier-armed spec). Tests that arm failpoints must serialize on a
+//! shared lock and [`failpoints::clear`] when done.
 
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -144,15 +148,20 @@ pub mod failpoints {
     }
 
     /// Record one hit on `site`; returns the action to perform if an
-    /// armed failpoint fires. The first non-exhausted spec matching the
-    /// site receives the hit.
+    /// armed failpoint fires. Every spec matching the site counts the
+    /// hit on its own counter (so a repeat spec never shadows a later
+    /// one-shot on the same site); when several specs fire on the same
+    /// hit, a one-shot (`@N`) wins over a repeat (`@N+`), ties going to
+    /// the earlier-armed spec.
     pub(super) fn hit(site: &str) -> Option<FailAction> {
         if site.is_empty() {
             return None;
         }
         with_registry(|reg| {
+            let mut one_shot = None;
+            let mut repeat = None;
             for fp in reg.iter_mut() {
-                if fp.done || fp.site != site {
+                if fp.site != site {
                     continue;
                 }
                 fp.hits += 1;
@@ -162,11 +171,13 @@ pub mod failpoints {
                     fp.done = true;
                 }
                 if fires {
-                    return Some(fp.action);
+                    let slot = if fp.repeat { &mut repeat } else { &mut one_shot };
+                    if slot.is_none() {
+                        *slot = Some(fp.action);
+                    }
                 }
-                return None;
             }
-            None
+            one_shot.or(repeat)
         })
     }
 }
@@ -372,6 +383,14 @@ mod tests {
         assert_eq!(failpoints::hit("siteB"), Some(FailAction::Torn));
         // unknown site never fires
         assert!(failpoint("siteC").is_ok());
+        // a repeat spec must not shadow a later one-shot on the same
+        // site: counters are per-spec, and the one-shot wins its hit
+        failpoints::clear();
+        failpoints::arm("siteD:torn@1+,siteD:enospc@3").unwrap();
+        assert_eq!(failpoints::hit("siteD"), Some(FailAction::Torn));
+        assert_eq!(failpoints::hit("siteD"), Some(FailAction::Torn));
+        assert_eq!(failpoints::hit("siteD"), Some(FailAction::Enospc));
+        assert_eq!(failpoints::hit("siteD"), Some(FailAction::Torn));
         // bad specs are rejected
         assert!(failpoints::arm("no_action").is_err());
         assert!(failpoints::arm("s:explode@1").is_err());
@@ -387,15 +406,16 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("mlorc_fp_{}", std::process::id()));
         let path = dir.join("torn.bin");
         failpoints::arm("t_write:torn@2,t_write:enospc@1").unwrap();
-        // hit 1: torn@2 not yet, so the enospc@1 spec would be next —
-        // but hits land on the first non-exhausted matching spec only
-        assert!(write_atomic_site(&path, b"0123456789", "t_write").is_ok());
-        assert_eq!(std::fs::read(&path).unwrap(), b"0123456789");
-        // hit 2 on the torn spec: half the payload lands, call succeeds
+        // hit 1: both specs count it; only enospc@1 fires, so the write
+        // fails and nothing lands on disk
+        assert!(write_atomic_site(&path, b"0123456789", "t_write").is_err());
+        assert!(!path.exists());
+        // hit 2: torn@2 fires — half the payload lands, call succeeds
         assert!(write_atomic_site(&path, b"0123456789", "t_write").is_ok());
         assert_eq!(std::fs::read(&path).unwrap(), b"01234");
-        // torn spec exhausted; hit lands on the enospc spec (its 1st)
-        assert!(write_atomic_site(&path, b"0123456789", "t_write").is_err());
+        // hit 3: both specs exhausted, the write goes through intact
+        assert!(write_atomic_site(&path, b"0123456789", "t_write").is_ok());
+        assert_eq!(std::fs::read(&path).unwrap(), b"0123456789");
         failpoints::clear();
         std::fs::remove_dir_all(&dir).unwrap();
     }

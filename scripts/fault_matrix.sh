@@ -73,4 +73,14 @@ expect_kill "$BIN" serve --spool fm-lease --jobs 2 --drain \
 "$BIN" status --spool fm-lease --expect-all-done
 "$BIN" fsck fm-lease
 
+echo "== case 5: legacy single-scheduler mode (lease timeout 0) recovers a kill -9 =="
+# timeout-0 claims must write no lease: a lease surviving the kill would
+# make the restart's startup sweep skip the job forever and hang --drain
+submit_jobs fm-legacy 2
+expect_kill "$BIN" serve --spool fm-legacy --jobs 2 --drain \
+  --die-after-checkpoints 2 --lease-timeout-ms 0
+"$BIN" serve --spool fm-legacy --jobs 2 --drain --lease-timeout-ms 0
+"$BIN" status --spool fm-legacy --expect-all-done
+"$BIN" fsck fm-legacy
+
 echo "fault matrix: all cases recovered to a clean, fully drained spool"
