@@ -14,30 +14,34 @@
 //! History gating: absolute µs comparisons against the previous entry
 //! are always warnings — they mix machines and are meaningless across
 //! runners. The machine-normalized *ratios* (`speedup_512x128_vs_scalar`,
-//! `pool_vs_spawn_512x128_r4`) are comparable anywhere; a drop below
-//! 0.9x the previous entry's ratio fails the run under
-//! `MLORC_BENCH_STRICT=1` (the CI bench job sets it).
+//! `pool_vs_spawn_512x128_r4`, `batched_vs_per_param_48x256x64_r4`) are
+//! comparable anywhere; a drop below 0.9x the previous entry's ratio
+//! fails the run under `MLORC_BENCH_STRICT=1` (the CI bench job sets it).
 //!
 //! Acceptance criteria:
 //!
 //!  * GEMM audit: one dense O(m·n·l) reconstruction per moment on the
 //!    512x128 step (fused m-moment + v-moment), thin sketch/projections;
 //!  * timing: >= 3x over the scalar baseline on the 512x128 MLorc-AdamW
-//!    step, and >= 1.5x for the pooled parallel-site mix (512x128, r=4)
+//!    step, >= 1.5x for the pooled parallel-site mix (512x128, r=4)
 //!    over the same kernels driven by the PR-1 per-call
-//!    `std::thread::scope` spawn scaffold (set MLORC_BENCH_LAX=1 to
-//!    downgrade both to warnings on constrained machines).
+//!    `std::thread::scope` spawn scaffold, and >= 1.5x for shape-class
+//!    batched stepping on the many-small-params fleet (48 x 256x64, r=4)
+//!    over the PR-6 per-parameter fan-out (set MLORC_BENCH_LAX=1 to
+//!    downgrade all three to warnings on constrained machines).
 //!
 //! When XLA artifacts are present (`make artifacts`), the step-graph
 //! latency table is measured as well and folded into the JSON.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use mlorc::bench_harness::write_bench_json;
+use mlorc::coordinator::{host_step_all, HostStepJob, OptState};
 use mlorc::linalg::matmul::{gemm_nn_band, gemm_tn_band};
 use mlorc::linalg::{
-    flops, matmul_at_b_into, matmul_into, mgs_qr, scalar_matmul, scalar_matmul_at_b, simd,
+    flops, matmul_at_b_into, matmul_into, mgs_qr, pool, scalar_matmul, scalar_matmul_at_b, simd,
     threads, Rng, Workspace,
 };
 use mlorc::optim::{
@@ -365,13 +369,144 @@ fn pool_vs_spawn_bench(rng: &mut Rng) -> (Json, f64) {
     )
 }
 
+// --------------------------- batched vs per-parameter (PR-6 fan-out ref)
+
+const BATCH_COUNT: usize = 48;
+const BATCH_SHAPE: (usize, usize, usize) = (256, 64, 4);
+
+/// Fresh fleet for one schedule. Both schedules call this with the same
+/// constants, so their weights, states and per-parameter Omega streams
+/// start identical and the bit-identity assert is meaningful.
+fn small_param_fleet() -> Vec<(Tensor, OptState, Rng)> {
+    let (m, n, r) = BATCH_SHAPE;
+    let mut seeder = Rng::new(4242);
+    (0..BATCH_COUNT)
+        .map(|i| {
+            let mut rng = seeder.split(900 + i as u64);
+            let w = rng.gaussian_tensor(&[m, n], 0.5);
+            let state = OptState::for_variant("mlorc_adamw", &[m, n], r).unwrap();
+            (w, state, rng)
+        })
+        .collect()
+}
+
+/// PR-6's `host_step_all` fan-out verbatim: contiguous job chunks paired
+/// with workspaces, each chunk's optimizer steps forced into
+/// `threads::serial` — the per-parameter baseline the shape-class
+/// planner replaced.
+fn per_param_step_all(
+    params: &mut [(Tensor, OptState, Rng)],
+    grads: &[Tensor],
+    lr: f32,
+    t: usize,
+    workspaces: &mut [Workspace],
+) {
+    let nt = workspaces.len().min(params.len());
+    if nt <= 1 {
+        let ws = &mut workspaces[0];
+        for ((w, state, rng), g) in params.iter_mut().zip(grads) {
+            state.host_step(w, g, lr, t, rng, ws).expect("per-param host step");
+        }
+        return;
+    }
+    let chunk = params.len().div_ceil(nt);
+    let bands: Vec<_> = params
+        .chunks_mut(chunk)
+        .zip(grads.chunks(chunk))
+        .zip(workspaces.iter_mut())
+        .map(|(band, ws)| Mutex::new(Some((band, ws))))
+        .collect();
+    let nbands = bands.len();
+    threads::with_budget(nbands, || {
+        pool::par_row_bands(nbands, usize::MAX / 4, |_, range| {
+            for idx in range {
+                let Some(((band, gband), ws)) = bands[idx].lock().unwrap().take() else {
+                    continue;
+                };
+                threads::serial(|| {
+                    for ((w, state, rng), g) in band.iter_mut().zip(gband) {
+                        state.host_step(w, g, lr, t, rng, ws).expect("per-param host step");
+                    }
+                });
+            }
+        });
+    });
+}
+
+/// The many-small-parameters scenario the shape-class planner targets:
+/// 48 mlorc_adamw parameters of 256x64 at r=4 — each matrix too small
+/// for its own kernels to engage the pool, the fleet large enough for
+/// one stacked banded invocation per class to. Both schedules step
+/// identical fleets for the same number of steps; weights are asserted
+/// bit-identical before the speedup is reported. Returns
+/// (json, batched_speedup).
+fn batched_vs_per_param_bench(rng: &mut Rng) -> (Json, f64) {
+    let (m, n, r) = BATCH_SHAPE;
+    let grads: Vec<Tensor> =
+        (0..BATCH_COUNT).map(|_| rng.gaussian_tensor(&[m, n], 1.0)).collect();
+    let nws = threads::budget().max(1);
+    let mut workspaces: Vec<Workspace> = (0..nws).map(|_| Workspace::new()).collect();
+
+    let mut fleet_pp = small_param_fleet();
+    let mut t_pp = 0usize;
+    let per_param = time_us(
+        || {
+            t_pp += 1;
+            per_param_step_all(&mut fleet_pp, &grads, 1e-3, t_pp, &mut workspaces);
+        },
+        ITERS,
+    );
+
+    let mut fleet_cls = small_param_fleet();
+    let mut t_cls = 0usize;
+    let batched = time_us(
+        || {
+            t_cls += 1;
+            let mut jobs: Vec<HostStepJob> = fleet_cls
+                .iter_mut()
+                .zip(&grads)
+                .map(|((w, state, rng), g)| HostStepJob {
+                    w,
+                    grad: g,
+                    state,
+                    rng,
+                    lr: 1e-3,
+                    t: t_cls,
+                })
+                .collect();
+            host_step_all(&mut jobs, &mut workspaces).expect("batched host step");
+        },
+        ITERS,
+    );
+
+    for (i, ((wa, _, _), (wb, _, _))) in fleet_pp.iter().zip(&fleet_cls).enumerate() {
+        assert_eq!(
+            wa.data, wb.data,
+            "param {i}: shape-class batched step must be bit-identical to per-parameter"
+        );
+    }
+
+    let speedup = per_param / batched;
+    println!(
+        "\nbatched vs per-parameter ({BATCH_COUNT} x {m}x{n}, r={r} mlorc_adamw): \
+         class-batched {batched:.1}us, per-param {per_param:.1}us -> {speedup:.2}x"
+    );
+    (
+        Json::obj(vec![
+            ("per_param_us", Json::num(per_param)),
+            ("batched_us", Json::num(batched)),
+            ("speedup", Json::num(speedup)),
+        ]),
+        speedup,
+    )
+}
+
 /// Momentum-state footprint at the acceptance shape (512x128, r=4):
 /// layout formula (`VariantDesc::state_bytes`) cross-checked against a
 /// live state's `state_bytes()`, and the PR-5 gate — `mlorc_q8` momentum
 /// state at most 0.3x dense AdamW (it lands near 0.01x: 1-byte codes on
 /// rank-4 factors vs two dense f32 moments).
 fn state_bytes_bench() -> Json {
-    use mlorc::coordinator::OptState;
     use mlorc::optim::registry;
     let (m, n, r) = (512usize, 128usize, 4usize);
     let dense = registry::variant("adamw").unwrap().state_bytes(m, n, r);
@@ -529,7 +664,12 @@ fn graph_bench(rng: &mut Rng) -> Option<Json> {
 /// previous entry: absolute µs drifts (machine-dependent) are printed as
 /// warnings, machine-normalized ratio drops below 0.9x the previous
 /// entry are returned as the strict-gate regression flag.
-fn track_history(host: &Json, speedup_512: f64, pool_vs_spawn: f64) -> bool {
+fn track_history(
+    host: &Json,
+    speedup_512: f64,
+    pool_vs_spawn: f64,
+    batched_vs_per_param: f64,
+) -> bool {
     let path = match fsutil::find_repo_root() {
         Ok(root) => root.join("BENCH_HISTORY.json"),
         Err(e) => {
@@ -588,6 +728,7 @@ fn track_history(host: &Json, speedup_512: f64, pool_vs_spawn: f64) -> bool {
         for (name, cur) in [
             ("speedup_512x128_vs_scalar", speedup_512),
             ("pool_vs_spawn_512x128_r4", pool_vs_spawn),
+            ("batched_vs_per_param_48x256x64_r4", batched_vs_per_param),
         ] {
             if let Some(p) = prev.get(name).and_then(|v| v.as_f64().ok()) {
                 if cur < 0.9 * p {
@@ -612,6 +753,7 @@ fn track_history(host: &Json, speedup_512: f64, pool_vs_spawn: f64) -> bool {
         ("simd_tier", Json::str(simd::simd_tier())),
         ("speedup_512x128_vs_scalar", Json::num(speedup_512)),
         ("pool_vs_spawn_512x128_r4", Json::num(pool_vs_spawn)),
+        ("batched_vs_per_param_48x256x64_r4", Json::num(batched_vs_per_param)),
         ("host_us_per_step", host.clone()),
     ]);
     println!("appended BENCH_HISTORY entry:\n{}", entry.to_string_pretty());
@@ -631,6 +773,7 @@ fn main() {
     let mut rng = Rng::new(0);
     let (host, speedup_512) = host_bench(&mut rng);
     let (pvs_json, pvs_speedup) = pool_vs_spawn_bench(&mut rng);
+    let (bvp_json, bvp_speedup) = batched_vs_per_param_bench(&mut rng);
     let audit = gemm_audit(&mut rng);
     let state_bytes = state_bytes_bench();
     let graphs = graph_bench(&mut rng);
@@ -645,6 +788,7 @@ fn main() {
         ("iters", Json::num(ITERS as f64)),
         ("host_us_per_step", host.clone()),
         ("pool_vs_spawn_512x128_r4", pvs_json),
+        ("batched_vs_per_param_48x256x64_r4", bvp_json),
         ("gemm_audit_512x128", audit),
         ("state_bytes_512x128_r4", state_bytes),
         ("speedup_512x128_vs_scalar", Json::num(speedup_512)),
@@ -657,7 +801,7 @@ fn main() {
         Err(e) => eprintln!("could not write BENCH_OPT.json: {e:#}"),
     }
 
-    let regressed = track_history(&host, speedup_512, pvs_speedup);
+    let regressed = track_history(&host, speedup_512, pvs_speedup, bvp_speedup);
 
     let lax = std::env::var("MLORC_BENCH_LAX").map(|v| v == "1").unwrap_or(false);
     let strict = std::env::var("MLORC_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
@@ -678,6 +822,18 @@ fn main() {
         let msg = format!(
             "acceptance: pooled parallel-site mix (512x128, r=4) is {pvs_speedup:.2}x vs the \
              PR-1 spawn scaffold, target >= 1.5x"
+        );
+        if lax {
+            eprintln!("WARN (MLORC_BENCH_LAX=1): {msg}");
+        } else {
+            eprintln!("FAIL: {msg}");
+            failed = true;
+        }
+    }
+    if bvp_speedup < 1.5 {
+        let msg = format!(
+            "acceptance: shape-class batched stepping (48 x 256x64, r=4) is {bvp_speedup:.2}x \
+             vs the per-parameter fan-out, target >= 1.5x"
         );
         if lax {
             eprintln!("WARN (MLORC_BENCH_LAX=1): {msg}");

@@ -13,25 +13,27 @@
 //!
 //! Besides the graph path, every state can step itself entirely on the
 //! host through [`OptState::host_step`], backed by the cross-validated
-//! `*_core` kernels the compressors route to. [`host_step_all`] fans a
-//! batch of such updates out over the persistent worker pool
-//! (`linalg::pool`); because each job owns its parameter, state and Omega
-//! RNG stream, and the linalg kernels are bit-deterministic, the parallel
-//! schedule produces results bit-identical to stepping sequentially.
+//! `*_core` kernels the compressors route to. [`host_step_all`] plans a
+//! batch of such updates into *shape classes* — jobs sharing (variant,
+//! weight shape, state-field shapes) — and steps each class through
+//! `optim::step_class`, which runs QB-factored classes as stacked banded
+//! kernel invocations over the persistent worker pool (`linalg::pool`)
+//! and everything else as per-member pool tasks; because each job owns
+//! its parameter, state and Omega RNG stream, and the linalg kernels are
+//! bit-deterministic, the batched schedule produces results bit-identical
+//! to stepping sequentially.
 //!
 //! Every state also serializes to the v2 checkpoint format
 //! ([`OptState::tensor_fields`] / [`OptState::ckpt_meta`] /
 //! [`OptState::from_ckpt`]) under the same variant tags and field names
 //! as before the refactor — old v2 checkpoints keep loading byte-for-byte.
 
-use std::sync::Mutex;
-
 use anyhow::{bail, Result};
 
 use crate::config::Method;
-use crate::linalg::{pool, threads, Rng, Workspace};
+use crate::linalg::{Rng, Workspace};
 use crate::optim::registry::{self, MatrixOpt};
-use crate::optim::GaloreProjector;
+use crate::optim::{step_class, ClassJob, GaloreProjector};
 use crate::runtime::{ParamSpec, Preset};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -258,10 +260,11 @@ impl OptState {
 }
 
 /// One host optimizer update: a parameter, its gradient, state and Omega
-/// stream, bundled so a batch can be distributed across threads.
+/// stream, bundled so a batch can be planned into shape classes. The
+/// gradient is borrowed — callers keep ownership and clone nothing.
 pub struct HostStepJob<'a> {
     pub w: &'a mut Tensor,
-    pub grad: Tensor,
+    pub grad: &'a Tensor,
     pub state: &'a mut OptState,
     pub rng: &'a mut Rng,
     pub lr: f32,
@@ -269,66 +272,61 @@ pub struct HostStepJob<'a> {
     pub t: usize,
 }
 
-/// Run every job, fanned out over the persistent worker pool
-/// (`linalg::pool`) in contiguous chunks of at most `workspaces.len()`
-/// bands — no per-call thread spawns. Band closures run their linalg
-/// kernels in serial mode to avoid nested oversubscription; since the
-/// kernels are bit-deterministic across thread counts and jobs are fully
-/// independent, the parallel schedule is bit-identical to stepping
-/// sequentially in job order (asserted by `tests/host_parallel.rs`).
+/// Step every job, batched by shape class. Jobs sharing (variant, weight
+/// shape, state-field shapes) are handed as one group to
+/// `optim::step_class`: QB-factored classes run through the stacked class
+/// kernels — one banded invocation per algorithm phase for the whole
+/// class, bands claimed atomically across members — and every other
+/// layout falls back to per-member pool tasks with serial kernels.
+/// Classes run in first-occurrence order, members in job order; since
+/// members only ever touch their own state and the linalg kernels are
+/// bit-deterministic across thread counts and band boundaries, the result
+/// is bit-identical to stepping sequentially in job order (asserted by
+/// `tests/host_parallel.rs` for every registered method).
 pub fn host_step_all(jobs: &mut [HostStepJob], workspaces: &mut [Workspace]) -> Result<()> {
     if jobs.is_empty() {
         return Ok(());
     }
     assert!(!workspaces.is_empty(), "host_step_all needs at least one workspace");
-    let nt = workspaces.len().min(jobs.len());
-    if nt <= 1 {
-        let ws = &mut workspaces[0];
-        for job in jobs.iter_mut() {
-            job.state.host_step(job.w, &job.grad, job.lr, job.t, job.rng, ws)?;
+    // Shape-class plan. The key is the variant plus the weight and every
+    // state tensor shape, so the stacked kernels only ever see uniform
+    // members (e.g. AdaRank states whose live ranks have diverged land in
+    // different classes). Frozen params have no step and are skipped.
+    let mut classes: Vec<((&'static str, Vec<usize>), Vec<usize>)> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        if job.state.is_frozen() {
+            continue;
         }
-        return Ok(());
+        let mut dims: Vec<usize> = job.w.shape.clone();
+        for (_, t) in job.state.tensor_fields() {
+            dims.push(usize::MAX); // field separator — shapes can't collide
+            dims.extend_from_slice(&t.shape);
+        }
+        let key = (job.state.variant_name(), dims);
+        match classes.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, idxs)) => idxs.push(i),
+            None => classes.push((key, vec![i])),
+        }
     }
-    // Same contiguous div_ceil partition as the spawn-era scaffold; each
-    // band pairs a job chunk with its own workspace, handed to exactly
-    // one band closure through a take-once slot.
-    let chunk = jobs.len().div_ceil(nt);
-    let bands: Vec<_> = jobs
-        .chunks_mut(chunk)
-        .zip(workspaces.iter_mut())
-        .map(|(band, ws)| Mutex::new(Some((band, ws))))
-        .collect();
-    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-    let nbands = bands.len();
-    // Pin the band plan to exactly `nbands` one-row bands. When the pool
-    // runs the batch inline (serial scope / nested call) a single closure
-    // invocation receives the whole index range, so it drains every band.
-    threads::with_budget(nbands, || {
-        pool::par_row_bands(nbands, usize::MAX / 4, |_, range| {
-            for idx in range {
-                let Some((band, ws)) = bands[idx].lock().unwrap().take() else {
-                    continue;
-                };
-                threads::serial(|| {
-                    for job in band.iter_mut() {
-                        let r =
-                            job.state.host_step(job.w, &job.grad, job.lr, job.t, job.rng, ws);
-                        if let Err(e) = r {
-                            let mut slot = first_err.lock().unwrap();
-                            if slot.is_none() {
-                                *slot = Some(e);
-                            }
-                            return;
-                        }
-                    }
-                });
-            }
-        });
-    });
-    match first_err.into_inner().unwrap() {
-        Some(e) => Err(e),
-        None => Ok(()),
+    let mut slots: Vec<Option<&mut HostStepJob>> = jobs.iter_mut().map(Some).collect();
+    for (_, idxs) in classes {
+        let mut members: Vec<ClassJob> = Vec::with_capacity(idxs.len());
+        for i in idxs {
+            let job = slots[i].take().expect("job planned into two classes");
+            let HostStepJob { w, grad, state, rng, lr, t } = job;
+            let OptState::Opt(opt) = &mut **state else { continue };
+            members.push(ClassJob {
+                w: &mut **w,
+                g: &**grad,
+                opt,
+                rng: &mut **rng,
+                lr: *lr,
+                t: *t,
+            });
+        }
+        step_class(&mut members, workspaces)?;
     }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -354,10 +354,11 @@ impl<'rt> Trainer<'rt> {
         let opt_t0 = Instant::now();
         if self.cfg.host_opt {
             // Host stepping: all states update through the rust reference
-            // mirrors, fanned out across the worker pool. Trades per-layer
-            // gradient residency for parallelism; results are bit-identical
-            // to stepping sequentially (per-parameter Omega streams).
-            self.apply_updates_host(grads, lr, step)?;
+            // mirrors, batched by shape class across the worker pool.
+            // Trades per-layer gradient residency for parallelism; results
+            // are bit-identical to stepping sequentially (per-parameter
+            // Omega streams).
+            self.apply_updates_host(&grads, lr, step)?;
         } else {
             // Consume gradients in order, freeing each after its update —
             // the per-layer weight update schedule.
@@ -485,10 +486,12 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Host stepping: update every trainable parameter through the rust
-    /// reference optimizers, distributed over the worker pool. Each job
-    /// owns its parameter tensor, state and Omega stream, so the schedule
-    /// cannot change results (asserted by `tests/host_parallel.rs`).
-    fn apply_updates_host(&mut self, grads: Vec<Tensor>, lr: f32, step: usize) -> Result<()> {
+    /// reference optimizers, planned into shape classes and batched over
+    /// the worker pool (`host_step_all`). Each job owns its parameter
+    /// tensor, state and Omega stream and borrows its gradient, so the
+    /// schedule cannot change results (asserted by
+    /// `tests/host_parallel.rs`).
+    fn apply_updates_host(&mut self, grads: &[Tensor], lr: f32, step: usize) -> Result<()> {
         let t = step + 1;
         let galore_refresh_due = step % self.cfg.galore_update_freq == 0;
         let Trainer { params, adapters, states, omega_streams, trainable, host_ws, .. } = self;
@@ -511,7 +514,7 @@ impl<'rt> Trainer<'rt> {
             .iter_mut()
             .zip(omega_streams.iter_mut())
             .zip(trainable.iter())
-            .zip(grads.into_iter());
+            .zip(grads.iter());
         for (((state, rng), store), grad) in zipped {
             if state.is_frozen() {
                 continue;

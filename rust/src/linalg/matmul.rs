@@ -134,6 +134,39 @@ pub fn gemm_nn_band(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n:
     }
 }
 
+/// Stacked C_i = A_i @ B_i over a shape class: every member shares (m, k, n)
+/// and the whole class runs as **one** banded invocation over the stacked
+/// `members * m` row space (`pool::par_stacked_rows`) — pool dispatch and
+/// the band plan are paid once per class instead of once per member. Band
+/// splits at member boundaries keep each `gemm_nn_band` call inside one
+/// member, so every member's bits match a scalar [`matmul_into`] call.
+pub fn matmul_class_into(cs: &mut [Tensor], a: &[&Tensor], b: &[&Tensor]) {
+    let count = cs.len();
+    assert_eq!(count, a.len(), "matmul_class lhs count");
+    assert_eq!(count, b.len(), "matmul_class rhs count");
+    if count == 0 {
+        return;
+    }
+    let (m, k) = a[0].dims2().expect("matmul_class lhs");
+    let (k2, n) = b[0].dims2().expect("matmul_class rhs");
+    assert_eq!(k, k2, "matmul_class inner dims {k} vs {k2}");
+    for (i, c) in cs.iter_mut().enumerate() {
+        assert_eq!(a[i].dims2().expect("matmul_class lhs"), (m, k), "class lhs {i}");
+        assert_eq!(b[i].dims2().expect("matmul_class rhs"), (k, n), "class rhs {i}");
+        assert_eq!(c.dims2().expect("matmul_class out"), (m, n), "class out {i}");
+        flops::record("matmul", m, k, n);
+        c.data.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let stacked = pool::StackedMut::new(cs.iter_mut().map(|c| c.data.as_mut_slice()), m * n);
+    pool::par_stacked_rows(count, m, count * m * k * n, move |_, i, r| {
+        let chunk = unsafe { stacked.rows(i, r.clone(), n) };
+        gemm_nn_band(&a[i].data, &b[i].data, chunk, r.start, k, n);
+    });
+}
+
 // ------------------------------------------------------------ C = A^T @ B
 
 /// C = A^T @ B — (m, k)^T @ (m, n) -> (k, n).
@@ -214,6 +247,37 @@ pub fn gemm_tn_band(a: &[f32], b: &[f32], c: &mut [f32], p0: usize, m: usize, k:
         });
         ii = iend;
     }
+}
+
+/// Stacked C_i = A_i^T @ B_i over a shape class — the class sibling of
+/// [`matmul_at_b_into`], banding the stacked `members * k` output row
+/// space in one pool invocation. Same bit-identity argument as
+/// [`matmul_class_into`].
+pub fn matmul_class_at_b_into(cs: &mut [Tensor], a: &[&Tensor], b: &[&Tensor]) {
+    let count = cs.len();
+    assert_eq!(count, a.len(), "matmul_class_at_b lhs count");
+    assert_eq!(count, b.len(), "matmul_class_at_b rhs count");
+    if count == 0 {
+        return;
+    }
+    let (m, k) = a[0].dims2().expect("matmul_class_at_b lhs");
+    let (m2, n) = b[0].dims2().expect("matmul_class_at_b rhs");
+    assert_eq!(m, m2, "matmul_class_at_b outer dims {m} vs {m2}");
+    for (i, c) in cs.iter_mut().enumerate() {
+        assert_eq!(a[i].dims2().expect("matmul_class_at_b lhs"), (m, k), "class lhs {i}");
+        assert_eq!(b[i].dims2().expect("matmul_class_at_b rhs"), (m, n), "class rhs {i}");
+        assert_eq!(c.dims2().expect("matmul_class_at_b out"), (k, n), "class out {i}");
+        flops::record("matmul_at_b", k, m, n);
+        c.data.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let stacked = pool::StackedMut::new(cs.iter_mut().map(|c| c.data.as_mut_slice()), k * n);
+    pool::par_stacked_rows(count, k, count * m * k * n, move |_, i, r| {
+        let chunk = unsafe { stacked.rows(i, r.clone(), n) };
+        gemm_tn_band(&a[i].data, &b[i].data, chunk, r.start, m, k, n);
+    });
 }
 
 // ------------------------------------------------------------ C = A @ B^T
@@ -462,6 +526,42 @@ mod tests {
             matmul_at_b(&a, &b2).data,
             threads::serial(|| matmul_at_b(&a, &b2)).data
         );
+    }
+
+    #[test]
+    fn class_gemms_bit_match_per_member_calls() {
+        let mut rng = Rng::new(6);
+        for budget in [1usize, 2, 3, 8] {
+            threads::with_budget(budget, || {
+                let lhs: Vec<Tensor> =
+                    (0..5).map(|_| rng.gaussian_tensor(&[33, 20], 1.0)).collect();
+                let rhs: Vec<Tensor> =
+                    (0..5).map(|_| rng.gaussian_tensor(&[20, 24], 1.0)).collect();
+                let mut stacked: Vec<Tensor> = (0..5).map(|_| Tensor::zeros(&[33, 24])).collect();
+                let la: Vec<&Tensor> = lhs.iter().collect();
+                let lb: Vec<&Tensor> = rhs.iter().collect();
+                matmul_class_into(&mut stacked, &la, &lb);
+                for i in 0..5 {
+                    assert_eq!(stacked[i].data, matmul(&lhs[i], &rhs[i]).data, "nn member {i}");
+                }
+
+                let tall: Vec<Tensor> =
+                    (0..4).map(|_| rng.gaussian_tensor(&[33, 7], 1.0)).collect();
+                let wide: Vec<Tensor> =
+                    (0..4).map(|_| rng.gaussian_tensor(&[33, 24], 1.0)).collect();
+                let mut tn: Vec<Tensor> = (0..4).map(|_| Tensor::zeros(&[7, 24])).collect();
+                let ta: Vec<&Tensor> = tall.iter().collect();
+                let tb: Vec<&Tensor> = wide.iter().collect();
+                matmul_class_at_b_into(&mut tn, &ta, &tb);
+                for i in 0..4 {
+                    assert_eq!(
+                        tn[i].data,
+                        matmul_at_b(&tall[i], &wide[i]).data,
+                        "tn member {i} (budget {budget})"
+                    );
+                }
+            });
+        }
     }
 
     #[test]

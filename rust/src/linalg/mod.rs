@@ -25,11 +25,11 @@ pub mod threads;
 pub mod workspace;
 
 pub use matmul::{
-    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into,
-    scalar_matmul, scalar_matmul_a_bt, scalar_matmul_at_b,
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_class_at_b_into,
+    matmul_class_into, matmul_into, scalar_matmul, scalar_matmul_a_bt, scalar_matmul_at_b,
 };
-pub use qr::{mgs_qr, mgs_qr_ws};
+pub use qr::{mgs_qr, mgs_qr_class, mgs_qr_into, mgs_qr_ws};
 pub use rng::Rng;
-pub use rsvd::{rsvd_qb, rsvd_qb_factored, rsvd_qb_ws};
+pub use rsvd::{rsvd_qb, rsvd_qb_class, rsvd_qb_factored, rsvd_qb_factored_class, rsvd_qb_ws};
 pub use svd::{singular_values, top_k_ratio};
 pub use workspace::Workspace;

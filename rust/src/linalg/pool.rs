@@ -32,6 +32,17 @@
 //! send/sync wrapper whose (unsafe) accessor hands out the sub-slice for a
 //! row range — sound because `plan` produces disjoint ranges and every
 //! band index is claimed exactly once.
+//!
+//! On top of the single-matrix entry point sit the *shape-class* helpers
+//! behind batched multi-parameter stepping: [`par_stacked_rows`] bands the
+//! concatenated row space of N equally-shaped members and splits every
+//! claimed band at member boundaries (so a kernel invocation always works
+//! rows of exactly one member — banding determinism carries over verbatim,
+//! because per-row arithmetic never depends on where a band starts), and
+//! [`par_member_tasks`] claims whole members from an atomic cursor with a
+//! per-thread scratch slot (for inherently-serial per-member work like MGS
+//! QR). [`StackedMut`] / [`DisjointMut`] are the matching row-range /
+//! whole-member mutable accessors.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -270,6 +281,159 @@ impl<'a> BandedMut<'a> {
     }
 }
 
+// ---------------------------------------------------------- shape classes
+
+/// Band-parallel execution over the stacked row space of `members`
+/// equally-shaped members of `rows` rows each. The plan treats the class
+/// as one `members * rows`-row kernel (so dispatch cost is paid once per
+/// class, not per member), but every claimed band is split at member
+/// boundaries before reaching `f(band_idx, member_idx, row_range)` — a
+/// single invocation always covers rows of exactly one member.
+///
+/// Bit-determinism: the per-row arithmetic of every banded kernel is
+/// independent of where its band starts (that is the `plan` contract), so
+/// splitting a band at a member boundary produces the same bits as running
+/// the member's rows in any other banding — including the scalar
+/// per-member call.
+pub fn par_stacked_rows<F>(members: usize, rows: usize, madds: usize, f: F)
+where
+    F: Fn(usize, usize, Range<usize>) + Sync,
+{
+    if members == 0 || rows == 0 {
+        return;
+    }
+    par_row_bands(members * rows, madds, move |band, flat| {
+        let mut lo = flat.start;
+        while lo < flat.end {
+            let member = lo / rows;
+            let hi = flat.end.min((member + 1) * rows);
+            f(band, member, (lo - member * rows)..(hi - member * rows));
+            lo = hi;
+        }
+    });
+}
+
+/// Run one task per member on the pool, claiming member indices from an
+/// atomic cursor. Each participating thread takes one scratch slot
+/// (take-once, like the per-band workspaces of the old per-parameter
+/// stepper) and reuses it across every member it claims. Used for
+/// per-member work that is inherently serial inside a member (MGS QR, the
+/// scalar-step fallback) but independent across members.
+pub fn par_member_tasks<S, F>(slots: Vec<S>, members: usize, f: F)
+where
+    S: Send,
+    F: Fn(usize, &mut S) + Sync,
+{
+    if members == 0 || slots.is_empty() {
+        return;
+    }
+    let nslots = slots.len().min(members);
+    let slots: Vec<Mutex<Option<S>>> =
+        slots.into_iter().take(nslots).map(|s| Mutex::new(Some(s))).collect();
+    let next = AtomicUsize::new(0);
+    threads::with_budget(nslots, || {
+        par_row_bands(nslots, usize::MAX / 4, |_, range| {
+            for si in range {
+                let Some(mut slot) = slots[si].lock().unwrap().take() else { continue };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= members {
+                        break;
+                    }
+                    f(i, &mut slot);
+                }
+            }
+        });
+    });
+}
+
+/// Row-range access into the buffers of a shape class: `members` equally
+/// sized `f32` buffers, addressed as (member, row range). The stacked
+/// sibling of [`BandedMut`] — same soundness argument, with
+/// `par_stacked_rows` guaranteeing that no two live borrows of one
+/// member's rows overlap.
+pub struct StackedMut<'a> {
+    ptrs: Vec<*mut f32>,
+    member_len: usize,
+    _life: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for StackedMut<'_> {}
+unsafe impl Sync for StackedMut<'_> {}
+
+impl<'a> StackedMut<'a> {
+    /// Wrap one mutable buffer per member; every buffer must have exactly
+    /// `member_len` elements (shape classes are uniform by construction).
+    pub fn new<I>(members: I, member_len: usize) -> StackedMut<'a>
+    where
+        I: Iterator<Item = &'a mut [f32]>,
+    {
+        let ptrs = members
+            .map(|s| {
+                assert_eq!(s.len(), member_len, "stacked member buffer length");
+                s.as_mut_ptr()
+            })
+            .collect();
+        StackedMut { ptrs, member_len, _life: std::marker::PhantomData }
+    }
+
+    /// The sub-slice holding rows `r` (width `width`) of member `member`.
+    ///
+    /// # Safety
+    /// As [`BandedMut::rows`]: no two live borrows may overlap. Inside
+    /// `par_stacked_rows` that holds because bands are disjoint in the
+    /// stacked row space and each (member, range) pair runs exactly once.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rows(&self, member: usize, r: Range<usize>, width: usize) -> &mut [f32] {
+        let lo = r.start * width;
+        let hi = r.end * width;
+        assert!(
+            lo <= hi && hi <= self.member_len,
+            "stacked slice {lo}..{hi} of {}",
+            self.member_len
+        );
+        std::slice::from_raw_parts_mut(self.ptrs[member].add(lo), hi - lo)
+    }
+}
+
+/// Whole-item mutable access across threads for member-granular tasks
+/// (one task owns one item for its whole duration). Soundness rests on
+/// the `par_member_tasks` contract that every index is claimed exactly
+/// once.
+pub struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _life: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    pub fn new(s: &'a mut [T]) -> DisjointMut<'a, T> {
+        DisjointMut { ptr: s.as_mut_ptr(), len: s.len(), _life: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable reference to item `i`.
+    ///
+    /// # Safety
+    /// Caller must guarantee no two live borrows of the same index — holds
+    /// when each index is claimed by exactly one `par_member_tasks` task.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn item(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "disjoint item {i} of {}", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +471,42 @@ mod tests {
         threads::serial(|| {
             let (nb, _) = plan(1024, usize::MAX / 4);
             assert_eq!(nb, 1);
+        });
+    }
+
+    #[test]
+    fn stacked_rows_cover_every_member_exactly_once() {
+        threads::with_budget(3, || {
+            let members = 5;
+            let rows = 7;
+            let mut bufs: Vec<Vec<f32>> = vec![vec![0.0; rows]; members];
+            let stacked =
+                StackedMut::new(bufs.iter_mut().map(|b| b.as_mut_slice()), rows);
+            par_stacked_rows(members, rows, usize::MAX / 4, |_, m, r| {
+                let h = unsafe { stacked.rows(m, r.clone(), 1) };
+                for (x, i) in h.iter_mut().zip(r) {
+                    *x += (m * rows + i) as f32 + 1.0;
+                }
+            });
+            for (m, buf) in bufs.iter().enumerate() {
+                for (i, x) in buf.iter().enumerate() {
+                    assert_eq!(*x, (m * rows + i) as f32 + 1.0, "member {m} row {i}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn member_tasks_claim_each_member_once() {
+        threads::with_budget(4, || {
+            let members = 13;
+            let mut hits = vec![0u32; members];
+            let out = DisjointMut::new(&mut hits);
+            let slots: Vec<usize> = vec![0, 0, 0, 0];
+            par_member_tasks(slots, members, |i, _slot| {
+                *unsafe { out.item(i) } += 1;
+            });
+            assert!(hits.iter().all(|&h| h == 1), "{hits:?}");
         });
     }
 

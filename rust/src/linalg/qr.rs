@@ -12,7 +12,7 @@
 
 use crate::tensor::Tensor;
 
-use super::Workspace;
+use super::{pool, Workspace};
 
 /// Column-orthonormal Q of a (m, l) matrix, l small. Dead columns (norm^2
 /// <= 1e-30) become zero columns — rank simply drops, matching rsvd_lib.
@@ -26,6 +26,20 @@ pub fn mgs_qr(y: &Tensor) -> Tensor {
 pub fn mgs_qr_ws(y: &Tensor, ws: &mut Workspace) -> Tensor {
     let (m, l) = y.dims2().expect("mgs_qr input");
     let mut cols = ws.take(m * l);
+    let mut q = ws.take_tensor(&[m, l]);
+    mgs_qr_into(y, &mut q, &mut cols);
+    ws.give(cols);
+    q
+}
+
+/// The MGS core, writing into a caller-shaped Q and a caller-provided
+/// `m * l` column-major scratch. Both are fully overwritten before any
+/// read, so dirty scratch (reused across the members of a shape class)
+/// cannot perturb bits.
+pub fn mgs_qr_into(y: &Tensor, q: &mut Tensor, cols: &mut [f32]) {
+    let (m, l) = y.dims2().expect("mgs_qr input");
+    assert_eq!(q.dims2().expect("mgs_qr out"), (m, l), "mgs_qr out shape");
+    let cols = &mut cols[..m * l];
     // gather to column-major: cols[j*m + i] = y[i, j]
     for (i, row) in y.data.chunks_exact(l.max(1)).enumerate().take(m) {
         for (j, &v) in row.iter().enumerate() {
@@ -53,15 +67,45 @@ pub fn mgs_qr_ws(y: &Tensor, ws: &mut Workspace) -> Tensor {
         }
     }
     // scatter back to row-major
-    let mut q = ws.take_tensor(&[m, l]);
     for j in 0..l {
         let col = &cols[j * m..(j + 1) * m];
         for (i, &v) in col.iter().enumerate() {
             q.data[i * l + j] = v;
         }
     }
-    ws.give(cols);
-    q
+}
+
+/// Batched MGS QR over a shape class: factor every `ys[i]` into the
+/// pre-shaped `qs[i]`. MGS is inherently serial *within* a member, so the
+/// class runs one member per atomically-claimed pool task
+/// (`pool::par_member_tasks`), each task reusing a per-slot column-major
+/// scratch from its `workspaces` slot. Bit-identical to per-member
+/// [`mgs_qr_ws`] calls: members are independent and `mgs_qr_into` fully
+/// overwrites its scratch.
+pub fn mgs_qr_class(ys: &[Tensor], qs: &mut [Tensor], workspaces: &mut [Workspace]) {
+    let count = ys.len();
+    assert_eq!(count, qs.len(), "mgs_qr_class member count");
+    if count == 0 {
+        return;
+    }
+    let (m, l) = ys[0].dims2().expect("mgs_qr_class input");
+    let nslots = workspaces.len().min(count);
+    if nslots <= 1 || count == 1 {
+        let ws = workspaces.first_mut().expect("mgs_qr_class needs a workspace");
+        let mut cols = ws.take(m * l);
+        for (y, q) in ys.iter().zip(qs.iter_mut()) {
+            mgs_qr_into(y, q, &mut cols);
+        }
+        ws.give(cols);
+        return;
+    }
+    let out = pool::DisjointMut::new(qs);
+    let slots: Vec<&mut Workspace> = workspaces.iter_mut().take(nslots).collect();
+    pool::par_member_tasks(slots, count, |i, ws| {
+        let mut cols = ws.take(m * l);
+        mgs_qr_into(&ys[i], unsafe { out.item(i) }, &mut cols);
+        ws.give(cols);
+    });
 }
 
 #[cfg(test)]
@@ -106,6 +150,30 @@ mod tests {
         for i in 0..16 {
             assert_eq!(q.at2(i, 1), 0.0);
             assert!(q.at2(i, 0).is_finite() && q.at2(i, 2).is_finite());
+        }
+    }
+
+    #[test]
+    fn class_qr_bit_matches_per_member_calls() {
+        let mut rng = Rng::new(5);
+        let ys: Vec<Tensor> = (0..6).map(|_| rng.gaussian_tensor(&[40, 5], 1.0)).collect();
+        let mut ws = Workspace::new();
+        let want: Vec<Vec<f32>> = ys
+            .iter()
+            .map(|y| {
+                let q = mgs_qr_ws(y, &mut ws);
+                let d = q.data.clone();
+                ws.give_tensor(q);
+                d
+            })
+            .collect();
+        for nws in [1usize, 3] {
+            let mut workspaces: Vec<Workspace> = (0..nws).map(|_| Workspace::new()).collect();
+            let mut qs: Vec<Tensor> = (0..6).map(|_| Tensor::zeros(&[40, 5])).collect();
+            mgs_qr_class(&ys, &mut qs, &mut workspaces);
+            for (i, q) in qs.iter().enumerate() {
+                assert_eq!(q.data, want[i], "member {i} with {nws} workspaces");
+            }
         }
     }
 

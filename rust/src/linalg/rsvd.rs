@@ -23,6 +23,8 @@
 
 use crate::tensor::Tensor;
 
+use super::matmul::{matmul_class_at_b_into, matmul_class_into};
+use super::qr::mgs_qr_class;
 use super::{matmul, matmul_at_b_into, matmul_into, mgs_qr_ws, Rng, Workspace};
 
 /// A ~= Q @ B with Q (m, l) column-orthonormal, B = Q^T A (l, n).
@@ -94,6 +96,125 @@ pub fn rsvd_qb_factored(
     }
     ws.give_tensor(gproj);
     (q, b)
+}
+
+/// Batched [`rsvd_qb_ws`] over a shape class: every member shares (m, n, l)
+/// and each phase (sketch GEMM, MGS QR, projection GEMM) runs as one
+/// stacked pool invocation for the whole class. Per member the phase order
+/// and arithmetic are exactly the scalar path's, so each returned (Q, B)
+/// pair is bit-identical to a per-member call. Factors are backed by
+/// `workspaces[0]` buffers.
+pub fn rsvd_qb_class(
+    inputs: &[&Tensor],
+    omegas: &[&Tensor],
+    workspaces: &mut [Workspace],
+) -> Vec<(Tensor, Tensor)> {
+    let count = inputs.len();
+    assert_eq!(count, omegas.len(), "rsvd_qb_class omega count");
+    if count == 0 {
+        return Vec::new();
+    }
+    let (m, n) = inputs[0].dims2().expect("rsvd_qb_class input");
+    let (n2, l) = omegas[0].dims2().expect("rsvd_qb_class omega");
+    assert_eq!(n, n2, "rsvd_qb_class omega rows {n2} vs input cols {n}");
+
+    // Y_i = A_i Ω_i (stacked sketch)
+    let mut ys: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
+    matmul_class_into(&mut ys, inputs, omegas);
+    // Q_i = qr(Y_i)
+    let mut qs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
+    mgs_qr_class(&ys, &mut qs, workspaces);
+    for y in ys {
+        workspaces[0].give_tensor(y);
+    }
+    // B_i = Q_iᵀ A_i (stacked projection)
+    let mut bs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, n])).collect();
+    {
+        let q_refs: Vec<&Tensor> = qs.iter().collect();
+        matmul_class_at_b_into(&mut bs, &q_refs, inputs);
+    }
+    qs.into_iter().zip(bs).collect()
+}
+
+/// Batched [`rsvd_qb_factored`] over a shape class — the MLorc fast path
+/// with every small GEMM, gradient sketch, QR, and blend stacked across
+/// members. Phase order per member mirrors the scalar function exactly
+/// (bit-identity), and the elementwise β-blends use the identical
+/// expression.
+pub fn rsvd_qb_factored_class(
+    qps: &[&Tensor],
+    bps: &[&Tensor],
+    beta: f32,
+    gs: &[&Tensor],
+    omegas: &[&Tensor],
+    workspaces: &mut [Workspace],
+) -> Vec<(Tensor, Tensor)> {
+    let count = qps.len();
+    assert_eq!(count, bps.len(), "rsvd_factored_class b_prev count");
+    assert_eq!(count, gs.len(), "rsvd_factored_class grad count");
+    assert_eq!(count, omegas.len(), "rsvd_factored_class omega count");
+    if count == 0 {
+        return Vec::new();
+    }
+    let (m, l) = qps[0].dims2().expect("factored class q_prev");
+    let (_, n) = bps[0].dims2().expect("factored class b_prev");
+
+    // Y = beta * qp (bp Ω) + (1-beta) * g Ω
+    let mut t1s: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, l])).collect();
+    matmul_class_into(&mut t1s, bps, omegas);
+    let mut ys: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
+    {
+        let t1_refs: Vec<&Tensor> = t1s.iter().collect();
+        matmul_class_into(&mut ys, qps, &t1_refs);
+    }
+    for t in t1s {
+        workspaces[0].give_tensor(t);
+    }
+    let mut goms: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
+    matmul_class_into(&mut goms, gs, omegas);
+    for (y, gom) in ys.iter_mut().zip(&goms) {
+        for (yv, &gv) in y.data.iter_mut().zip(&gom.data) {
+            *yv = beta * *yv + (1.0 - beta) * gv;
+        }
+    }
+    for t in goms {
+        workspaces[0].give_tensor(t);
+    }
+
+    let mut qs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
+    mgs_qr_class(&ys, &mut qs, workspaces);
+    for y in ys {
+        workspaces[0].give_tensor(y);
+    }
+
+    // B = beta * (Qᵀ qp) bp + (1-beta) * Qᵀ g
+    let mut rots: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, l])).collect();
+    {
+        let q_refs: Vec<&Tensor> = qs.iter().collect();
+        matmul_class_at_b_into(&mut rots, &q_refs, qps);
+    }
+    let mut bs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, n])).collect();
+    {
+        let rot_refs: Vec<&Tensor> = rots.iter().collect();
+        matmul_class_into(&mut bs, &rot_refs, bps);
+    }
+    for t in rots {
+        workspaces[0].give_tensor(t);
+    }
+    let mut gprojs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, n])).collect();
+    {
+        let q_refs: Vec<&Tensor> = qs.iter().collect();
+        matmul_class_at_b_into(&mut gprojs, &q_refs, gs);
+    }
+    for (b, gproj) in bs.iter_mut().zip(&gprojs) {
+        for (bv, &gv) in b.data.iter_mut().zip(&gproj.data) {
+            *bv = beta * *bv + (1.0 - beta) * gv;
+        }
+    }
+    for t in gprojs {
+        workspaces[0].give_tensor(t);
+    }
+    qs.into_iter().zip(bs).collect()
 }
 
 /// Convenience: draw Omega from `rng` and return the reconstruction QB.
@@ -197,6 +318,62 @@ mod tests {
         let (qd, bd) = rsvd_qb(&scaled, &omega);
         let rel = matmul(&qf, &bf).rel_err(&matmul(&qd, &bd));
         assert!(rel < 1e-5, "rel {rel}");
+    }
+
+    #[test]
+    fn class_paths_bit_match_scalar_paths() {
+        let mut rng = Rng::new(21);
+        let (m, n, l) = (28, 22, 4);
+        let count = 5;
+        let mats: Vec<Tensor> = (0..count).map(|_| rng.gaussian_tensor(&[m, n], 1.0)).collect();
+        let omegas: Vec<Tensor> =
+            (0..count).map(|_| rng.gaussian_tensor(&[n, l], 1.0)).collect();
+        let mut ws = Workspace::new();
+        let want: Vec<(Vec<f32>, Vec<f32>)> = mats
+            .iter()
+            .zip(&omegas)
+            .map(|(a, om)| {
+                let (q, b) = rsvd_qb_ws(a, om, &mut ws);
+                let out = (q.data.clone(), b.data.clone());
+                ws.give_tensor(q);
+                ws.give_tensor(b);
+                out
+            })
+            .collect();
+        let mut workspaces: Vec<Workspace> = (0..3).map(|_| Workspace::new()).collect();
+        let a_refs: Vec<&Tensor> = mats.iter().collect();
+        let om_refs: Vec<&Tensor> = omegas.iter().collect();
+        let got = rsvd_qb_class(&a_refs, &om_refs, &mut workspaces);
+        for (i, (q, b)) in got.iter().enumerate() {
+            assert_eq!(q.data, want[i].0, "direct class Q member {i}");
+            assert_eq!(b.data, want[i].1, "direct class B member {i}");
+        }
+
+        // factored path
+        let beta = 0.9f32;
+        let qps: Vec<Tensor> = (0..count)
+            .map(|_| mgs_qr_ws(&rng.gaussian_tensor(&[m, l], 1.0), &mut ws))
+            .collect();
+        let bps: Vec<Tensor> = (0..count).map(|_| rng.gaussian_tensor(&[l, n], 1.0)).collect();
+        let gs: Vec<Tensor> = (0..count).map(|_| rng.gaussian_tensor(&[m, n], 1.0)).collect();
+        let want_f: Vec<(Vec<f32>, Vec<f32>)> = (0..count)
+            .map(|i| {
+                let (q, b) = rsvd_qb_factored(&qps[i], &bps[i], beta, &gs[i], &omegas[i], &mut ws);
+                let out = (q.data.clone(), b.data.clone());
+                ws.give_tensor(q);
+                ws.give_tensor(b);
+                out
+            })
+            .collect();
+        let qp_refs: Vec<&Tensor> = qps.iter().collect();
+        let bp_refs: Vec<&Tensor> = bps.iter().collect();
+        let g_refs: Vec<&Tensor> = gs.iter().collect();
+        let got_f =
+            rsvd_qb_factored_class(&qp_refs, &bp_refs, beta, &g_refs, &om_refs, &mut workspaces);
+        for (i, (q, b)) in got_f.iter().enumerate() {
+            assert_eq!(q.data, want_f[i].0, "factored class Q member {i}");
+            assert_eq!(b.data, want_f[i].1, "factored class B member {i}");
+        }
     }
 
     #[test]

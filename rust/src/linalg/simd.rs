@@ -1,26 +1,31 @@
 //! 8-lane SIMD microkernels for the GEMM inner loops.
 //!
-//! Two tiers, selected once per process:
+//! Three tiers, selected once per process:
 //!
 //!  * **portable** — unrolled 8-wide lane arrays (`[f32; 8]` chunks with
 //!    independent accumulators) that LLVM reliably autovectorizes without
 //!    fast-math, on every architecture;
 //!  * **x86-64 AVX2+FMA** — explicit `std::arch` intrinsics behind
 //!    *runtime* feature detection (`is_x86_feature_detected!`), used when
-//!    the CPU has them and `MLORC_NO_SIMD` is unset.
+//!    the CPU has them and `MLORC_NO_SIMD` is unset;
+//!  * **aarch64 NEON** — explicit `std::arch` intrinsics, each 8-lane
+//!    body as two 128-bit `float32x4` quads (quad 0 = lanes 0–3, quad 1 =
+//!    lanes 4–7, so the dot summation tree is lane-compatible with the
+//!    other tiers). NEON is baseline on aarch64, so there is no feature
+//!    probe — only the `MLORC_NO_SIMD` escape hatch.
 //!
 //! Determinism contract: tier selection is process-global and every
 //! routine fixes its per-element operation order by position only (8-wide
 //! body from index 0, scalar tail) — never by band start — so banded
-//! kernels stay bit-identical across thread counts. The two tiers may
-//! differ from each other in the last ulp (FMA contraction, dot-tree
+//! kernels stay bit-identical across thread counts. Tiers may differ
+//! from each other in the last ulp (FMA contraction, dot-tree
 //! rounding); the scalar-oracle property tests compare with tolerance.
 //!
 //! No multiply is ever skipped on a zero operand: `0 · NaN = NaN` and
-//! `0 · Inf = NaN` propagate through both tiers (pinned by the kernel
+//! `0 · Inf = NaN` propagate through every tier (pinned by the kernel
 //! regression tests).
 
-/// SIMD register width in f32 lanes (AVX 256-bit).
+/// SIMD width in f32 lanes (one AVX 256-bit register, two NEON quads).
 pub const LANES: usize = 8;
 
 #[cfg(target_arch = "x86_64")]
@@ -40,13 +45,25 @@ fn avx_ok() -> bool {
     false
 }
 
+// NEON is baseline on aarch64, so there is nothing to feature-detect —
+// only the MLORC_NO_SIMD escape hatch can turn the tier off.
+#[cfg(target_arch = "aarch64")]
+fn neon_ok() -> bool {
+    use std::sync::OnceLock;
+    static OK: OnceLock<bool> = OnceLock::new();
+    *OK.get_or_init(|| std::env::var_os("MLORC_NO_SIMD").is_none())
+}
+
 /// True when the explicit `std::arch` tier is active (diagnostics/bench).
 pub fn simd_tier() -> &'static str {
     if avx_ok() {
-        "avx2+fma"
-    } else {
-        "portable8"
+        return "avx2+fma";
     }
+    #[cfg(target_arch = "aarch64")]
+    if neon_ok() {
+        return "neon";
+    }
+    "portable8"
 }
 
 // ------------------------------------------------------------------- axpy
@@ -59,6 +76,11 @@ pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
     #[cfg(target_arch = "x86_64")]
     if avx_ok() {
         unsafe { axpy_avx(c, a, b) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if neon_ok() {
+        unsafe { axpy_neon(c, a, b) };
         return;
     }
     axpy_portable(c, a, b);
@@ -97,6 +119,28 @@ unsafe fn axpy_avx(c: &mut [f32], a: f32, b: &[f32]) {
     }
 }
 
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(c: &mut [f32], a: f32, b: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = c.len().min(b.len());
+    let va = vdupq_n_f32(a);
+    let mut j = 0;
+    while j + LANES <= n {
+        let b0 = vld1q_f32(b.as_ptr().add(j));
+        let b1 = vld1q_f32(b.as_ptr().add(j + 4));
+        let c0 = vld1q_f32(c.as_ptr().add(j));
+        let c1 = vld1q_f32(c.as_ptr().add(j + 4));
+        vst1q_f32(c.as_mut_ptr().add(j), vfmaq_f32(c0, va, b0));
+        vst1q_f32(c.as_mut_ptr().add(j + 4), vfmaq_f32(c1, va, b1));
+        j += LANES;
+    }
+    while j < n {
+        *c.get_unchecked_mut(j) += a * *b.get_unchecked(j);
+        j += 1;
+    }
+}
+
 /// Four simultaneous axpys against one shared `b` row:
 /// `c_i[j] += v_i * b[j]` — the 4-row register tile of `gemm_nn` (loads
 /// each `b` lane once per four output rows).
@@ -118,6 +162,11 @@ pub fn axpy4(
     #[cfg(target_arch = "x86_64")]
     if avx_ok() {
         unsafe { axpy4_avx(c0, c1, c2, c3, v0, v1, v2, v3, b) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if neon_ok() {
+        unsafe { axpy4_neon(c0, c1, c2, c3, v0, v1, v2, v3, b) };
         return;
     }
     axpy4_portable(c0, c1, c2, c3, v0, v1, v2, v3, b);
@@ -200,6 +249,48 @@ unsafe fn axpy4_avx(
     }
 }
 
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn axpy4_neon(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    v0: f32,
+    v1: f32,
+    v2: f32,
+    v3: f32,
+    b: &[f32],
+) {
+    use std::arch::aarch64::*;
+    // clamp like axpy_neon/dot_neon: never trust one operand's length alone
+    let n = b.len().min(c0.len()).min(c1.len()).min(c2.len()).min(c3.len());
+    let (w0, w1, w2, w3) = (vdupq_n_f32(v0), vdupq_n_f32(v1), vdupq_n_f32(v2), vdupq_n_f32(v3));
+    let mut j = 0;
+    while j + LANES <= n {
+        let b0 = vld1q_f32(b.as_ptr().add(j));
+        let b1 = vld1q_f32(b.as_ptr().add(j + 4));
+        vst1q_f32(c0.as_mut_ptr().add(j), vfmaq_f32(vld1q_f32(c0.as_ptr().add(j)), w0, b0));
+        vst1q_f32(c0.as_mut_ptr().add(j + 4), vfmaq_f32(vld1q_f32(c0.as_ptr().add(j + 4)), w0, b1));
+        vst1q_f32(c1.as_mut_ptr().add(j), vfmaq_f32(vld1q_f32(c1.as_ptr().add(j)), w1, b0));
+        vst1q_f32(c1.as_mut_ptr().add(j + 4), vfmaq_f32(vld1q_f32(c1.as_ptr().add(j + 4)), w1, b1));
+        vst1q_f32(c2.as_mut_ptr().add(j), vfmaq_f32(vld1q_f32(c2.as_ptr().add(j)), w2, b0));
+        vst1q_f32(c2.as_mut_ptr().add(j + 4), vfmaq_f32(vld1q_f32(c2.as_ptr().add(j + 4)), w2, b1));
+        vst1q_f32(c3.as_mut_ptr().add(j), vfmaq_f32(vld1q_f32(c3.as_ptr().add(j)), w3, b0));
+        vst1q_f32(c3.as_mut_ptr().add(j + 4), vfmaq_f32(vld1q_f32(c3.as_ptr().add(j + 4)), w3, b1));
+        j += LANES;
+    }
+    while j < n {
+        let bv = *b.get_unchecked(j);
+        *c0.get_unchecked_mut(j) += v0 * bv;
+        *c1.get_unchecked_mut(j) += v1 * bv;
+        *c2.get_unchecked_mut(j) += v2 * bv;
+        *c3.get_unchecked_mut(j) += v3 * bv;
+        j += 1;
+    }
+}
+
 // -------------------------------------------------------------------- dot
 
 /// `Σ a[j]·b[j]` with a fixed 8-lane split-accumulator summation tree
@@ -211,6 +302,10 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     if avx_ok() {
         return unsafe { dot_avx(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if neon_ok() {
+        return unsafe { dot_neon(a, b) };
     }
     dot_portable(a, b)
 }
@@ -252,6 +347,36 @@ unsafe fn dot_avx(a: &[f32], b: &[f32]) -> f32 {
     }
     let mut s = [0.0f32; LANES];
     _mm256_storeu_ps(s.as_mut_ptr(), acc);
+    let mut tail = 0.0f32;
+    while j < n {
+        tail += *a.get_unchecked(j) * *b.get_unchecked(j);
+        j += 1;
+    }
+    lane_tree(s) + tail
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = a.len().min(b.len());
+    // acc0 holds lanes 0–3, acc1 lanes 4–7, so lane_tree sees the same
+    // lane layout as the portable and AVX tiers.
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut j = 0;
+    while j + LANES <= n {
+        let a0 = vld1q_f32(a.as_ptr().add(j));
+        let a1 = vld1q_f32(a.as_ptr().add(j + 4));
+        let b0 = vld1q_f32(b.as_ptr().add(j));
+        let b1 = vld1q_f32(b.as_ptr().add(j + 4));
+        acc0 = vfmaq_f32(acc0, a0, b0);
+        acc1 = vfmaq_f32(acc1, a1, b1);
+        j += LANES;
+    }
+    let mut s = [0.0f32; LANES];
+    vst1q_f32(s.as_mut_ptr(), acc0);
+    vst1q_f32(s.as_mut_ptr().add(4), acc1);
     let mut tail = 0.0f32;
     while j < n {
         tail += *a.get_unchecked(j) * *b.get_unchecked(j);

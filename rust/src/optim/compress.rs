@@ -29,12 +29,19 @@
 // purpose — it is the single dispatch surface of the optimizer matrix.
 #![allow(clippy::too_many_arguments)]
 
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
-use crate::linalg::{matmul, Rng, Workspace};
+use crate::linalg::{matmul, pool, threads, Rng, Workspace};
 use crate::tensor::{Tensor, TensorU8};
 use crate::util::json::Json;
 
+use super::mlorc::{
+    mlorc_adamw_core_class, mlorc_lion_core_class, mlorc_sgdm_core_class, QbClassJob,
+};
+use super::quant::QuantQb;
+use super::registry::MatrixOpt;
 use super::rules::{RuleKind, UpdateRule};
 use super::{
     galore_core, galore_lion_core, galore_refresh_projector, ldadamw_core, mlorc_adamw_core,
@@ -121,6 +128,10 @@ pub trait MomentumCompressor: std::fmt::Debug + Send + Sync {
         None
     }
 
+    /// Downcast hook for the shape-class batched stepping path
+    /// ([`step_class`] routes on the concrete layout).
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+
     /// One optimizer step entirely on the host: route (rule × layout) to
     /// the matching fused kernel. `t` is 1-based; `rng` is the
     /// parameter's own Omega stream; scratch comes from `ws`.
@@ -202,6 +213,10 @@ impl MomentumCompressor for Dense {
     ) -> Result<()> {
         let mut refs: Vec<&mut Tensor> = self.moments.iter_mut().collect();
         rule.dense_step(w, g, &mut refs, lr, t, hp)
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 
     fn clone_box(&self) -> Box<dyn MomentumCompressor> {
@@ -371,6 +386,10 @@ impl MomentumCompressor for RsvdQb {
             ),
         }
         Ok(())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 
     fn clone_box(&self) -> Box<dyn MomentumCompressor> {
@@ -566,6 +585,10 @@ impl MomentumCompressor for AdaRank {
         Ok(())
     }
 
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
     fn clone_box(&self) -> Box<dyn MomentumCompressor> {
         Box::new(self.clone())
     }
@@ -689,6 +712,10 @@ impl MomentumCompressor for GaloreProjector {
         Ok(())
     }
 
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
     fn clone_box(&self) -> Box<dyn MomentumCompressor> {
         Box::new(self.clone())
     }
@@ -792,8 +819,235 @@ impl MomentumCompressor for LdProj {
         Ok(())
     }
 
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
     fn clone_box(&self) -> Box<dyn MomentumCompressor> {
         Box::new(self.clone())
+    }
+}
+
+// ----------------------------------------------------------- shape class
+
+/// One member of a shape-class batched step: the parameter, its gradient,
+/// its optimizer state and its own Omega RNG stream. The planner
+/// (`coordinator::state::host_step_all`) guarantees every member of a
+/// class shares (variant, weight shape, state-field shapes).
+pub struct ClassJob<'a> {
+    pub w: &'a mut Tensor,
+    pub g: &'a Tensor,
+    pub opt: &'a mut MatrixOpt,
+    pub rng: &'a mut Rng,
+    pub lr: f32,
+    pub t: usize,
+}
+
+/// Step a whole shape class at once. QB-factored layouts (`RsvdQb` with
+/// every moment factored, `AdaRank`, `QuantQb`) run through the stacked
+/// class kernels — one banded invocation per phase for the entire class.
+/// Everything else (dense, projector and masked layouts) falls back to
+/// one scalar step per member, executed as atomically-claimed pool tasks
+/// with per-task serial kernels. Both routes are bit-identical to calling
+/// [`MatrixOpt::step`] member by member in job order: per member the
+/// arithmetic, phase order and Omega consumption are exactly the scalar
+/// path's, and members only ever touch their own state
+/// (`tests/host_parallel.rs` pins this for every registered method).
+pub fn step_class(jobs: &mut [ClassJob], workspaces: &mut [Workspace]) -> Result<()> {
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    assert!(!workspaces.is_empty(), "step_class needs at least one workspace");
+    if jobs.len() == 1 {
+        // Size-1 class: scalar step with full kernel-level parallelism
+        // (the per-member fallback would force serial kernels).
+        let j = &mut jobs[0];
+        return j.opt.step(j.w, j.g, j.lr, j.t, j.rng, &mut workspaces[0]);
+    }
+    enum Route {
+        Qb,
+        Quant,
+        Members,
+    }
+    let kind = jobs[0].opt.rule().kind();
+    let hp = jobs[0].opt.hp();
+    let route = {
+        let any = jobs[0].opt.comp_mut().as_any_mut();
+        if let Some(qb) = any.downcast_ref::<RsvdQb>() {
+            if qb.stores.iter().all(|s| matches!(s, MomentStore::Factored { .. })) {
+                Route::Qb
+            } else {
+                Route::Members
+            }
+        } else if any.is::<AdaRank>() {
+            Route::Qb
+        } else if any.is::<QuantQb>() {
+            Route::Quant
+        } else {
+            Route::Members
+        }
+    };
+    match route {
+        Route::Qb => step_class_qb(jobs, &hp, kind, workspaces),
+        Route::Quant => step_class_quant(jobs, &hp, kind, workspaces),
+        Route::Members => step_class_members(jobs, workspaces),
+    }
+}
+
+/// Batched route for f32 QB-factored layouts (`RsvdQb` all-factored,
+/// `AdaRank`): gather every member's factor pairs, draw each member's
+/// Omegas from its own stream (moment order — the scalar schedule), run
+/// the stacked class core, then the per-member AdaRank adaptation pass.
+fn step_class_qb(
+    jobs: &mut [ClassJob],
+    hp: &OptHp,
+    kind: RuleKind,
+    workspaces: &mut [Workspace],
+) -> Result<()> {
+    {
+        let mut qjobs: Vec<QbClassJob> = Vec::with_capacity(jobs.len());
+        for j in jobs.iter_mut() {
+            let ClassJob { w, g, opt, rng, lr, t } = j;
+            let (_, n) = w.dims2()?;
+            let any = opt.comp_mut().as_any_mut();
+            let factors: Vec<(&mut Tensor, &mut Tensor)> = if any.is::<AdaRank>() {
+                let ar = any.downcast_mut::<AdaRank>().expect("adarank downcast");
+                ar.stores.iter_mut().map(|(q, b)| (&mut *q, &mut *b)).collect()
+            } else {
+                let qb = any.downcast_mut::<RsvdQb>().expect("rsvd_qb downcast");
+                let mut out = Vec::with_capacity(qb.stores.len());
+                for store in qb.stores.iter_mut() {
+                    match store {
+                        MomentStore::Factored { q, b } => out.push((&mut *q, &mut *b)),
+                        MomentStore::Dense(_) => {
+                            bail!("masked rsvd_qb member reached the batched QB path")
+                        }
+                    }
+                }
+                out
+            };
+            let omegas: Vec<Tensor> = factors
+                .iter()
+                .map(|(q, _)| rng.gaussian_tensor(&[n, q.shape[1]], 1.0))
+                .collect();
+            qjobs.push(QbClassJob { w: &mut **w, g: &**g, lr: *lr, t: *t, factors, omegas });
+        }
+        match (kind, qjobs[0].factors.len()) {
+            (RuleKind::AdamW, 2) => mlorc_adamw_core_class(&mut qjobs, hp, workspaces),
+            (RuleKind::Lion, 1) => mlorc_lion_core_class(&mut qjobs, hp, workspaces),
+            (RuleKind::SgdM, 1) => mlorc_sgdm_core_class(&mut qjobs, hp, workspaces),
+            (_, nm) => bail!("no batched QB kernel for this rule with {nm} moment(s)"),
+        }
+    }
+    // AdaRank adaptation, per member in job order — exactly the scalar
+    // step's trailing pass.
+    for j in jobs.iter_mut() {
+        if let Some(ar) = j.opt.comp_mut().as_any_mut().downcast_mut::<AdaRank>() {
+            let rank_min = ar.rank_min;
+            let mut shrank = false;
+            for (q, b) in ar.stores.iter_mut() {
+                shrank |= AdaRank::shrink_pair(q, b, rank_min);
+            }
+            if shrank {
+                ar.shrinks += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Batched route for `QuantQb`: dequantize every member's factors into
+/// pooled scratch (before the Omega draws, like the scalar step), run the
+/// same stacked class core as the f32 route, requantize in place.
+fn step_class_quant(
+    jobs: &mut [ClassJob],
+    hp: &OptHp,
+    kind: RuleKind,
+    workspaces: &mut [Workspace],
+) -> Result<()> {
+    let expect = match kind {
+        RuleKind::AdamW => 2,
+        RuleKind::Lion | RuleKind::SgdM => 1,
+    };
+    let mut deq: Vec<Vec<(Tensor, Tensor)>> = Vec::with_capacity(jobs.len());
+    for j in jobs.iter_mut() {
+        let qq =
+            j.opt.comp_mut().as_any_mut().downcast_mut::<QuantQb>().expect("quant_qb downcast");
+        if qq.n_moments() != expect {
+            bail!(
+                "no quantized batched kernel for rule '{}' with {} q8 moment(s)",
+                jobs_rule_id(kind),
+                qq.n_moments()
+            );
+        }
+        deq.push((0..expect).map(|k| qq.dequantized(k, &mut workspaces[0])).collect());
+    }
+    {
+        let mut qjobs: Vec<QbClassJob> = Vec::with_capacity(jobs.len());
+        for (j, pairs) in jobs.iter_mut().zip(deq.iter_mut()) {
+            let ClassJob { w, g, rng, lr, t, .. } = j;
+            let (_, n) = w.dims2()?;
+            let factors: Vec<(&mut Tensor, &mut Tensor)> =
+                pairs.iter_mut().map(|(q, b)| (&mut *q, &mut *b)).collect();
+            let omegas: Vec<Tensor> = factors
+                .iter()
+                .map(|(q, _)| rng.gaussian_tensor(&[n, q.shape[1]], 1.0))
+                .collect();
+            qjobs.push(QbClassJob { w: &mut **w, g: &**g, lr: *lr, t: *t, factors, omegas });
+        }
+        match kind {
+            RuleKind::AdamW => mlorc_adamw_core_class(&mut qjobs, hp, workspaces),
+            RuleKind::Lion => mlorc_lion_core_class(&mut qjobs, hp, workspaces),
+            RuleKind::SgdM => mlorc_sgdm_core_class(&mut qjobs, hp, workspaces),
+        }
+    }
+    for (j, pairs) in jobs.iter_mut().zip(deq) {
+        let qq =
+            j.opt.comp_mut().as_any_mut().downcast_mut::<QuantQb>().expect("quant_qb downcast");
+        for (k, (q, b)) in pairs.into_iter().enumerate() {
+            qq.requantize(k, &q, &b);
+            workspaces[0].give_tensor(q);
+            workspaces[0].give_tensor(b);
+        }
+    }
+    Ok(())
+}
+
+fn jobs_rule_id(kind: RuleKind) -> &'static str {
+    super::rules::rule(kind).id()
+}
+
+/// Fallback route: one scalar step per member, each claimed atomically by
+/// a pool task and run with serial kernels (member-level parallelism, as
+/// the pre-planner hot path did — but only for layouts without a stacked
+/// kernel). The first error wins; later members are skipped.
+fn step_class_members(jobs: &mut [ClassJob], workspaces: &mut [Workspace]) -> Result<()> {
+    let nslots = workspaces.len().min(jobs.len());
+    if nslots <= 1 {
+        for j in jobs.iter_mut() {
+            j.opt.step(j.w, j.g, j.lr, j.t, j.rng, &mut workspaces[0])?;
+        }
+        return Ok(());
+    }
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let tasks = pool::DisjointMut::new(jobs);
+    let slots: Vec<&mut Workspace> = workspaces.iter_mut().take(nslots).collect();
+    pool::par_member_tasks(slots, tasks.len(), |i, ws| {
+        if first_err.lock().unwrap().is_some() {
+            return;
+        }
+        let j = unsafe { tasks.item(i) };
+        let r = threads::serial(|| j.opt.step(j.w, j.g, j.lr, j.t, j.rng, ws));
+        if let Err(e) = r {
+            let mut slot = first_err.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+    });
+    match first_err.into_inner().expect("step_class error mutex") {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
 }
 

@@ -35,7 +35,8 @@
 
 use crate::linalg::pool::{self, BandedMut};
 use crate::linalg::{
-    flops, matmul, matmul_into, rsvd_qb, rsvd_qb_factored, rsvd_qb_ws, simd, Rng, Workspace,
+    flops, matmul, matmul_class_into, matmul_into, rsvd_qb, rsvd_qb_class, rsvd_qb_factored,
+    rsvd_qb_factored_class, rsvd_qb_ws, simd, Rng, Workspace,
 };
 use crate::tensor::Tensor;
 
@@ -493,6 +494,237 @@ pub fn mlorc_adamw_step_direct(
     *vb = vb2;
     let (c1, c2) = bias_corrections(hp, t);
     adamw_apply(w, &mt, &vt, lr, c1, c2, hp);
+}
+
+// ------------------------------------------------- batched shape-class cores
+//
+// Class variants of the cores above: every phase (dense v reconstruction,
+// ζ-fix + EMA, sketch, MGS QR, projection, fused apply) runs once for a
+// whole shape class via the stacked linalg entry points, so pool dispatch
+// and band planning are paid per class instead of per parameter. Per
+// member the arithmetic, phase order, and Ω consumption are exactly the
+// scalar cores' — bit-identity is pinned by `tests/host_parallel.rs`.
+
+/// One member of a batched QB-layout step: the weight/gradient pair, the
+/// per-moment factor pairs (m first, then v where present), and the
+/// pre-drawn Ω per moment (drawn by the caller in moment order, so the
+/// per-parameter RNG streams see exactly the scalar path's consumption).
+pub struct QbClassJob<'a> {
+    pub w: &'a mut Tensor,
+    pub g: &'a Tensor,
+    pub lr: f32,
+    pub t: usize,
+    pub factors: Vec<(&'a mut Tensor, &'a mut Tensor)>,
+    pub omegas: Vec<Tensor>,
+}
+
+#[derive(Clone, Copy)]
+enum ApplyKind {
+    AdamW,
+    Lion,
+    Sgdm,
+}
+
+/// Raw per-member operand pointers for the stacked fused apply. Collected
+/// in one `iter_mut` pass over the jobs *before* the parallel region, and
+/// the jobs are untouched while bands run — the same disjointness argument
+/// as [`BandedMut`], per member.
+struct ApplyRow {
+    w: *mut f32,
+    g: *const f32,
+    vt: *const f32,
+    mq: *const f32,
+    mb: *const f32,
+    lr: f32,
+    c1: f32,
+    c2: f32,
+}
+
+struct ApplyTable(Vec<ApplyRow>);
+
+unsafe impl Send for ApplyTable {}
+unsafe impl Sync for ApplyTable {}
+
+/// Stacked fused reconstruct-apply: one banded invocation over the class's
+/// `members * m` weight rows. Per-band scratch is one n-wide row buffer,
+/// reused across the members a band crosses (fully overwritten per row).
+fn fused_apply_class(
+    kind: ApplyKind,
+    jobs: &mut [QbClassJob],
+    vts: Option<&[Tensor]>,
+    hp: &OptHp,
+    ws0: &mut Workspace,
+) {
+    let count = jobs.len();
+    let (m, n) = jobs[0].w.dims2().expect("fused class weight");
+    let l = jobs[0].factors[0].0.shape[1];
+    let name = match kind {
+        ApplyKind::AdamW => "fused_recon_adamw",
+        ApplyKind::Lion => "fused_recon_lion",
+        ApplyKind::Sgdm => "fused_recon_sgdm",
+    };
+    for _ in 0..count {
+        flops::record(name, m, l, n);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut rows: Vec<ApplyRow> = Vec::with_capacity(count);
+    for (i, j) in jobs.iter_mut().enumerate() {
+        let (c1, c2) = match kind {
+            ApplyKind::AdamW => bias_corrections(hp, j.t),
+            _ => (1.0, 1.0),
+        };
+        rows.push(ApplyRow {
+            w: j.w.data.as_mut_ptr(),
+            g: j.g.data.as_ptr(),
+            vt: vts.map_or(std::ptr::null(), |v| v[i].data.as_ptr()),
+            mq: j.factors[0].0.data.as_ptr(),
+            mb: j.factors[0].1.data.as_ptr(),
+            lr: j.lr,
+            c1,
+            c2,
+        });
+    }
+    let table = ApplyTable(rows);
+    let extra = match kind {
+        ApplyKind::AdamW => 4,
+        ApplyKind::Lion | ApplyKind::Sgdm => 2,
+    };
+    let madds = count * m * n * (l + extra);
+    let (nbands, _) = pool::plan(count * m, madds);
+    let mut scratch = ws0.take(nbands * n);
+    {
+        let s_bands = BandedMut::new(&mut scratch);
+        let beta1 = hp.beta1;
+        pool::par_stacked_rows(count, m, madds, move |band, i, r| {
+            let row_buf = unsafe { s_bands.rows(band..band + 1, n) };
+            let member = &table.0[i];
+            let rows_here = r.end - r.start;
+            let w = unsafe {
+                std::slice::from_raw_parts_mut(member.w.add(r.start * n), rows_here * n)
+            };
+            let g =
+                unsafe { std::slice::from_raw_parts(member.g.add(r.start * n), rows_here * n) };
+            let mq =
+                unsafe { std::slice::from_raw_parts(member.mq.add(r.start * l), rows_here * l) };
+            let mb = unsafe { std::slice::from_raw_parts(member.mb, l * n) };
+            match kind {
+                ApplyKind::AdamW => {
+                    let vt = unsafe {
+                        std::slice::from_raw_parts(member.vt.add(r.start * n), rows_here * n)
+                    };
+                    fused_adamw_band(
+                        w, g, vt, mq, mb, row_buf, l, n, beta1, member.lr, member.c1, member.c2,
+                        hp,
+                    );
+                }
+                ApplyKind::Lion => {
+                    fused_lion_band(w, g, mq, mb, row_buf, l, n, beta1, member.lr, hp);
+                }
+                ApplyKind::Sgdm => {
+                    fused_sgdm_band(w, g, mq, mb, row_buf, l, n, beta1, member.lr, hp);
+                }
+            }
+        });
+    }
+    ws0.give(scratch);
+}
+
+/// Batched [`mlorc_adamw_core`] over a shape class (factors = [m, v],
+/// omegas = [Ω_m, Ω_v] per member).
+pub fn mlorc_adamw_core_class(jobs: &mut [QbClassJob], hp: &OptHp, workspaces: &mut [Workspace]) {
+    let count = jobs.len();
+    if count == 0 {
+        return;
+    }
+    let (m, n) = jobs[0].w.dims2().expect("mlorc on 2-D params only");
+    // dense v_t per member: one stacked reconstruction GEMM, then the
+    // ζ-fix + EMA per member (ζ needs each member's global negative-part
+    // mean, so it cannot be fused into the banded GEMM).
+    let mut vts: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, n])).collect();
+    {
+        let vqs: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[1].0).collect();
+        let vbs: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[1].1).collect();
+        matmul_class_into(&mut vts, &vqs, &vbs);
+    }
+    {
+        let beta2 = hp.beta2;
+        let out = pool::DisjointMut::new(&mut vts);
+        let jref: &[QbClassJob] = jobs;
+        pool::par_row_bands(count, count * m * n, |_, range| {
+            for i in range {
+                let vt = unsafe { out.item(i) };
+                zeta_fix(vt);
+                for (vi, gi) in vt.data.iter_mut().zip(&jref[i].g.data) {
+                    *vi = beta2 * *vi + (1.0 - beta2) * gi * gi;
+                }
+            }
+        });
+    }
+    // recompress v from the dense v_t (direct path, stacked)
+    let new_v = {
+        let vt_refs: Vec<&Tensor> = vts.iter().collect();
+        let om_v: Vec<&Tensor> = jobs.iter().map(|j| &j.omegas[1]).collect();
+        rsvd_qb_class(&vt_refs, &om_v, workspaces)
+    };
+    // factored recompression of m_t — old factors intact for the apply
+    let new_m = {
+        let qps: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[0].0).collect();
+        let bps: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[0].1).collect();
+        let gs: Vec<&Tensor> = jobs.iter().map(|j| j.g).collect();
+        let om_m: Vec<&Tensor> = jobs.iter().map(|j| &j.omegas[0]).collect();
+        rsvd_qb_factored_class(&qps, &bps, hp.beta1, &gs, &om_m, workspaces)
+    };
+    // apply with the exact m_t (old factors, fused recon) and dense v_t
+    fused_apply_class(ApplyKind::AdamW, jobs, Some(&vts), hp, &mut workspaces[0]);
+    for vt in vts {
+        workspaces[0].give_tensor(vt);
+    }
+    for ((job, (mq2, mb2)), (vq2, vb2)) in jobs.iter_mut().zip(new_m).zip(new_v) {
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[0].0, mq2));
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[0].1, mb2));
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[1].0, vq2));
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[1].1, vb2));
+    }
+}
+
+/// Batched [`mlorc_lion_core`] over a shape class (single m moment).
+pub fn mlorc_lion_core_class(jobs: &mut [QbClassJob], hp: &OptHp, workspaces: &mut [Workspace]) {
+    if jobs.is_empty() {
+        return;
+    }
+    fused_apply_class(ApplyKind::Lion, jobs, None, hp, &mut workspaces[0]);
+    let new_m = {
+        let qps: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[0].0).collect();
+        let bps: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[0].1).collect();
+        let gs: Vec<&Tensor> = jobs.iter().map(|j| j.g).collect();
+        let oms: Vec<&Tensor> = jobs.iter().map(|j| &j.omegas[0]).collect();
+        rsvd_qb_factored_class(&qps, &bps, hp.beta2, &gs, &oms, workspaces)
+    };
+    for (job, (mq2, mb2)) in jobs.iter_mut().zip(new_m) {
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[0].0, mq2));
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[0].1, mb2));
+    }
+}
+
+/// Batched [`mlorc_sgdm_core`] over a shape class (single m moment).
+pub fn mlorc_sgdm_core_class(jobs: &mut [QbClassJob], hp: &OptHp, workspaces: &mut [Workspace]) {
+    if jobs.is_empty() {
+        return;
+    }
+    fused_apply_class(ApplyKind::Sgdm, jobs, None, hp, &mut workspaces[0]);
+    let new_m = {
+        let qps: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[0].0).collect();
+        let bps: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[0].1).collect();
+        let gs: Vec<&Tensor> = jobs.iter().map(|j| j.g).collect();
+        let oms: Vec<&Tensor> = jobs.iter().map(|j| &j.omegas[0]).collect();
+        rsvd_qb_factored_class(&qps, &bps, hp.beta1, &gs, &oms, workspaces)
+    };
+    for (job, (mq2, mb2)) in jobs.iter_mut().zip(new_m) {
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[0].0, mq2));
+        workspaces[0].give_tensor(std::mem::replace(&mut *job.factors[0].1, mb2));
+    }
 }
 
 // ------------------------------------------------------------ state structs

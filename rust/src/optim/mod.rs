@@ -32,8 +32,8 @@ pub mod rules;
 
 pub use adamw::AdamWState;
 pub use compress::{
-    AdaRank, Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb,
-    ADARANK_TAIL_FRAC,
+    step_class, AdaRank, ClassJob, Dense, GaloreProjector, LdProj, MomentStore,
+    MomentumCompressor, RsvdQb, ADARANK_TAIL_FRAC,
 };
 pub use galore::{galore_core, galore_lion_core, galore_refresh_projector, GaloreState};
 pub use hparams::OptHp;

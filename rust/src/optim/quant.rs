@@ -184,8 +184,14 @@ impl QuantQb {
         self.block
     }
 
+    /// Moment slots held (2 for AdamW, 1 for Lion/SGDM) — the batched
+    /// stepping route validates the rule against this.
+    pub(crate) fn n_moments(&self) -> usize {
+        self.moments.len()
+    }
+
     /// Dequantize one moment's factors into pooled scratch.
-    fn dequantized(&self, k: usize, ws: &mut Workspace) -> (Tensor, Tensor) {
+    pub(crate) fn dequantized(&self, k: usize, ws: &mut Workspace) -> (Tensor, Tensor) {
         let mm = &self.moments[k];
         let mut q = ws.take_tensor(mm.q.shape());
         let mut b = ws.take_tensor(mm.b.shape());
@@ -197,7 +203,7 @@ impl QuantQb {
     /// Requantize one moment from freshly updated factors, in place —
     /// QuantQb's factor shapes are fixed, so the existing code/scale
     /// buffers are reused (no per-step allocation).
-    fn requantize(&mut self, k: usize, q: &Tensor, b: &Tensor) {
+    pub(crate) fn requantize(&mut self, k: usize, q: &Tensor, b: &Tensor) {
         self.moments[k].q.quantize_into(q);
         self.moments[k].b.quantize_into(b);
     }
@@ -323,6 +329,10 @@ impl MomentumCompressor for QuantQb {
             ),
         }
         Ok(())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 
     fn clone_box(&self) -> Box<dyn MomentumCompressor> {

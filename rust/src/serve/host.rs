@@ -13,9 +13,10 @@
 //! ```
 //!
 //! so the gradients are full-rank, step-dependent matrices exercising the
-//! exact production update path: `OptState::host_step` for every method
-//! (MLorc factored fast path included), fanned out through
-//! [`host_step_all`] on the worker pool, with per-parameter Omega RNG
+//! exact production update path: the shape-class planner
+//! ([`host_step_all`]) batches same-shape parameters into stacked kernel
+//! invocations on the worker pool (every preset repeats a matrix shape,
+//! so class size > 1 is always exercised), with per-parameter Omega RNG
 //! streams. Everything is bit-deterministic across thread budgets and
 //! worker counts, and checkpoints use the same v2 format as the real
 //! trainer — which is what lets the serve acceptance tests pin
@@ -40,7 +41,9 @@ const HOST_WS_TRIM_BYTES: usize = 8 << 20;
 /// Shapes + batch + sketch width for one synthetic host preset. Mixed
 /// tall/wide/square matrices keep both GaLore/LDAdamW projector sides and
 /// the MLorc left/right factors honest; 1-D entries take the plain
-/// vector path like LN gains do in the real model.
+/// vector path like LN gains do in the real model. Every preset repeats
+/// at least one matrix shape so the shape-class planner's batched path
+/// (class size > 1) is exercised by each serve job, smoke runs included.
 struct HostPreset {
     shapes: &'static [&'static [usize]],
     batch: usize,
@@ -50,17 +53,17 @@ struct HostPreset {
 fn host_preset(name: &str) -> Result<HostPreset> {
     Ok(match name {
         "host-nano" => HostPreset {
-            shapes: &[&[48, 20], &[20, 48], &[32, 32], &[16]],
+            shapes: &[&[48, 20], &[20, 48], &[48, 20], &[32, 32], &[16]],
             batch: 8,
             l: 4,
         },
         "host-tiny" => HostPreset {
-            shapes: &[&[96, 64], &[64, 96], &[64, 64], &[128, 32], &[32]],
+            shapes: &[&[96, 64], &[64, 96], &[96, 64], &[64, 64], &[128, 32], &[32]],
             batch: 16,
             l: 4,
         },
         "host-small" => HostPreset {
-            shapes: &[&[192, 128], &[128, 192], &[128, 128], &[256, 64], &[64]],
+            shapes: &[&[192, 128], &[128, 192], &[192, 128], &[128, 128], &[256, 64], &[64]],
             batch: 32,
             l: 8,
         },
@@ -262,7 +265,7 @@ impl HostTrainer {
             .iter_mut()
             .zip(states.iter_mut())
             .zip(omega_streams.iter_mut())
-            .zip(grads.into_iter())
+            .zip(grads.iter())
             .map(|(((w, state), rng), grad)| HostStepJob { w, grad, state, rng, lr, t })
             .collect();
         host_step_all(&mut jobs, host_ws)?;

@@ -1,11 +1,14 @@
 //! Parallel host optimizer stepping must be bit-identical to sequential
 //! stepping: every parameter owns its state and Omega RNG stream, and the
-//! linalg kernels are banding-deterministic, so the thread schedule cannot
-//! leak into the numbers.
+//! linalg kernels are banding-deterministic, so neither the thread
+//! schedule nor the shape-class plan (stacked kernels for same-shape
+//! parameter groups) can leak into the numbers.
 
+use mlorc::config::Method;
 use mlorc::coordinator::{host_step_all, HostStepJob, OptState};
 use mlorc::linalg::{threads, Rng, Workspace};
 use mlorc::optim::{GaloreState, LdAdamWState, MlorcAdamWState, MlorcLionState, OptHp};
+use mlorc::runtime::ParamSpec;
 use mlorc::tensor::Tensor;
 
 struct Fleet {
@@ -21,7 +24,9 @@ fn state(variant: &str, m: usize, n: usize, l: usize) -> OptState {
 }
 
 /// A mixed bag of parameters: MLorc-AdamW matrices of several shapes,
-/// MLorc-Lion, and plain AdamW/Lion tensors.
+/// MLorc-Lion, GaLore, LDAdamW and plain AdamW tensors. The first two
+/// shapes repeat at the end (same variant), so the shape-class planner
+/// sees classes of size 2 next to singletons.
 fn fleet(seed: u64) -> (Fleet, Vec<Tensor>) {
     let mut rng = Rng::new(seed);
     let l = 4;
@@ -32,6 +37,8 @@ fn fleet(seed: u64) -> (Fleet, Vec<Tensor>) {
         vec![16, 16],
         vec![9, 31],
         vec![64, 12],
+        vec![48, 20],
+        vec![20, 48],
     ];
     let mut weights = Vec::new();
     let mut states = Vec::new();
@@ -62,14 +69,7 @@ fn run_rounds(fleet: &mut Fleet, grads: &[Tensor], workspaces: &mut [Workspace],
             .zip(fleet.states.iter_mut())
             .zip(fleet.rngs.iter_mut())
             .zip(grads.iter())
-            .map(|(((w, state), rng), g)| HostStepJob {
-                w,
-                grad: g.clone(),
-                state,
-                rng,
-                lr: 1e-2,
-                t,
-            })
+            .map(|(((w, state), rng), g)| HostStepJob { w, grad: g, state, rng, lr: 1e-2, t })
             .collect();
         host_step_all(&mut jobs, workspaces).unwrap();
     }
@@ -219,9 +219,10 @@ fn frozen_params_do_not_move() {
     let mut st = OptState::Frozen;
     let mut rng = Rng::new(0);
     let mut ws = vec![Workspace::new()];
+    let grad = Tensor::full(&[4, 4], 5.0);
     let mut jobs = vec![HostStepJob {
         w: &mut w,
-        grad: Tensor::full(&[4, 4], 5.0),
+        grad: &grad,
         state: &mut st,
         rng: &mut rng,
         lr: 1.0,
@@ -229,4 +230,81 @@ fn frozen_params_do_not_move() {
     }];
     host_step_all(&mut jobs, &mut ws).unwrap();
     assert_eq!(w.data, before.data);
+}
+
+#[test]
+fn batched_planner_matches_sequential_for_every_method() {
+    // The shape-class planner (host_step_all) must be bit-identical to
+    // stepping each parameter sequentially through OptState::host_step,
+    // for EVERY registered method — stacked QB kernels, quantized and
+    // adaptive-rank routes, and the per-member fallback alike — across
+    // thread budgets and several workspaces, with mixed class sizes:
+    // three [24, 10] members share one class while the transposed
+    // [10, 24] forms a class of size 1. Weights, every f32 state field
+    // and every quantized code plane must agree to the bit.
+    let shapes: [[usize; 2]; 4] = [[24, 10], [24, 10], [10, 24], [24, 10]];
+    let (l, rank_min) = (4usize, 2usize);
+    let build = |method: Method| {
+        let mut rng = Rng::new(77);
+        let mut weights = Vec::new();
+        let mut states = Vec::new();
+        let mut rngs = Vec::new();
+        let mut grads = Vec::new();
+        for (i, shape) in shapes.iter().enumerate() {
+            let spec = ParamSpec {
+                name: format!("p{i}"),
+                shape: shape.to_vec(),
+                kind: "matrix".into(),
+                compressed: true,
+            };
+            weights.push(rng.gaussian_tensor(shape, 0.5));
+            grads.push(rng.gaussian_tensor(shape, 1.0));
+            states.push(OptState::for_param_cfg(method, &spec, l, rank_min).unwrap());
+            rngs.push(rng.split(200 + i as u64));
+        }
+        (Fleet { weights, states, rngs }, grads)
+    };
+    for &method in Method::all() {
+        if method.is_lora() {
+            continue; // adapter methods need the graph engine's LoRA fleet
+        }
+        // Sequential oracle: one parameter at a time, in job order.
+        let (mut seq, grads) = build(method);
+        let mut ws = Workspace::new();
+        for t in 1..=3 {
+            for i in 0..seq.weights.len() {
+                seq.states[i]
+                    .host_step(&mut seq.weights[i], &grads[i], 1e-2, t, &mut seq.rngs[i], &mut ws)
+                    .unwrap();
+            }
+        }
+        for budget in [1usize, 2, 3, 8] {
+            let (mut par, grads2) = build(method);
+            threads::with_budget(budget, || {
+                let mut workspaces: Vec<Workspace> = (0..3).map(|_| Workspace::new()).collect();
+                run_rounds(&mut par, &grads2, &mut workspaces, 3);
+            });
+            for (i, (a, b)) in seq.weights.iter().zip(&par.weights).enumerate() {
+                assert_eq!(a.data, b.data, "{method:?} budget {budget}: weight {i} diverged");
+            }
+            for (i, (a, b)) in seq.states.iter().zip(&par.states).enumerate() {
+                let (fa, fb) = (a.tensor_fields(), b.tensor_fields());
+                assert_eq!(fa.len(), fb.len(), "{method:?} budget {budget}: state {i} layout");
+                for ((na, ta), (nb, tb)) in fa.iter().zip(&fb) {
+                    assert_eq!(na, nb, "{method:?} budget {budget}: state {i} field order");
+                    assert_eq!(
+                        ta.data, tb.data,
+                        "{method:?} budget {budget}: state {i} field {na} diverged"
+                    );
+                }
+                for ((na, ta), (nb, tb)) in a.u8_fields().iter().zip(&b.u8_fields()) {
+                    assert_eq!(na, nb, "{method:?} budget {budget}: state {i} u8 field order");
+                    assert_eq!(
+                        ta.data, tb.data,
+                        "{method:?} budget {budget}: state {i} u8 field {na} diverged"
+                    );
+                }
+            }
+        }
+    }
 }
