@@ -699,11 +699,14 @@ fn track_history(
         Vec::new() // first run: start fresh
     };
 
+    // Entries are heterogeneous (the serve-load bench appends its own
+    // records to the same file), so "previous" means the last entry
+    // carrying each key, not `entries.last()`.
     let mut regressed = false;
-    if let Some(prev) = entries.last() {
+    {
         // absolute µs: warn only — a different runner legitimately moves
         // every number
-        let prev_host = prev.get("host_us_per_step");
+        let prev_host = entries.iter().rev().find_map(|e| e.get("host_us_per_step"));
         for &(m, n) in &SHAPES {
             let key = format!("{m}x{n}");
             let prev_us = prev_host
@@ -730,7 +733,9 @@ fn track_history(
             ("pool_vs_spawn_512x128_r4", pool_vs_spawn),
             ("batched_vs_per_param_48x256x64_r4", batched_vs_per_param),
         ] {
-            if let Some(p) = prev.get(name).and_then(|v| v.as_f64().ok()) {
+            let prev =
+                entries.iter().rev().find_map(|e| e.get(name).and_then(|v| v.as_f64().ok()));
+            if let Some(p) = prev {
                 if cur < 0.9 * p {
                     regressed = true;
                     println!(

@@ -1,0 +1,460 @@
+//! Serve-fleet heavy-traffic load benchmark (ROADMAP item 2) and the
+//! observability-overhead acceptance gate (PR 8).
+//!
+//!     cargo bench --bench bench_serve_load
+//!
+//! Phase 1 — obs overhead: the same deterministic host training run is
+//! timed with observability force-enabled and force-disabled
+//! (interleaved, best-of-3 per mode) and the final weights are asserted
+//! bit-identical; an enabled-minus-disabled wall delta above 2% fails
+//! the run (`MLORC_BENCH_LAX=1` downgrades to a warning).
+//!
+//! Phase 2 — heavy traffic: `MLORC_LOAD_JOBS` host jobs (default 60)
+//! with mixed methods, priorities and checkpoint cadences are queued in
+//! one spool, then drained by the *real* `mlorc serve` binary: a first
+//! 4-worker scheduler is killed mid-drain via `--die-after-checkpoints`
+//! (it must exit with [`CRASH_EXIT_CODE`]) and a restarted scheduler
+//! finishes the queue, stealing the dead peer's expired leases. The
+//! spool's own observability exhaust is then the benchmark's
+//! measurement: `metrics/*.json` snapshots are merged for step-latency
+//! percentiles, RSS and counters, and `events/*.jsonl` journals are
+//! schema-checked line by line (exactly one `complete` per job).
+//!
+//! Emits `BENCH_SERVE.json` at the repo root and appends a record to
+//! the committed `BENCH_HISTORY.json`. Absolute numbers (jobs/sec, µs
+//! percentiles) are machine-dependent and only warn; the normalized
+//! `serve_step_utilization` — summed `serve.step_us` over wall-clock ×
+//! workers, i.e. the fraction of scheduler capacity spent inside
+//! `train_step` rather than polling, claiming, checkpointing or
+//! recovering — gates at <0.9x the last serve entry under
+//! `MLORC_BENCH_STRICT=1`.
+//!
+//! Knobs: `MLORC_LOAD_JOBS`, `MLORC_LOAD_STEPS` (steps per job),
+//! `MLORC_LOAD_SPOOL` (use this spool path and keep it afterwards — the
+//! CI job points schema validators at it; default is a temp dir,
+//! removed on success).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Instant;
+
+use mlorc::bench_harness::write_bench_json;
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::linalg::{simd, threads};
+use mlorc::obs::{self, registry};
+use mlorc::serve::{Engine, HostTrainer, JobSpec, Spool, CRASH_EXIT_CODE};
+use mlorc::util::fsutil;
+use mlorc::util::json::Json;
+
+/// Workers per scheduler process (`serve --jobs`).
+const WORKERS: usize = 4;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+// ------------------------------------------------ phase 1: obs overhead
+
+/// Time one fixed-seed host run; returns (wall seconds, final weights).
+fn timed_host_run(obs_on: bool, steps: usize) -> (f64, Vec<Vec<f32>>) {
+    obs::force_enabled(obs_on);
+    let mut cfg = RunConfig::new("host-nano", Method::MlorcAdamW, TaskKind::MathChain, steps);
+    cfg.peak_lr = 0.03;
+    cfg.log_every = 0;
+    cfg.seed = 5;
+    let mut tr = HostTrainer::new(cfg).expect("host trainer");
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        tr.train_step().expect("train step");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (wall, tr.params.values.iter().map(|t| t.data.clone()).collect())
+}
+
+/// The <2% contract: spans/counters on vs off, interleaved best-of-3,
+/// identical weights either way. Returns (overhead fraction, failed).
+fn obs_overhead_gate(lax: bool) -> (f64, bool) {
+    let steps = env_usize("MLORC_LOAD_OVERHEAD_STEPS", 60);
+    // one untimed pair warms the pool, pages and workspace pools
+    let _ = timed_host_run(true, steps);
+    let _ = timed_host_run(false, steps);
+    let (mut best_on, mut best_off) = (f64::INFINITY, f64::INFINITY);
+    let (mut w_on, mut w_off) = (Vec::new(), Vec::new());
+    for _ in 0..3 {
+        let (t, w) = timed_host_run(true, steps);
+        best_on = best_on.min(t);
+        w_on = w;
+        let (t, w) = timed_host_run(false, steps);
+        best_off = best_off.min(t);
+        w_off = w;
+    }
+    obs::force_enabled(true);
+    assert_eq!(w_on, w_off, "obs-on weights must be bit-identical to obs-off");
+    let overhead = (best_on - best_off) / best_off;
+    println!(
+        "obs overhead ({steps}-step host run, best of 3): enabled {:.1}ms, disabled {:.1}ms \
+         -> {:+.2}%",
+        best_on * 1e3,
+        best_off * 1e3,
+        overhead * 100.0
+    );
+    let mut failed = false;
+    if overhead > 0.02 {
+        let msg = format!(
+            "acceptance: observability adds {:.2}% to the host step, target < 2%",
+            overhead * 100.0
+        );
+        if lax {
+            eprintln!("WARN (MLORC_BENCH_LAX=1): {msg}");
+        } else {
+            eprintln!("FAIL: {msg}");
+            failed = true;
+        }
+    }
+    (overhead, failed)
+}
+
+// ------------------------------------------------ phase 2: load scenario
+
+/// Queue `jobs` host jobs with mixed methods / priorities / cadences.
+fn submit_jobs(spool: &Spool, jobs: usize, steps: usize) {
+    const METHODS: [Method; 3] = [Method::MlorcAdamW, Method::MlorcLion, Method::MlorcSgdM];
+    const PRIORITIES: [i64; 3] = [0, 7, -1];
+    const CADENCES: [usize; 3] = [5, 0, 4];
+    for i in 0..jobs {
+        let mut cfg = RunConfig::new("host-nano", METHODS[i % 3], TaskKind::MathChain, steps);
+        cfg.peak_lr = 0.03;
+        cfg.log_every = 0;
+        cfg.seed = 1000 + i as u64;
+        let spec = JobSpec {
+            id: format!("load{i:04}"),
+            engine: Engine::Host,
+            checkpoint_every: CADENCES[i % 3],
+            priority: PRIORITIES[i % 3],
+            attempts: Vec::new(),
+            not_before_unix_ms: 0,
+            cfg,
+        };
+        spool.submit(&spec).expect("submit job");
+    }
+}
+
+/// Spawn the real `mlorc serve` binary against `root`; returns its exit
+/// code. Lease timeout stays > 0 on BOTH runs: the restarted scheduler
+/// must steal the killed peer's leases by expiry — legacy timeout-0
+/// recovery deliberately skips leased jobs and would hang the drain.
+fn run_serve(root: &Path, die_after_checkpoints: usize) -> i32 {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_mlorc"));
+    cmd.arg("serve")
+        .arg("--spool")
+        .arg(root)
+        .arg("--jobs")
+        .arg(WORKERS.to_string())
+        .arg("--drain")
+        .arg("--poll-ms")
+        .arg("25")
+        .arg("--lease-timeout-ms")
+        .arg("1000")
+        .arg("--retry-backoff-ms")
+        .arg("50")
+        .env_remove("MLORC_NO_OBS")
+        .env_remove("MLORC_FAILPOINT")
+        .env("MLORC_LOG_FILE", root.join("serve.log"));
+    if die_after_checkpoints > 0 {
+        cmd.arg("--die-after-checkpoints").arg(die_after_checkpoints.to_string());
+    }
+    let status = cmd.status().expect("spawn mlorc serve");
+    status.code().unwrap_or(-1)
+}
+
+struct LoadStats {
+    jobs: usize,
+    steps: usize,
+    wall_secs: f64,
+    jobs_per_sec: f64,
+    step_p50_us: u64,
+    step_p99_us: u64,
+    step_count: f64,
+    utilization: f64,
+    rss_bytes: f64,
+    journal_events: usize,
+    journal_claims: usize,
+    journal_checkpoints: usize,
+    journal_lease_steals: usize,
+}
+
+fn load_bench() -> LoadStats {
+    let jobs = env_usize("MLORC_LOAD_JOBS", 60);
+    let steps = env_usize("MLORC_LOAD_STEPS", 16);
+    let (root, keep): (PathBuf, bool) = match std::env::var("MLORC_LOAD_SPOOL") {
+        Ok(p) if !p.is_empty() => (PathBuf::from(p), true),
+        _ => (std::env::temp_dir().join(format!("mlorc_load_{}", std::process::id())), false),
+    };
+    let _ = std::fs::remove_dir_all(&root);
+    let spool = Spool::open(&root).expect("open spool");
+    submit_jobs(&spool, jobs, steps);
+    println!(
+        "\nload: {jobs} jobs x {steps} steps queued at {} ({WORKERS} workers/scheduler)",
+        root.display()
+    );
+
+    // Scheduler 1 is armed to die mid-drain after enough cadence
+    // checkpoints to be well inside the traffic (the 5- and 4-step
+    // cadence jobs contribute 3-4 saves each, so jobs/3 always fires).
+    let die_after = (jobs / 3).max(2);
+    let t0 = Instant::now();
+    let code1 = run_serve(&root, die_after);
+    assert_eq!(
+        code1, CRASH_EXIT_CODE,
+        "scheduler 1 must die via the injected kill (exit {CRASH_EXIT_CODE}), got {code1}"
+    );
+    println!(
+        "scheduler 1 killed after {die_after} cadence checkpoints ({:.2}s in); restarting",
+        t0.elapsed().as_secs_f64()
+    );
+    let code2 = run_serve(&root, 0);
+    assert_eq!(code2, 0, "restarted scheduler must drain cleanly, got exit {code2}");
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    // exactly-once drain despite the mid-flight kill
+    let done = spool.jobs_in("done").expect("list done");
+    assert_eq!(done.len(), jobs, "all {jobs} jobs must land in done/, got {}", done.len());
+    for state in ["queue", "running", "failed"] {
+        let left = spool.jobs_in(state).expect("list spool state");
+        assert!(left.is_empty(), "{state}/ not empty after drain: {left:?}");
+    }
+
+    // journals: every line parses and carries the envelope; one
+    // `complete` per job (the kill makes *claims* exceed jobs, never
+    // completes)
+    let (mut events, mut claims, mut completes, mut checkpoints, mut steals) = (0, 0, 0, 0, 0);
+    for entry in std::fs::read_dir(spool.events_dir()).expect("events dir") {
+        let path = entry.expect("events entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+            continue;
+        }
+        for line in std::fs::read_to_string(&path).expect("read journal").lines() {
+            let ev = Json::parse(line).unwrap_or_else(|e| {
+                panic!("unparseable journal line in {}: {e:#}\n{line}", path.display())
+            });
+            assert!(
+                ev.get("unix_ms").is_some() && ev.get("owner").is_some() && ev.get("ev").is_some(),
+                "journal line missing unix_ms/owner/ev envelope: {line}"
+            );
+            match ev.get("ev").and_then(|v| v.as_str().ok()).unwrap_or("") {
+                "claim" => claims += 1,
+                "complete" => completes += 1,
+                "checkpoint" => checkpoints += 1,
+                "lease_steal" => steals += 1,
+                _ => {}
+            }
+            events += 1;
+        }
+    }
+    assert_eq!(completes, jobs, "exactly one journaled complete per job");
+    assert!(claims >= jobs, "at least one journaled claim per job ({claims} < {jobs})");
+    assert!(checkpoints >= die_after, "cadence checkpoints must be journaled");
+    println!(
+        "journal: {events} events — {claims} claims, {completes} completes, \
+         {checkpoints} checkpoints, {steals} lease steals"
+    );
+
+    // metrics: merge both schedulers' snapshots, read the step
+    // histogram back out of the merged exhaust
+    let mut snaps = Vec::new();
+    let mut owners = Vec::new();
+    for entry in std::fs::read_dir(spool.metrics_dir()).expect("metrics dir") {
+        let path = entry.expect("metrics entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let snap = Json::from_file(&path).expect("parse metrics snapshot");
+        assert_eq!(
+            snap.get("schema").and_then(|s| s.as_str().ok()).unwrap_or(""),
+            "mlorc_metrics/v1",
+            "bad snapshot schema in {}",
+            path.display()
+        );
+        owners.push(path.file_stem().and_then(|s| s.to_str()).unwrap_or("?").to_string());
+        snaps.push(snap);
+    }
+    assert!(
+        snaps.len() >= 2,
+        "expected snapshots from both schedulers (killed one saves at checkpoint cadence), \
+         got {owners:?}"
+    );
+    let merged = registry::merge_snapshots(&snaps);
+    let hist = merged
+        .get("histograms")
+        .and_then(|h| h.get("serve.step_us"))
+        .cloned()
+        .unwrap_or_else(|| Json::obj(vec![]));
+    let step_count = hist.get("count").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    let step_sum_us = hist.get("sum").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    assert!(step_count > 0.0, "merged snapshots carry no serve.step_us samples");
+    let step_p50_us = registry::snapshot_percentile(&hist, 0.50);
+    let step_p99_us = registry::snapshot_percentile(&hist, 0.99);
+    let rss_bytes = merged
+        .get("gauges")
+        .and_then(|g| g.get("proc.rss_bytes"))
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.0);
+    let jobs_per_sec = jobs as f64 / wall_secs;
+    let utilization = step_sum_us / (wall_secs * 1e6 * WORKERS as f64);
+    println!(
+        "drained {jobs} jobs in {wall_secs:.2}s ({jobs_per_sec:.1} jobs/s) — step p50 \
+         {step_p50_us}us p99 {step_p99_us}us ({step_count:.0} steps), utilization {:.1}% of \
+         {WORKERS} workers, peak scheduler RSS {:.1} MB",
+        utilization * 100.0,
+        rss_bytes / (1 << 20) as f64
+    );
+
+    if keep {
+        println!("spool kept at {} (MLORC_LOAD_SPOOL)", root.display());
+    } else {
+        let _ = std::fs::remove_dir_all(&root);
+    }
+    LoadStats {
+        jobs,
+        steps,
+        wall_secs,
+        jobs_per_sec,
+        step_p50_us,
+        step_p99_us,
+        step_count,
+        utilization,
+        rss_bytes,
+        journal_events: events,
+        journal_claims: claims,
+        journal_checkpoints: checkpoints,
+        journal_lease_steals: steals,
+    }
+}
+
+// -------------------------------------------------------- history tracking
+
+/// Append this run to `BENCH_HISTORY.json`. Entries in that file are
+/// heterogeneous (the opt-step bench appends its own), so the previous
+/// value is the last entry *carrying* `serve_step_utilization`, not
+/// `entries.last()`. A >10% utilization drop is the strict-gate flag;
+/// jobs/sec and µs percentiles are machine-dependent and recorded
+/// without gating.
+fn track_history(stats: &LoadStats, overhead: f64) -> bool {
+    let path = match fsutil::find_repo_root() {
+        Ok(root) => root.join("BENCH_HISTORY.json"),
+        Err(e) => {
+            eprintln!("bench history skipped: {e:#}");
+            return false;
+        }
+    };
+    let mut entries: Vec<Json> = if path.exists() {
+        match Json::from_file(&path) {
+            Ok(j) => j
+                .get("entries")
+                .and_then(|e| e.as_arr().ok())
+                .map(|a| a.to_vec())
+                .unwrap_or_default(),
+            Err(e) => {
+                // Never clobber an existing-but-unparseable baseline:
+                // that would silently disable the regression gate.
+                eprintln!(
+                    "bench history NOT updated: {} exists but is unreadable ({e:#}); \
+                     fix or delete it to resume tracking",
+                    path.display()
+                );
+                return false;
+            }
+        }
+    } else {
+        Vec::new()
+    };
+
+    let mut regressed = false;
+    let prev = entries
+        .iter()
+        .rev()
+        .find_map(|e| e.get("serve_step_utilization").and_then(|v| v.as_f64().ok()));
+    if let Some(p) = prev {
+        if stats.utilization < 0.9 * p {
+            regressed = true;
+            println!(
+                "REGRESSION: serve_step_utilization is {:.3} vs {p:.3} in the last serve entry \
+                 ({:.0}% drop, >10% gate)",
+                stats.utilization,
+                (1.0 - stats.utilization / p) * 100.0
+            );
+        }
+    }
+
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let entry = Json::obj(vec![
+        ("unix_time", Json::num(unix_time as f64)),
+        ("thread_budget", Json::num(threads::budget() as f64)),
+        ("simd_tier", Json::str(simd::simd_tier())),
+        ("serve_step_utilization", Json::num(stats.utilization)),
+        ("serve_jobs_per_sec", Json::num(stats.jobs_per_sec)),
+        ("serve_step_p50_us", Json::num(stats.step_p50_us as f64)),
+        ("serve_step_p99_us", Json::num(stats.step_p99_us as f64)),
+        ("obs_overhead_pct", Json::num(overhead * 100.0)),
+    ]);
+    println!("appended BENCH_HISTORY entry:\n{}", entry.to_string_pretty());
+    entries.push(entry);
+    let hist = Json::obj(vec![
+        ("schema", Json::str("bench_history/v1")),
+        ("entries", Json::Arr(entries)),
+    ]);
+    match write_bench_json("BENCH_HISTORY.json", &hist) {
+        Ok(p) => println!("appended run to {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_HISTORY.json: {e:#}"),
+    }
+    regressed
+}
+
+fn main() {
+    let lax = std::env::var("MLORC_BENCH_LAX").map(|v| v == "1").unwrap_or(false);
+    let strict = std::env::var("MLORC_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+
+    let (overhead, mut failed) = obs_overhead_gate(lax);
+    let stats = load_bench();
+
+    let payload = Json::obj(vec![
+        ("schema", Json::str("bench_serve/v1")),
+        ("jobs", Json::num(stats.jobs as f64)),
+        ("steps_per_job", Json::num(stats.steps as f64)),
+        ("workers_per_scheduler", Json::num(WORKERS as f64)),
+        ("wall_secs", Json::num(stats.wall_secs)),
+        ("jobs_per_sec", Json::num(stats.jobs_per_sec)),
+        ("serve_step_p50_us", Json::num(stats.step_p50_us as f64)),
+        ("serve_step_p99_us", Json::num(stats.step_p99_us as f64)),
+        ("serve_step_count", Json::num(stats.step_count)),
+        ("serve_step_utilization", Json::num(stats.utilization)),
+        ("rss_bytes", Json::num(stats.rss_bytes)),
+        ("obs_overhead_pct", Json::num(overhead * 100.0)),
+        ("crash_exit_code", Json::num(CRASH_EXIT_CODE as f64)),
+        ("journal_events", Json::num(stats.journal_events as f64)),
+        ("journal_claims", Json::num(stats.journal_claims as f64)),
+        ("journal_checkpoints", Json::num(stats.journal_checkpoints as f64)),
+        ("journal_lease_steals", Json::num(stats.journal_lease_steals as f64)),
+        ("thread_budget", Json::num(threads::budget() as f64)),
+        ("simd_tier", Json::str(simd::simd_tier())),
+    ]);
+    match write_bench_json("BENCH_SERVE.json", &payload) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_SERVE.json: {e:#}"),
+    }
+
+    let regressed = track_history(&stats, overhead);
+    if regressed && strict {
+        eprintln!(
+            "FAIL (MLORC_BENCH_STRICT=1): >10% serve_step_utilization regression vs the last \
+             BENCH_HISTORY serve entry"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

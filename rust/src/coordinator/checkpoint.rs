@@ -38,6 +38,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::linalg::Rng;
+use crate::obs;
 use crate::tensor::{
     read_rten, read_rten_entries, rten_bytes, rten_entry_bytes, write_rten, RtenEntry, Tensor,
 };
@@ -420,6 +421,10 @@ pub fn save_checkpoint_v2_rotated(
     adapters: Option<&ParamStore>,
     snap: &OptSnapshot,
 ) -> Result<PathBuf> {
+    // One span covers the whole cadence cost a training loop pays:
+    // snapshot write + LATEST flip + prune.
+    let _span = obs::span(&obs::registry::CKPT_SAVE_US);
+    obs::registry::CKPT_SAVES.add(1);
     let name = snapshot_name(step);
     let dir = root.join(&name);
     save_checkpoint_v2(&dir, step, cfg, params, adapters, snap)?;

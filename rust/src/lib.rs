@@ -14,6 +14,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod serve;

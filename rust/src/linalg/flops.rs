@@ -58,7 +58,14 @@ pub fn finish_recording() -> Vec<GemmRecord> {
 }
 
 /// Record one GEMM if recording is armed on this thread. Cheap when off.
+///
+/// Independently of the thread-local audit log, every call feeds the
+/// process-global `gemm.calls` / `gemm.madds` observability counters
+/// (`obs::registry`) so metrics snapshots carry cumulative GEMM work;
+/// those are two relaxed atomic adds, disabled under `MLORC_NO_OBS`.
 pub fn record(op: &'static str, out_rows: usize, inner: usize, out_cols: usize) {
+    crate::obs::registry::GEMM_CALLS.add(1);
+    crate::obs::registry::GEMM_MADDS.add((out_rows * inner * out_cols) as u64);
     RECORDS.with(|r| {
         if let Some(log) = r.borrow_mut().as_mut() {
             log.push(GemmRecord { op, out_rows, inner, out_cols });

@@ -49,6 +49,8 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::obs;
+
 use super::threads;
 
 // ------------------------------------------------------------------ batch
@@ -162,6 +164,7 @@ fn pool() -> &'static Pool {
                 .spawn(move || worker_loop(sh))
                 .expect("spawn pool worker");
         }
+        obs::registry::POOL_WORKERS.set(workers as u64);
         Pool { shared, workers }
     })
 }
@@ -205,6 +208,12 @@ where
         f(0, 0..rows);
         return;
     }
+    // Pool dispatch metrics live only on this multi-band path: the inline
+    // fast path above stays untouched (zero instrumentation cost for
+    // small kernels). The span covers submit + own work + latch wait.
+    let _dispatch_span = obs::span(&obs::registry::POOL_DISPATCH_US);
+    obs::registry::POOL_DISPATCHES.add(1);
+    obs::registry::POOL_BANDS.add(nbands as u64);
     // Erase the closure's lifetime: we block on the latch below, so the
     // borrow outlives every dereference (see `Batch::f`).
     let f_ref: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
@@ -226,9 +235,13 @@ where
         q.push(batch.clone());
     }
     p.shared.work_cv.notify_all();
-    // Work alongside the pool, then wait for stragglers.
+    // Work alongside the pool, then wait for stragglers. The wait span
+    // isolates straggler time (caller idle at the latch) from the total
+    // dispatch wall above — the gap between the two distributions is
+    // worker utilization.
     batch.work();
     {
+        let _wait_span = obs::span(&obs::registry::POOL_WAIT_US);
         let mut fin = batch.finished.lock().unwrap();
         while *fin < nbands {
             fin = batch.done_cv.wait(fin).unwrap();

@@ -12,7 +12,7 @@
 
 use crate::tensor::Tensor;
 
-use super::{pool, Workspace};
+use super::{flops, pool, Workspace};
 
 /// Column-orthonormal Q of a (m, l) matrix, l small. Dead columns (norm^2
 /// <= 1e-30) become zero columns — rank simply drops, matching rsvd_lib.
@@ -25,6 +25,10 @@ pub fn mgs_qr(y: &Tensor) -> Tensor {
 /// buffer; give it back with `ws.give_tensor` when it dies.
 pub fn mgs_qr_ws(y: &Tensor, ws: &mut Workspace) -> Tensor {
     let (m, l) = y.dims2().expect("mgs_qr input");
+    // MGS is ~2 passes of j dots+axpys per column: ~m*l*l madds. Recorded
+    // with the same formula as the class path so batched-vs-sequential
+    // flop totals match exactly (tests/obs_identity.rs pins this).
+    flops::record("mgs_qr", m, l, l);
     let mut cols = ws.take(m * l);
     let mut q = ws.take_tensor(&[m, l]);
     mgs_qr_into(y, &mut q, &mut cols);
@@ -89,6 +93,12 @@ pub fn mgs_qr_class(ys: &[Tensor], qs: &mut [Tensor], workspaces: &mut [Workspac
         return;
     }
     let (m, l) = ys[0].dims2().expect("mgs_qr_class input");
+    // Flop accounting happens here on the calling thread (one record per
+    // member, identical to the per-member mgs_qr_ws records): thread-local
+    // audit records made inside pool worker tasks would be dropped.
+    for _ in 0..count {
+        flops::record("mgs_qr", m, l, l);
+    }
     let nslots = workspaces.len().min(count);
     if nslots <= 1 || count == 1 {
         let ws = workspaces.first_mut().expect("mgs_qr_class needs a workspace");

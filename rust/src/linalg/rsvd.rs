@@ -21,6 +21,7 @@
 //!    (see `optim::mlorc`). Up to f32 reassociation this is algebraically
 //!    identical to the direct path.
 
+use crate::obs;
 use crate::tensor::Tensor;
 
 use super::matmul::{matmul_class_at_b_into, matmul_class_into};
@@ -120,16 +121,23 @@ pub fn rsvd_qb_class(
 
     // Y_i = A_i Ω_i (stacked sketch)
     let mut ys: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
-    matmul_class_into(&mut ys, inputs, omegas);
+    {
+        let _span = obs::span(&obs::registry::RSVD_SKETCH_US);
+        matmul_class_into(&mut ys, inputs, omegas);
+    }
     // Q_i = qr(Y_i)
     let mut qs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
-    mgs_qr_class(&ys, &mut qs, workspaces);
+    {
+        let _span = obs::span(&obs::registry::RSVD_QR_US);
+        mgs_qr_class(&ys, &mut qs, workspaces);
+    }
     for y in ys {
         workspaces[0].give_tensor(y);
     }
     // B_i = Q_iᵀ A_i (stacked projection)
     let mut bs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, n])).collect();
     {
+        let _span = obs::span(&obs::registry::RSVD_PROJECT_US);
         let q_refs: Vec<&Tensor> = qs.iter().collect();
         matmul_class_at_b_into(&mut bs, &q_refs, inputs);
     }
@@ -160,6 +168,7 @@ pub fn rsvd_qb_factored_class(
     let (_, n) = bps[0].dims2().expect("factored class b_prev");
 
     // Y = beta * qp (bp Ω) + (1-beta) * g Ω
+    let sketch_span = obs::span(&obs::registry::RSVD_SKETCH_US);
     let mut t1s: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, l])).collect();
     matmul_class_into(&mut t1s, bps, omegas);
     let mut ys: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
@@ -180,14 +189,19 @@ pub fn rsvd_qb_factored_class(
     for t in goms {
         workspaces[0].give_tensor(t);
     }
+    drop(sketch_span);
 
     let mut qs: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, l])).collect();
-    mgs_qr_class(&ys, &mut qs, workspaces);
+    {
+        let _span = obs::span(&obs::registry::RSVD_QR_US);
+        mgs_qr_class(&ys, &mut qs, workspaces);
+    }
     for y in ys {
         workspaces[0].give_tensor(y);
     }
 
     // B = beta * (Qᵀ qp) bp + (1-beta) * Qᵀ g
+    let project_span = obs::span(&obs::registry::RSVD_PROJECT_US);
     let mut rots: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[l, l])).collect();
     {
         let q_refs: Vec<&Tensor> = qs.iter().collect();
@@ -214,6 +228,7 @@ pub fn rsvd_qb_factored_class(
     for t in gprojs {
         workspaces[0].give_tensor(t);
     }
+    drop(project_span);
     qs.into_iter().zip(bs).collect()
 }
 

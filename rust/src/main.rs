@@ -5,6 +5,7 @@
 //!   submit  — enqueue a fine-tuning job into a serve spool
 //!   serve   — drain a spool with N concurrent jobs (crash-safe resume)
 //!   status  — aggregate per-job status across a spool
+//!   top     — merge per-scheduler metrics snapshots across a spool
 //!   cancel  — tombstone a queued job (atomic rename into cancelled/)
 //!   fsck    — verify (and repair) a spool's checkpoint snapshots
 //!   bench   — regenerate a paper table/figure (see DESIGN.md §5)
@@ -18,6 +19,7 @@ use anyhow::{bail, Context, Result};
 use mlorc::bench_harness::{run_experiment, Scale, EXPERIMENT_IDS};
 use mlorc::config::{Method, RunConfig, TaskKind};
 use mlorc::coordinator::Trainer;
+use mlorc::obs::registry;
 use mlorc::runtime::{Manifest, Runtime};
 use mlorc::serve::{self, Engine, JobSpec, ServeOpts, Spool};
 use mlorc::util::{cli::Args, fsutil, logger};
@@ -37,6 +39,7 @@ fn run() -> Result<()> {
         Some("submit") => cmd_submit(&args),
         Some("serve") => cmd_serve(&args),
         Some("status") => cmd_status(&args),
+        Some("top") => cmd_top(&args),
         Some("cancel") => cmd_cancel(&args),
         Some("fsck") => cmd_fsck(&args),
         Some("bench") => cmd_bench(&args),
@@ -69,6 +72,7 @@ USAGE: mlorc <subcommand> [--options]
          [--max-retries 2] [--retry-backoff-ms 500]
          [--lease-timeout-ms 30000] [--failpoint site:action@N]
   status --spool spool/ [--json] [--expect-all-done]
+  top    --spool spool/ [--json]
   cancel <job-id> [--spool spool/]
   fsck   <spool/> [--repair] [--json]
   bench  --experiment <id> [--quick] [--steps N] [--seeds K]
@@ -300,6 +304,87 @@ fn cmd_status(args: &Args) -> Result<()> {
         if not_done > 0 {
             bail!("{not_done} job(s) not done");
         }
+    }
+    Ok(())
+}
+
+fn cmd_top(args: &Args) -> Result<()> {
+    let spool_dir = args.get_or("spool", "spool").to_string();
+    let as_json = args.flag("json");
+    args.reject_unknown()?;
+    let spool = Spool::open(Path::new(&spool_dir))?;
+    let dir = spool.metrics_dir();
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    let mut snaps = Vec::new();
+    let mut schedulers = Vec::new();
+    for p in &paths {
+        match mlorc::util::json::Json::from_file(p) {
+            Ok(j) => {
+                let schema = j.get("schema").and_then(|s| s.as_str().ok().map(|s| s.to_string()));
+                if schema.as_deref() != Some("mlorc_metrics/v1") {
+                    log::warn!("top: skipping {} (unknown schema {schema:?})", p.display());
+                    continue;
+                }
+                if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                    schedulers.push(stem.to_string());
+                }
+                snaps.push(j);
+            }
+            Err(e) => log::warn!("top: skipping unreadable {}: {e:#}", p.display()),
+        }
+    }
+    let merged = registry::merge_snapshots(&snaps);
+    if as_json {
+        println!("{}", merged.to_string_pretty());
+        return Ok(());
+    }
+    if snaps.is_empty() {
+        println!(
+            "spool {spool_dir}: no metrics snapshots under {} yet \
+             (run `mlorc serve`; snapshots are disabled when MLORC_NO_OBS is set)",
+            dir.display()
+        );
+        return Ok(());
+    }
+    println!(
+        "spool {spool_dir}: {} scheduler snapshot(s): {}",
+        snaps.len(),
+        schedulers.join(", ")
+    );
+    println!("\ncounters");
+    for (name, v) in merged.req("counters")?.as_obj()? {
+        println!("  {name:<24} {:>14}", v.as_f64()? as u64);
+    }
+    println!("\ngauges (max across schedulers)");
+    for (name, v) in merged.req("gauges")?.as_obj()? {
+        println!("  {name:<24} {:>14}", v.as_f64()? as u64);
+    }
+    println!("\nhistograms (µs; p50/p90/p99 are bucket upper bounds)");
+    println!(
+        "  {:<24} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "name", "count", "p50", "p90", "p99", "mean"
+    );
+    for (name, h) in merged.req("histograms")?.as_obj()? {
+        let count = h.req("count")?.as_f64()?;
+        if count == 0.0 {
+            continue;
+        }
+        let mean = h.req("sum")?.as_f64()? / count;
+        println!(
+            "  {:<24} {:>10} {:>10} {:>10} {:>10} {:>12.1}",
+            name,
+            count as u64,
+            registry::snapshot_percentile(h, 0.50),
+            registry::snapshot_percentile(h, 0.90),
+            registry::snapshot_percentile(h, 0.99),
+            mean
+        );
     }
     Ok(())
 }

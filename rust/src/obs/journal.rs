@@ -1,0 +1,119 @@
+//! Per-scheduler append-only JSONL event journal.
+//!
+//! One file per scheduler under the spool (`events/<scheduler-id>.jsonl`),
+//! one JSON object per line:
+//!
+//! ```json
+//! {"unix_ms": 1754550000123, "owner": "sched-42-1a2b", "ev": "claim",
+//!  "job": "job0007", "attempt": 1}
+//! ```
+//!
+//! `unix_ms`, `owner` and `ev` are always present; the rest are
+//! event-specific. Event kinds emitted by the scheduler: `claim`,
+//! `lease_renew`, `lease_steal`, `retry`, `quarantine`, `checkpoint`,
+//! `complete`, `fail`. This journal supersedes the ad-hoc per-job
+//! `work/<id>/claims.log` as the fleet-wide audit trail (claims.log is
+//! kept for per-job exactly-once forensics).
+//!
+//! Appends take a `Mutex<File>` — the journal is deliberately *off* the
+//! step hot path (a handful of events per job, not per step). When
+//! observability is disabled ([`crate::obs::enabled`] is false) the
+//! journal is inert: `open` creates no file and `event` is a no-op.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+pub struct Journal {
+    sink: Option<Mutex<File>>,
+    owner: String,
+}
+
+impl Journal {
+    /// Open (append) `dir/<owner>.jsonl`, creating `dir` if needed.
+    /// Returns an inert journal when observability is disabled or the
+    /// file cannot be opened (observability must never fail a job).
+    pub fn open(dir: &Path, owner: &str) -> Journal {
+        if !super::enabled() {
+            return Self::disabled(owner);
+        }
+        let sink = std::fs::create_dir_all(dir)
+            .ok()
+            .and_then(|_| {
+                let path = dir.join(format!("{owner}.jsonl"));
+                OpenOptions::new().create(true).append(true).open(path).ok()
+            })
+            .map(Mutex::new);
+        Journal { sink, owner: owner.to_string() }
+    }
+
+    /// A journal that records nothing (disabled observability, tests).
+    pub fn disabled(owner: &str) -> Journal {
+        Journal { sink: None, owner: owner.to_string() }
+    }
+
+    /// The scheduler id this journal stamps on every event (set even
+    /// when the journal is inert — metrics snapshots reuse it).
+    pub fn owner(&self) -> &str {
+        &self.owner
+    }
+
+    /// Append one event line. `fields` are event-specific extras; the
+    /// timestamp, owner and event kind are added here.
+    pub fn event(&self, ev: &str, fields: Vec<(&str, Json)>) {
+        let Some(sink) = &self.sink else { return };
+        let mut obj = vec![
+            ("unix_ms", Json::num(fsutil::unix_ms() as f64)),
+            ("owner", Json::str(self.owner.as_str())),
+            ("ev", Json::str(ev)),
+        ];
+        obj.extend(fields);
+        let line = Json::obj(obj).to_string_compact();
+        if let Ok(mut f) = sink.lock() {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_appends_one_json_object_per_line() {
+        let _gate = crate::obs::test_gate_lock();
+        crate::obs::force_enabled(true);
+        let dir = std::env::temp_dir().join(format!("mlorc_journal_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let j = Journal::open(&dir, "sched-test");
+        j.event("claim", vec![("job", Json::str("job001")), ("attempt", Json::num(1.0))]);
+        j.event("complete", vec![("job", Json::str("job001"))]);
+        let text = std::fs::read_to_string(dir.join("sched-test.jsonl")).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("unix_ms").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(v.get("owner").unwrap().as_str().unwrap(), "sched-test");
+            assert_eq!(v.get("job").unwrap().as_str().unwrap(), "job001");
+        }
+        assert_eq!(Json::parse(lines[0]).unwrap().get("ev").unwrap().as_str().unwrap(), "claim");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_journal_writes_no_file() {
+        let _gate = crate::obs::test_gate_lock();
+        crate::obs::force_enabled(false);
+        let dir = std::env::temp_dir().join(format!("mlorc_journal_off_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let j = Journal::open(&dir, "sched-test");
+        j.event("claim", vec![]);
+        crate::obs::force_enabled(true);
+        assert!(!dir.exists());
+    }
+}

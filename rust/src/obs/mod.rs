@@ -1,0 +1,76 @@
+//! Serve-fleet observability: a std-only, allocation-free-on-the-hot-path
+//! metrics + tracing layer (ROADMAP item 2 prerequisite).
+//!
+//! Three pieces:
+//!  * [`registry`] — a process-global registry of atomic [`Counter`]s,
+//!    [`Gauge`]s and fixed-bucket log2 [`Histogram`]s. Recording is a
+//!    handful of `Relaxed` atomic adds: no locks, no allocation, and the
+//!    statics are `const`-constructed so there is no registration phase.
+//!    [`registry::snapshot`] renders everything to JSON (including raw
+//!    histogram buckets, so snapshots from different schedulers can be
+//!    merged exactly before percentiles are taken).
+//!  * [`span`] — RAII timers feeding those histograms. A [`Span`] holds
+//!    `Option<Instant>`: `None` when observability is disabled, so a
+//!    compiled-but-idle span costs one branch and no clock read.
+//!  * [`journal`] — a per-scheduler append-only JSONL event journal
+//!    (`events/<scheduler-id>.jsonl` under the spool) recording the job
+//!    lifecycle: claim, lease renew/steal, retry, quarantine, checkpoint,
+//!    complete.
+//!
+//! The contract (pinned by `tests/obs_identity.rs` and the
+//! `bench_serve_load` overhead gate): instrumentation never changes
+//! numerics — enabled or disabled, weights and optimizer state are
+//! bitwise identical — and costs <2% step time when enabled, ~0 when
+//! compiled but idle.
+//!
+//! Disable at runtime with `MLORC_NO_OBS=1` (any value other than `0`
+//! counts as "set"). Tests and benches flip the gate in-process via
+//! [`force_enabled`].
+
+pub mod journal;
+pub mod registry;
+pub mod span;
+
+pub use journal::Journal;
+pub use registry::{snapshot, Counter, Gauge, Histogram};
+pub use span::{span, Span};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// 0 = unresolved (read `MLORC_NO_OBS` on first use), 1 = enabled,
+/// 2 = disabled.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether observability is on. Resolved once from `MLORC_NO_OBS` and
+/// cached; afterwards a single `Relaxed` load.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => resolve_from_env(),
+    }
+}
+
+#[cold]
+fn resolve_from_env() -> bool {
+    let off = std::env::var("MLORC_NO_OBS").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let state = if off { 2 } else { 1 };
+    // A racing force_enabled() may have stored already; don't clobber it.
+    let _ = STATE.compare_exchange(0, state, Ordering::Relaxed, Ordering::Relaxed);
+    STATE.load(Ordering::Relaxed) == 1
+}
+
+/// Override the `MLORC_NO_OBS` gate in-process (tests / benches measuring
+/// on-vs-off overhead and bit-identity without re-exec).
+pub fn force_enabled(on: bool) {
+    STATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// Serializes unit tests that flip [`force_enabled`] — the gate is
+/// process-global and cargo runs tests on parallel threads.
+#[cfg(test)]
+pub(crate) fn test_gate_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}

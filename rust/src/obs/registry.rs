@@ -1,0 +1,489 @@
+//! Process-global metric registry: const-constructible atomic counters,
+//! gauges and fixed-bucket log2 histograms.
+//!
+//! Recording never locks and never allocates: a [`Counter::add`] is one
+//! `Relaxed` `fetch_add`, a [`Histogram::record`] is two. The registry is
+//! a hand-maintained static table (no runtime registration), rendered to
+//! JSON by [`snapshot`]. Histogram snapshots carry the raw bucket counts
+//! so per-scheduler `metrics.json` files can be merged *exactly* (bucket
+//! by bucket) before percentiles are extracted — `mlorc top` and
+//! `bench_serve_load` both go through [`merge_snapshots`].
+//!
+//! Bucket scheme (fixed, 40 buckets): bucket 0 holds the value 0; bucket
+//! `i >= 1` holds values in `[2^(i-1), 2^i)`; the last bucket is
+//! open-ended. For microsecond timings that spans 1µs .. ~2^38µs (about
+//! 3 days), which is more than any span we time. Percentiles are read
+//! back as the *inclusive upper bound* of the bucket holding the target
+//! rank (`2^i - 1`), a deterministic ≤2x overestimate — good enough for
+//! p50/p90/p99 latency tracking and perfectly mergeable.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+/// Number of log2 buckets in every [`Histogram`].
+pub const HIST_BUCKETS: usize = 40;
+
+/// A monotone event counter.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self { v: AtomicU64::new(0) }
+    }
+
+    /// Add `n` (no-op while observability is disabled).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if super::enabled() {
+            self.v.fetch_add(n, Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A last-writer-wins instantaneous value.
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if super::enabled() {
+            self.v.store(v, Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fixed-bucket log2 histogram; see the module docs for the bucket
+/// scheme. `count`/`sum` totals are exact under concurrent recording
+/// (each is a single atomic add), only interleaving order varies.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+/// `AtomicU64::new(0)` spelled once so the array below can be `const`.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+impl Histogram {
+    pub const fn new() -> Self {
+        Self { buckets: [ZERO; HIST_BUCKETS], sum: AtomicU64::new(0) }
+    }
+
+    /// Bucket index for a value: 0 -> 0, else `1 + floor(log2 v)`,
+    /// clamped to the open-ended last bucket.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` (the value percentiles report).
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one observation (no-op while observability is disabled).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if super::enabled() {
+            self.buckets[Self::bucket_index(v)].fetch_add(1, Relaxed);
+            self.sum.fetch_add(v, Relaxed);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    /// Percentile `q` in `[0, 1]` from the live buckets (0 if empty).
+    pub fn percentile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        percentile_from_buckets(&counts, q)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Percentile from raw bucket counts (shared by live histograms and
+/// merged snapshot buckets). Returns the inclusive upper bound of the
+/// bucket holding rank `ceil(q * total)`.
+pub fn percentile_from_buckets(counts: &[u64], q: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return Histogram::bucket_upper(i);
+        }
+    }
+    Histogram::bucket_upper(counts.len().saturating_sub(1))
+}
+
+// ------------------------------------------------------------------ the
+// registry proper: every metric in the process, by name.
+
+pub static STEP_CLASSES: Counter = Counter::new();
+pub static STEP_MEMBERS: Counter = Counter::new();
+pub static POOL_DISPATCHES: Counter = Counter::new();
+pub static POOL_BANDS: Counter = Counter::new();
+pub static CKPT_SAVES: Counter = Counter::new();
+pub static SERVE_CLAIMS: Counter = Counter::new();
+pub static SERVE_JOBS_DONE: Counter = Counter::new();
+pub static SERVE_JOBS_FAILED: Counter = Counter::new();
+pub static SERVE_RETRIES: Counter = Counter::new();
+pub static SERVE_LEASE_RENEWS: Counter = Counter::new();
+pub static SERVE_LEASE_STEALS: Counter = Counter::new();
+pub static SERVE_QUARANTINES: Counter = Counter::new();
+pub static GEMM_CALLS: Counter = Counter::new();
+pub static GEMM_MADDS: Counter = Counter::new();
+
+pub static POOL_WORKERS: Gauge = Gauge::new();
+pub static PROC_RSS_BYTES: Gauge = Gauge::new();
+
+pub static STEP_CLASS_US: Histogram = Histogram::new();
+pub static STEP_RECONSTRUCT_US: Histogram = Histogram::new();
+pub static STEP_FUSED_APPLY_US: Histogram = Histogram::new();
+pub static RSVD_SKETCH_US: Histogram = Histogram::new();
+pub static RSVD_QR_US: Histogram = Histogram::new();
+pub static RSVD_PROJECT_US: Histogram = Histogram::new();
+pub static POOL_DISPATCH_US: Histogram = Histogram::new();
+pub static POOL_WAIT_US: Histogram = Histogram::new();
+pub static CKPT_SAVE_US: Histogram = Histogram::new();
+pub static SERVE_STEP_US: Histogram = Histogram::new();
+pub static SERVE_JOB_US: Histogram = Histogram::new();
+
+static COUNTERS: &[(&str, &Counter)] = &[
+    ("step.classes", &STEP_CLASSES),
+    ("step.members", &STEP_MEMBERS),
+    ("pool.dispatches", &POOL_DISPATCHES),
+    ("pool.bands", &POOL_BANDS),
+    ("ckpt.saves", &CKPT_SAVES),
+    ("serve.claims", &SERVE_CLAIMS),
+    ("serve.jobs_done", &SERVE_JOBS_DONE),
+    ("serve.jobs_failed", &SERVE_JOBS_FAILED),
+    ("serve.retries", &SERVE_RETRIES),
+    ("serve.lease_renews", &SERVE_LEASE_RENEWS),
+    ("serve.lease_steals", &SERVE_LEASE_STEALS),
+    ("serve.quarantines", &SERVE_QUARANTINES),
+    ("gemm.calls", &GEMM_CALLS),
+    ("gemm.madds", &GEMM_MADDS),
+];
+
+static GAUGES: &[(&str, &Gauge)] = &[
+    ("pool.workers", &POOL_WORKERS),
+    ("proc.rss_bytes", &PROC_RSS_BYTES),
+];
+
+static HISTOGRAMS: &[(&str, &Histogram)] = &[
+    ("step.class_us", &STEP_CLASS_US),
+    ("step.reconstruct_us", &STEP_RECONSTRUCT_US),
+    ("step.fused_apply_us", &STEP_FUSED_APPLY_US),
+    ("rsvd.sketch_us", &RSVD_SKETCH_US),
+    ("rsvd.qr_us", &RSVD_QR_US),
+    ("rsvd.project_us", &RSVD_PROJECT_US),
+    ("pool.dispatch_us", &POOL_DISPATCH_US),
+    ("pool.wait_us", &POOL_WAIT_US),
+    ("ckpt.save_us", &CKPT_SAVE_US),
+    ("serve.step_us", &SERVE_STEP_US),
+    ("serve.job_us", &SERVE_JOB_US),
+];
+
+/// Resident set size of this process in bytes (`/proc/self/statm` field
+/// 2 × page size); 0 where procfs is unavailable.
+pub fn rss_bytes() -> u64 {
+    std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| s.split_whitespace().nth(1).and_then(|f| f.parse::<u64>().ok()))
+        .map(|pages| pages * 4096)
+        .unwrap_or(0)
+}
+
+/// Render the whole registry to a `mlorc_metrics/v1` JSON snapshot.
+/// Refreshes `proc.rss_bytes` first so every snapshot carries a live RSS
+/// reading. Histograms serialize their raw buckets for exact merging.
+pub fn snapshot() -> Json {
+    PROC_RSS_BYTES.set(rss_bytes());
+    let counters =
+        COUNTERS.iter().map(|(n, c)| (*n, Json::num(c.get() as f64))).collect::<Vec<_>>();
+    let gauges = GAUGES.iter().map(|(n, g)| (*n, Json::num(g.get() as f64))).collect::<Vec<_>>();
+    let hists = HISTOGRAMS
+        .iter()
+        .map(|(n, h)| {
+            let buckets: Vec<Json> =
+                h.buckets.iter().map(|b| Json::num(b.load(Relaxed) as f64)).collect();
+            (
+                *n,
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("sum", Json::num(h.sum() as f64)),
+                    ("buckets", Json::Arr(buckets)),
+                ]),
+            )
+        })
+        .collect::<Vec<_>>();
+    Json::obj(vec![
+        ("schema", Json::str("mlorc_metrics/v1")),
+        ("unix_ms", Json::num(fsutil::unix_ms() as f64)),
+        ("counters", Json::obj(counters)),
+        ("gauges", Json::obj(gauges)),
+        ("histograms", Json::obj(hists)),
+    ])
+}
+
+/// Merge `mlorc_metrics/v1` snapshots from several schedulers into one:
+/// counters and histogram buckets/sums add exactly; gauges take the
+/// per-key maximum (RSS: the biggest process; workers: the widest pool).
+pub fn merge_snapshots(snaps: &[Json]) -> Json {
+    use std::collections::BTreeMap;
+    let mut counters: BTreeMap<String, f64> = BTreeMap::new();
+    let mut gauges: BTreeMap<String, f64> = BTreeMap::new();
+    let mut hists: BTreeMap<String, (f64, f64, Vec<f64>)> = BTreeMap::new();
+    let mut latest_ms = 0f64;
+    for s in snaps {
+        if let Some(ms) = s.get("unix_ms").and_then(|j| j.as_f64().ok()) {
+            latest_ms = latest_ms.max(ms);
+        }
+        if let Some(obj) = s.get("counters").and_then(|j| j.as_obj().ok()) {
+            for (k, v) in obj {
+                if let Ok(x) = v.as_f64() {
+                    *counters.entry(k.clone()).or_insert(0.0) += x;
+                }
+            }
+        }
+        if let Some(obj) = s.get("gauges").and_then(|j| j.as_obj().ok()) {
+            for (k, v) in obj {
+                if let Ok(x) = v.as_f64() {
+                    let e = gauges.entry(k.clone()).or_insert(0.0);
+                    *e = e.max(x);
+                }
+            }
+        }
+        if let Some(obj) = s.get("histograms").and_then(|j| j.as_obj().ok()) {
+            for (k, v) in obj {
+                let count = v.get("count").and_then(|j| j.as_f64().ok()).unwrap_or(0.0);
+                let sum = v.get("sum").and_then(|j| j.as_f64().ok()).unwrap_or(0.0);
+                let buckets: Vec<f64> = v
+                    .get("buckets")
+                    .and_then(|j| j.as_arr().ok())
+                    .map(|a| a.iter().map(|b| b.as_f64().unwrap_or(0.0)).collect())
+                    .unwrap_or_default();
+                let e = hists.entry(k.clone()).or_insert((0.0, 0.0, vec![0.0; HIST_BUCKETS]));
+                e.0 += count;
+                e.1 += sum;
+                for (slot, b) in e.2.iter_mut().zip(buckets) {
+                    *slot += b;
+                }
+            }
+        }
+    }
+    let counters = counters.into_iter().map(|(k, v)| (k, Json::num(v))).collect();
+    let gauges = gauges.into_iter().map(|(k, v)| (k, Json::num(v))).collect();
+    let hists = hists
+        .into_iter()
+        .map(|(k, (count, sum, buckets))| {
+            let buckets: Vec<Json> = buckets.into_iter().map(Json::num).collect();
+            (
+                k,
+                Json::obj(vec![
+                    ("count", Json::num(count)),
+                    ("sum", Json::num(sum)),
+                    ("buckets", Json::Arr(buckets)),
+                ]),
+            )
+        })
+        .collect();
+    Json::Obj(
+        [
+            ("schema".to_string(), Json::str("mlorc_metrics/v1")),
+            ("unix_ms".to_string(), Json::num(latest_ms)),
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("histograms".to_string(), Json::Obj(hists)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+/// Percentile from a snapshot histogram entry (`{count, sum, buckets}`),
+/// as produced by [`snapshot`] or [`merge_snapshots`].
+pub fn snapshot_percentile(hist: &Json, q: f64) -> u64 {
+    let counts: Vec<u64> = hist
+        .get("buckets")
+        .and_then(|j| j.as_arr().ok())
+        .map(|a| a.iter().map(|b| b.as_f64().unwrap_or(0.0) as u64).collect())
+        .unwrap_or_default();
+    percentile_from_buckets(&counts, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_log2_with_zero_bucket() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(1023), 10);
+        assert_eq!(Histogram::bucket_index(1024), 11);
+        // the last bucket is open-ended
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // bucket i's inclusive upper bound really is the largest value
+        // that maps to bucket i
+        for i in 1..HIST_BUCKETS - 1 {
+            assert_eq!(Histogram::bucket_index(Histogram::bucket_upper(i)), i);
+            assert_eq!(Histogram::bucket_index(Histogram::bucket_upper(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn percentiles_from_buckets() {
+        let _gate = crate::obs::test_gate_lock();
+        crate::obs::force_enabled(true);
+        static H: Histogram = Histogram::new();
+        // 90 values in [256, 511] (bucket 9), 10 values in [4096, 8191]
+        // (bucket 13): p50 lands in the low bucket, p99 in the tail.
+        for _ in 0..90 {
+            H.record(300);
+        }
+        for _ in 0..10 {
+            H.record(5000);
+        }
+        assert_eq!(H.count(), 100);
+        assert_eq!(H.sum(), 90 * 300 + 10 * 5000);
+        assert_eq!(H.percentile(0.50), 511);
+        assert_eq!(H.percentile(0.90), 511);
+        assert_eq!(H.percentile(0.99), 8191);
+        assert_eq!(H.percentile(1.0), 8191);
+        // empty histogram reports 0
+        static EMPTY: Histogram = Histogram::new();
+        assert_eq!(EMPTY.percentile(0.99), 0);
+    }
+
+    #[test]
+    fn concurrent_records_keep_exact_totals() {
+        let _gate = crate::obs::test_gate_lock();
+        crate::obs::force_enabled(true);
+        static H: Histogram = Histogram::new();
+        static C: Counter = Counter::new();
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        H.record(t * 1000 + i);
+                        C.add(1);
+                    }
+                });
+            }
+        });
+        // totals are deterministic regardless of interleaving
+        assert_eq!(C.get(), 8000);
+        assert_eq!(H.count(), 8000);
+        let expect: u64 = (0..8u64).map(|t| (0..1000u64).map(|i| t * 1000 + i).sum::<u64>()).sum();
+        assert_eq!(H.sum(), expect);
+    }
+
+    #[test]
+    fn snapshot_merge_is_exact() {
+        let _gate = crate::obs::test_gate_lock();
+        crate::obs::force_enabled(true);
+        let a = Json::obj(vec![
+            ("schema", Json::str("mlorc_metrics/v1")),
+            ("unix_ms", Json::num(5.0)),
+            ("counters", Json::obj(vec![("serve.claims", Json::num(3.0))])),
+            ("gauges", Json::obj(vec![("proc.rss_bytes", Json::num(100.0))])),
+            (
+                "histograms",
+                Json::obj(vec![(
+                    "serve.step_us",
+                    Json::obj(vec![
+                        ("count", Json::num(2.0)),
+                        ("sum", Json::num(600.0)),
+                        ("buckets", Json::Arr(vec![Json::num(0.0), Json::num(2.0)])),
+                    ]),
+                )]),
+            ),
+        ]);
+        let b = Json::obj(vec![
+            ("schema", Json::str("mlorc_metrics/v1")),
+            ("unix_ms", Json::num(9.0)),
+            ("counters", Json::obj(vec![("serve.claims", Json::num(4.0))])),
+            ("gauges", Json::obj(vec![("proc.rss_bytes", Json::num(50.0))])),
+            (
+                "histograms",
+                Json::obj(vec![(
+                    "serve.step_us",
+                    Json::obj(vec![
+                        ("count", Json::num(1.0)),
+                        ("sum", Json::num(1.0)),
+                        ("buckets", Json::Arr(vec![Json::num(0.0), Json::num(1.0)])),
+                    ]),
+                )]),
+            ),
+        ]);
+        let m = merge_snapshots(&[a, b]);
+        let claims = m.get("counters").unwrap().get("serve.claims").unwrap();
+        assert_eq!(claims.as_f64().unwrap(), 7.0);
+        let rss = m.get("gauges").unwrap().get("proc.rss_bytes").unwrap();
+        assert_eq!(rss.as_f64().unwrap(), 100.0);
+        let h = m.get("histograms").unwrap().get("serve.step_us").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(h.get("sum").unwrap().as_f64().unwrap(), 601.0);
+        assert_eq!(snapshot_percentile(h, 0.5), 1);
+        assert_eq!(m.get("unix_ms").unwrap().as_f64().unwrap(), 9.0);
+    }
+}

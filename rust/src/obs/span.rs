@@ -1,0 +1,64 @@
+//! Scoped span timers: RAII guards that record elapsed microseconds into
+//! a registry [`Histogram`] on drop.
+//!
+//! When observability is disabled the guard holds `None` — no clock read
+//! on entry, one branch on drop. The guard is `#[must_use]`: binding it
+//! (`let _span = span(&H);`) keeps it alive to the end of the scope,
+//! which is the measured region.
+
+use std::time::Instant;
+
+use super::registry::Histogram;
+
+/// Live span guard; see [`span`].
+#[must_use = "a span records on drop — bind it to keep the scope timed"]
+pub struct Span {
+    t0: Option<Instant>,
+    hist: &'static Histogram,
+}
+
+/// Start timing a scope into `hist` (microseconds).
+#[inline]
+pub fn span(hist: &'static Histogram) -> Span {
+    let t0 = if super::enabled() { Some(Instant::now()) } else { None };
+    Span { t0, hist }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0 {
+            self.hist.record(t0.elapsed().as_micros() as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_once_into_its_histogram() {
+        let _gate = crate::obs::test_gate_lock();
+        crate::obs::force_enabled(true);
+        static H: Histogram = Histogram::new();
+        {
+            let _span = span(&H);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(H.count(), 1);
+        assert!(H.sum() >= 2_000, "slept 2ms but recorded {}us", H.sum());
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _gate = crate::obs::test_gate_lock();
+        static H: Histogram = Histogram::new();
+        crate::obs::force_enabled(false);
+        {
+            let _span = span(&H);
+        }
+        crate::obs::force_enabled(true);
+        assert_eq!(H.count(), 0);
+    }
+}

@@ -34,6 +34,7 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use crate::linalg::{matmul, pool, threads, Rng, Workspace};
+use crate::obs;
 use crate::tensor::{Tensor, TensorU8};
 use crate::util::json::Json;
 
@@ -858,6 +859,9 @@ pub fn step_class(jobs: &mut [ClassJob], workspaces: &mut [Workspace]) -> Result
         return Ok(());
     }
     assert!(!workspaces.is_empty(), "step_class needs at least one workspace");
+    let _span = obs::span(&obs::registry::STEP_CLASS_US);
+    obs::registry::STEP_CLASSES.add(1);
+    obs::registry::STEP_MEMBERS.add(jobs.len() as u64);
     if jobs.len() == 1 {
         // Size-1 class: scalar step with full kernel-level parallelism
         // (the per-member fallback would force serial kernels).

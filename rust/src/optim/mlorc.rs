@@ -38,6 +38,7 @@ use crate::linalg::{
     flops, matmul, matmul_class_into, matmul_into, rsvd_qb, rsvd_qb_class, rsvd_qb_factored,
     rsvd_qb_factored_class, rsvd_qb_ws, simd, Rng, Workspace,
 };
+use crate::obs;
 use crate::tensor::Tensor;
 
 use super::lion::sign;
@@ -555,6 +556,7 @@ fn fused_apply_class(
     hp: &OptHp,
     ws0: &mut Workspace,
 ) {
+    let _span = obs::span(&obs::registry::STEP_FUSED_APPLY_US);
     let count = jobs.len();
     let (m, n) = jobs[0].w.dims2().expect("fused class weight");
     let l = jobs[0].factors[0].0.shape[1];
@@ -644,6 +646,7 @@ pub fn mlorc_adamw_core_class(jobs: &mut [QbClassJob], hp: &OptHp, workspaces: &
     // mean, so it cannot be fused into the banded GEMM).
     let mut vts: Vec<Tensor> = (0..count).map(|_| workspaces[0].take_tensor(&[m, n])).collect();
     {
+        let _span = obs::span(&obs::registry::STEP_RECONSTRUCT_US);
         let vqs: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[1].0).collect();
         let vbs: Vec<&Tensor> = jobs.iter().map(|j| &*j.factors[1].1).collect();
         matmul_class_into(&mut vts, &vqs, &vbs);

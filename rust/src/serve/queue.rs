@@ -11,6 +11,8 @@
 //! status/<id>.json     latest per-job progress (serve::status)
 //! leases/<id>.json     owner + heartbeat of the worker running the job
 //! work/<id>/           job scratch: rotated v2 checkpoints, metrics
+//! events/<sched>.jsonl per-scheduler append-only event journal (obs)
+//! metrics/<sched>.json per-scheduler metrics snapshot (obs)
 //! ```
 //!
 //! Lifecycle is `queued -> running -> done|failed`, with a side exit
@@ -188,7 +190,10 @@ pub struct Spool {
 impl Spool {
     /// Open (creating if needed) a spool rooted at `root`.
     pub fn open(root: &Path) -> Result<Spool> {
-        for d in ["queue", "running", "done", "failed", "cancelled", "status", "leases", "work"] {
+        for d in [
+            "queue", "running", "done", "failed", "cancelled", "status", "leases", "work",
+            "events", "metrics",
+        ] {
             let p = root.join(d);
             std::fs::create_dir_all(&p)
                 .with_context(|| format!("creating spool dir {}", p.display()))?;
@@ -220,6 +225,22 @@ impl Spool {
 
     pub fn status_path(&self, id: &str) -> PathBuf {
         self.dir("status").join(format!("{id}.json"))
+    }
+
+    /// Per-scheduler JSONL event journals (`events/<scheduler-id>.jsonl`).
+    pub fn events_dir(&self) -> PathBuf {
+        self.dir("events")
+    }
+
+    /// Per-scheduler metrics snapshots (`metrics/<scheduler-id>.json`),
+    /// merged fleet-wide by `mlorc top`.
+    pub fn metrics_dir(&self) -> PathBuf {
+        self.dir("metrics")
+    }
+
+    /// This scheduler's atomic metrics snapshot file.
+    pub fn metrics_path(&self, owner: &str) -> PathBuf {
+        self.metrics_dir().join(format!("{owner}.json"))
     }
 
     fn lease_path(&self, id: &str) -> PathBuf {

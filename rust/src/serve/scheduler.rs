@@ -31,8 +31,10 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{has_checkpoint, Trainer};
 use crate::linalg::threads;
+use crate::obs::{self, registry, Journal};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::fsutil;
+use crate::util::json::Json;
 
 use super::host::HostTrainer;
 use super::queue::{Engine, JobSpec, Spool};
@@ -113,6 +115,12 @@ pub fn serve(spool: &Spool, opts: &ServeOpts) -> Result<ServeSummary> {
         Err(e) => log::warn!("serve: orphan sweep failed: {e:#}"),
     }
     let owner = format!("sched-{}-{:x}", std::process::id(), fsutil::unix_ms());
+    crate::util::logger::set_tag(&owner);
+    let journal = Journal::open(&spool.events_dir(), &owner);
+    for id in &recovered {
+        registry::SERVE_LEASE_STEALS.add(1);
+        journal.event("lease_steal", vec![("job", Json::str(id.as_str()))]);
+    }
     let n = opts.jobs.max(1);
     let slice = (threads::budget() / n).max(1);
     log::info!(
@@ -124,9 +132,13 @@ pub fn serve(spool: &Spool, opts: &ServeOpts) -> Result<ServeSummary> {
         for worker in 0..n {
             let counters = &counters;
             let owner = owner.as_str();
-            s.spawn(move || worker_loop(spool, opts, slice, worker, owner, counters));
+            let journal = &journal;
+            s.spawn(move || worker_loop(spool, opts, slice, worker, owner, journal, counters));
         }
     });
+    // Final snapshot so short drains leave a metrics file even when no
+    // checkpoint cadence ever fired.
+    write_metrics_snapshot(spool, &journal);
     // A worker that dies on a spool error must not masquerade as a clean
     // drain: jobs may still be queued while we report success.
     let claim_errors = counters.claim_errors.into_inner();
@@ -159,12 +171,27 @@ fn backoff_ms(base: u64, attempts: usize) -> u64 {
     base.saturating_mul(1u64 << attempts.min(16) as u32)
 }
 
+/// Atomically (re)write this scheduler's `metrics/<owner>.json` snapshot.
+/// Best-effort and inert when observability is disabled — a failed write
+/// must never fail a job.
+fn write_metrics_snapshot(spool: &Spool, journal: &Journal) {
+    if !obs::enabled() {
+        return;
+    }
+    let path = spool.metrics_path(journal.owner());
+    let snap = registry::snapshot();
+    if let Err(e) = fsutil::write_atomic(&path, snap.to_string_pretty().as_bytes()) {
+        log::warn!("serve: metrics snapshot write failed: {e:#}");
+    }
+}
+
 fn worker_loop(
     spool: &Spool,
     opts: &ServeOpts,
     slice: usize,
     worker: usize,
     owner: &str,
+    journal: &Journal,
     counters: &Counters,
 ) {
     let worker_owner = format!("{owner}/w{worker}");
@@ -185,6 +212,10 @@ fn worker_loop(
             if opts.lease_timeout_ms > 0 {
                 match spool.recover_interrupted(opts.lease_timeout_ms) {
                     Ok(r) if !r.is_empty() => {
+                        for id in &r {
+                            registry::SERVE_LEASE_STEALS.add(1);
+                            journal.event("lease_steal", vec![("job", Json::str(id.as_str()))]);
+                        }
                         log::info!(
                             "serve worker {worker}: recovered {} expired-lease job(s)",
                             r.len()
@@ -213,6 +244,15 @@ fn worker_loop(
         if let Err(e) = spool.note_claim(&spec.id, &worker_owner, spec.attempts.len()) {
             log::warn!("serve worker {worker}: claims.log append failed for {}: {e:#}", spec.id);
         }
+        registry::SERVE_CLAIMS.add(1);
+        journal.event(
+            "claim",
+            vec![
+                ("job", Json::str(spec.id.as_str())),
+                ("worker", Json::num(worker as f64)),
+                ("attempt", Json::num((spec.attempts.len() + 1) as f64)),
+            ],
+        );
         log::info!(
             "serve worker {worker}: job {} ({} / {} / {} steps, engine {}, attempt {})",
             spec.id,
@@ -222,9 +262,11 @@ fn worker_loop(
             spec.engine.name(),
             spec.attempts.len() + 1
         );
+        let job_t0 = Instant::now();
         let result = threads::with_budget(slice, || {
-            run_job(spool, &spec, opts, &worker_owner, &counters.ckpts)
+            run_job(spool, &spec, opts, &worker_owner, journal, &counters.ckpts)
         });
+        registry::SERVE_JOB_US.record(job_t0.elapsed().as_micros() as u64);
         // A run that outlived its lease may have been stolen by a peer's
         // recovery sweep; its outcome is the thief's to report now. The
         // owner-checked transitions below re-verify, but bailing here
@@ -243,6 +285,15 @@ fn worker_loop(
                 match spool.finish_as(&spec.id, true, Some(&worker_owner)) {
                     Ok(()) => {
                         counters.done.fetch_add(1, Ordering::SeqCst);
+                        registry::SERVE_JOBS_DONE.add(1);
+                        journal.event(
+                            "complete",
+                            vec![
+                                ("job", Json::str(spec.id.as_str())),
+                                ("step", Json::num(status.step as f64)),
+                            ],
+                        );
+                        write_metrics_snapshot(spool, journal);
                         log::info!("serve worker {worker}: job {} done", spec.id);
                     }
                     Err(e) => {
@@ -261,6 +312,16 @@ fn worker_loop(
                             status.error = Some(err_text.clone());
                             let _ = status.write(spool);
                             counters.retried.fetch_add(1, Ordering::SeqCst);
+                            registry::SERVE_RETRIES.add(1);
+                            journal.event(
+                                "retry",
+                                vec![
+                                    ("job", Json::str(spec.id.as_str())),
+                                    ("attempt", Json::num(failures as f64)),
+                                    ("backoff_ms", Json::num(backoff as f64)),
+                                    ("error", Json::str(err_text.as_str())),
+                                ],
+                            );
                             log::warn!(
                                 "serve worker {worker}: job {} failed (attempt {failures} of {}), \
                                  retrying in {backoff} ms: {err_text}",
@@ -284,6 +345,14 @@ fn worker_loop(
                         let mut status = JobStatus::from_spec(&updated, "failed");
                         status.error = Some(err_text.clone());
                         let _ = status.write(spool);
+                        registry::SERVE_QUARANTINES.add(1);
+                        journal.event(
+                            "quarantine",
+                            vec![
+                                ("job", Json::str(spec.id.as_str())),
+                                ("error", Json::str(err_text.as_str())),
+                            ],
+                        );
                     }
                     Err(e2) => {
                         log::error!(
@@ -295,9 +364,18 @@ fn worker_loop(
                         status.error = Some(err_text.clone());
                         let _ = status.write(spool);
                         let _ = spool.finish_as(&spec.id, false, Some(&worker_owner));
+                        journal.event(
+                            "fail",
+                            vec![
+                                ("job", Json::str(spec.id.as_str())),
+                                ("error", Json::str(err_text.as_str())),
+                            ],
+                        );
                     }
                 }
                 counters.failed.fetch_add(1, Ordering::SeqCst);
+                registry::SERVE_JOBS_FAILED.add(1);
+                write_metrics_snapshot(spool, journal);
                 log::error!("serve worker {worker}: job {} failed terminally: {err_text}", spec.id);
             }
         }
@@ -363,12 +441,13 @@ fn run_job(
     spec: &JobSpec,
     opts: &ServeOpts,
     worker_owner: &str,
+    journal: &Journal,
     ckpts: &AtomicUsize,
 ) -> Result<JobStatus> {
     match spec.engine {
         Engine::Host => {
             let mut tr = HostTrainer::new(spec.cfg.clone())?;
-            drive(&mut tr, spool, spec, opts, worker_owner, ckpts)
+            drive(&mut tr, spool, spec, opts, worker_owner, journal, ckpts)
         }
         Engine::Graph => {
             let dir = fsutil::artifacts_dir()?;
@@ -383,7 +462,7 @@ fn run_job(
             let rt = Runtime::cpu(&dir)?;
             let preset = manifest.preset(&spec.cfg.preset)?;
             let mut tr = Trainer::new(&rt, preset, spec.cfg.clone())?;
-            drive(&mut tr, spool, spec, opts, worker_owner, ckpts)
+            drive(&mut tr, spool, spec, opts, worker_owner, journal, ckpts)
         }
     }
 }
@@ -395,6 +474,7 @@ fn drive(
     spec: &JobSpec,
     opts: &ServeOpts,
     worker_owner: &str,
+    journal: &Journal,
     ckpts: &AtomicUsize,
 ) -> Result<JobStatus> {
     let t0 = Instant::now();
@@ -425,10 +505,17 @@ fn drive(
                 let mut last_hb = Instant::now();
                 while !stop.load(Ordering::Relaxed) {
                     if last_hb.elapsed() >= hb_period {
-                        if let Err(e) =
-                            spool.write_lease(id, worker_owner, opts.lease_timeout_ms)
-                        {
-                            log::warn!("job {id}: lease heartbeat failed: {e:#}");
+                        match spool.write_lease(id, worker_owner, opts.lease_timeout_ms) {
+                            Ok(()) => {
+                                registry::SERVE_LEASE_RENEWS.add(1);
+                                journal.event(
+                                    "lease_renew",
+                                    vec![("job", Json::str(id))],
+                                );
+                            }
+                            Err(e) => {
+                                log::warn!("job {id}: lease heartbeat failed: {e:#}");
+                            }
                         }
                         last_hb = Instant::now();
                     }
@@ -441,13 +528,27 @@ fn drive(
         let result = (|| -> Result<JobStatus> {
             let mut last_loss = None;
             while tr.step_count() < spec.cfg.steps {
-                let loss = tr.step()?;
+                let loss = {
+                    let _span = obs::span(&registry::SERVE_STEP_US);
+                    tr.step()?
+                };
                 last_loss = Some(loss as f64);
                 let s = tr.step_count();
                 if spec.checkpoint_every > 0 && s % spec.checkpoint_every == 0 && s < spec.cfg.steps
                 {
                     tr.save(&ckpt_root)?;
                     ckpts.fetch_add(1, Ordering::SeqCst);
+                    // journal + metrics land right after the snapshot
+                    // commits, before the injected-kill hook below — a
+                    // crash never loses the record of a committed save
+                    journal.event(
+                        "checkpoint",
+                        vec![
+                            ("job", Json::str(spec.id.as_str())),
+                            ("step", Json::num(s as f64)),
+                        ],
+                    );
+                    write_metrics_snapshot(spool, journal);
                     // the crash hook (`--die-after-checkpoints` /
                     // MLORC_FAILPOINT=ckpt_cadence:...) fires after the
                     // snapshot is committed, like a real mid-run kill

@@ -1,17 +1,37 @@
 //! Tiny `log`-facade backend (no `env_logger` in the vendor set).
 //!
-//! Level comes from `MLORC_LOG` (error|warn|info|debug|trace), default info.
-//! Output goes to stderr with elapsed-seconds timestamps so training logs
-//! interleave cleanly with metrics on stdout.
+//! Level comes from `MLORC_LOG` (error|warn|info|debug|trace), default
+//! info. Every line carries a unix-epoch-ms timestamp (so logs from
+//! several scheduler processes sharing one spool can be interleaved by
+//! time) and a process tag — `pid:<pid>` until [`set_tag`] installs
+//! something better; `mlorc serve` sets its scheduler owner id. Output
+//! goes to stderr, or appends to the file named by `MLORC_LOG_FILE`
+//! when that is set (file-only, so child schedulers spawned by tests
+//! and benches don't scribble over the parent's terminal).
 
-use std::sync::OnceLock;
-use std::time::Instant;
+use std::fs::File;
+use std::io::Write;
+use std::sync::{Mutex, OnceLock};
 
 use log::{Level, LevelFilter, Log, Metadata, Record};
 
+use super::fsutil;
+
+/// Process tag stamped on every line; empty means "use pid:<pid>".
+static TAG: Mutex<String> = Mutex::new(String::new());
+
+/// Set the per-process log tag (e.g. the serve scheduler's owner id) so
+/// interleaved multi-process logs attribute cleanly.
+pub fn set_tag(tag: &str) {
+    if let Ok(mut t) = TAG.lock() {
+        *t = tag.to_string();
+    }
+}
+
 struct Logger {
-    start: Instant,
     level: LevelFilter,
+    /// `MLORC_LOG_FILE` append sink; `None` logs to stderr.
+    sink: Option<Mutex<File>>,
 }
 
 impl Log for Logger {
@@ -23,7 +43,6 @@ impl Log for Logger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = self.start.elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -31,10 +50,29 @@ impl Log for Logger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{t:9.3}s {lvl}] {}", record.args());
+        let tag = TAG.lock().map(|t| t.clone()).unwrap_or_default();
+        let line = if tag.is_empty() {
+            format!("[{} pid:{} {lvl}] {}", fsutil::unix_ms(), std::process::id(), record.args())
+        } else {
+            format!("[{} {tag} {lvl}] {}", fsutil::unix_ms(), record.args())
+        };
+        match &self.sink {
+            Some(f) => {
+                if let Ok(mut f) = f.lock() {
+                    let _ = writeln!(f, "{line}");
+                }
+            }
+            None => eprintln!("{line}"),
+        }
     }
 
-    fn flush(&self) {}
+    fn flush(&self) {
+        if let Some(f) = &self.sink {
+            if let Ok(mut f) = f.lock() {
+                let _ = f.flush();
+            }
+        }
+    }
 }
 
 static LOGGER: OnceLock<Logger> = OnceLock::new();
@@ -48,7 +86,10 @@ pub fn init() {
         Ok("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
     };
-    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now(), level });
+    let sink = std::env::var("MLORC_LOG_FILE").ok().filter(|p| !p.is_empty()).and_then(|p| {
+        std::fs::OpenOptions::new().create(true).append(true).open(&p).ok().map(Mutex::new)
+    });
+    let logger = LOGGER.get_or_init(|| Logger { level, sink });
     if log::set_logger(logger).is_ok() {
         log::set_max_level(level);
     }
@@ -61,5 +102,13 @@ mod tests {
         super::init();
         super::init();
         log::info!("logger smoke");
+    }
+
+    #[test]
+    fn tag_is_settable_and_clearable() {
+        super::set_tag("sched-test");
+        assert_eq!(super::TAG.lock().unwrap().as_str(), "sched-test");
+        super::set_tag("");
+        assert!(super::TAG.lock().unwrap().is_empty());
     }
 }

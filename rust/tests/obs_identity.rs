@@ -1,0 +1,136 @@
+//! Observability contract pins (PR 8): instrumentation must be invisible
+//! to numerics — a training run with metrics/spans enabled is bitwise
+//! identical to one with them disabled — and the shape-class batched
+//! stepping path must account GEMM flops exactly like the per-parameter
+//! path it replaced (same total madds, same multiset of recorded GEMMs).
+//!
+//! The obs gate is process-global, so every test that flips it
+//! serializes on [`GATE`] and restores the enabled state before
+//! releasing it.
+
+use std::sync::Mutex;
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::{host_step_all, HostStepJob, OptState};
+use mlorc::linalg::{flops, threads, Rng, Workspace};
+use mlorc::obs;
+use mlorc::serve::HostTrainer;
+use mlorc::tensor::Tensor;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One deterministic host training run; returns the final weights.
+fn run_host(steps: usize, obs_enabled: bool) -> Vec<Tensor> {
+    obs::force_enabled(obs_enabled);
+    let mut cfg = RunConfig::new("host-nano", Method::MlorcAdamW, TaskKind::MathChain, steps);
+    cfg.peak_lr = 0.03;
+    cfg.log_every = 0;
+    cfg.seed = 11;
+    let mut tr = HostTrainer::new(cfg).unwrap();
+    for _ in 0..steps {
+        tr.train_step().unwrap();
+    }
+    tr.params.values.clone()
+}
+
+/// The <2%-overhead contract's harder half: zero *numeric* effect.
+/// Counters, spans and snapshots may observe the step pipeline, but the
+/// weights a run produces must not depend on whether they do.
+#[test]
+fn obs_on_and_off_runs_are_bit_identical() {
+    let _g = gate();
+    let on = run_host(8, true);
+    let off = run_host(8, false);
+    obs::force_enabled(true);
+    assert_eq!(on.len(), off.len());
+    for (i, (a, b)) in on.iter().zip(&off).enumerate() {
+        assert_eq!(a.data, b.data, "param {i} differs between obs-on and obs-off runs");
+    }
+}
+
+const FLEET: usize = 6;
+const SHAPE: (usize, usize, usize) = (96, 40, 4);
+
+/// Fresh mlorc_adamw fleet; both schedules call this with the same
+/// constants so weights, states and Omega streams start identical.
+fn fleet() -> Vec<(Tensor, OptState, Rng)> {
+    let (m, n, r) = SHAPE;
+    let mut seeder = Rng::new(77);
+    (0..FLEET)
+        .map(|i| {
+            let mut rng = seeder.split(300 + i as u64);
+            let w = rng.gaussian_tensor(&[m, n], 0.5);
+            let state = OptState::for_variant("mlorc_adamw", &[m, n], r).unwrap();
+            (w, state, rng)
+        })
+        .collect()
+}
+
+/// Flop-accounting parity (PR-8 satellite): the class-batched kernels
+/// (`matmul_class_into`, `matmul_class_at_b_into`, `mgs_qr_class`, the
+/// fused class apply) must record the same GEMMs as the per-parameter
+/// path — equal madds totals AND an equal multiset of (op, dims)
+/// records, so `gemm.madds` in a metrics snapshot means the same thing
+/// whichever path the scheduler routed through.
+#[test]
+fn batched_class_step_accounts_flops_identically_to_per_param() {
+    let _g = gate();
+    obs::force_enabled(true);
+    let (m, n, _) = SHAPE;
+    let mut grad_rng = Rng::new(88);
+    let grads: Vec<Tensor> = (0..FLEET).map(|_| grad_rng.gaussian_tensor(&[m, n], 1.0)).collect();
+
+    // Per-parameter schedule: warm one step (factors leave zero), then
+    // record step 2 on the calling thread.
+    let mut fleet_seq = fleet();
+    let mut ws = Workspace::new();
+    for ((w, state, rng), g) in fleet_seq.iter_mut().zip(&grads) {
+        state.host_step(w, g, 1e-3, 1, rng, &mut ws).unwrap();
+    }
+    flops::start_recording();
+    for ((w, state, rng), g) in fleet_seq.iter_mut().zip(&grads) {
+        state.host_step(w, g, 1e-3, 2, rng, &mut ws).unwrap();
+    }
+    let seq = flops::finish_recording();
+
+    // Shape-class batched schedule over an identical fleet. The class
+    // kernels record at entry on the calling thread, so the audit log
+    // sees every member even when the work itself runs on the pool.
+    let nws = threads::budget().max(1);
+    let mut workspaces: Vec<Workspace> = (0..nws).map(|_| Workspace::new()).collect();
+    let mut fleet_cls = fleet();
+    for t in 1..=2usize {
+        if t == 2 {
+            flops::start_recording();
+        }
+        let mut jobs: Vec<HostStepJob> = fleet_cls
+            .iter_mut()
+            .zip(&grads)
+            .map(|((w, state, rng), g)| HostStepJob { w, grad: g, state, rng, lr: 1e-3, t })
+            .collect();
+        host_step_all(&mut jobs, &mut workspaces).unwrap();
+    }
+    let bat = flops::finish_recording();
+
+    assert_eq!(
+        flops::total_madds(&seq),
+        flops::total_madds(&bat),
+        "batched madds total must equal per-parameter\nseq: {seq:?}\nbat: {bat:?}"
+    );
+    let key = |r: &flops::GemmRecord| (r.op, r.out_rows, r.inner, r.out_cols);
+    let mut a: Vec<_> = seq.iter().map(key).collect();
+    let mut b: Vec<_> = bat.iter().map(key).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "batched GEMM record multiset must equal per-parameter");
+
+    // and the schedules remain bit-identical (flop parity is not bought
+    // with a different algorithm)
+    for (i, ((wa, _, _), (wb, _, _))) in fleet_seq.iter().zip(&fleet_cls).enumerate() {
+        assert_eq!(wa.data, wb.data, "param {i}: batched weights differ from per-parameter");
+    }
+}
