@@ -9,6 +9,12 @@
 //! bit-identical; an enabled-minus-disabled wall delta above 2% fails
 //! the run (`MLORC_BENCH_LAX=1` downgrades to a warning).
 //!
+//! Phase 1b — async checkpoint step overhead: the same host run is
+//! timed per-step with no checkpointing and with a cadence-1 async
+//! double-buffered checkpoint writer ([`CkptWriter`]); the p99 step-time
+//! ratio (`ckpt_step_overhead`) gates at 1.15x (lax downgrades to a
+//! warning) and the final weights are asserted bit-identical.
+//!
 //! Phase 2 — heavy traffic: `MLORC_LOAD_JOBS` host jobs (default 60)
 //! with mixed methods, priorities and checkpoint cadences are queued in
 //! one spool, then drained by the *real* `mlorc serve` binary: a first
@@ -40,6 +46,7 @@ use std::time::Instant;
 
 use mlorc::bench_harness::write_bench_json;
 use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::CkptWriter;
 use mlorc::linalg::{simd, threads};
 use mlorc::obs::{self, registry};
 use mlorc::serve::{Engine, HostTrainer, JobSpec, Spool, CRASH_EXIT_CODE};
@@ -112,6 +119,89 @@ fn obs_overhead_gate(lax: bool) -> (f64, bool) {
         }
     }
     (overhead, failed)
+}
+
+// -------------------------------- phase 1b: async checkpoint step overhead
+
+/// One fixed-seed host-small run timed per step; `cadence_1` submits a
+/// snapshot to the async double-buffered writer after every step, so the
+/// timed path includes the capture memcpy and any backpressure stall,
+/// while commits run on the writer thread. Returns (p99 step seconds,
+/// final weights).
+fn ckpt_step_run(cadence_1: bool, steps: usize, root: &Path) -> (f64, Vec<Vec<f32>>) {
+    let mut cfg = RunConfig::new("host-small", Method::MlorcAdamW, TaskKind::MathChain, steps);
+    cfg.peak_lr = 0.03;
+    cfg.log_every = 0;
+    cfg.seed = 11;
+    let mut tr = HostTrainer::new(cfg).expect("host trainer");
+    let _ = std::fs::remove_dir_all(root);
+    let mut writer = cadence_1.then(|| CkptWriter::new(root));
+    let mut times = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        tr.train_step().expect("train step");
+        if let Some(w) = writer.as_mut() {
+            for oc in w.submit(|b| tr.capture_snapshot(b)).expect("submit snapshot") {
+                oc.dir.expect("async checkpoint commit");
+            }
+        }
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    if let Some(w) = writer.as_mut() {
+        for oc in w.join().expect("join checkpoint writer") {
+            oc.dir.expect("async checkpoint commit");
+        }
+    }
+    drop(writer);
+    let _ = std::fs::remove_dir_all(root);
+    times.sort_by(f64::total_cmp);
+    let idx = ((times.len() as f64 * 0.99).ceil() as usize).clamp(1, times.len()) - 1;
+    (times[idx], tr.params.values.iter().map(|t| t.data.clone()).collect())
+}
+
+/// The async-writer contract in one number: with a full v2 checkpoint
+/// submitted on *every* step, the step path pays only the snapshot
+/// capture, so cadence-1 step p99 must stay within 1.15x of the
+/// cadence-0 baseline — and checkpointing must not perturb the weights.
+/// Returns (p99 ratio, failed).
+fn ckpt_overhead_gate(lax: bool) -> (f64, bool) {
+    let steps = env_usize("MLORC_LOAD_CKPT_STEPS", 120);
+    let root = std::env::temp_dir().join(format!("mlorc_ckpt_bench_{}", std::process::id()));
+    // one untimed pair warms the worker pool and page cache
+    let _ = ckpt_step_run(false, steps.min(30), &root);
+    let _ = ckpt_step_run(true, steps.min(30), &root);
+    let (mut best_off, mut best_on) = (f64::INFINITY, f64::INFINITY);
+    let (mut w_off, mut w_on) = (Vec::new(), Vec::new());
+    for _ in 0..3 {
+        let (p, w) = ckpt_step_run(false, steps, &root);
+        best_off = best_off.min(p);
+        w_off = w;
+        let (p, w) = ckpt_step_run(true, steps, &root);
+        best_on = best_on.min(p);
+        w_on = w;
+    }
+    assert_eq!(w_on, w_off, "cadence-1 async checkpointing must not perturb the weights");
+    let ratio = best_on / best_off;
+    println!(
+        "ckpt step overhead ({steps}-step host-small run, best of 3): cadence-1 async p99 \
+         {:.0}us vs cadence-0 p99 {:.0}us -> {ratio:.3}x",
+        best_on * 1e6,
+        best_off * 1e6
+    );
+    let mut failed = false;
+    if ratio > 1.15 {
+        let msg = format!(
+            "acceptance: cadence-1 async checkpointing puts step p99 at {ratio:.3}x the \
+             cadence-0 baseline, target <= 1.15x"
+        );
+        if lax {
+            eprintln!("WARN (MLORC_BENCH_LAX=1): {msg}");
+        } else {
+            eprintln!("FAIL: {msg}");
+            failed = true;
+        }
+    }
+    (ratio, failed)
 }
 
 // ------------------------------------------------ phase 2: load scenario
@@ -339,7 +429,7 @@ fn load_bench() -> LoadStats {
 /// `entries.last()`. A >10% utilization drop is the strict-gate flag;
 /// jobs/sec and µs percentiles are machine-dependent and recorded
 /// without gating.
-fn track_history(stats: &LoadStats, overhead: f64) -> bool {
+fn track_history(stats: &LoadStats, overhead: f64, ckpt_overhead: f64) -> bool {
     let path = match fsutil::find_repo_root() {
         Ok(root) => root.join("BENCH_HISTORY.json"),
         Err(e) => {
@@ -386,6 +476,20 @@ fn track_history(stats: &LoadStats, overhead: f64) -> bool {
         }
     }
 
+    let prev_ckpt = entries
+        .iter()
+        .rev()
+        .find_map(|e| e.get("ckpt_step_overhead").and_then(|v| v.as_f64().ok()));
+    if let Some(p) = prev_ckpt {
+        if ckpt_overhead > p * 1.1 {
+            regressed = true;
+            println!(
+                "REGRESSION: ckpt_step_overhead is {ckpt_overhead:.3}x vs {p:.3}x in the last \
+                 serve entry (>10% gate)"
+            );
+        }
+    }
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -399,6 +503,7 @@ fn track_history(stats: &LoadStats, overhead: f64) -> bool {
         ("serve_step_p50_us", Json::num(stats.step_p50_us as f64)),
         ("serve_step_p99_us", Json::num(stats.step_p99_us as f64)),
         ("obs_overhead_pct", Json::num(overhead * 100.0)),
+        ("ckpt_step_overhead", Json::num(ckpt_overhead)),
     ]);
     println!("appended BENCH_HISTORY entry:\n{}", entry.to_string_pretty());
     entries.push(entry);
@@ -418,6 +523,8 @@ fn main() {
     let strict = std::env::var("MLORC_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
 
     let (overhead, mut failed) = obs_overhead_gate(lax);
+    let (ckpt_overhead, ckpt_failed) = ckpt_overhead_gate(lax);
+    failed |= ckpt_failed;
     let stats = load_bench();
 
     let payload = Json::obj(vec![
@@ -433,6 +540,7 @@ fn main() {
         ("serve_step_utilization", Json::num(stats.utilization)),
         ("rss_bytes", Json::num(stats.rss_bytes)),
         ("obs_overhead_pct", Json::num(overhead * 100.0)),
+        ("ckpt_step_overhead", Json::num(ckpt_overhead)),
         ("crash_exit_code", Json::num(CRASH_EXIT_CODE as f64)),
         ("journal_events", Json::num(stats.journal_events as f64)),
         ("journal_claims", Json::num(stats.journal_claims as f64)),
@@ -446,7 +554,7 @@ fn main() {
         Err(e) => eprintln!("could not write BENCH_SERVE.json: {e:#}"),
     }
 
-    let regressed = track_history(&stats, overhead);
+    let regressed = track_history(&stats, overhead, ckpt_overhead);
     if regressed && strict {
         eprintln!(
             "FAIL (MLORC_BENCH_STRICT=1): >10% serve_step_utilization regression vs the last \

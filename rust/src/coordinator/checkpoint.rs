@@ -20,7 +20,18 @@
 //! writer (`save_checkpoint_v2_rotated`) puts each snapshot in its own
 //! `step-NNNNNNNN/` subdirectory, flipping the `LATEST` pointer only
 //! after the snapshot is fully on disk — a kill mid-write can never
-//! corrupt the snapshot a restart resumes from.
+//! corrupt the snapshot a restart resumes from. Commit markers and the
+//! `LATEST` flip are followed by a parent-directory fsync, so a
+//! committed snapshot also survives power loss.
+//!
+//! Every save is split into a cheap **capture** ([`capture_snapshot`]
+//! into an owned [`SnapshotBuf`] — a memcpy, timed as `ckpt.snapshot_us`)
+//! and an expensive **commit** ([`commit_snapshot_rotated`] — encode,
+//! CRC, write, flip, fsync, prune, timed as `ckpt.commit_us`). The
+//! synchronous writers run both halves inline; the double-buffered
+//! background writer ([`super::CkptWriter`]) runs commits on a dedicated
+//! thread so the step loop pays only the capture
+//! (`docs/checkpoint-v2.md`, "Async commit pipeline").
 //!
 //! Integrity: every RTEN file carries a CRC-32 footer, and each v2
 //! snapshot additionally writes `manifest.json` — per-file byte counts
@@ -135,50 +146,146 @@ pub struct CheckpointV2 {
     pub opt: BTreeMap<String, OptState>,
 }
 
-/// Write a full v2 snapshot into `dir`. `meta.json` is written last and
-/// is the commit marker: loaders refuse a directory without it.
-pub fn save_checkpoint_v2(
-    dir: &Path,
+/// Owned capture of everything one v2 snapshot persists — the scratch
+/// half of the snapshot/commit split. [`capture_snapshot`] fills it from
+/// live trainer state (reusing the previous capture's allocations, so a
+/// steady-state cadence is a straight memcpy); [`commit_snapshot`] /
+/// [`commit_snapshot_rotated`] do the expensive half (rten encode,
+/// CRC-32, atomic writes, fsync, `LATEST` flip, prune) from the buffer
+/// alone — on the caller's thread or a background writer
+/// ([`super::CkptWriter`]), bit-identically either way.
+pub struct SnapshotBuf {
+    step: usize,
+    cfg: Option<RunConfig>,
+    params: BTreeMap<String, Tensor>,
+    opt_entries: BTreeMap<String, RtenEntry>,
+    opt_meta: Json,
+    rng: Json,
+}
+
+impl Default for SnapshotBuf {
+    fn default() -> SnapshotBuf {
+        SnapshotBuf {
+            step: 0,
+            cfg: None,
+            params: BTreeMap::new(),
+            opt_entries: BTreeMap::new(),
+            opt_meta: Json::Null,
+            rng: Json::Null,
+        }
+    }
+}
+
+impl SnapshotBuf {
+    /// The step this buffer captured (meaningful once filled).
+    pub fn step(&self) -> usize {
+        self.step
+    }
+}
+
+/// Copy `src` into `dst[name]`, stealing a matching-shape allocation
+/// from `prev` (the buffer's previous capture) when possible.
+fn copy_tensor(
+    prev: &mut BTreeMap<String, Tensor>,
+    dst: &mut BTreeMap<String, Tensor>,
+    name: &str,
+    src: &Tensor,
+) {
+    let t = match prev.remove(name) {
+        Some(mut t) if t.shape == src.shape => {
+            t.data.copy_from_slice(&src.data);
+            t
+        }
+        _ => src.clone(),
+    };
+    dst.insert(name.to_string(), t);
+}
+
+/// The cheap, step-path half of a v2 save: copy parameters, every
+/// `OptState` tensor field and u8 quant plane, the RNG snapshots and the
+/// per-state `ckpt_meta` into `buf`. No encoding, checksumming or IO
+/// happens here — the buffer is trivially consistent the moment this
+/// returns, and [`commit_snapshot`] can run on another thread.
+pub fn capture_snapshot(
+    buf: &mut SnapshotBuf,
     step: usize,
     cfg: &RunConfig,
     params: &ParamStore,
     adapters: Option<&ParamStore>,
     snap: &OptSnapshot,
 ) -> Result<()> {
+    let _span = obs::span(&obs::registry::CKPT_SNAPSHOT_US);
     if snap.opt.len() != snap.omega.len() {
         bail!("{} opt states but {} omega streams", snap.opt.len(), snap.omega.len());
     }
-    std::fs::create_dir_all(dir)?;
-    let tensors = collect_params(params, adapters);
-    let params_bytes = rten_bytes(&tensors)?;
-    fsutil::write_atomic_site(&dir.join("params.rten"), &params_bytes, "ckpt_write")?;
+    buf.step = step;
+    buf.cfg = Some(cfg.clone());
 
-    let mut opt_tensors: BTreeMap<String, RtenEntry> = BTreeMap::new();
+    let mut prev = std::mem::take(&mut buf.params);
+    for (spec, val) in params.specs.iter().zip(&params.values) {
+        copy_tensor(&mut prev, &mut buf.params, &spec.name, val);
+    }
+    if let Some(a) = adapters {
+        for (spec, val) in a.specs.iter().zip(&a.values) {
+            copy_tensor(&mut prev, &mut buf.params, &spec.name, val);
+        }
+    }
+
+    let mut prev_opt = std::mem::take(&mut buf.opt_entries);
     let mut opt_meta = Json::Obj(BTreeMap::new());
     for (name, state) in &snap.opt {
         opt_meta.set(name, state.ckpt_meta());
         for (field, t) in state.tensor_fields() {
-            opt_tensors.insert(format!("{name}/{field}"), RtenEntry::F32(t.clone()));
+            let key = format!("{name}/{field}");
+            let e = match prev_opt.remove(&key) {
+                Some(RtenEntry::F32(mut old)) if old.shape == t.shape => {
+                    old.data.copy_from_slice(&t.data);
+                    RtenEntry::F32(old)
+                }
+                _ => RtenEntry::F32(t.clone()),
+            };
+            buf.opt_entries.insert(key, e);
         }
         // quantized layouts add their u8 code planes as dtype-2 entries
         for (field, t) in state.u8_fields() {
-            opt_tensors.insert(format!("{name}/{field}"), RtenEntry::U8(t.clone()));
+            let key = format!("{name}/{field}");
+            let e = match prev_opt.remove(&key) {
+                Some(RtenEntry::U8(mut old)) if old.shape == t.shape => {
+                    old.data.copy_from_slice(&t.data);
+                    RtenEntry::U8(old)
+                }
+                _ => RtenEntry::U8(t.clone()),
+            };
+            buf.opt_entries.insert(key, e);
         }
     }
-    let opt_bytes = rten_entry_bytes(&opt_tensors)?;
+    buf.opt_meta = opt_meta;
+    let omega = Json::arr(snap.omega.iter().map(rng_to_json));
+    buf.rng = Json::obj(vec![("data", rng_to_json(snap.rng_data)), ("omega", omega)]);
+    Ok(())
+}
+
+/// The expensive half of a v2 save: encode, checksum and atomically
+/// write a captured [`SnapshotBuf`] into `dir`, then fsync the snapshot
+/// directory so the `meta.json` commit marker survives power loss.
+/// `meta.json` is written last and is the commit marker: loaders refuse
+/// a directory without it.
+pub fn commit_snapshot(dir: &Path, buf: &SnapshotBuf) -> Result<()> {
+    let cfg =
+        buf.cfg.as_ref().context("snapshot buffer was never captured (capture before commit)")?;
+    std::fs::create_dir_all(dir)?;
+    let params_bytes = rten_bytes(&buf.params)?;
+    fsutil::write_atomic_site(&dir.join("params.rten"), &params_bytes, "ckpt_write")?;
+    let opt_bytes = rten_entry_bytes(&buf.opt_entries)?;
     fsutil::write_atomic_site(&dir.join("opt_state.rten"), &opt_bytes, "ckpt_write")?;
 
-    let omega = Json::arr(snap.omega.iter().map(rng_to_json));
     let meta = Json::obj(vec![
         ("version", Json::num(2.0)),
-        ("step", Json::num(step as f64)),
+        ("step", Json::num(buf.step as f64)),
         ("config", cfg.to_json()),
-        ("n_tensors", Json::num(tensors.len() as f64)),
-        ("opt_states", opt_meta),
-        (
-            "rng",
-            Json::obj(vec![("data", rng_to_json(snap.rng_data)), ("omega", omega)]),
-        ),
+        ("n_tensors", Json::num(buf.params.len() as f64)),
+        ("opt_states", buf.opt_meta.clone()),
+        ("rng", buf.rng.clone()),
     ]);
     let meta_bytes = meta.to_string_pretty().into_bytes();
 
@@ -196,7 +303,26 @@ pub fn save_checkpoint_v2(
         manifest.to_string_pretty().as_bytes(),
         "ckpt_write",
     )?;
-    fsutil::write_atomic_site(&dir.join("meta.json"), &meta_bytes, "ckpt_write")
+    fsutil::write_atomic_site(&dir.join("meta.json"), &meta_bytes, "ckpt_write")?;
+    // The renames above order each file's data before its name, but the
+    // names themselves are only durable once the directory is synced.
+    fsutil::fsync_dir(dir)
+}
+
+/// Write a full v2 snapshot into `dir` synchronously — capture + commit
+/// in one call, through the same split the async writer uses, so the
+/// bytes on disk are identical either way.
+pub fn save_checkpoint_v2(
+    dir: &Path,
+    step: usize,
+    cfg: &RunConfig,
+    params: &ParamStore,
+    adapters: Option<&ParamStore>,
+    snap: &OptSnapshot,
+) -> Result<()> {
+    let mut buf = SnapshotBuf::default();
+    capture_snapshot(&mut buf, step, cfg, params, adapters, snap)?;
+    commit_snapshot(dir, &buf)
 }
 
 /// Build the `manifest.json` document: per-file byte counts + CRC-32,
@@ -410,9 +536,28 @@ fn snapshot_name(step: usize) -> String {
     format!("step-{step:08}")
 }
 
-/// Crash-safe cadence writer: puts the snapshot in `root/step-NNNNNNNN/`,
-/// then flips `root/LATEST` to it, then prunes all but the newest
-/// [`KEEP_SNAPSHOTS`] snapshots. Returns the snapshot directory.
+/// The rotated commit: write a captured [`SnapshotBuf`] into
+/// `root/step-NNNNNNNN/`, flip `root/LATEST` to it, fsync the root so
+/// the flip is power-loss durable, then prune all but the newest
+/// [`KEEP_SNAPSHOTS`] snapshots. This is the function the async writer
+/// thread runs; returns the snapshot directory.
+pub fn commit_snapshot_rotated(root: &Path, buf: &SnapshotBuf) -> Result<PathBuf> {
+    let _span = obs::span(&obs::registry::CKPT_COMMIT_US);
+    obs::registry::CKPT_SAVES.add(1);
+    let name = snapshot_name(buf.step);
+    let dir = root.join(&name);
+    commit_snapshot(&dir, buf)?;
+    fsutil::write_atomic_site(&root.join("LATEST"), name.as_bytes(), "latest_write")?;
+    // LATEST's rename, like the snapshot files', needs the parent
+    // directory synced before it survives power loss.
+    fsutil::fsync_dir(root)?;
+    prune_snapshots(root, &name);
+    Ok(dir)
+}
+
+/// Crash-safe cadence writer: capture + rotated commit in one
+/// synchronous call (the `--checkpoint-sync` path, and every one-off
+/// save). Returns the snapshot directory.
 pub fn save_checkpoint_v2_rotated(
     root: &Path,
     step: usize,
@@ -421,25 +566,28 @@ pub fn save_checkpoint_v2_rotated(
     adapters: Option<&ParamStore>,
     snap: &OptSnapshot,
 ) -> Result<PathBuf> {
-    // One span covers the whole cadence cost a training loop pays:
-    // snapshot write + LATEST flip + prune.
+    // One span covers the whole cadence cost a synchronous training loop
+    // pays: capture + snapshot write + LATEST flip + prune.
     let _span = obs::span(&obs::registry::CKPT_SAVE_US);
-    obs::registry::CKPT_SAVES.add(1);
-    let name = snapshot_name(step);
-    let dir = root.join(&name);
-    save_checkpoint_v2(&dir, step, cfg, params, adapters, snap)?;
-    fsutil::write_atomic_site(&root.join("LATEST"), name.as_bytes(), "latest_write")?;
-    prune_snapshots(root, &name);
-    Ok(dir)
+    let mut buf = SnapshotBuf::default();
+    capture_snapshot(&mut buf, step, cfg, params, adapters, snap)?;
+    commit_snapshot_rotated(root, &buf)
 }
 
-/// Best-effort removal of stale snapshots (never the LATEST target).
+/// Best-effort removal of stale snapshots — never the `LATEST` target.
+/// Runs on the writer thread in async mode and may race a concurrent
+/// `mlorc fsck --repair` on the same root: the on-disk `LATEST` is
+/// re-read so a just-repointed target is never pruned, and a snapshot
+/// that vanishes underneath us (fsck dropped it first) is not an error.
 fn prune_snapshots(root: &Path, latest: &str) {
     let Ok(entries) = std::fs::read_dir(root) else { return };
+    let on_disk = std::fs::read_to_string(root.join("LATEST"))
+        .map(|s| s.trim().to_string())
+        .unwrap_or_default();
     let mut snaps: Vec<String> = entries
         .flatten()
         .filter_map(|e| e.file_name().into_string().ok())
-        .filter(|n| n.starts_with("step-") && n.as_str() != latest)
+        .filter(|n| n.starts_with("step-") && n.as_str() != latest && n.as_str() != on_disk)
         .collect();
     snaps.sort();
     // `latest` itself is excluded above, so keep the newest
@@ -447,8 +595,12 @@ fn prune_snapshots(root: &Path, latest: &str) {
     let keep = KEEP_SNAPSHOTS.saturating_sub(1);
     let drop_n = snaps.len().saturating_sub(keep);
     for name in snaps.into_iter().take(drop_n) {
-        if let Err(e) = std::fs::remove_dir_all(root.join(&name)) {
-            log::warn!("could not prune old checkpoint {name}: {e}");
+        match std::fs::remove_dir_all(root.join(&name)) {
+            Ok(()) => {}
+            // already gone: lost a benign race with fsck --repair or a
+            // peer's prune — removal was the goal either way
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => log::warn!("could not prune old checkpoint {name}: {e}"),
         }
     }
 }
@@ -698,6 +850,70 @@ mod tests {
         let (_, q) = fields.iter().find(|(n, _)| *n == "mq").expect("mq field");
         assert_eq!(q.data, mq.data);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reused_buffer_commit_is_bitwise_identical_to_sync_save() {
+        let dir_sync = tmp("split_sync");
+        let dir_async = tmp("split_async");
+        let _ = std::fs::remove_dir_all(&dir_sync);
+        let _ = std::fs::remove_dir_all(&dir_async);
+        let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
+        let orig = store();
+        let mut rng = Rng::new(9);
+        let state = state_with(
+            "mlorc_lion",
+            &[
+                ("mq", rng.gaussian_tensor(&[2, 2], 1.0)),
+                ("mb", rng.gaussian_tensor(&[2, 3], 1.0)),
+            ],
+        );
+        let vstate =
+            state_with("adamw", &[("m", Tensor::zeros(&[4])), ("v", Tensor::full(&[4], 0.5))]);
+        let data_rng = Rng::new(1);
+        let omega = vec![Rng::new(2), Rng::new(3)];
+        let snap = OptSnapshot {
+            opt: vec![("a".to_string(), &state), ("b".to_string(), &vstate)],
+            rng_data: &data_rng,
+            omega: &omega,
+        };
+        save_checkpoint_v2(&dir_sync, 7, &cfg, &orig, None, &snap).unwrap();
+
+        // Pre-dirty the scratch buffer with a different capture of the
+        // same shapes, so the second capture exercises the
+        // allocation-reuse (memcpy) path, then commit and compare bytes.
+        let mut decoy = store();
+        for v in decoy.values.iter_mut() {
+            for x in v.data.iter_mut() {
+                *x += 100.0;
+            }
+        }
+        let decoy_state = state_with(
+            "mlorc_lion",
+            &[("mq", Tensor::full(&[2, 2], -1.0)), ("mb", Tensor::full(&[2, 3], -2.0))],
+        );
+        let decoy_v =
+            state_with("adamw", &[("m", Tensor::full(&[4], 9.0)), ("v", Tensor::full(&[4], 8.0))]);
+        let decoy_rng = Rng::new(77);
+        let decoy_omega = vec![Rng::new(5), Rng::new(6)];
+        let decoy_snap = OptSnapshot {
+            opt: vec![("a".to_string(), &decoy_state), ("b".to_string(), &decoy_v)],
+            rng_data: &decoy_rng,
+            omega: &decoy_omega,
+        };
+        let mut buf = SnapshotBuf::default();
+        capture_snapshot(&mut buf, 3, &cfg, &decoy, None, &decoy_snap).unwrap();
+        capture_snapshot(&mut buf, 7, &cfg, &orig, None, &snap).unwrap();
+        assert_eq!(buf.step(), 7);
+        commit_snapshot(&dir_async, &buf).unwrap();
+
+        for f in ["params.rten", "opt_state.rten", "manifest.json", "meta.json"] {
+            let a = std::fs::read(dir_sync.join(f)).unwrap();
+            let b = std::fs::read(dir_async.join(f)).unwrap();
+            assert_eq!(a, b, "{f} differs between sync save and buffered commit");
+        }
+        std::fs::remove_dir_all(&dir_sync).unwrap();
+        std::fs::remove_dir_all(&dir_async).unwrap();
     }
 
     #[test]

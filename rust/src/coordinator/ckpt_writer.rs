@@ -1,0 +1,232 @@
+//! Double-buffered async checkpoint writer.
+//!
+//! The cadence path of a training loop used to pay the whole v2 save —
+//! rten encode, CRC-32, atomic writes, fsync, `LATEST` flip, prune —
+//! inline, which is exactly the cost MLorc's factored-momentum
+//! compression was supposed to make negligible. [`CkptWriter`] keeps the
+//! split from `checkpoint.rs` honest at runtime: the step loop only runs
+//! [`capture_snapshot`](super::capture_snapshot) (a memcpy into one of
+//! [`SCRATCH_BUFFERS`] reusable [`SnapshotBuf`]s), and a dedicated
+//! writer thread runs [`commit_snapshot_rotated`](super::commit_snapshot_rotated)
+//! for each queued buffer in submission order.
+//!
+//! Backpressure: with both buffers in flight, [`CkptWriter::submit`]
+//! blocks until a commit completes (counted in
+//! `ckpt.backpressure_stalls`); otherwise the step loop never waits on
+//! IO. `ckpt.inflight` gauges the queue depth.
+//!
+//! Error and crash semantics are the synchronous path's: every commit's
+//! `Result` comes back through a [`CommitOutcome`] (from `submit`'s
+//! opportunistic reclaim, [`CkptWriter::drain`] or the hard
+//! [`CkptWriter::join`]), so callers surface writer-thread failures
+//! (ENOSPC, rename faults) into their normal retry path; `kill`
+//! failpoints exit the whole process from the writer thread just as they
+//! would inline. Callers MUST `join` before any point whose semantics
+//! depend on "the save is on disk": job finish, terminal transitions,
+//! and the `ckpt_cadence` crash hook (see `serve::scheduler::drive`).
+//! Dropping the writer joins the thread but discards outcomes — join
+//! first when errors matter.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::obs::registry;
+
+use super::checkpoint::{commit_snapshot_rotated, SnapshotBuf};
+
+/// How many reusable scratch buffers (and so in-flight commits) the
+/// writer runs with. Two is the double-buffering sweet spot: one being
+/// filled while one commits; a third would only hide a writer that
+/// cannot keep up with the cadence at all.
+pub const SCRATCH_BUFFERS: usize = 2;
+
+/// The result of one background commit, in submission order.
+pub struct CommitOutcome {
+    /// The step the committed snapshot captured.
+    pub step: usize,
+    /// The snapshot directory on success; the writer-thread error
+    /// (ENOSPC, rename failure, fsync failure) otherwise.
+    pub dir: Result<PathBuf>,
+}
+
+type Done = (SnapshotBuf, usize, Result<PathBuf>);
+
+/// Background committer for one rotated checkpoint root. See the module
+/// docs for the contract.
+pub struct CkptWriter {
+    work_tx: Option<SyncSender<SnapshotBuf>>,
+    done_rx: Receiver<Done>,
+    free: Vec<SnapshotBuf>,
+    in_flight: usize,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CkptWriter {
+    /// Spawn the writer thread for `root`.
+    pub fn new(root: &Path) -> CkptWriter {
+        let root = root.to_path_buf();
+        let (work_tx, work_rx) = sync_channel::<SnapshotBuf>(SCRATCH_BUFFERS);
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<Done>();
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || {
+                while let Ok(buf) = work_rx.recv() {
+                    let res = commit_snapshot_rotated(&root, &buf);
+                    let step = buf.step();
+                    if done_tx.send((buf, step, res)).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning the checkpoint writer thread");
+        CkptWriter {
+            work_tx: Some(work_tx),
+            done_rx,
+            free: (0..SCRATCH_BUFFERS).map(|_| SnapshotBuf::default()).collect(),
+            in_flight: 0,
+            handle: Some(handle),
+        }
+    }
+
+    fn reclaim(&mut self, (buf, step, res): Done, out: &mut Vec<CommitOutcome>) {
+        self.in_flight -= 1;
+        registry::CKPT_INFLIGHT.set(self.in_flight as u64);
+        self.free.push(buf);
+        out.push(CommitOutcome { step, dir: res });
+    }
+
+    /// Capture into a free scratch buffer via `capture` and queue its
+    /// commit. Blocks only when both buffers are in flight (recorded as
+    /// a `ckpt.backpressure_stalls` hit). Completions reclaimed along
+    /// the way are returned so the caller can surface their results —
+    /// an empty vec just means nothing had finished yet.
+    pub fn submit(
+        &mut self,
+        capture: impl FnOnce(&mut SnapshotBuf) -> Result<()>,
+    ) -> Result<Vec<CommitOutcome>> {
+        let mut done = Vec::new();
+        if self.free.is_empty() {
+            registry::CKPT_BACKPRESSURE_STALLS.add(1);
+            let msg = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow!("checkpoint writer thread died"))?;
+            self.reclaim(msg, &mut done);
+        }
+        // opportunistic, non-blocking reclaim keeps outcome latency low
+        // even when backpressure never triggers
+        while let Ok(msg) = self.done_rx.try_recv() {
+            self.reclaim(msg, &mut done);
+        }
+        let mut buf = self.free.pop().expect("a scratch buffer is free here");
+        if let Err(e) = capture(&mut buf) {
+            self.free.push(buf);
+            return Err(e);
+        }
+        self.work_tx
+            .as_ref()
+            .expect("writer channel open until finish/drop")
+            .send(buf)
+            .map_err(|_| anyhow!("checkpoint writer thread died"))?;
+        self.in_flight += 1;
+        registry::CKPT_INFLIGHT.set(self.in_flight as u64);
+        Ok(done)
+    }
+
+    /// Non-blocking: collect every commit that has completed so far.
+    pub fn drain(&mut self) -> Vec<CommitOutcome> {
+        let mut done = Vec::new();
+        loop {
+            match self.done_rx.try_recv() {
+                Ok(msg) => self.reclaim(msg, &mut done),
+                Err(TryRecvError::Empty | TryRecvError::Disconnected) => return done,
+            }
+        }
+    }
+
+    /// Hard join: block until every submitted commit has completed and
+    /// return their outcomes. This is the barrier callers place at job
+    /// finish, terminal transitions and `ckpt_cadence` failpoint
+    /// boundaries.
+    pub fn join(&mut self) -> Result<Vec<CommitOutcome>> {
+        let mut done = Vec::new();
+        while self.in_flight > 0 {
+            let msg = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow!("checkpoint writer thread died"))?;
+            self.reclaim(msg, &mut done);
+        }
+        Ok(done)
+    }
+}
+
+impl Drop for CkptWriter {
+    fn drop(&mut self) {
+        // closing the work channel stops the thread after the queue
+        // empties; outcomes still in the done channel are discarded, so
+        // error-sensitive callers join() before dropping
+        self.work_tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        registry::CKPT_INFLIGHT.set(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, RunConfig, TaskKind};
+    use crate::coordinator::{capture_snapshot, resolve_checkpoint_dir, OptSnapshot, ParamStore};
+    use crate::linalg::Rng;
+    use crate::runtime::ParamSpec;
+    use crate::tensor::Tensor;
+
+    fn store(fill: f32) -> ParamStore {
+        ParamStore {
+            specs: vec![ParamSpec {
+                name: "w".into(),
+                shape: vec![3, 2],
+                kind: "matrix".into(),
+                compressed: true,
+            }],
+            values: vec![Tensor::full(&[3, 2], fill)],
+        }
+    }
+
+    #[test]
+    fn async_commits_land_in_order_and_join_reports_each() {
+        let root =
+            std::env::temp_dir().join(format!("mlorc_ckpt_writer_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let cfg = RunConfig::new("nano", Method::MlorcAdamW, TaskKind::MathChain, 10);
+        let rng = Rng::new(0);
+        let mut w = CkptWriter::new(&root);
+        let mut outcomes = Vec::new();
+        for step in [4usize, 8, 12] {
+            let params = store(step as f32);
+            let snap = OptSnapshot { opt: vec![], rng_data: &rng, omega: &[] };
+            outcomes.extend(
+                w.submit(|buf| capture_snapshot(buf, step, &cfg, &params, None, &snap)).unwrap(),
+            );
+        }
+        outcomes.extend(w.join().unwrap());
+        drop(w);
+        let steps: Vec<usize> = outcomes.iter().map(|o| o.step).collect();
+        assert_eq!(steps, vec![4, 8, 12]);
+        for o in &outcomes {
+            o.dir.as_ref().unwrap();
+        }
+        // LATEST points at the newest snapshot; older ones pruned to the
+        // retention window
+        let resolved = resolve_checkpoint_dir(&root).unwrap();
+        assert!(resolved.ends_with("step-00000012"), "{resolved:?}");
+        assert!(!root.join("step-00000004").exists());
+        assert!(root.join("step-00000008").exists());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

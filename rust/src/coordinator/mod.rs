@@ -5,6 +5,7 @@
 //! derives from the run seed; Python never executes here.
 
 mod checkpoint;
+mod ckpt_writer;
 mod memory;
 mod metrics;
 mod params;
@@ -13,10 +14,12 @@ mod state;
 mod trainer;
 
 pub use checkpoint::{
-    has_checkpoint, load_checkpoint, load_checkpoint_v2, load_for_resume, resolve_checkpoint_dir,
-    resolve_checkpoint_dir_verified, save_checkpoint, save_checkpoint_v2,
-    save_checkpoint_v2_rotated, verify_snapshot, CheckpointV2, OptSnapshot,
+    capture_snapshot, commit_snapshot, commit_snapshot_rotated, has_checkpoint, load_checkpoint,
+    load_checkpoint_v2, load_for_resume, resolve_checkpoint_dir, resolve_checkpoint_dir_verified,
+    save_checkpoint, save_checkpoint_v2, save_checkpoint_v2_rotated, verify_snapshot, CheckpointV2,
+    OptSnapshot, SnapshotBuf,
 };
+pub use ckpt_writer::{CkptWriter, CommitOutcome, SCRATCH_BUFFERS};
 pub use memory::{MemoryAccountant, MemoryReport};
 pub use metrics::{EvalRecord, MetricsLog, StepRecord};
 pub use params::ParamStore;

@@ -19,6 +19,7 @@ use crate::runtime::{GraphSpec, Preset, Runtime, ValRef};
 use crate::tensor::Tensor;
 
 use super::checkpoint::{self, OptSnapshot};
+use super::ckpt_writer::CkptWriter;
 use super::memory::{MemoryAccountant, MemoryReport};
 use super::metrics::{EvalRecord, MetricsLog, StepRecord};
 use super::params::ParamStore;
@@ -235,6 +236,25 @@ impl<'rt> Trainer<'rt> {
             &snap,
         )?;
         Ok(())
+    }
+
+    /// The step-path half of an async save: copy the full v2 snapshot
+    /// state into `buf` for a [`CkptWriter`](super::CkptWriter) to
+    /// commit in the background. Same capture `save_full_checkpoint`
+    /// runs inline, so the bytes on disk are bit-identical either way.
+    pub fn capture_snapshot(&self, buf: &mut checkpoint::SnapshotBuf) -> Result<()> {
+        let opt: Vec<(String, &OptState)> = (0..self.trainable.len())
+            .map(|i| (self.trainable_spec(i).name.clone(), &self.states[i]))
+            .collect();
+        let snap = OptSnapshot { opt, rng_data: &self.rng_data, omega: &self.omega_streams };
+        checkpoint::capture_snapshot(
+            buf,
+            self.step,
+            &self.cfg,
+            &self.params,
+            self.adapters.as_ref(),
+            &snap,
+        )
     }
 
     /// Resume this trainer from a v2 checkpoint (direct snapshot dir or
@@ -665,12 +685,32 @@ impl<'rt> Trainer<'rt> {
     /// steps (0 = off) a full v2 snapshot goes into the rotated root
     /// `ckpt_root`; a final snapshot is always written when a root is
     /// given. Starts from the current step, so a resumed trainer
-    /// continues instead of restarting.
+    /// continues instead of restarting. Cadence saves run through the
+    /// async double-buffered writer (bit-identical to inline saves).
     pub fn train_with_checkpoints(
         &mut self,
         every: usize,
         ckpt_root: Option<&Path>,
     ) -> Result<TrainOutcome> {
+        self.train_with_checkpoint_mode(every, ckpt_root, false)
+    }
+
+    /// [`Trainer::train_with_checkpoints`] with the cadence writer mode
+    /// explicit: `sync` forces the old inline path (the CLI's
+    /// `--checkpoint-sync` escape hatch). In async mode the step loop
+    /// only pays the snapshot capture; commits run on the background
+    /// writer thread, whose errors surface at the next cadence or at the
+    /// hard join before the final (always inline) snapshot.
+    pub fn train_with_checkpoint_mode(
+        &mut self,
+        every: usize,
+        ckpt_root: Option<&Path>,
+        sync: bool,
+    ) -> Result<TrainOutcome> {
+        let mut writer = match (ckpt_root, every > 0 && !sync) {
+            (Some(root), true) => Some(CkptWriter::new(root)),
+            _ => None,
+        };
         let t0 = Instant::now();
         let total = self.cfg.steps;
         let start = self.step;
@@ -686,7 +726,17 @@ impl<'rt> Trainer<'rt> {
             }
             if let Some(root) = ckpt_root {
                 if every > 0 && (s + 1) % every == 0 && s + 1 < total {
-                    self.save_full_checkpoint(root)?;
+                    match writer.as_mut() {
+                        Some(w) => {
+                            for oc in w.submit(|b| self.capture_snapshot(b))? {
+                                oc.dir?;
+                            }
+                            for oc in w.drain() {
+                                oc.dir?;
+                            }
+                        }
+                        None => self.save_full_checkpoint(root)?,
+                    }
                 }
             }
             if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
@@ -701,6 +751,14 @@ impl<'rt> Trainer<'rt> {
                 last_eval = Some(ev);
             }
         }
+        // hard join before the final inline snapshot: a writer-thread
+        // failure must fail the run, not vanish with the writer
+        if let Some(w) = writer.as_mut() {
+            for oc in w.join()? {
+                oc.dir?;
+            }
+        }
+        drop(writer);
         if let Some(root) = ckpt_root {
             self.save_full_checkpoint(root)?;
         }

@@ -64,6 +64,7 @@ USAGE: mlorc <subcommand> [--options]
          [--host-opt] [--opt-threads N] [--rank-min N]
          [--save-metrics results/run.json]
          [--checkpoint-dir ckpt/] [--checkpoint-every N] [--resume ckpt/]
+         [--checkpoint-sync]
   submit --spool spool/ --method mlorc_adamw --steps 200
          [--engine host|graph] [--preset <name>] [--task <t>] [--lr X]
          [--seed N] [--checkpoint-every N] [--priority N] [--rank-min N]
@@ -71,6 +72,7 @@ USAGE: mlorc <subcommand> [--options]
   serve  --spool spool/ [--jobs 2] [--drain] [--poll-ms 500]
          [--max-retries 2] [--retry-backoff-ms 500]
          [--lease-timeout-ms 30000] [--failpoint site:action@N]
+         [--checkpoint-sync]
   status --spool spool/ [--json] [--expect-all-done]
   top    --spool spool/ [--json]
   cancel <job-id> [--spool spool/]
@@ -119,6 +121,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let save_metrics = args.get("save-metrics").map(|s| s.to_string());
     let ckpt_dir = args.get("checkpoint-dir").map(|s| s.to_string());
     let ckpt_every = args.get_usize("checkpoint-every", 0)?;
+    let ckpt_sync = args.flag("checkpoint-sync");
     let resume = args.get("resume").map(|s| s.to_string());
     args.reject_unknown()?;
     if ckpt_every > 0 && ckpt_dir.is_none() {
@@ -140,7 +143,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         let step = trainer.resume_from(Path::new(dir))?;
         log::info!("resumed from {dir} at step {step} (v2 optimizer state + RNG streams restored)");
     }
-    let outcome = trainer.train_with_checkpoints(ckpt_every, ckpt_dir.as_deref().map(Path::new))?;
+    let outcome = trainer.train_with_checkpoint_mode(
+        ckpt_every,
+        ckpt_dir.as_deref().map(Path::new),
+        ckpt_sync,
+    )?;
     if let Some(ev) = &outcome.eval {
         log::info!(
             "done: final loss {:.4}, eval loss {:.4}, acc {:.3}, exact match {:.3} ({:.1}s)",
@@ -256,6 +263,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         die_after_checkpoints: args.get_usize("die-after-checkpoints", 0)?,
         max_retries: args.get_usize("max-retries", 2)?,
         retry_backoff_ms: args.get_u64("retry-backoff-ms", 500)?,
+        checkpoint_sync: args.flag("checkpoint-sync"),
         lease_timeout_ms: args.get_u64("lease-timeout-ms", 30_000)?,
     };
     // fault-injection hook (same grammar as MLORC_FAILPOINT)

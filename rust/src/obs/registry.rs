@@ -187,9 +187,14 @@ pub static SERVE_LEASE_STEALS: Counter = Counter::new();
 pub static SERVE_QUARANTINES: Counter = Counter::new();
 pub static GEMM_CALLS: Counter = Counter::new();
 pub static GEMM_MADDS: Counter = Counter::new();
+/// Times the step loop blocked because both checkpoint scratch buffers
+/// were in flight (the async writer's only hot-path stall).
+pub static CKPT_BACKPRESSURE_STALLS: Counter = Counter::new();
 
 pub static POOL_WORKERS: Gauge = Gauge::new();
 pub static PROC_RSS_BYTES: Gauge = Gauge::new();
+/// Checkpoint commits currently queued or running on the writer thread.
+pub static CKPT_INFLIGHT: Gauge = Gauge::new();
 
 pub static STEP_CLASS_US: Histogram = Histogram::new();
 pub static STEP_RECONSTRUCT_US: Histogram = Histogram::new();
@@ -200,6 +205,10 @@ pub static RSVD_PROJECT_US: Histogram = Histogram::new();
 pub static POOL_DISPATCH_US: Histogram = Histogram::new();
 pub static POOL_WAIT_US: Histogram = Histogram::new();
 pub static CKPT_SAVE_US: Histogram = Histogram::new();
+/// The step-path half of an async save: state copy into a scratch buffer.
+pub static CKPT_SNAPSHOT_US: Histogram = Histogram::new();
+/// The writer-thread half: encode, checksum, write, flip, fsync, prune.
+pub static CKPT_COMMIT_US: Histogram = Histogram::new();
 pub static SERVE_STEP_US: Histogram = Histogram::new();
 pub static SERVE_JOB_US: Histogram = Histogram::new();
 
@@ -218,11 +227,13 @@ static COUNTERS: &[(&str, &Counter)] = &[
     ("serve.quarantines", &SERVE_QUARANTINES),
     ("gemm.calls", &GEMM_CALLS),
     ("gemm.madds", &GEMM_MADDS),
+    ("ckpt.backpressure_stalls", &CKPT_BACKPRESSURE_STALLS),
 ];
 
 static GAUGES: &[(&str, &Gauge)] = &[
     ("pool.workers", &POOL_WORKERS),
     ("proc.rss_bytes", &PROC_RSS_BYTES),
+    ("ckpt.inflight", &CKPT_INFLIGHT),
 ];
 
 static HISTOGRAMS: &[(&str, &Histogram)] = &[
@@ -235,6 +246,8 @@ static HISTOGRAMS: &[(&str, &Histogram)] = &[
     ("pool.dispatch_us", &POOL_DISPATCH_US),
     ("pool.wait_us", &POOL_WAIT_US),
     ("ckpt.save_us", &CKPT_SAVE_US),
+    ("ckpt.snapshot_us", &CKPT_SNAPSHOT_US),
+    ("ckpt.commit_us", &CKPT_COMMIT_US),
     ("serve.step_us", &SERVE_STEP_US),
     ("serve.job_us", &SERVE_JOB_US),
 ];

@@ -28,8 +28,8 @@ use anyhow::{bail, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::{
-    host_step_all, load_for_resume, save_checkpoint_v2_rotated, HostStepJob, OptSnapshot,
-    OptState, ParamStore,
+    capture_snapshot, host_step_all, load_for_resume, save_checkpoint_v2_rotated, HostStepJob,
+    OptSnapshot, OptState, ParamStore, SnapshotBuf,
 };
 use crate::linalg::{matmul, matmul_a_bt, threads, Rng, Workspace};
 use crate::runtime::ParamSpec;
@@ -291,6 +291,21 @@ impl HostTrainer {
         let snap = OptSnapshot { opt, rng_data: &self.rng_data, omega: &self.omega_streams };
         save_checkpoint_v2_rotated(root, self.step, &self.cfg, &self.params, None, &snap)?;
         Ok(())
+    }
+
+    /// Capture the full v2 snapshot state into a reusable scratch buffer
+    /// (the cheap half of [`HostTrainer::save_checkpoint`]); committing
+    /// the buffer is bit-identical to an inline save.
+    pub fn capture_snapshot(&self, buf: &mut SnapshotBuf) -> Result<()> {
+        let opt: Vec<(String, &OptState)> = self
+            .params
+            .specs
+            .iter()
+            .zip(&self.states)
+            .map(|(spec, st)| (spec.name.clone(), st))
+            .collect();
+        let snap = OptSnapshot { opt, rng_data: &self.rng_data, omega: &self.omega_streams };
+        capture_snapshot(buf, self.step, &self.cfg, &self.params, None, &snap)
     }
 
     /// Resume from a v2 checkpoint (direct snapshot dir or rotated

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{has_checkpoint, Trainer};
+use crate::coordinator::{has_checkpoint, CkptWriter, SnapshotBuf, Trainer};
 use crate::linalg::threads;
 use crate::obs::{self, registry, Journal};
 use crate::runtime::{Manifest, Runtime};
@@ -61,6 +61,11 @@ pub struct ServeOpts {
     pub max_retries: usize,
     /// Base retry backoff; doubles per recorded attempt.
     pub retry_backoff_ms: u64,
+    /// Force inline (synchronous) cadence checkpoints instead of the
+    /// async double-buffered writer — the `--checkpoint-sync` escape
+    /// hatch. Snapshots are bit-identical either way; sync trades step
+    /// latency for the simplest possible failure timing.
+    pub checkpoint_sync: bool,
     /// Lease liveness window. 0 = legacy single-scheduler mode: claims
     /// write no lease, and recovery (startup only) re-queues every
     /// running job immediately — crash leftovers need no timeout to
@@ -79,6 +84,7 @@ impl Default for ServeOpts {
             die_after_checkpoints: 0,
             max_retries: 2,
             retry_backoff_ms: 500,
+            checkpoint_sync: false,
             lease_timeout_ms: 30_000,
         }
     }
@@ -388,6 +394,9 @@ trait ServeEngine {
     fn step(&mut self) -> Result<f32>;
     fn step_count(&self) -> usize;
     fn save(&self, root: &Path) -> Result<()>;
+    /// Capture full snapshot state into a reusable scratch buffer — the
+    /// cheap half of `save`; committing the buffer is bit-identical.
+    fn capture(&self, buf: &mut SnapshotBuf) -> Result<()>;
     fn resume(&mut self, root: &Path) -> Result<usize>;
     fn opt_state_bytes(&self) -> usize;
     /// Adaptive-rank shrink events so far (0 for fixed-rank layouts).
@@ -403,6 +412,9 @@ impl ServeEngine for HostTrainer {
     }
     fn save(&self, root: &Path) -> Result<()> {
         self.save_checkpoint(root)
+    }
+    fn capture(&self, buf: &mut SnapshotBuf) -> Result<()> {
+        self.capture_snapshot(buf)
     }
     fn resume(&mut self, root: &Path) -> Result<usize> {
         self.resume_from(root)
@@ -424,6 +436,9 @@ impl ServeEngine for Trainer<'_> {
     }
     fn save(&self, root: &Path) -> Result<()> {
         self.save_full_checkpoint(root)
+    }
+    fn capture(&self, buf: &mut SnapshotBuf) -> Result<()> {
+        self.capture_snapshot(buf)
     }
     fn resume(&mut self, root: &Path) -> Result<usize> {
         self.resume_from(root)
@@ -526,6 +541,22 @@ fn drive(
         // the closure keeps `?`-failures from skipping the stop flag —
         // an early return from the scope itself would deadlock the join
         let result = (|| -> Result<JobStatus> {
+            let mut writer = (!opts.checkpoint_sync && spec.checkpoint_every > 0)
+                .then(|| CkptWriter::new(&ckpt_root));
+            // journal + metrics land right after a snapshot commits
+            // (never at capture time), before the injected-kill hook —
+            // a crash never loses the record of a committed save
+            let record_commit = |step: usize| {
+                ckpts.fetch_add(1, Ordering::SeqCst);
+                journal.event(
+                    "checkpoint",
+                    vec![
+                        ("job", Json::str(spec.id.as_str())),
+                        ("step", Json::num(step as f64)),
+                    ],
+                );
+                write_metrics_snapshot(spool, journal);
+            };
             let mut last_loss = None;
             while tr.step_count() < spec.cfg.steps {
                 let loss = {
@@ -536,19 +567,30 @@ fn drive(
                 let s = tr.step_count();
                 if spec.checkpoint_every > 0 && s % spec.checkpoint_every == 0 && s < spec.cfg.steps
                 {
-                    tr.save(&ckpt_root)?;
-                    ckpts.fetch_add(1, Ordering::SeqCst);
-                    // journal + metrics land right after the snapshot
-                    // commits, before the injected-kill hook below — a
-                    // crash never loses the record of a committed save
-                    journal.event(
-                        "checkpoint",
-                        vec![
-                            ("job", Json::str(spec.id.as_str())),
-                            ("step", Json::num(s as f64)),
-                        ],
-                    );
-                    write_metrics_snapshot(spool, journal);
+                    match writer.as_mut() {
+                        Some(w) => {
+                            let mut outcomes = w.submit(|b| tr.capture(b))?;
+                            // `--die-after-checkpoints N` means "die after
+                            // N *committed* saves": with a ckpt_cadence
+                            // failpoint armed the async path hard-joins so
+                            // the crash below sees the synchronous path's
+                            // on-disk state; otherwise reclaim lazily
+                            if fsutil::failpoints::armed_on("ckpt_cadence") {
+                                outcomes.extend(w.join()?);
+                            } else {
+                                outcomes.extend(w.drain());
+                            }
+                            for oc in outcomes {
+                                let step = oc.step;
+                                oc.dir?;
+                                record_commit(step);
+                            }
+                        }
+                        None => {
+                            tr.save(&ckpt_root)?;
+                            record_commit(s);
+                        }
+                    }
                     // the crash hook (`--die-after-checkpoints` /
                     // MLORC_FAILPOINT=ckpt_cadence:...) fires after the
                     // snapshot is committed, like a real mid-run kill
@@ -562,6 +604,16 @@ fn drive(
                     let _ = status.write(spool);
                 }
             }
+            // Hard join before the terminal transition: writer-thread
+            // failures must fail (and retry) the job, not vanish on drop.
+            if let Some(w) = writer.as_mut() {
+                for oc in w.join()? {
+                    let step = oc.step;
+                    oc.dir?;
+                    record_commit(step);
+                }
+            }
+            drop(writer);
             // Final snapshot: the job's resumable (and verifiable) result.
             tr.save(&ckpt_root)?;
             status.state = "done".to_string();

@@ -22,6 +22,9 @@
 //! * `rename` — leave the `.tmp` file behind and fail the rename
 //! * `enospc` — fail the write as if the disk were full
 //! * `kill`   — abort the process with exit code [`KILL_EXIT_CODE`]
+//! * `slow`   — sleep [`SLOW_ACTION_MS`] ms, then proceed normally (a
+//!   congested disk; used to exercise the async checkpoint writer's
+//!   backpressure path)
 //!
 //! Hit counters are per-spec, independent, and process-global: every
 //! armed spec matching a site counts every hit on that site, so
@@ -42,6 +45,9 @@ use anyhow::{bail, Context, Result};
 /// crash hook uses, so harness scripts can assert on one value.
 pub const KILL_EXIT_CODE: i32 = 86;
 
+/// How long the `slow` failpoint action stalls an IO site.
+pub const SLOW_ACTION_MS: u64 = 25;
+
 /// What an armed failpoint does when it fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailAction {
@@ -54,6 +60,8 @@ pub enum FailAction {
     Enospc,
     /// Abort the process with [`KILL_EXIT_CODE`].
     Kill,
+    /// Sleep [`SLOW_ACTION_MS`] ms, then carry on normally.
+    Slow,
 }
 
 #[derive(Debug, Clone)]
@@ -87,9 +95,10 @@ pub mod failpoints {
             "rename" => FailAction::RenameFail,
             "enospc" => FailAction::Enospc,
             "kill" => FailAction::Kill,
+            "slow" => FailAction::Slow,
             other => bail!(
                 "failpoint '{tok}': unknown action '{other}' \
-                 (want torn|rename|enospc|kill)"
+                 (want torn|rename|enospc|kill|slow)"
             ),
         };
         let (count_s, repeat) = match count_s.strip_suffix('+') {
@@ -147,6 +156,14 @@ pub mod failpoints {
         with_registry(|reg| reg.iter().any(|fp| !fp.done))
     }
 
+    /// True if an armed failpoint targets `site`. The async checkpoint
+    /// writer uses this to hard-join pending commits before a crash hook
+    /// (`ckpt_cadence`) could fire, keeping injected-kill semantics
+    /// identical to the synchronous path. Does NOT count a hit.
+    pub fn armed_on(site: &str) -> bool {
+        with_registry(|reg| reg.iter().any(|fp| !fp.done && fp.site == site))
+    }
+
     /// Record one hit on `site`; returns the action to perform if an
     /// armed failpoint fires. Every spec matching the site counts the
     /// hit on its own counter (so a repeat spec never shadows a later
@@ -194,6 +211,10 @@ pub fn failpoint(site: &str) -> Result<()> {
     match failpoints::hit(site) {
         None => Ok(()),
         Some(FailAction::Kill) => kill_now(site),
+        Some(FailAction::Slow) => {
+            std::thread::sleep(std::time::Duration::from_millis(SLOW_ACTION_MS));
+            Ok(())
+        }
         Some(action) => bail!("failpoint '{site}': injected {action:?}"),
     }
 }
@@ -219,6 +240,9 @@ pub fn write_atomic_site(path: &Path, bytes: &[u8], site: &str) -> Result<()> {
     ensure_parent(path)?;
     match failpoints::hit(site) {
         Some(FailAction::Kill) => kill_now(site),
+        Some(FailAction::Slow) => {
+            std::thread::sleep(std::time::Duration::from_millis(SLOW_ACTION_MS));
+        }
         Some(FailAction::Torn) => {
             // what a power cut mid-write leaves: a half-written file at
             // the final path, and no error anyone saw
@@ -247,11 +271,28 @@ pub fn write_atomic_site(path: &Path, bytes: &[u8], site: &str) -> Result<()> {
     Ok(())
 }
 
+/// fsync a directory, making previously renamed entries inside it
+/// durable across power loss. `write_atomic`'s rename orders the data
+/// before the name, but the *name* itself only survives a power cut once
+/// the parent directory's metadata is synced — the checkpoint commit
+/// path calls this after each snapshot's `meta.json` commit marker and
+/// after the `LATEST` flip (on the writer thread, where the stall is
+/// free).
+pub fn fsync_dir(dir: &Path) -> Result<()> {
+    let f = std::fs::File::open(dir)
+        .with_context(|| format!("opening {} for fsync", dir.display()))?;
+    f.sync_all().with_context(|| format!("fsync {}", dir.display()))?;
+    Ok(())
+}
+
 /// `std::fs::rename` with a failpoint site attached (spool lifecycle
 /// transitions go through this).
 pub fn rename_site(from: &Path, to: &Path, site: &str) -> Result<()> {
     match failpoints::hit(site) {
         Some(FailAction::Kill) => kill_now(site),
+        Some(FailAction::Slow) => {
+            std::thread::sleep(std::time::Duration::from_millis(SLOW_ACTION_MS));
+        }
         Some(action) => bail!(
             "failpoint '{site}': injected {action:?} renaming {} -> {}",
             from.display(),

@@ -11,12 +11,16 @@
 //! does.
 
 use std::path::PathBuf;
+use std::process::Command;
 use std::sync::Mutex;
 
 use mlorc::config::{Method, RunConfig, TaskKind};
 use mlorc::linalg::threads;
+use mlorc::obs;
+use mlorc::obs::registry::CKPT_BACKPRESSURE_STALLS;
 use mlorc::serve::{
     aggregate, fsck, render_report, serve, Engine, HostTrainer, JobSpec, ServeOpts, Spool,
+    CRASH_EXIT_CODE,
 };
 use mlorc::tensor::Tensor;
 use mlorc::util::fsutil::failpoints;
@@ -332,4 +336,168 @@ fn fsck_detects_and_repairs_corruption_and_orphans() {
     let mut tr = HostTrainer::new(done_spec.cfg).unwrap();
     assert_eq!(tr.resume_from(&ckpt_root).unwrap(), 10);
     std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Async tentpole #1: kill -9 on the *writer thread* mid-commit. With
+/// one job at cadence 5 a snapshot is exactly four checkpoint-file
+/// writes, so `ckpt_write:kill@7` dies on the manifest of the second
+/// snapshot — after its tensors landed, before its `meta.json` commit
+/// marker. The restart must fall back to the previous intact snapshot
+/// and finish bit-identically to an uninterrupted run.
+#[test]
+fn kill_mid_async_commit_resumes_from_previous_snapshot_bit_identical() {
+    let _g = fp_guard();
+    let root = tmp("killcommit");
+    let spool = Spool::open(&root).unwrap();
+    let cfg = job_cfg(Method::MlorcAdamW, 21, 12);
+    let reference = solo_params(&cfg, threads::budget().max(1));
+    spool.submit(&spec("job001_kill", cfg, 5)).unwrap();
+
+    // the kill exits the whole process, so scheduler 1 is the real
+    // `mlorc serve` binary with the failpoint armed via its environment
+    let status = Command::new(env!("CARGO_BIN_EXE_mlorc"))
+        .arg("serve")
+        .arg("--spool")
+        .arg(&root)
+        .arg("--jobs")
+        .arg("1")
+        .arg("--drain")
+        .arg("--poll-ms")
+        .arg("10")
+        .arg("--lease-timeout-ms")
+        .arg("500")
+        .env("MLORC_FAILPOINT", "ckpt_write:kill@7")
+        .env_remove("MLORC_NO_OBS")
+        .status()
+        .expect("spawn mlorc serve");
+    assert_eq!(
+        status.code(),
+        Some(CRASH_EXIT_CODE),
+        "writer-thread kill must take down the process with the crash exit code"
+    );
+
+    // mid-commit wreckage: step-10 exists but never got its commit
+    // marker, and LATEST still names the first snapshot
+    let ckpt_root = spool.checkpoint_root("job001_kill");
+    assert_eq!(
+        std::fs::read_to_string(ckpt_root.join("LATEST")).unwrap().trim(),
+        "step-00000005",
+        "LATEST must not move until the full snapshot is on disk"
+    );
+    assert!(
+        !ckpt_root.join("step-00000010").join("meta.json").exists(),
+        "the torn snapshot must have no commit marker"
+    );
+
+    // restart: the dead scheduler's lease expires, the job resumes from
+    // step-5 and completes exactly as if it had never crashed
+    let opts = ServeOpts {
+        jobs: 1,
+        drain: true,
+        poll_ms: 10,
+        lease_timeout_ms: 500,
+        ..Default::default()
+    };
+    let summary = serve(&spool, &opts).unwrap();
+    assert_eq!(summary.done, 1);
+    assert_eq!(summary.failed, 0);
+    let served = final_params(&spool, "job001_kill");
+    assert_eq!(served.len(), reference.len());
+    for (j, (a, b)) in served.iter().zip(&reference).enumerate() {
+        assert_eq!(a.data, b.data, "param {j} != uninterrupted run");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Async tentpole #2: a fault on the writer thread must not vanish with
+/// the thread. `ckpt_write:enospc@5` fails the first file of the second
+/// snapshot (cadence 2, steps 6); the error surfaces at the terminal
+/// join, fails the attempt with the injected ENOSPC recorded, and the
+/// retry resumes from the first intact snapshot and completes.
+#[test]
+fn writer_thread_fault_is_surfaced_recorded_and_retried() {
+    let _g = fp_guard();
+    let root = tmp("asyncspc");
+    let spool = Spool::open(&root).unwrap();
+    spool.submit(&spec("job001_async", job_cfg(Method::MlorcLion, 13, 6), 2)).unwrap();
+    failpoints::arm("ckpt_write:enospc@5").unwrap();
+    let opts = ServeOpts {
+        jobs: 1,
+        drain: true,
+        poll_ms: 10,
+        max_retries: 2,
+        retry_backoff_ms: 10,
+        ..Default::default()
+    };
+    let summary = serve(&spool, &opts).unwrap();
+    failpoints::clear();
+    assert_eq!(summary.done, 1, "job must complete after the retry");
+    assert_eq!(summary.failed, 0);
+    assert_eq!(summary.retried, 1);
+
+    let done_spec = spool.load_spec("done", "job001_async").unwrap();
+    assert_eq!(done_spec.attempts.len(), 1, "the writer-thread failure must be recorded");
+    assert!(
+        done_spec.attempts[0].error.contains("ENOSPC"),
+        "attempt error should carry the injected fault: {}",
+        done_spec.attempts[0].error
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// Async tentpole #3: backpressure. With every checkpoint-file write
+/// slowed 25ms and a cadence of 1, both scratch buffers are in flight by
+/// step 3 and the step loop must stall at least once — and the run's
+/// weights AND its on-disk snapshots stay byte-identical to the same job
+/// under `--checkpoint-sync`.
+#[test]
+fn backpressure_stalls_and_stays_bit_identical_to_sync() {
+    let _g = fp_guard();
+    obs::force_enabled(true);
+    let root_async = tmp("bpasync");
+    let root_sync = tmp("bpsync");
+
+    let spool = Spool::open(&root_async).unwrap();
+    spool.submit(&spec("job001_bp", job_cfg(Method::MlorcSgdM, 17, 6), 1)).unwrap();
+    failpoints::arm("ckpt_write:slow@1+").unwrap();
+    let stalls_before = CKPT_BACKPRESSURE_STALLS.get();
+    let opts = ServeOpts { jobs: 1, drain: true, poll_ms: 10, ..Default::default() };
+    let summary = serve(&spool, &opts).unwrap();
+    failpoints::clear();
+    assert_eq!(summary.done, 1);
+    assert!(
+        CKPT_BACKPRESSURE_STALLS.get() > stalls_before,
+        "cadence 1 with slowed commits must stall on the scratch buffers"
+    );
+
+    let spool_sync = Spool::open(&root_sync).unwrap();
+    spool_sync.submit(&spec("job001_bp", job_cfg(Method::MlorcSgdM, 17, 6), 1)).unwrap();
+    let sync_opts = ServeOpts {
+        jobs: 1,
+        drain: true,
+        poll_ms: 10,
+        checkpoint_sync: true,
+        ..Default::default()
+    };
+    let summary = serve(&spool_sync, &sync_opts).unwrap();
+    assert_eq!(summary.done, 1);
+
+    let served = final_params(&spool, "job001_bp");
+    let served_sync = final_params(&spool_sync, "job001_bp");
+    for (j, (a, b)) in served.iter().zip(&served_sync).enumerate() {
+        assert_eq!(a.data, b.data, "param {j}: async != --checkpoint-sync");
+    }
+    // rotation keeps the last two snapshots; the async-written bytes on
+    // disk must match the sync writer's file for file
+    for snap in ["step-00000005", "step-00000006"] {
+        for file in ["params.rten", "opt_state.rten", "manifest.json", "meta.json"] {
+            let a = std::fs::read(spool.checkpoint_root("job001_bp").join(snap).join(file))
+                .unwrap_or_else(|e| panic!("async {snap}/{file}: {e}"));
+            let b = std::fs::read(spool_sync.checkpoint_root("job001_bp").join(snap).join(file))
+                .unwrap_or_else(|e| panic!("sync {snap}/{file}: {e}"));
+            assert_eq!(a, b, "{snap}/{file} differs between async and sync writers");
+        }
+    }
+    std::fs::remove_dir_all(&root_async).unwrap();
+    std::fs::remove_dir_all(&root_sync).unwrap();
 }

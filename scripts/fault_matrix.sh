@@ -83,4 +83,18 @@ expect_kill "$BIN" serve --spool fm-legacy --jobs 2 --drain \
 "$BIN" status --spool fm-legacy --expect-all-done
 "$BIN" fsck fm-legacy
 
+echo "== case 6: async writer torn commit marker, sync escape hatch drains the rest =="
+# Cadence saves run on the async writer thread by default. torn@8 tears
+# the 2nd snapshot's meta.json (its commit marker: 4 checkpoint-file
+# writes per snapshot with one job), the cadence kill then dies after
+# that save was recorded. The restart must fall back to the intact 1st
+# snapshot — and it runs with --checkpoint-sync to prove the inline
+# escape hatch drains an async writer's spool.
+submit_jobs fm-async 1
+expect_kill env MLORC_FAILPOINT="ckpt_write:torn@8,ckpt_cadence:kill@2" \
+  "$BIN" serve --spool fm-async --jobs 1 --drain
+"$BIN" serve --spool fm-async --jobs 1 --drain --lease-timeout-ms 1000 --checkpoint-sync
+"$BIN" status --spool fm-async --expect-all-done
+"$BIN" fsck fm-async
+
 echo "fault matrix: all cases recovered to a clean, fully drained spool"
