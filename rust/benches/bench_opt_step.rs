@@ -512,8 +512,18 @@ fn state_bytes_bench() -> Json {
     let dense = registry::variant("adamw").unwrap().state_bytes(m, n, r);
     let mut rows: BTreeMap<String, Json> = BTreeMap::new();
     println!("\nmomentum state bytes (512x128, r=4):");
-    for id in ["adamw", "mlorc_adamw", "mlorc_adarank", "mlorc_q8"] {
-        let formula = registry::variant(id).unwrap().state_bytes(m, n, r);
+    // wrapper_bytes covers the second-wave states outside the compressor
+    // (Prodigy sliced statistics, bf16 weight planes) — zero for the rest
+    for id in [
+        "adamw",
+        "mlorc_adamw",
+        "mlorc_adarank",
+        "mlorc_q8",
+        "mlorc_prodigy",
+        "mlorc_adamw_bf16",
+    ] {
+        let v = registry::variant(id).unwrap();
+        let formula = v.state_bytes(m, n, r) + v.wrapper_bytes(m * n);
         let live = OptState::for_variant(id, &[m, n], r).unwrap().state_bytes();
         assert_eq!(live, formula, "{id}: live state bytes vs layout formula");
         println!("{id:>16} {formula:>9}B  ({:.4}x dense adamw)", formula as f64 / dense as f64);

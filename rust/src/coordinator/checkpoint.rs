@@ -258,6 +258,19 @@ pub fn capture_snapshot(
             };
             buf.opt_entries.insert(key, e);
         }
+        // stochastic-rounding layouts add their bf16 weight planes as
+        // dtype-3 entries
+        for (field, t) in state.bf16_fields() {
+            let key = format!("{name}/{field}");
+            let e = match prev_opt.remove(&key) {
+                Some(RtenEntry::Bf16(mut old)) if old.shape == t.shape => {
+                    old.data.copy_from_slice(&t.data);
+                    RtenEntry::Bf16(old)
+                }
+                _ => RtenEntry::Bf16(t.clone()),
+            };
+            buf.opt_entries.insert(key, e);
+        }
     }
     buf.opt_meta = opt_meta;
     let omega = Json::arr(snap.omega.iter().map(rng_to_json));
@@ -449,7 +462,7 @@ pub fn load_checkpoint_v2(
                 let key = format!("{name}/{field}");
                 match opt_tensors.get(&key) {
                     Some(RtenEntry::F32(t)) => Ok(t.clone()),
-                    Some(RtenEntry::U8(_)) => bail!("optimizer tensor '{key}' is u8, wanted f32"),
+                    Some(_) => bail!("optimizer tensor '{key}' is not f32"),
                     None => bail!("checkpoint missing optimizer tensor '{key}'"),
                 }
             },
@@ -457,7 +470,15 @@ pub fn load_checkpoint_v2(
                 let key = format!("{name}/{field}");
                 match opt_tensors.get(&key) {
                     Some(RtenEntry::U8(t)) => Ok(t.clone()),
-                    Some(RtenEntry::F32(_)) => bail!("optimizer tensor '{key}' is f32, wanted u8"),
+                    Some(_) => bail!("optimizer tensor '{key}' is not u8"),
+                    None => bail!("checkpoint missing optimizer tensor '{key}'"),
+                }
+            },
+            |field| {
+                let key = format!("{name}/{field}");
+                match opt_tensors.get(&key) {
+                    Some(RtenEntry::Bf16(t)) => Ok(t.clone()),
+                    Some(_) => bail!("optimizer tensor '{key}' is not bf16"),
                     None => bail!("checkpoint missing optimizer tensor '{key}'"),
                 }
             },

@@ -70,7 +70,17 @@ impl OptState {
         rank_min: usize,
     ) -> Result<OptState> {
         let desc = method.desc();
+        let numel: usize = spec.shape.iter().product();
         let variant_id = if spec.compressed && spec.shape.len() == 2 {
+            desc.matrix
+        } else if desc.fold
+            && spec.shape.len() == 1
+            && registry::effective_shape(numel, l).is_some()
+        {
+            // Foldable 1D parameter under a folding method: route through
+            // the matrix variant via the 2D effective shape (the
+            // exemplars' `vector_reshape`). Unfoldable shapes (prime
+            // length, short side under `l`) keep the plain path.
             desc.matrix
         } else {
             desc.plain
@@ -123,7 +133,7 @@ impl OptState {
     pub fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
         match self.opt() {
             None => vec![],
-            Some(mo) => mo.comp().tensor_fields(),
+            Some(mo) => mo.tensor_fields(),
         }
     }
 
@@ -131,7 +141,7 @@ impl OptState {
     pub fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
         match self {
             OptState::Frozen => vec![],
-            OptState::Opt(mo) => mo.comp_mut().tensor_fields_mut(),
+            OptState::Opt(mo) => mo.tensor_fields_mut(),
         }
     }
 
@@ -141,6 +151,15 @@ impl OptState {
         match self.opt() {
             None => vec![],
             Some(mo) => mo.comp().u8_fields(),
+        }
+    }
+
+    /// bf16 planes (stochastic-rounding weight layouts), checkpoint v2's
+    /// dtype-3 entries; empty for f32-weight layouts.
+    pub fn bf16_fields(&self) -> Vec<(&'static str, &crate::tensor::TensorBf16)> {
+        match self.opt() {
+            None => vec![],
+            Some(mo) => mo.bf16_fields(),
         }
     }
 
@@ -191,7 +210,7 @@ impl OptState {
     pub fn ckpt_meta(&self) -> Json {
         let mut meta = Json::obj(vec![("variant", Json::str(self.variant_name()))]);
         if let Some(mo) = self.opt() {
-            mo.comp().flags_into(&mut meta);
+            mo.ckpt_meta_into(&mut meta);
         }
         meta
     }
@@ -203,17 +222,21 @@ impl OptState {
         meta: &Json,
         take: impl FnMut(&'static str) -> Result<Tensor>,
     ) -> Result<OptState> {
-        OptState::from_ckpt_full(meta, take, |field| {
-            bail!("layout wants u8 tensor '{field}' but this source has only f32 tensors")
-        })
+        OptState::from_ckpt_full(
+            meta,
+            take,
+            |field| bail!("layout wants u8 tensor '{field}' but this source has only f32 tensors"),
+            |field| bail!("layout wants bf16 plane '{field}' but this source has only f32 tensors"),
+        )
     }
 
-    /// [`OptState::from_ckpt`] with a u8 lookup for quantized layouts'
-    /// code planes.
+    /// [`OptState::from_ckpt`] with u8 and bf16 lookups for quantized
+    /// layouts' code planes and stochastic-rounding weight planes.
     pub fn from_ckpt_full(
         meta: &Json,
         mut take: impl FnMut(&'static str) -> Result<Tensor>,
         mut take_u8: impl FnMut(&'static str) -> Result<crate::tensor::TensorU8>,
+        mut take_b16: impl FnMut(&'static str) -> Result<crate::tensor::TensorBf16>,
     ) -> Result<OptState> {
         let variant = meta.req("variant")?.as_str()?;
         if variant == "frozen" {
@@ -221,12 +244,12 @@ impl OptState {
         }
         let desc = registry::variant(variant)
             .map_err(|_| anyhow::anyhow!("unknown optimizer state variant '{variant}' in checkpoint"))?;
-        Ok(OptState::Opt(desc.decode(meta, &mut take, &mut take_u8)?))
+        Ok(OptState::Opt(desc.decode(meta, &mut take, &mut take_u8, &mut take_b16)?))
     }
 
     /// Optimizer-state footprint in bytes (the Table 1/3 quantity).
     pub fn state_bytes(&self) -> usize {
-        self.opt().map(|mo| mo.comp().state_bytes()).unwrap_or(0)
+        self.opt().map(|mo| mo.state_bytes()).unwrap_or(0)
     }
 
     /// Reconstructed first moment (spectral probe).
@@ -407,6 +430,27 @@ mod tests {
     }
 
     #[test]
+    fn fold_methods_route_foldable_vectors_through_matrix_variant() {
+        let preset = fake_preset(4);
+        let vec_spec = |n: usize| ParamSpec {
+            name: "ln".into(),
+            shape: vec![n],
+            kind: "vector".into(),
+            compressed: false,
+        };
+        let st = OptState::for_param(Method::MlorcProdigy, &vec_spec(32), &preset).unwrap();
+        assert_eq!(st.step_method().unwrap(), "mlorc_prodigy");
+        let st = OptState::for_param(Method::MlorcAdamWBf16, &vec_spec(32), &preset).unwrap();
+        assert_eq!(st.step_method().unwrap(), "mlorc_adamw_bf16");
+        // prime length has no effective shape: plain fallback
+        let st = OptState::for_param(Method::MlorcProdigy, &vec_spec(13), &preset).unwrap();
+        assert_eq!(st.step_method().unwrap(), "prodigy");
+        // non-fold methods keep every vector on the plain path
+        let st = OptState::for_param(Method::MlorcAdamW, &vec_spec(32), &preset).unwrap();
+        assert_eq!(st.step_method().unwrap(), "adamw");
+    }
+
+    #[test]
     fn ckpt_meta_roundtrip_all_variants() {
         // Every registered method's state must survive meta + tensor-field
         // serialization; flags (left/refreshed) and tensor shapes are the
@@ -421,10 +465,15 @@ mod tests {
                 st.tensor_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
             let u8s: std::collections::BTreeMap<&'static str, crate::tensor::TensorU8> =
                 st.u8_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
+            let b16s: std::collections::BTreeMap<&'static str, crate::tensor::TensorBf16> =
+                st.bf16_fields().into_iter().map(|(k, t)| (k, t.clone())).collect();
             let back = OptState::from_ckpt_full(
                 &meta,
                 |k| fields.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing field {k}")),
                 |k| u8s.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing u8 field {k}")),
+                |k| {
+                    b16s.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing bf16 field {k}"))
+                },
             )
             .unwrap();
             assert_eq!(back.variant_name(), st.variant_name(), "{method:?}");

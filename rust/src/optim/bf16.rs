@@ -1,0 +1,125 @@
+//! bf16 weight planes with stochastic rounding.
+//!
+//! Mirrors the exemplar `bf16_stochastic_rounding.add_stochastic_`: the
+//! master copy of each parameter lives as bf16 bit patterns (upper 16 bits
+//! of the f32), and every store rounds stochastically — the low 16 bits of
+//! the f32 are compared against a uniform u16 draw, so the *expected* stored
+//! value equals the unrounded f32. That unbiasedness is what lets a bf16
+//! weight layout train without the systematic drift round-to-nearest would
+//! accumulate over thousands of tiny updates.
+//!
+//! Randomness comes from the caller's per-parameter `Rng` stream (drawn
+//! *after* the step's Omega draws), so runs stay deterministic and
+//! kill/resume stays bit-identical — the draw schedule is part of the
+//! checkpoint contract, like the Omega schedule (`docs/checkpoint-v2.md`).
+//!
+//! Weights on this layout always sit on the bf16 grid: after each store the
+//! f32 working copy is refreshed by the exact bf16→f32 widening, so the
+//! next step's gradient is computed against exactly what the plane holds.
+
+use crate::linalg::Rng;
+use crate::tensor::{Tensor, TensorBf16};
+
+/// Exact widening: bf16 bits are the upper half of the f32 bits.
+#[inline]
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Round-to-nearest-even — the degenerate (variance-free) case of the
+/// stochastic rounder, used to seed the plane from f32 initialization.
+#[inline]
+pub fn round_to_nearest(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep NaN a NaN: force a quiet-bit so truncation can't yield Inf
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+/// Stochastic rounding: add a uniform u16 to the discarded mantissa bits
+/// and truncate. E[result] == x exactly (the round-up probability is the
+/// discarded fraction), which `tests/optim_wave.rs` pins statistically.
+#[inline]
+pub fn f32_to_bf16_stochastic(x: f32, r: u16) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    (bits.wrapping_add(r as u32) >> 16) as u16
+}
+
+/// Seed `plane` from `w` with round-to-nearest, then snap `w` onto the
+/// bf16 grid so the working copy and the plane agree exactly.
+pub fn seed_plane(w: &mut Tensor, plane: &mut TensorBf16) {
+    debug_assert_eq!(w.len(), plane.len());
+    for (x, p) in w.data.iter_mut().zip(plane.data.iter_mut()) {
+        *p = round_to_nearest(*x);
+        *x = bf16_to_f32(*p);
+    }
+}
+
+/// Store `w` into `plane` with stochastic rounding (one u16 draw per
+/// element, low 16 bits of `next_u64`, in element order), then snap `w`
+/// back onto the bf16 grid. The analog of the exemplar `add_stochastic_`
+/// applied after the optimizer's f32 update.
+pub fn store_stochastic(w: &mut Tensor, plane: &mut TensorBf16, rng: &mut Rng) {
+    debug_assert_eq!(w.len(), plane.len());
+    for (x, p) in w.data.iter_mut().zip(plane.data.iter_mut()) {
+        let r = rng.next_u64() as u16;
+        *p = f32_to_bf16_stochastic(*x, r);
+        *x = bf16_to_f32(*p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widening_is_exact_on_the_grid() {
+        for bits in [0x0000u16, 0x3f80, 0xbf80, 0x4000, 0x7f80, 0xff80] {
+            assert_eq!(round_to_nearest(bf16_to_f32(bits)), bits);
+        }
+    }
+
+    #[test]
+    fn nearest_ties_to_even() {
+        // exactly halfway between bf16 grid points: mantissa low half 0x8000
+        let lo = f32::from_bits(0x3f80_0000); // 1.0
+        let hi = f32::from_bits(0x3f81_0000);
+        let mid = f32::from_bits(0x3f80_8000);
+        assert_eq!(bf16_to_f32(round_to_nearest(mid)), lo); // 0x3f80 is even
+        let mid2 = f32::from_bits(0x3f81_8000);
+        assert_eq!(bf16_to_f32(round_to_nearest(mid2)), f32::from_bits(0x3f82_0000));
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn stochastic_extremes() {
+        let x = f32::from_bits(0x3f80_0001); // just above 1.0
+        assert_eq!(f32_to_bf16_stochastic(x, 0), 0x3f80); // never rounds up with r=0
+        assert_eq!(f32_to_bf16_stochastic(x, 0xFFFF), 0x3f81); // always up with r=max
+        let exact = 1.0f32;
+        assert_eq!(f32_to_bf16_stochastic(exact, 0xFFFF), 0x3f80); // on-grid never moves
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(bf16_to_f32(round_to_nearest(f32::NAN)).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16_stochastic(f32::NAN, 0xFFFF)).is_nan());
+    }
+
+    #[test]
+    fn store_snaps_working_copy() {
+        let mut w = Tensor::new(vec![3], vec![1.000_01, -2.333, 0.5]).unwrap();
+        let mut plane = TensorBf16::zeros(&[3]);
+        let mut rng = Rng::new(7);
+        store_stochastic(&mut w, &mut plane, &mut rng);
+        for (x, p) in w.data.iter().zip(&plane.data) {
+            assert_eq!(*x, bf16_to_f32(*p));
+        }
+    }
+}

@@ -875,7 +875,12 @@ pub fn step_class(jobs: &mut [ClassJob], workspaces: &mut [Workspace]) -> Result
     }
     let kind = jobs[0].opt.rule().kind();
     let hp = jobs[0].opt.hp();
-    let route = {
+    let route = if jobs[0].opt.needs_member_step() {
+        // Wrapper-carrying states (Prodigy, bf16 planes, folds, modifier
+        // flags) need the full MatrixOpt orchestration around the
+        // compressor — decided before any compressor downcast.
+        Route::Members
+    } else {
         let any = jobs[0].opt.comp_mut().as_any_mut();
         if let Some(qb) = any.downcast_ref::<RsvdQb>() {
             if qb.stores.iter().all(|s| matches!(s, MomentStore::Factored { .. })) {

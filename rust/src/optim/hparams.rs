@@ -10,6 +10,16 @@ pub struct OptHp {
     pub weight_decay: f32,
     pub galore_scale: f32,
     pub lora_alpha: f32,
+    /// Adam-atan2 apply: `a·atan2(m̂, √v̂)` replaces `m̂/(√v̂+eps)` —
+    /// eps-free and bounded (exemplar `use_atan2`). AdamW-family rules
+    /// only; composable with any compressor.
+    pub use_atan2: bool,
+    /// Grams-style update: the step direction is `sign(g)`, the magnitude
+    /// the Adam update's (exemplar `use_grams`).
+    pub use_grams: bool,
+    /// OrthoGrad: project the gradient orthogonal to the weight (norm
+    /// preserved) before the step (exemplar `use_orthograd`).
+    pub use_orthograd: bool,
 }
 
 impl OptHp {
@@ -21,6 +31,9 @@ impl OptHp {
             weight_decay: 0.0,
             galore_scale: 0.25,
             lora_alpha: 16.0,
+            use_atan2: false,
+            use_grams: false,
+            use_orthograd: false,
         }
     }
 
@@ -39,6 +52,27 @@ impl OptHp {
         OptHp::adamw()
     }
 
+    /// Prodigy D-adaptation runs on the exemplar's betas (0.9, 0.999);
+    /// D-specific constants (`d0`, `slice_p`, ...) are fixed in
+    /// `rules::prodigy` rather than per-run hyper-parameters.
+    pub fn prodigy() -> OptHp {
+        OptHp::adamw()
+    }
+
+    /// The modifier spellings: MLorc-AdamW with exactly one exemplar flag
+    /// flipped on.
+    pub fn mlorc_adamw_atan2() -> OptHp {
+        OptHp { use_atan2: true, ..OptHp::mlorc_adamw() }
+    }
+
+    pub fn mlorc_adamw_grams() -> OptHp {
+        OptHp { use_grams: true, ..OptHp::mlorc_adamw() }
+    }
+
+    pub fn mlorc_adamw_orthograd() -> OptHp {
+        OptHp { use_orthograd: true, ..OptHp::mlorc_adamw() }
+    }
+
     /// Host hyper-parameters of a method's matrix step — resolved
     /// through the registry's variant table instead of a match ladder.
     pub fn for_method(method: crate::config::Method) -> OptHp {
@@ -52,6 +86,7 @@ impl OptHp {
         let f = |k: &str, d: f32| {
             j.get(k).and_then(|v| v.as_f64().ok()).map(|x| x as f32).unwrap_or(d)
         };
+        let b = |k: &str| j.get(k).and_then(|v| v.as_bool().ok()).unwrap_or(false);
         OptHp {
             beta1: f("beta1", 0.9),
             beta2: f("beta2", 0.999),
@@ -59,6 +94,9 @@ impl OptHp {
             weight_decay: f("weight_decay", 0.0),
             galore_scale: f("galore_scale", 0.25),
             lora_alpha: f("lora_alpha", 16.0),
+            use_atan2: b("use_atan2"),
+            use_grams: b("use_grams"),
+            use_orthograd: b("use_orthograd"),
         }
     }
 }

@@ -174,7 +174,12 @@ pub fn fused_adamw_band(
             let mt = beta1 * ri + (1.0 - beta1) * gi;
             let mhat = mt * c1;
             let vhat = vi * c2;
-            *wi -= lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * *wi);
+            let dir = if hp.use_atan2 {
+                super::ATAN2_SCALE * mhat.atan2(vhat.sqrt())
+            } else {
+                mhat / (vhat.sqrt() + hp.eps)
+            };
+            *wi -= lr * (dir + hp.weight_decay * *wi);
         }
     }
 }

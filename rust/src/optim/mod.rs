@@ -20,6 +20,7 @@
 //! [`Method`] handle re-exported as `config::Method`).
 
 mod adamw;
+pub mod bf16;
 pub mod compress;
 mod galore;
 mod hparams;
@@ -31,6 +32,7 @@ pub mod registry;
 pub mod rules;
 
 pub use adamw::AdamWState;
+pub use bf16::{bf16_to_f32, f32_to_bf16_stochastic, round_to_nearest};
 pub use compress::{
     step_class, AdaRank, ClassJob, Dense, GaloreProjector, LdProj, MomentStore,
     MomentumCompressor, RsvdQb, ADARANK_TAIL_FRAC,
@@ -47,7 +49,9 @@ pub use mlorc::{
 };
 pub use quant::{QTensor, QuantQb, Q8_BLOCK};
 pub use registry::{CompKind, MatrixOpt, Method, MethodDesc, VariantDesc};
-pub use rules::{rule, sgdm_host_step, RuleKind, UpdateRule};
+pub use rules::{
+    orthogonalize_gradient, prodigy_bc, rule, sgdm_host_step, ProdigyState, RuleKind, UpdateRule,
+};
 
 use crate::tensor::Tensor;
 
@@ -60,13 +64,25 @@ pub fn bias_corrections(hp: &OptHp, t: usize) -> (f32, f32) {
     )
 }
 
+/// Adam-atan2 scale `a = 4/π`: `a·atan2(m̂, √v̂)` matches `m̂/√v̂` to first
+/// order near zero while staying bounded and eps-free.
+pub const ATAN2_SCALE: f32 = 1.273_239_5;
+
 /// AdamW apply: w -= lr * (m*c1 / (sqrt(v*c2) + eps) + wd * w).
+/// With `hp.use_atan2`, the ratio is replaced by the bounded eps-free
+/// `ATAN2_SCALE * atan2(m̂, √v̂)` (same modifier branch as the fused
+/// factored kernel in `mlorc::fused_adamw_band`).
 /// Public so benches and external baselines measure the exact same apply.
 pub fn adamw_apply(w: &mut Tensor, m: &Tensor, v: &Tensor, lr: f32, c1: f32, c2: f32, hp: &OptHp) {
     for ((wi, mi), vi) in w.data.iter_mut().zip(&m.data).zip(&v.data) {
         let mhat = mi * c1;
         let vhat = vi * c2;
-        *wi -= lr * (mhat / (vhat.sqrt() + hp.eps) + hp.weight_decay * *wi);
+        let dir = if hp.use_atan2 {
+            ATAN2_SCALE * mhat.atan2(vhat.sqrt())
+        } else {
+            mhat / (vhat.sqrt() + hp.eps)
+        };
+        *wi -= lr * (dir + hp.weight_decay * *wi);
     }
 }
 

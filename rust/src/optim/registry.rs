@@ -25,14 +25,15 @@ use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
-use crate::tensor::{Tensor, TensorU8};
+use crate::tensor::{Tensor, TensorBf16, TensorU8};
 use crate::util::json::Json;
 
+use super::bf16;
 use super::compress::{
     AdaRank, Dense, GaloreProjector, LdProj, MomentStore, MomentumCompressor, RsvdQb,
 };
 use super::quant::{QMoment, QTensor, QuantQb, Q8_BLOCK, Q8_NAMES};
-use super::rules::{self, RuleKind, UpdateRule};
+use super::rules::{self, orthogonalize_gradient, ProdigyState, RuleKind, UpdateRule};
 use super::OptHp;
 
 // ------------------------------------------------------------- variants
@@ -61,74 +62,172 @@ pub struct VariantDesc {
     pub comp: CompKind,
     /// Host-path hyper-parameters (the graph path reads the manifest's).
     pub hp: fn() -> OptHp,
+    /// Master weights stored as a bf16 plane with stochastic rounding —
+    /// an opt-in weight layout on top of the momentum compression
+    /// (`optim::bf16`; checkpoint dtype-3 plane `w16`).
+    pub bf16: bool,
 }
 
+/// Shorthand for the 15 pre-wave rows: f32 weights, no wrappers.
+const NO_BF16: bool = false;
+
 pub static VARIANTS: &[VariantDesc] = &[
-    VariantDesc { id: "adamw", rule: RuleKind::AdamW, comp: CompKind::Dense, hp: OptHp::adamw },
-    VariantDesc { id: "lion", rule: RuleKind::Lion, comp: CompKind::Dense, hp: OptHp::lion },
-    VariantDesc { id: "sgdm", rule: RuleKind::SgdM, comp: CompKind::Dense, hp: OptHp::sgdm },
+    VariantDesc {
+        id: "adamw",
+        rule: RuleKind::AdamW,
+        comp: CompKind::Dense,
+        hp: OptHp::adamw,
+        bf16: NO_BF16,
+    },
+    VariantDesc {
+        id: "lion",
+        rule: RuleKind::Lion,
+        comp: CompKind::Dense,
+        hp: OptHp::lion,
+        bf16: NO_BF16,
+    },
+    VariantDesc {
+        id: "sgdm",
+        rule: RuleKind::SgdM,
+        comp: CompKind::Dense,
+        hp: OptHp::sgdm,
+        bf16: NO_BF16,
+    },
     VariantDesc {
         id: "mlorc_adamw",
         rule: RuleKind::AdamW,
         comp: CompKind::RsvdQb { factored: &[true, true] },
         hp: OptHp::mlorc_adamw,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_m",
         rule: RuleKind::AdamW,
         comp: CompKind::RsvdQb { factored: &[true, false] },
         hp: OptHp::mlorc_adamw,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_v",
         rule: RuleKind::AdamW,
         comp: CompKind::RsvdQb { factored: &[false, true] },
         hp: OptHp::mlorc_adamw,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_lion",
         rule: RuleKind::Lion,
         comp: CompKind::RsvdQb { factored: &[true] },
         hp: OptHp::lion,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_sgdm",
         rule: RuleKind::SgdM,
         comp: CompKind::RsvdQb { factored: &[true] },
         hp: OptHp::sgdm,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_adarank",
         rule: RuleKind::AdamW,
         comp: CompKind::AdaRank,
         hp: OptHp::mlorc_adamw,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_adarank_lion",
         rule: RuleKind::Lion,
         comp: CompKind::AdaRank,
         hp: OptHp::lion,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_q8",
         rule: RuleKind::AdamW,
         comp: CompKind::QuantQb,
         hp: OptHp::mlorc_adamw,
+        bf16: NO_BF16,
     },
     VariantDesc {
         id: "mlorc_q8_lion",
         rule: RuleKind::Lion,
         comp: CompKind::QuantQb,
         hp: OptHp::lion,
+        bf16: NO_BF16,
     },
-    VariantDesc { id: "galore", rule: RuleKind::AdamW, comp: CompKind::Galore, hp: OptHp::adamw },
+    VariantDesc {
+        id: "galore",
+        rule: RuleKind::AdamW,
+        comp: CompKind::Galore,
+        hp: OptHp::adamw,
+        bf16: NO_BF16,
+    },
     VariantDesc {
         id: "galore_lion",
         rule: RuleKind::Lion,
         comp: CompKind::Galore,
         hp: OptHp::lion,
+        bf16: NO_BF16,
     },
-    VariantDesc { id: "ldadamw", rule: RuleKind::AdamW, comp: CompKind::LdProj, hp: OptHp::adamw },
+    VariantDesc {
+        id: "ldadamw",
+        rule: RuleKind::AdamW,
+        comp: CompKind::LdProj,
+        hp: OptHp::adamw,
+        bf16: NO_BF16,
+    },
+    // -- the second optimizer wave: Prodigy D-adaptation, bf16 stochastic-
+    //    rounding weights, and the update-rule modifier spellings --------
+    VariantDesc {
+        id: "prodigy",
+        rule: RuleKind::Prodigy,
+        comp: CompKind::Dense,
+        hp: OptHp::prodigy,
+        bf16: NO_BF16,
+    },
+    VariantDesc {
+        id: "mlorc_prodigy",
+        rule: RuleKind::Prodigy,
+        comp: CompKind::RsvdQb { factored: &[true, true] },
+        hp: OptHp::prodigy,
+        bf16: NO_BF16,
+    },
+    VariantDesc {
+        id: "adamw_bf16",
+        rule: RuleKind::AdamW,
+        comp: CompKind::Dense,
+        hp: OptHp::adamw,
+        bf16: true,
+    },
+    VariantDesc {
+        id: "mlorc_adamw_bf16",
+        rule: RuleKind::AdamW,
+        comp: CompKind::RsvdQb { factored: &[true, true] },
+        hp: OptHp::mlorc_adamw,
+        bf16: true,
+    },
+    VariantDesc {
+        id: "mlorc_adamw_atan2",
+        rule: RuleKind::AdamW,
+        comp: CompKind::RsvdQb { factored: &[true, true] },
+        hp: OptHp::mlorc_adamw_atan2,
+        bf16: NO_BF16,
+    },
+    VariantDesc {
+        id: "mlorc_adamw_grams",
+        rule: RuleKind::AdamW,
+        comp: CompKind::RsvdQb { factored: &[true, true] },
+        hp: OptHp::mlorc_adamw_grams,
+        bf16: NO_BF16,
+    },
+    VariantDesc {
+        id: "mlorc_adamw_ortho",
+        rule: RuleKind::AdamW,
+        comp: CompKind::RsvdQb { factored: &[true, true] },
+        hp: OptHp::mlorc_adamw_orthograd,
+        bf16: NO_BF16,
+    },
 ];
 
 /// Look a state layout up by its stable id.
@@ -137,6 +236,37 @@ pub fn variant(id: &str) -> Result<&'static VariantDesc> {
         .iter()
         .find(|v| v.id == id)
         .ok_or_else(|| anyhow::anyhow!("unknown optimizer state variant '{id}'"))
+}
+
+/// The exemplars' `vector_reshape` trick: the 2D *effective shape* a 1D
+/// parameter of `numel` elements folds into so factored compressors
+/// apply — `[a, numel/a]` for the largest divisor `a ≤ √numel`. Returns
+/// `None` when no useful fold exists: `numel` prime (`a` would be 1) or
+/// the short side under the sketch rank `l` (the factors would be larger
+/// than the dense momentum they replace).
+pub fn effective_shape(numel: usize, l: usize) -> Option<[usize; 2]> {
+    let mut best = 1usize;
+    let mut a = 1usize;
+    while a * a <= numel {
+        if numel % a == 0 {
+            best = a;
+        }
+        a += 1;
+    }
+    if best < 2 || best < l {
+        return None;
+    }
+    Some([best, numel / best])
+}
+
+/// Exact f32 round-trip through checkpoint metadata: bit pattern as hex.
+fn f32_hex(x: f32) -> String {
+    format!("{:08x}", x.to_bits())
+}
+
+fn f32_from_hex_meta(meta: &Json, key: &str) -> Result<f32> {
+    let s = meta.req(key)?.as_str()?;
+    Ok(f32::from_bits(u32::from_str_radix(s, 16)?))
 }
 
 impl VariantDesc {
@@ -164,6 +294,30 @@ impl VariantDesc {
         rank_min: usize,
     ) -> Result<MatrixOpt> {
         let rule = self.rule();
+        // 1D parameters under a non-dense layout fold through their 2D
+        // effective shape (the exemplars' `vector_reshape`): the
+        // compressor state is built on `[a, b]`, the weight keeps its 1D
+        // shape and `MatrixOpt::step` swaps the view per step.
+        let eff;
+        let folded;
+        let shape: &[usize] = if shape.len() == 1 && self.comp != CompKind::Dense {
+            match effective_shape(shape[0], l) {
+                Some([a, b]) => {
+                    eff = vec![a, b];
+                    folded = Some([a, b]);
+                    &eff
+                }
+                None => bail!(
+                    "variant '{}': 1D parameter of {} elements has no rank-{} effective shape",
+                    self.id,
+                    shape[0],
+                    l
+                ),
+            }
+        } else {
+            folded = None;
+            shape
+        };
         let comp: Box<dyn MomentumCompressor> = match self.comp {
             CompKind::Dense => Box::new(Dense::new(rule, shape)),
             CompKind::RsvdQb { factored } => {
@@ -182,18 +336,29 @@ impl VariantDesc {
             CompKind::Galore => Box::new(GaloreProjector::new(rule.n_moments(), shape, l)?),
             CompKind::LdProj => Box::new(LdProj::new(shape, l)?),
         };
-        Ok(MatrixOpt { variant: self, comp })
+        let numel: usize = shape.iter().product();
+        // Wrapper states are allocated eagerly (zeros) so the live
+        // footprint equals the closed-form accounting from step 0;
+        // content is captured at t == 1 inside `MatrixOpt::step`.
+        let prodigy = match self.rule {
+            RuleKind::Prodigy => Some(ProdigyState::new(numel)),
+            _ => None,
+        };
+        let w_bf16 = if self.bf16 { Some(TensorBf16::zeros(shape)) } else { None };
+        Ok(MatrixOpt { variant: self, comp, prodigy, w_bf16, folded })
     }
 
     /// Rebuild state from checkpoint metadata plus tensor lookups
     /// (`take(field)` yields the stored `<param>/<field>` f32 tensor,
-    /// `take_u8` its u8 counterpart for quantized layouts). The inverse
-    /// of `MatrixOpt::{tensor_fields, u8_fields, ckpt_meta_into}`.
+    /// `take_u8` its u8 counterpart for quantized layouts, `take_b16`
+    /// the bf16 weight plane). The inverse of
+    /// `MatrixOpt::{tensor_fields, u8_fields, bf16_fields, ckpt_meta_into}`.
     pub fn decode(
         &'static self,
         meta: &Json,
         take: &mut dyn FnMut(&'static str) -> Result<Tensor>,
         take_u8: &mut dyn FnMut(&'static str) -> Result<TensorU8>,
+        take_b16: &mut dyn FnMut(&'static str) -> Result<TensorBf16>,
     ) -> Result<MatrixOpt> {
         let rule = self.rule();
         let comp: Box<dyn MomentumCompressor> = match self.comp {
@@ -265,7 +430,21 @@ impl VariantDesc {
                 left: meta.req("left")?.as_bool()?,
             }),
         };
-        Ok(MatrixOpt { variant: self, comp })
+        let prodigy = match self.rule {
+            RuleKind::Prodigy => Some(ProdigyState {
+                d: f32_from_hex_meta(meta, "prodigy_d")?,
+                d_num: f32_from_hex_meta(meta, "prodigy_dnum")?,
+                p0: take("p0")?,
+                s: take("s")?,
+            }),
+            _ => None,
+        };
+        let w_bf16 = if self.bf16 { Some(take_b16("w16")?) } else { None };
+        let folded = match (meta.get("folded_rows"), meta.get("folded_cols")) {
+            (Some(r), Some(c)) => Some([r.as_usize()?, c.as_usize()?]),
+            _ => None,
+        };
+        Ok(MatrixOpt { variant: self, comp, prodigy, w_bf16, folded })
     }
 
     /// Optimizer-state *element* count for one (m, n) matrix at rank `r`
@@ -306,6 +485,21 @@ impl VariantDesc {
             _ => 4 * self.state_floats(m, n, r),
         }
     }
+
+    /// Bytes of wrapper state this variant keeps *outside* the momentum
+    /// compressor for a `numel`-element parameter: Prodigy's sliced
+    /// statistics (`p0`, `s`) plus its two scalars, and the bf16 weight
+    /// plane. Zero for every pre-wave variant.
+    pub fn wrapper_bytes(&self, numel: usize) -> usize {
+        let mut b = 0;
+        if self.rule == RuleKind::Prodigy {
+            b += 4 * (2 * ProdigyState::sliced_len(numel) + 2);
+        }
+        if self.bf16 {
+            b += 2 * numel;
+        }
+        b
+    }
 }
 
 // ------------------------------------------------------------ MatrixOpt
@@ -318,11 +512,36 @@ impl VariantDesc {
 pub struct MatrixOpt {
     variant: &'static VariantDesc,
     comp: Box<dyn MomentumCompressor>,
+    /// Prodigy D-adaptation state when `variant.rule == Prodigy`.
+    prodigy: Option<ProdigyState>,
+    /// bf16 master-weight plane when `variant.bf16` (`optim::bf16`).
+    w_bf16: Option<TensorBf16>,
+    /// 2D effective shape a 1D parameter folds through per step
+    /// ([`effective_shape`]); `None` for genuinely-2D parameters.
+    folded: Option<[usize; 2]>,
 }
 
 impl Clone for MatrixOpt {
     fn clone(&self) -> MatrixOpt {
-        MatrixOpt { variant: self.variant, comp: self.comp.clone_box() }
+        MatrixOpt {
+            variant: self.variant,
+            comp: self.comp.clone_box(),
+            prodigy: self.prodigy.clone(),
+            w_bf16: self.w_bf16.clone(),
+            folded: self.folded,
+        }
+    }
+}
+
+/// Grams sign convention: `sign(0) = 0`, so a zero gradient zeroes the
+/// displacement rather than keeping the Adam step.
+fn grams_sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
     }
 }
 
@@ -348,8 +567,87 @@ impl MatrixOpt {
         self.comp.as_mut()
     }
 
+    /// The fold this parameter routes through, if any.
+    pub fn folded(&self) -> Option<[usize; 2]> {
+        self.folded
+    }
+
+    /// Whether this state must step through the full [`MatrixOpt::step`]
+    /// orchestration (Prodigy rewrite, bf16 plane, fold view, modifier
+    /// transforms) rather than the shape-class fused kernels — the
+    /// batched path checks this before any compressor downcast.
+    pub fn needs_member_step(&self) -> bool {
+        let hp = self.hp();
+        self.prodigy.is_some()
+            || self.w_bf16.is_some()
+            || self.folded.is_some()
+            || hp.use_atan2
+            || hp.use_grams
+            || hp.use_orthograd
+    }
+
+    /// Checkpoint-v2 f32 fields: the compressor's, plus Prodigy's sliced
+    /// statistics when the rule carries them.
+    pub fn tensor_fields(&self) -> Vec<(&'static str, &Tensor)> {
+        let mut f = self.comp.tensor_fields();
+        if let Some(ps) = &self.prodigy {
+            f.push(("p0", &ps.p0));
+            f.push(("s", &ps.s));
+        }
+        f
+    }
+
+    pub fn tensor_fields_mut(&mut self) -> Vec<(&'static str, &mut Tensor)> {
+        let mut f = self.comp.tensor_fields_mut();
+        if let Some(ps) = &mut self.prodigy {
+            f.push(("p0", &mut ps.p0));
+            f.push(("s", &mut ps.s));
+        }
+        f
+    }
+
+    /// Checkpoint-v2 bf16 planes (dtype 3): the stochastic-rounding
+    /// weight plane, when this variant stores one.
+    pub fn bf16_fields(&self) -> Vec<(&'static str, &TensorBf16)> {
+        self.w_bf16.iter().map(|p| ("w16", p)).collect()
+    }
+
+    pub fn bf16_fields_mut(&mut self) -> Vec<(&'static str, &mut TensorBf16)> {
+        self.w_bf16.iter_mut().map(|p| ("w16", p)).collect()
+    }
+
+    /// Per-parameter checkpoint metadata: the compressor's flags plus the
+    /// wrapper scalars — Prodigy's `d`/`d_num` as exact bit-pattern hex
+    /// strings (the meta json must round-trip bit-identically) and the
+    /// fold dimensions.
+    pub fn ckpt_meta_into(&self, j: &mut Json) {
+        self.comp.flags_into(j);
+        if let Some(ps) = &self.prodigy {
+            j.set("prodigy_d", Json::str(f32_hex(ps.d)));
+            j.set("prodigy_dnum", Json::str(f32_hex(ps.d_num)));
+        }
+        if let Some([a, b]) = self.folded {
+            j.set("folded_rows", Json::num(a as f64));
+            j.set("folded_cols", Json::num(b as f64));
+        }
+    }
+
+    /// Live optimizer-state footprint: compressor state plus wrapper
+    /// state (Prodigy statistics, bf16 plane).
+    pub fn state_bytes(&self) -> usize {
+        let mut b = self.comp.state_bytes();
+        if let Some(ps) = &self.prodigy {
+            b += 4 * (ps.p0.data.len() + ps.s.data.len() + 2);
+        }
+        if let Some(p) = &self.w_bf16 {
+            b += p.size_bytes();
+        }
+        b
+    }
+
     /// One optimizer step entirely on the host. `t` is 1-based; `rng` is
-    /// this parameter's own Omega stream.
+    /// this parameter's own Omega stream (bf16 rounding draws come from
+    /// the same stream, *after* the compressor's sketch draws).
     pub fn step(
         &mut self,
         w: &mut Tensor,
@@ -360,7 +658,85 @@ impl MatrixOpt {
         ws: &mut crate::linalg::Workspace,
     ) -> Result<()> {
         let hp = self.hp();
-        self.comp.step(self.variant.rule(), &hp, w, g, lr, t, rng, ws)
+
+        // 1D fold: swap the weight's view to the 2D effective shape for
+        // the duration of the step (data is contiguous row-major, so the
+        // swap is free) and mirror the gradient.
+        let unfolded = match self.folded {
+            Some([a, b]) => Some(std::mem::replace(&mut w.shape, vec![a, b])),
+            None => None,
+        };
+        let folded_g;
+        let mut g_cur: &Tensor = if let Some([a, b]) = self.folded {
+            folded_g = Tensor::new(vec![a, b], g.data.clone())?;
+            &folded_g
+        } else {
+            g
+        };
+
+        // Seed the bf16 plane from the incoming weights once, snapping
+        // the working copy onto the bf16 grid before the first step.
+        if t == 1 {
+            if let Some(plane) = self.w_bf16.as_mut() {
+                bf16::seed_plane(w, plane);
+            }
+        }
+
+        let ortho_g;
+        if hp.use_orthograd {
+            ortho_g = orthogonalize_gradient(w, g_cur);
+            g_cur = &ortho_g;
+        }
+
+        let w_before = if hp.use_grams { Some(w.data.clone()) } else { None };
+
+        // Prodigy: update the D estimate, then reduce the inner step to
+        // the stock bias-corrected AdamW kernel on D-scaled inputs —
+        //   g' = d·g, lr' = d·lr, eps' = √c2·d²·eps, wd' = bc·wd
+        // (the moments become d·m and d²·v, so √(c2·v') = d·√c2·√v and
+        // the d² on eps factors the denominator as d·√c2·(√v + d·eps))
+        // reproduces the reference  dlr·m/(√v + d·eps)  exactly, so
+        // every compressor composes with D-adaptation, no new kernel.
+        let mut rule = self.variant.rule();
+        let mut hp_eff = hp;
+        let mut lr_eff = lr;
+        let scaled_g;
+        if let Some(ps) = self.prodigy.as_mut() {
+            let d = ps.update(&w.data, &g_cur.data, lr, t, &hp);
+            let (_, c2) = super::bias_corrections(&hp, t);
+            hp_eff.eps = c2.sqrt() * d * d * hp.eps;
+            hp_eff.weight_decay = rules::prodigy_bc(&hp, t) * hp.weight_decay;
+            lr_eff = d * lr;
+            let mut sg = g_cur.clone();
+            for x in sg.data.iter_mut() {
+                *x *= d;
+            }
+            scaled_g = sg;
+            g_cur = &scaled_g;
+            rule = rules::rule(RuleKind::AdamW);
+        }
+
+        let res = self.comp.step(rule, &hp_eff, w, g_cur, lr_eff, t, rng, ws);
+
+        if res.is_ok() {
+            // Grams: keep the Adam step's magnitude, take the gradient's
+            // sign — w = w0 - |Δ|·sign(g), elementwise.
+            if let Some(w0) = &w_before {
+                for ((wi, w0i), gi) in w.data.iter_mut().zip(w0).zip(&g_cur.data) {
+                    *wi = w0i - (*wi - w0i).abs() * grams_sign(*gi);
+                }
+            }
+            // Store back through stochastic rounding and snap the working
+            // copy, so the visible weights always live on the bf16 grid.
+            if let Some(plane) = self.w_bf16.as_mut() {
+                bf16::store_stochastic(w, plane, rng);
+            }
+        }
+
+        if let Some(s) = unfolded {
+            w.shape = s;
+        }
+        res
     }
 }
 
@@ -381,6 +757,11 @@ pub struct MethodDesc {
     /// Host-only methods (the post-refactor combos) need `--host-opt` or
     /// the serve host engine until their graphs are lowered.
     pub graphed: bool,
+    /// Route foldable 1D parameters through the matrix variant via their
+    /// 2D [`effective_shape`] (the exemplars' `vector_reshape`) instead
+    /// of the plain dense path. Unfoldable 1D shapes (prime length,
+    /// short side under the sketch rank) still fall back to `plain`.
+    pub fold: bool,
     /// Paper-tuned default peak LR for the math-chain-style LM task.
     pub default_lr: f32,
 }
@@ -392,6 +773,7 @@ pub const FULL_ADAMW: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 4e-4,
 };
 pub const FULL_LION: MethodDesc = MethodDesc {
@@ -401,6 +783,7 @@ pub const FULL_LION: MethodDesc = MethodDesc {
     plain: "lion",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 5e-5,
 };
 pub const MLORC_ADAMW: MethodDesc = MethodDesc {
@@ -410,6 +793,7 @@ pub const MLORC_ADAMW: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 7e-4,
 };
 pub const MLORC_LION: MethodDesc = MethodDesc {
@@ -419,6 +803,7 @@ pub const MLORC_LION: MethodDesc = MethodDesc {
     plain: "lion",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 5e-5,
 };
 pub const MLORC_M: MethodDesc = MethodDesc {
@@ -428,6 +813,7 @@ pub const MLORC_M: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 7e-4,
 };
 pub const MLORC_V: MethodDesc = MethodDesc {
@@ -437,6 +823,7 @@ pub const MLORC_V: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 7e-4,
 };
 pub const LORA_ADAMW: MethodDesc = MethodDesc {
@@ -446,6 +833,7 @@ pub const LORA_ADAMW: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: true,
     graphed: true,
+    fold: false,
     default_lr: 2e-3,
 };
 pub const LORA_LION: MethodDesc = MethodDesc {
@@ -455,6 +843,7 @@ pub const LORA_LION: MethodDesc = MethodDesc {
     plain: "lion",
     lora: true,
     graphed: true,
+    fold: false,
     default_lr: 2e-4,
 };
 pub const GALORE: MethodDesc = MethodDesc {
@@ -464,6 +853,7 @@ pub const GALORE: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 3e-3,
 };
 pub const LDADAMW: MethodDesc = MethodDesc {
@@ -473,6 +863,7 @@ pub const LDADAMW: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: true,
+    fold: false,
     default_lr: 1e-3,
 };
 // Combinations the trait split makes free: SGD-momentum under MLorc
@@ -484,6 +875,7 @@ pub const FULL_SGDM: MethodDesc = MethodDesc {
     plain: "sgdm",
     lora: false,
     graphed: false,
+    fold: false,
     default_lr: 1e-2,
 };
 pub const MLORC_SGDM: MethodDesc = MethodDesc {
@@ -493,6 +885,7 @@ pub const MLORC_SGDM: MethodDesc = MethodDesc {
     plain: "sgdm",
     lora: false,
     graphed: false,
+    fold: false,
     default_lr: 1e-2,
 };
 pub const GALORE_LION: MethodDesc = MethodDesc {
@@ -502,6 +895,7 @@ pub const GALORE_LION: MethodDesc = MethodDesc {
     plain: "lion",
     lora: false,
     graphed: false,
+    fold: false,
     default_lr: 2e-4,
 };
 // The second wave of compressors the trait seam was built for: an
@@ -515,6 +909,7 @@ pub const MLORC_ADARANK: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: false,
+    fold: false,
     default_lr: 7e-4,
 };
 pub const MLORC_ADARANK_LION: MethodDesc = MethodDesc {
@@ -524,6 +919,7 @@ pub const MLORC_ADARANK_LION: MethodDesc = MethodDesc {
     plain: "lion",
     lora: false,
     graphed: false,
+    fold: false,
     default_lr: 5e-5,
 };
 pub const MLORC_Q8: MethodDesc = MethodDesc {
@@ -533,6 +929,7 @@ pub const MLORC_Q8: MethodDesc = MethodDesc {
     plain: "adamw",
     lora: false,
     graphed: false,
+    fold: false,
     default_lr: 7e-4,
 };
 pub const MLORC_Q8_LION: MethodDesc = MethodDesc {
@@ -542,7 +939,64 @@ pub const MLORC_Q8_LION: MethodDesc = MethodDesc {
     plain: "lion",
     lora: false,
     graphed: false,
+    fold: false,
     default_lr: 5e-5,
+};
+// The second *optimizer* wave: Prodigy D-adaptation under MLorc
+// compression (exemplar `MLorc_Prodigy`), bf16 stochastic-rounding
+// master weights, and the exemplars' one-flag update modifiers — all
+// host-only until their step graphs are lowered. The Prodigy and bf16
+// rows also fold 1D parameters through their effective shapes.
+pub const MLORC_PRODIGY: MethodDesc = MethodDesc {
+    id: "mlorc_prodigy",
+    aliases: &["prodigy"],
+    matrix: "mlorc_prodigy",
+    plain: "prodigy",
+    lora: false,
+    graphed: false,
+    fold: true,
+    // D-adaptation: lr is a multiplier on the learned D, not a rate.
+    default_lr: 1.0,
+};
+pub const MLORC_ADAMW_BF16: MethodDesc = MethodDesc {
+    id: "mlorc_adamw_bf16",
+    aliases: &["bf16"],
+    matrix: "mlorc_adamw_bf16",
+    plain: "adamw_bf16",
+    lora: false,
+    graphed: false,
+    fold: true,
+    default_lr: 7e-4,
+};
+pub const MLORC_ADAMW_ATAN2: MethodDesc = MethodDesc {
+    id: "mlorc_adamw_atan2",
+    aliases: &["atan2"],
+    matrix: "mlorc_adamw_atan2",
+    plain: "adamw",
+    lora: false,
+    graphed: false,
+    fold: false,
+    default_lr: 7e-4,
+};
+pub const MLORC_ADAMW_GRAMS: MethodDesc = MethodDesc {
+    id: "mlorc_adamw_grams",
+    aliases: &["grams"],
+    matrix: "mlorc_adamw_grams",
+    plain: "adamw",
+    lora: false,
+    graphed: false,
+    fold: false,
+    default_lr: 7e-4,
+};
+pub const MLORC_ADAMW_ORTHO: MethodDesc = MethodDesc {
+    id: "mlorc_adamw_ortho",
+    aliases: &["orthograd"],
+    matrix: "mlorc_adamw_ortho",
+    plain: "adamw",
+    lora: false,
+    graphed: false,
+    fold: false,
+    default_lr: 7e-4,
 };
 
 /// Every registered method, pre-existing ids first (table/report order).
@@ -564,6 +1018,11 @@ pub static METHODS: &[&MethodDesc] = &[
     &MLORC_ADARANK_LION,
     &MLORC_Q8,
     &MLORC_Q8_LION,
+    &MLORC_PRODIGY,
+    &MLORC_ADAMW_BF16,
+    &MLORC_ADAMW_ATAN2,
+    &MLORC_ADAMW_GRAMS,
+    &MLORC_ADAMW_ORTHO,
 ];
 
 /// Optimization method handle — compares, hashes and prints by id, so
@@ -610,6 +1069,8 @@ impl Method {
     pub const LdAdamW: Method = Method(&LDADAMW);
     pub const MlorcAdaRank: Method = Method(&MLORC_ADARANK);
     pub const MlorcQ8: Method = Method(&MLORC_Q8);
+    pub const MlorcProdigy: Method = Method(&MLORC_PRODIGY);
+    pub const MlorcAdamWBf16: Method = Method(&MLORC_ADAMW_BF16);
 
     pub fn name(&self) -> &'static str {
         self.0.id
@@ -649,6 +1110,12 @@ impl Method {
     /// Variant for vectors/embeddings/heads (always uncompressed).
     pub fn plain_step(&self) -> &'static str {
         self.0.plain
+    }
+
+    /// Whether foldable 1D parameters route through the matrix variant
+    /// via their 2D [`effective_shape`].
+    pub fn fold(&self) -> bool {
+        self.0.fold
     }
 
     /// Paper-tuned default peak LR for the math-chain-style LM task
@@ -695,6 +1162,43 @@ mod tests {
         assert_eq!(Method::parse("q8").unwrap(), Method::MlorcQ8);
         assert!(Method::parse("mlorc_adarank_lion").is_ok());
         assert!(Method::parse("mlorc_q8_lion").is_ok());
+        // The second optimizer wave: Prodigy, bf16 weights, modifiers.
+        assert_eq!(Method::parse("mlorc_prodigy").unwrap(), Method::MlorcProdigy);
+        assert_eq!(Method::parse("prodigy").unwrap(), Method::MlorcProdigy);
+        assert_eq!(Method::parse("mlorc_adamw_bf16").unwrap(), Method::MlorcAdamWBf16);
+        assert_eq!(Method::parse("bf16").unwrap(), Method::MlorcAdamWBf16);
+        for id in ["atan2", "grams", "orthograd"] {
+            assert!(Method::parse(id).is_ok(), "{id}");
+        }
+    }
+
+    #[test]
+    fn effective_shape_prefers_squarest_fold() {
+        assert_eq!(effective_shape(16, 4), Some([4, 4]));
+        assert_eq!(effective_shape(32, 4), Some([4, 8]));
+        assert_eq!(effective_shape(64, 4), Some([8, 8]));
+        assert_eq!(effective_shape(64, 8), Some([8, 8]));
+        // primes have no divisor >= 2 below their square root
+        assert_eq!(effective_shape(13, 2), None);
+        // short side under the sketch rank: fold would not compress
+        assert_eq!(effective_shape(32, 5), None);
+    }
+
+    #[test]
+    fn fold_builds_factored_state_for_1d_params() {
+        let v = variant("mlorc_prodigy").unwrap();
+        let mo = v.build(&[32], 4).unwrap();
+        assert_eq!(mo.folded(), Some([4, 8]));
+        assert!(mo.needs_member_step());
+        // factored fields exist on the effective shape
+        let fields = mo.tensor_fields();
+        assert!(fields.iter().any(|(n, t)| *n == "mq" && t.shape == [4, 4]));
+        // prodigy statistics ride along (sliced: ceil(32/11) = 3)
+        assert!(fields.iter().any(|(n, t)| *n == "p0" && t.data.len() == 3));
+        // dense layouts never fold
+        assert_eq!(variant("adamw").unwrap().build(&[32], 4).unwrap().folded(), None);
+        // unfoldable 1D shapes refuse to build factored state
+        assert!(variant("mlorc_adamw").unwrap().build(&[13], 4).is_err());
     }
 
     #[test]

@@ -31,6 +31,12 @@ pub enum RuleKind {
     /// SGD with (EMA-form) momentum: `m = β1·m + (1−β1)·g`,
     /// `w -= lr·(m + wd·w)`.
     SgdM,
+    /// Prodigy D-adaptation over AdamW moments (Mishchenko & Defazio).
+    /// The per-parameter D estimate lives in [`ProdigyState`] on the
+    /// `MatrixOpt`; the inner moment update is exactly the AdamW kernel
+    /// on D-scaled inputs, so every compressor layout composes with it
+    /// unchanged.
+    Prodigy,
 }
 
 /// One optimizer update rule — AdamW, Lion, SGD-momentum. Implementations
@@ -80,6 +86,156 @@ pub fn sgdm_host_step(w: &mut Tensor, g: &Tensor, m: &mut Tensor, lr: f32, hp: &
     for (wi, mi) in w.data.iter_mut().zip(&m.data) {
         *wi -= lr * (*mi + hp.weight_decay * *wi);
     }
+}
+
+// ------------------------------------------------------------- prodigy
+
+/// Prodigy's initial D estimate (`d0` in the exemplar).
+pub const PRODIGY_D0: f32 = 1e-6;
+/// Multiplier on the D estimate (`d_coef`); the exemplar default is 1.
+pub const PRODIGY_D_COEF: f32 = 1.0;
+/// D-adaptation statistics are computed on every `slice_p`-th element of
+/// the flattened parameter (the exemplar's memory-saving subsample).
+pub const PRODIGY_SLICE_P: usize = 11;
+
+/// Prodigy's bias-correction factor `√(1−β2^t) / (1−β1^t)` — the scale
+/// that turns `d·lr` into the effective step size `dlr`.
+pub fn prodigy_bc(hp: &OptHp, t: usize) -> f32 {
+    let t = t as i32;
+    (1.0 - hp.beta2.powi(t)).sqrt() / (1.0 - hp.beta1.powi(t))
+}
+
+/// Per-parameter Prodigy D-adaptation state: the running D estimate, its
+/// EMA numerator, the sliced reference weights `p0` (captured at t==1)
+/// and the sliced denominator accumulator `s`. Tensor fields checkpoint
+/// as `p0`/`s` next to the compressor's moment fields; `d`/`d_num` ride
+/// in the checkpoint metadata as exact f32 bit patterns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProdigyState {
+    pub d: f32,
+    pub d_num: f32,
+    pub p0: Tensor,
+    pub s: Tensor,
+}
+
+impl ProdigyState {
+    /// Length of the every-`slice_p`-th subsample of a `numel` parameter.
+    pub fn sliced_len(numel: usize) -> usize {
+        numel.div_ceil(PRODIGY_SLICE_P)
+    }
+
+    pub fn new(numel: usize) -> ProdigyState {
+        let k = ProdigyState::sliced_len(numel);
+        ProdigyState { d: PRODIGY_D0, d_num: 0.0, p0: Tensor::zeros(&[k]), s: Tensor::zeros(&[k]) }
+    }
+
+    /// One D-adaptation update, called once per step with the *pre-update*
+    /// weights and raw gradient (`t` 1-based; captures `p0` at t==1).
+    /// Returns the D estimate the step's inner update must use — the value
+    /// on entry; the refreshed estimate takes effect next step, exactly
+    /// the reference schedule. D is monotone non-decreasing
+    /// (`growth_rate = ∞`), pinned by `tests/optim_wave.rs`.
+    pub fn update(&mut self, w: &[f32], g: &[f32], lr: f32, t: usize, hp: &OptHp) -> f32 {
+        debug_assert_eq!(w.len(), g.len());
+        if t == 1 {
+            for (k, i) in (0..w.len()).step_by(PRODIGY_SLICE_P).enumerate() {
+                self.p0.data[k] = w[i];
+            }
+        }
+        let d = self.d;
+        let beta3 = (hp.beta2 as f64).sqrt();
+        let dlr = (d * lr * prodigy_bc(hp, t)) as f64;
+        let dd0 = (d / PRODIGY_D0) as f64;
+        let mut dot = 0f64;
+        for (k, i) in (0..w.len()).step_by(PRODIGY_SLICE_P).enumerate() {
+            dot += g[i] as f64 * (self.p0.data[k] as f64 - w[i] as f64);
+        }
+        self.d_num = (beta3 * self.d_num as f64 + dd0 * dlr * dot) as f32;
+        let mut denom = 0f64;
+        for (k, i) in (0..w.len()).step_by(PRODIGY_SLICE_P).enumerate() {
+            let sk = beta3 * self.s.data[k] as f64 + dd0 * dlr * g[i] as f64;
+            self.s.data[k] = sk as f32;
+            denom += sk.abs();
+        }
+        // zero gradients leave D untouched (the exemplar's denom==0 skip)
+        if denom > 0.0 {
+            let d_hat = (PRODIGY_D_COEF as f64 * self.d_num as f64 / denom) as f32;
+            self.d = self.d.max(d_hat);
+        }
+        d
+    }
+}
+
+#[derive(Debug)]
+pub struct ProdigyRule;
+
+impl UpdateRule for ProdigyRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Prodigy
+    }
+
+    fn id(&self) -> &'static str {
+        "prodigy"
+    }
+
+    // AdamW's moment layout — the whole point: any compressor that can
+    // store AdamW moments can store Prodigy's.
+    fn n_moments(&self) -> usize {
+        2
+    }
+
+    fn moment_names(&self) -> &'static [&'static str] {
+        &["m", "v"]
+    }
+
+    fn bias_corrected(&self) -> bool {
+        true
+    }
+
+    fn dense_step(
+        &self,
+        _w: &mut Tensor,
+        _g: &Tensor,
+        _moments: &mut [&mut Tensor],
+        _lr: f32,
+        _t: usize,
+        _hp: &OptHp,
+    ) -> Result<()> {
+        // Unreachable by construction: `MatrixOpt::step` rewrites Prodigy
+        // to the AdamW rule on D-scaled inputs before any compressor
+        // (including Dense) dispatches. Reaching this means a caller
+        // bypassed the D-adaptation orchestration — fail loudly.
+        bail!("prodigy steps through MatrixOpt's D-adaptation orchestration, not dense_step")
+    }
+}
+
+/// OrthoGrad (`use_orthograd`): project `g` orthogonal to `w`, then rescale
+/// back to `‖g‖` so the step magnitude is untouched. Dot products and norms
+/// accumulate in f64 so the projection is deterministic across layouts; the
+/// `1e-30` guards mirror the exemplar and keep `w = 0` / `g ⟂ w` exact.
+pub fn orthogonalize_gradient(w: &Tensor, g: &Tensor) -> Tensor {
+    let mut wg = 0.0f64;
+    let mut ww = 0.0f64;
+    for (wi, gi) in w.data.iter().zip(&g.data) {
+        wg += *wi as f64 * *gi as f64;
+        ww += *wi as f64 * *wi as f64;
+    }
+    let proj = (wg / (ww + 1e-30)) as f32;
+    let mut out = g.clone();
+    for (oi, wi) in out.data.iter_mut().zip(&w.data) {
+        *oi -= proj * wi;
+    }
+    let mut gn = 0.0f64;
+    let mut on = 0.0f64;
+    for (gi, oi) in g.data.iter().zip(&out.data) {
+        gn += *gi as f64 * *gi as f64;
+        on += *oi as f64 * *oi as f64;
+    }
+    let scale = (gn.sqrt() / (on.sqrt() + 1e-30)) as f32;
+    for oi in out.data.iter_mut() {
+        *oi *= scale;
+    }
+    out
 }
 
 #[derive(Debug)]
@@ -214,6 +370,7 @@ impl UpdateRule for SgdMomentumRule {
 static ADAMW: AdamWRule = AdamWRule;
 static LION: LionRule = LionRule;
 static SGDM: SgdMomentumRule = SgdMomentumRule;
+static PRODIGY: ProdigyRule = ProdigyRule;
 
 /// The shared rule instance for a tag (rules are stateless).
 pub fn rule(kind: RuleKind) -> &'static dyn UpdateRule {
@@ -221,6 +378,7 @@ pub fn rule(kind: RuleKind) -> &'static dyn UpdateRule {
         RuleKind::AdamW => &ADAMW,
         RuleKind::Lion => &LION,
         RuleKind::SgdM => &SGDM,
+        RuleKind::Prodigy => &PRODIGY,
     }
 }
 
@@ -235,6 +393,7 @@ mod tests {
             (RuleKind::AdamW, "adamw", 2, true),
             (RuleKind::Lion, "lion", 1, false),
             (RuleKind::SgdM, "sgdm", 1, false),
+            (RuleKind::Prodigy, "prodigy", 2, true),
         ] {
             let r = rule(kind);
             assert_eq!(r.kind(), kind);

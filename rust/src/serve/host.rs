@@ -95,10 +95,20 @@ pub fn preset_momentum_bytes(preset: &str, method: crate::config::Method) -> Opt
     let mut bytes = 0usize;
     for shape in hp.shapes {
         match shape {
-            [m, n] => bytes += matrix.state_bytes(*m, *n, hp.l),
+            [m, n] => bytes += matrix.state_bytes(*m, *n, hp.l) + matrix.wrapper_bytes(m * n),
             other => {
                 let numel: usize = other.iter().product();
-                bytes += 4 * plain.n_moments() * numel;
+                // Same routing as `OptState::for_param_cfg`: foldable 1D
+                // parameters of fold methods take the matrix variant on
+                // their 2D effective shape; everything else stays plain.
+                // Wrapper bytes (Prodigy statistics, bf16 planes) count
+                // on both paths.
+                match registry::effective_shape(numel, hp.l) {
+                    Some([a, b]) if desc.fold => {
+                        bytes += matrix.state_bytes(a, b, hp.l) + matrix.wrapper_bytes(numel)
+                    }
+                    _ => bytes += 4 * plain.n_moments() * numel + plain.wrapper_bytes(numel),
+                }
             }
         }
     }

@@ -7,14 +7,16 @@
 //! u32    n_entries
 //! per entry:
 //!   u32  name_len, name bytes (utf-8)
-//!   u8   dtype (0 = f32, 1 = i32, 2 = u8)
+//!   u8   dtype (0 = f32, 1 = i32, 2 = u8, 3 = bf16)
 //!   u32  rank, u64 dims[rank]
 //!   raw  data (dims product * dtype size bytes)
 //! ```
 //!
 //! dtype 2 (u8) carries the 8-bit quantized optimizer-state codes of
-//! checkpoint v2 (`docs/checkpoint-v2.md`); readers predating it reject
-//! the entry's dtype byte loudly instead of misparsing the stream.
+//! checkpoint v2 (`docs/checkpoint-v2.md`); dtype 3 (bf16, raw u16
+//! bit patterns, little-endian) carries the stochastic-rounding weight
+//! planes. Readers predating either reject the entry's dtype byte
+//! loudly instead of misparsing the stream.
 //!
 //! No compression — checkpoints are local scratch, and `write_atomic`
 //! protects against torn files.
@@ -32,18 +34,19 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{Tensor, TensorU8};
+use super::{Tensor, TensorBf16, TensorU8};
 use crate::util::fsutil;
 
 const MAGIC: &[u8; 8] = b"RTEN1\0\0\0";
 const FOOTER_MAGIC: &[u8; 4] = b"CRC1";
 
-/// One stored tensor — f32 (parameters, moments, scales) or raw u8
-/// (quantized codes).
+/// One stored tensor — f32 (parameters, moments, scales), raw u8
+/// (quantized codes) or bf16 (stochastic-rounding weight planes).
 #[derive(Debug, Clone, PartialEq)]
 pub enum RtenEntry {
     F32(Tensor),
     U8(TensorU8),
+    Bf16(TensorBf16),
 }
 
 impl RtenEntry {
@@ -51,6 +54,7 @@ impl RtenEntry {
         match self {
             RtenEntry::F32(_) => 0,
             RtenEntry::U8(_) => 2,
+            RtenEntry::Bf16(_) => 3,
         }
     }
 
@@ -58,6 +62,7 @@ impl RtenEntry {
         match self {
             RtenEntry::F32(t) => &t.shape,
             RtenEntry::U8(t) => &t.shape,
+            RtenEntry::Bf16(t) => &t.shape,
         }
     }
 }
@@ -122,6 +127,11 @@ pub fn rten_entry_bytes(entries: &BTreeMap<String, RtenEntry>) -> Result<Vec<u8>
                     }
                 }
                 RtenEntry::U8(t) => buf.write_all(&t.data)?,
+                RtenEntry::Bf16(t) => {
+                    for x in &t.data {
+                        buf.write_all(&x.to_le_bytes())?;
+                    }
+                }
             }
             Ok(())
         })?;
@@ -180,6 +190,15 @@ pub fn read_rten_entries(path: &Path) -> Result<BTreeMap<String, RtenEntry>> {
                 cur.read_exact(&mut data)?;
                 RtenEntry::U8(TensorU8 { shape, data })
             }
+            3 => {
+                let mut data = vec![0u16; count];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 2];
+                    cur.read_exact(&mut b)?;
+                    *x = u16::from_le_bytes(b);
+                }
+                RtenEntry::Bf16(TensorBf16 { shape, data })
+            }
             other => bail!("unsupported dtype {other} for '{name}'"),
         };
         out.insert(name, entry);
@@ -218,8 +237,8 @@ pub fn read_rten(path: &Path) -> Result<BTreeMap<String, Tensor>> {
             RtenEntry::F32(t) => {
                 out.insert(name, t);
             }
-            RtenEntry::U8(_) => bail!(
-                "'{name}' in {} is a u8 tensor; this reader only handles f32 maps \
+            RtenEntry::U8(_) | RtenEntry::Bf16(_) => bail!(
+                "'{name}' in {} is not an f32 tensor; this reader only handles f32 maps \
                  (use read_rten_entries)",
                 path.display()
             ),
@@ -261,6 +280,10 @@ mod tests {
         m.insert(
             "w/mq_q8".to_string(),
             RtenEntry::U8(TensorU8::new(vec![2, 3], vec![0, 127, 255, 1, 2, 3]).unwrap()),
+        );
+        m.insert(
+            "w/bf16".to_string(),
+            RtenEntry::Bf16(TensorBf16::new(vec![2, 2], vec![0x3f80, 0xbf80, 0x0000, 0x4000]).unwrap()),
         );
         let path = std::env::temp_dir().join(format!("rten_u8_{}.bin", std::process::id()));
         write_rten_entries(&path, &m).unwrap();

@@ -8,4 +8,4 @@ pub use io::{
     read_rten, read_rten_entries, rten_bytes, rten_entry_bytes, write_rten, write_rten_entries,
     RtenEntry,
 };
-pub use tensor::{Tensor, TensorI32, TensorU8};
+pub use tensor::{Tensor, TensorBf16, TensorI32, TensorU8};

@@ -54,6 +54,43 @@ impl TensorU8 {
     }
 }
 
+/// bf16 plane — the storage type of the stochastic-rounding weight layout
+/// (`optim::bf16`). Elements are raw bf16 bit patterns (the upper 16 bits of
+/// the equivalent f32); conversion helpers live in `optim::bf16` so the
+/// tensor layer stays arithmetic-free.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorBf16 {
+    pub shape: Vec<usize>,
+    pub data: Vec<u16>,
+}
+
+impl TensorBf16 {
+    pub fn new(shape: Vec<usize>, data: Vec<u16>) -> Result<TensorBf16> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(TensorBf16 { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> TensorBf16 {
+        TensorBf16 { shape: shape.to_vec(), data: vec![0u16; shape.iter().product()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Two bytes per element.
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();

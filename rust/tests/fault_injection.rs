@@ -142,6 +142,54 @@ fn torn_latest_resumes_from_previous_intact_snapshot_bit_identical() {
     std::fs::remove_dir_all(&root).unwrap();
 }
 
+/// Same torn-`LATEST` fallback, for a method carrying a bf16 weight
+/// plane: the `w16` tensor in the step-5 snapshot must restore the
+/// stochastic-rounding state exactly, or the continuation diverges from
+/// the uninterrupted run at the first post-resume store.
+#[test]
+fn torn_latest_with_bf16_plane_resumes_bit_identical() {
+    let _g = fp_guard();
+    let root = tmp("torn_bf16");
+    let spool = Spool::open(&root).unwrap();
+    let cfg = job_cfg(Method::MlorcAdamWBf16, 21, 12);
+    let reference = solo_params(&cfg, threads::budget().max(1));
+
+    spool.submit(&spec("job001_torn16", cfg.clone(), 5)).unwrap();
+    let claimed = spool.claim_next().unwrap().unwrap();
+    let ckpt_root = spool.checkpoint_root(&claimed.id);
+    let mut tr = HostTrainer::new(claimed.cfg.clone()).unwrap();
+    for _ in 0..5 {
+        tr.train_step().unwrap();
+    }
+    tr.save_checkpoint(&ckpt_root).unwrap();
+    for _ in 0..5 {
+        tr.train_step().unwrap();
+    }
+    failpoints::arm("latest_write:torn@1").unwrap();
+    tr.save_checkpoint(&ckpt_root).unwrap();
+    failpoints::clear();
+    drop(tr);
+    flip_byte(&ckpt_root.join("step-00000010").join("params.rten"));
+
+    let opts = ServeOpts {
+        jobs: 1,
+        drain: true,
+        poll_ms: 10,
+        lease_timeout_ms: 0,
+        ..Default::default()
+    };
+    let summary = serve(&spool, &opts).unwrap();
+    assert_eq!(summary.recovered, 1);
+    assert_eq!(summary.done, 1);
+    assert_eq!(summary.failed, 0);
+
+    let served = final_params(&spool, "job001_torn16");
+    for (j, (a, b)) in served.iter().zip(&reference).enumerate() {
+        assert_eq!(a.data, b.data, "param {j} != uninterrupted bf16 run");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
 /// Acceptance #2: a job failed by an injected fault is retried (with the
 /// attempt recorded) and completes.
 #[test]

@@ -220,6 +220,28 @@ fn adaptive_and_quantized_compressors_are_registered() {
     }
 }
 
+/// Registration assertions for the second optimizer wave: Prodigy, bf16
+/// stochastic-rounding weights and the exemplar modifier spellings are
+/// registry rows, so they inherit the combo-matrix + kill/resume coverage
+/// below (and the batched-vs-sequential replay in `host_parallel.rs`)
+/// with no bespoke plumbing.
+#[test]
+fn second_optimizer_wave_is_registered() {
+    for id in [
+        "mlorc_prodigy",
+        "mlorc_adamw_bf16",
+        "mlorc_adamw_atan2",
+        "mlorc_adamw_grams",
+        "mlorc_adamw_ortho",
+    ] {
+        let m = Method::parse(id).unwrap_or_else(|e| panic!("{id} not registered: {e:#}"));
+        assert!(Method::all().contains(&m), "{id} missing from Method::all()");
+        assert!(!m.desc().graphed, "{id} is host-only until its step graphs are lowered");
+    }
+    // pinned method count: 17 pre-wave + 5 wave-2 rows
+    assert_eq!(Method::all().len(), 22, "registered method count");
+}
+
 /// Every pre-existing method id, stepped through the new registry path
 /// and the legacy oracle with identical gradients and Omega streams, must
 /// agree to the bit — weights and every state tensor, every step.
@@ -344,6 +366,13 @@ fn combo_matrix_checkpoint_roundtrip_bit_exact() {
                 assert_eq!(na, nb, "{method:?} {} field order", spec.name);
                 assert_eq!(ta.shape, tb.shape, "{method:?} {}/{na} shape", spec.name);
                 assert_eq!(ta.data, tb.data, "{method:?} {}/{na} bytes", spec.name);
+            }
+            // bf16 weight planes (dtype-3 entries) roundtrip byte-exact too
+            let (a16, b16) = (live.bf16_fields(), stored.bf16_fields());
+            assert_eq!(a16.len(), b16.len(), "{method:?} {} bf16 plane count", spec.name);
+            for ((na, ta), (nb, tb)) in a16.iter().zip(&b16) {
+                assert_eq!(na, nb, "{method:?} {} bf16 field order", spec.name);
+                assert_eq!(ta.data, tb.data, "{method:?} {}/{na} bf16 bytes", spec.name);
             }
         }
 

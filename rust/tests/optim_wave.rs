@@ -1,0 +1,394 @@
+//! Numerical property suite for the second optimizer wave (PR 10):
+//!
+//! * bf16 stochastic rounding is unbiased — the mean rounding error over
+//!   10k draws sits within 3σ of zero, and on-grid values are fixed
+//!   points of both the stochastic and the round-to-nearest paths.
+//! * Prodigy's D estimate never decreases and its `d`/`d_numerator`
+//!   recurrences replay exactly against an independent scalar oracle.
+//! * The 1D effective-shape fold is a pure view: every 1D preset shape
+//!   folds to a valid factored shape, the parameter's shape is restored
+//!   after each step, and the folded run is bit-identical to stepping
+//!   the same data as a native 2D parameter.
+//! * The composable modifiers obey their defining identities: OrthoGrad
+//!   output is orthogonal to the weight and norm-preserving, Grams
+//!   updates sign-match the gradient, and the atan2 apply is bounded
+//!   and matches `m̂/√v̂` near zero.
+//!
+//! Everything here is deterministic, so the suite must pass unchanged
+//! under `MLORC_THREADS` budgets 1 and 8 and with `MLORC_NO_SIMD=1`
+//! (wired into CI's portable job).
+
+use mlorc::config::{Method, RunConfig, TaskKind};
+use mlorc::coordinator::OptState;
+use mlorc::linalg::{threads, Rng, Workspace};
+use mlorc::optim::registry::effective_shape;
+use mlorc::optim::rules::{PRODIGY_D0, PRODIGY_D_COEF, PRODIGY_SLICE_P};
+use mlorc::optim::{
+    bf16_to_f32, f32_to_bf16_stochastic, orthogonalize_gradient, prodigy_bc, round_to_nearest,
+    OptHp, ProdigyState, ATAN2_SCALE,
+};
+use mlorc::serve::HostTrainer;
+use mlorc::testing::prop;
+use mlorc::tensor::Tensor;
+
+// ------------------------------------------------- stochastic rounding
+
+/// E[bf16_stochastic(x)] == x: over N draws the sample mean of the
+/// rounding error must land within 3 standard errors of zero. With
+/// N = 10_000 a biased rounder (e.g. truncation, whose error mean is
+/// half the grid gap) fails by orders of magnitude.
+#[test]
+fn stochastic_rounding_error_mean_is_within_3_sigma_of_zero() {
+    let mut rng = Rng::new(0x5eed);
+    const N: usize = 10_000;
+    for case in 0..8 {
+        // off-grid magnitudes across several exponent ranges
+        let x = (rng.normal() as f32) * 10f32.powi(case - 4) + 1e-7;
+        let mut sum = 0f64;
+        let mut sumsq = 0f64;
+        for _ in 0..N {
+            let r = rng.next_u64() as u16;
+            let err = (bf16_to_f32(f32_to_bf16_stochastic(x, r)) - x) as f64;
+            sum += err;
+            sumsq += err * err;
+        }
+        let mean = sum / N as f64;
+        let var = (sumsq / N as f64 - mean * mean).max(0.0);
+        let se = (var / N as f64).sqrt();
+        // gap/2 bias slack only through the 3σ band: on-grid x gives
+        // se == 0 == mean and passes exactly
+        assert!(
+            mean.abs() <= 3.0 * se + 1e-30,
+            "biased rounding for x={x}: mean err {mean:e} vs 3σ {:e}",
+            3.0 * se
+        );
+    }
+}
+
+/// The degenerate cases: values already on the bf16 grid are fixed
+/// points of both rounders (any draw), and round-to-nearest picks the
+/// closer neighbour of every off-grid value.
+#[test]
+fn rounding_degenerate_cases() {
+    let mut rng = Rng::new(11);
+    for _ in 0..256 {
+        // random finite bf16 grid point (mask out NaN/Inf exponents)
+        let mut bits = rng.next_u64() as u16;
+        if (bits & 0x7f80) == 0x7f80 {
+            bits &= !0x4000;
+        }
+        let x = bf16_to_f32(bits);
+        assert_eq!(round_to_nearest(x), bits, "RNE must fix grid point {bits:#06x}");
+        for r in [0u16, 1, 0x7fff, 0x8000, 0xffff] {
+            assert_eq!(
+                f32_to_bf16_stochastic(x, r),
+                bits,
+                "stochastic draw {r:#06x} moved grid point {bits:#06x}"
+            );
+        }
+    }
+    // nearest-neighbour property on off-grid values
+    prop::check(64, |rng| {
+        let x = (rng.normal() as f32) * (0.01 + rng.uniform() as f32 * 100.0);
+        let near = bf16_to_f32(round_to_nearest(x));
+        let down = bf16_to_f32((x.to_bits() >> 16) as u16);
+        let up = bf16_to_f32(((x.to_bits() >> 16) as u16).wrapping_add(1));
+        let best = (near - x).abs();
+        prop::assert_true(
+            best <= (down - x).abs() && best <= (up - x).abs(),
+            &format!("RNE of {x} chose {near}, not the nearest of {down}/{up}"),
+        )
+    });
+}
+
+// --------------------------------------------------------------- prodigy
+
+/// Scalar re-derivation of the Prodigy recurrences, written against the
+/// exemplar's formulas rather than `ProdigyState`'s code: the every-
+/// `slice_p`-th subsample, `β3 = √β2`, `dlr = d·lr·√(1−β2^t)/(1−β1^t)`,
+/// the `(d/d0)`-scaled numerator/denominator EMAs, and `growth_rate=∞`
+/// monotone max. f64 accumulation, f32 state — like the real one.
+struct Oracle {
+    d: f32,
+    d_num: f32,
+    p0: Vec<f32>,
+    s: Vec<f32>,
+}
+
+impl Oracle {
+    fn new(numel: usize) -> Oracle {
+        let k = numel.div_ceil(PRODIGY_SLICE_P);
+        Oracle { d: PRODIGY_D0, d_num: 0.0, p0: vec![0.0; k], s: vec![0.0; k] }
+    }
+
+    fn update(&mut self, w: &[f32], g: &[f32], lr: f32, t: usize, hp: &OptHp) -> f32 {
+        let sliced: Vec<usize> = (0..w.len()).step_by(PRODIGY_SLICE_P).collect();
+        if t == 1 {
+            for (k, &i) in sliced.iter().enumerate() {
+                self.p0[k] = w[i];
+            }
+        }
+        let d = self.d;
+        let beta3 = (hp.beta2 as f64).sqrt();
+        let dlr = (d * lr * prodigy_bc(hp, t)) as f64;
+        let dd0 = (d / PRODIGY_D0) as f64;
+        let mut dot = 0f64;
+        for (k, &i) in sliced.iter().enumerate() {
+            dot += g[i] as f64 * (self.p0[k] as f64 - w[i] as f64);
+        }
+        self.d_num = (beta3 * self.d_num as f64 + dd0 * dlr * dot) as f32;
+        let mut denom = 0f64;
+        for (k, &i) in sliced.iter().enumerate() {
+            let sk = beta3 * self.s[k] as f64 + dd0 * dlr * g[i] as f64;
+            self.s[k] = sk as f32;
+            denom += sk.abs();
+        }
+        if denom > 0.0 {
+            self.d = self.d.max((PRODIGY_D_COEF as f64 * self.d_num as f64 / denom) as f32);
+        }
+        d
+    }
+}
+
+/// `ProdigyState::update` replays the oracle exactly (same f32 results
+/// every step), D is monotone non-decreasing throughout, and on a
+/// consistent descent trajectory it grows strictly above `d0`.
+#[test]
+fn prodigy_d_matches_scalar_oracle_and_never_decreases() {
+    let hp = OptHp::prodigy();
+    let numel = 37; // not a multiple of slice_p: exercises the ceil tail
+    let mut rng = Rng::new(42);
+    let mut w: Vec<f32> = (0..numel).map(|_| rng.normal_f32(0.5)).collect();
+    let g_fixed: Vec<f32> = (0..numel).map(|_| rng.normal_f32(1.0)).collect();
+
+    let mut state = ProdigyState::new(numel);
+    let mut oracle = Oracle::new(numel);
+    let lr = 0.05;
+    let mut prev_d = state.d;
+    for t in 1..=60 {
+        // constant gradient for the first half (drives w away from p0 so
+        // the numerator grows), random after (monotonicity under noise)
+        let g: Vec<f32> = if t <= 30 {
+            g_fixed.clone()
+        } else {
+            (0..numel).map(|_| rng.normal_f32(1.0)).collect()
+        };
+        let used = state.update(&w, &g, lr, t, &hp);
+        let oracle_used = oracle.update(&w, &g, lr, t, &hp);
+        assert_eq!(used, oracle_used, "step {t}: D used by the update diverged");
+        assert_eq!(state.d, oracle.d, "step {t}: post-update D diverged");
+        assert_eq!(state.d_num, oracle.d_num, "step {t}: d_numerator diverged");
+        assert_eq!(state.s.data, oracle.s, "step {t}: denominator EMA diverged");
+        assert!(state.d >= prev_d, "step {t}: D decreased {prev_d} -> {}", state.d);
+        prev_d = state.d;
+        // plain descent so the trajectory moves
+        for (wi, gi) in w.iter_mut().zip(&g) {
+            *wi -= used * lr * gi;
+        }
+    }
+    assert_eq!(state.p0.data, oracle.p0, "p0 capture diverged");
+    assert!(
+        state.d > PRODIGY_D0,
+        "D never adapted above d0 on a consistent descent: {}",
+        state.d
+    );
+}
+
+/// A zero gradient leaves D and its numerator untouched (the exemplar's
+/// `denom == 0` skip) — no NaN from 0/0.
+#[test]
+fn prodigy_zero_gradient_is_a_noop() {
+    let hp = OptHp::prodigy();
+    let mut state = ProdigyState::new(16);
+    let w = vec![1.0f32; 16];
+    let g = vec![0.0f32; 16];
+    for t in 1..=3 {
+        let used = state.update(&w, &g, 0.1, t, &hp);
+        assert_eq!(used, PRODIGY_D0);
+    }
+    assert_eq!(state.d, PRODIGY_D0);
+    assert_eq!(state.d_num, 0.0);
+    assert!(state.d.is_finite());
+}
+
+// -------------------------------------------------- effective-shape fold
+
+/// Every 1D preset shape ([16] at l=4, [32] at l=4, [64] at l=8 — the
+/// vectors of host-nano/tiny/small) folds to a valid factored shape:
+/// the sides multiply back exactly, the short side is at least the
+/// sketch rank, and the fold prefers the squarest split.
+#[test]
+fn every_1d_preset_shape_folds_exactly() {
+    for (numel, l, want) in [(16usize, 4usize, [4usize, 4]), (32, 4, [4, 8]), (64, 8, [8, 8])] {
+        let eff = effective_shape(numel, l)
+            .unwrap_or_else(|| panic!("preset vector [{numel}] must fold at l={l}"));
+        assert_eq!(eff, want, "[{numel}] at l={l}");
+        assert_eq!(eff[0] * eff[1], numel, "fold must be exact, no padding");
+        assert!(eff[0] >= l && eff[0] <= eff[1]);
+    }
+    // and the guards: primes and too-small factors don't fold
+    assert_eq!(effective_shape(13, 4), None);
+    assert_eq!(effective_shape(32, 5), None, "squarest side 4 < l=5");
+}
+
+/// The fold is a pure reshape: stepping a 1D parameter through a
+/// factored variant restores its shape every step and produces data
+/// bit-identical to stepping the same bytes as a native 2D parameter
+/// of the effective shape.
+#[test]
+fn folded_1d_step_is_bit_identical_to_native_2d() {
+    for (variant, numel, l) in [
+        ("mlorc_adamw", 32usize, 4usize),
+        ("mlorc_prodigy", 32, 4),
+        ("mlorc_adamw_bf16", 64, 8),
+    ] {
+        let eff = effective_shape(numel, l).unwrap();
+        let mut init = Rng::new(99);
+        let data = init.gaussian_tensor(&[numel], 0.5).data;
+
+        let mut w1 = Tensor::new(vec![numel], data.clone()).unwrap();
+        let mut w2 = Tensor::new(vec![eff[0], eff[1]], data).unwrap();
+        let mut st1 = OptState::for_variant(variant, &[numel], l).unwrap();
+        let mut st2 = OptState::for_variant(variant, &[eff[0], eff[1]], l).unwrap();
+        let (mut r1, mut r2) = (Rng::new(7), Rng::new(7));
+        let (mut ws1, mut ws2) = (Workspace::new(), Workspace::new());
+        let mut grad_rng = Rng::new(3);
+        for t in 1..=4 {
+            let g = grad_rng.gaussian_tensor(&[numel], 1.0);
+            let g2 = Tensor::new(vec![eff[0], eff[1]], g.data.clone()).unwrap();
+            st1.host_step(&mut w1, &g, 0.02, t, &mut r1, &mut ws1).unwrap();
+            st2.host_step(&mut w2, &g2, 0.02, t, &mut r2, &mut ws2).unwrap();
+            assert_eq!(w1.shape, vec![numel], "{variant}: shape not restored at step {t}");
+            assert_eq!(
+                w1.data, w2.data,
+                "{variant}: folded [{numel}] diverged from native {eff:?} at step {t}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- modifiers
+
+/// OrthoGrad: the projected gradient is orthogonal to the weight (to
+/// 1e-6 of the norm product) and its norm matches the raw gradient's.
+#[test]
+fn orthograd_output_is_orthogonal_and_norm_preserving() {
+    prop::check(64, |rng| {
+        let m = rng.range(1, 12);
+        let n = rng.range(1, 12);
+        let w = rng.gaussian_tensor(&[m, n], 1.0);
+        let g = rng.gaussian_tensor(&[m, n], 1.0);
+        let out = orthogonalize_gradient(&w, &g);
+        let dot: f64 = out.data.iter().zip(&w.data).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let nw: f64 = w.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let no: f64 = out.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let ng: f64 = g.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        prop::assert_lt(dot.abs(), 1e-6 * nw * no + 1e-20, "⟂ violated")?;
+        prop::assert_close(no, ng, 1e-5 * ng + 1e-20, "norm not preserved")
+    });
+    // w = 0 is exact passthrough (the 1e-30 guards)
+    let w = Tensor::zeros(&[3, 3]);
+    let mut rng = Rng::new(1);
+    let g = rng.gaussian_tensor(&[3, 3], 1.0);
+    let out = orthogonalize_gradient(&w, &g);
+    assert_eq!(out.data, g.data, "zero weight must pass the gradient through unchanged");
+}
+
+/// Grams: the step direction is `-sign(g)` elementwise, the magnitude
+/// the base update's — checked against a plain MLorc-AdamW twin run on
+/// the same Omega stream. A zero gradient component pins its weight.
+#[test]
+fn grams_update_sign_matches_gradient_with_base_magnitude() {
+    let shape = [12usize, 8];
+    let mut init = Rng::new(5);
+    let w0 = init.gaussian_tensor(&shape, 0.7);
+    let mut g = init.gaussian_tensor(&shape, 1.0);
+    g.data[0] = 0.0; // sign(0) == 0: weight must not move
+
+    let mut w_grams = w0.clone();
+    let mut w_plain = w0.clone();
+    let mut st_g = OptState::for_variant("mlorc_adamw_grams", &shape, 4).unwrap();
+    let mut st_p = OptState::for_variant("mlorc_adamw", &shape, 4).unwrap();
+    let (mut r1, mut r2) = (Rng::new(21), Rng::new(21));
+    let mut ws = Workspace::new();
+    st_g.host_step(&mut w_grams, &g, 0.05, 1, &mut r1, &mut ws).unwrap();
+    st_p.host_step(&mut w_plain, &g, 0.05, 1, &mut r2, &mut ws).unwrap();
+
+    assert_eq!(w_grams.data[0], w0.data[0], "zero-gradient weight moved");
+    let mut mag_g = 0f64;
+    let mut mag_p = 0f64;
+    for i in 0..w0.len() {
+        let dg = (w_grams.data[i] - w0.data[i]) as f64;
+        let dp = (w_plain.data[i] - w0.data[i]) as f64;
+        assert!(
+            dg * g.data[i] as f64 <= 0.0,
+            "elem {i}: grams step {dg} not opposite sign of g {}",
+            g.data[i]
+        );
+        mag_g += dg.abs();
+        mag_p += dp.abs();
+    }
+    assert!(mag_p > 0.0, "the base update must move");
+    let rel = (mag_g - mag_p).abs() / mag_p;
+    assert!(rel < 1e-5, "grams magnitude drifted from the base update: rel {rel}");
+}
+
+/// The atan2 apply `a·atan2(m̂, √v̂)` is bounded by `a·π/2 = 2`, odd in
+/// `m̂`, and matches the eps-free ratio `m̂/√v̂` to 0.1% when the ratio
+/// is small (where Adam spends most of training).
+#[test]
+fn atan2_apply_is_bounded_odd_and_matches_ratio_near_zero() {
+    prop::check(128, |rng| {
+        let v = (rng.uniform() as f32).max(1e-12) * 10.0;
+        let m = rng.normal_f32(1.0) * v.sqrt() * 10.0; // ratios up to ~±30
+        let step = ATAN2_SCALE * m.atan2(v.sqrt());
+        prop::assert_lt(
+            step.abs() as f64,
+            ATAN2_SCALE as f64 * std::f64::consts::FRAC_PI_2 * (1.0 + 1e-6),
+            "atan2 step must be bounded by a·π/2",
+        )?;
+        let neg = ATAN2_SCALE * (-m).atan2(v.sqrt());
+        prop::assert_true(neg == -step, "atan2 apply must be odd in m̂")?;
+        // near zero the apply is linear with slope a = 4/π ...
+        let small = m * 1e-4;
+        let lin = (ATAN2_SCALE * small / v.sqrt()) as f64;
+        let near = (ATAN2_SCALE * small.atan2(v.sqrt())) as f64;
+        prop::assert_close(near, lin, 1e-3 * lin.abs() + 1e-12, "near-zero slope")?;
+        // ... and at m̂ = √v̂ it crosses the plain ratio exactly: a·atan(1) = 1
+        let unit = (ATAN2_SCALE * v.sqrt().atan2(v.sqrt())) as f64;
+        prop::assert_close(unit, 1.0, 1e-5, "a·atan2(x, x) must be 1")
+    });
+}
+
+// ----------------------------------------------- determinism under load
+
+/// The wave methods are host-only members of the batched step planner's
+/// `Members` route: training must be bit-identical across thread
+/// budgets (the suite itself also runs under CI budgets 1 and 8).
+#[test]
+fn wave_methods_bit_identical_across_thread_budgets() {
+    for method in [Method::MlorcProdigy, Method::MlorcAdamWBf16] {
+        let mut cfg = RunConfig::new("host-nano", method, TaskKind::MathChain, 4);
+        cfg.peak_lr = 0.05;
+        cfg.log_every = 0;
+        cfg.seed = 17;
+        let run = |budget: usize| {
+            threads::with_budget(budget, || {
+                let mut tr = HostTrainer::new(cfg.clone()).unwrap();
+                for _ in 0..4 {
+                    tr.train_step().unwrap();
+                }
+                tr.params.values.clone()
+            })
+        };
+        let a = run(1);
+        let b = run(8);
+        for (j, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.data, y.data,
+                "{}: param {j} differs between budgets 1 and 8",
+                method.name()
+            );
+        }
+    }
+}

@@ -77,6 +77,7 @@ fn q8_checkpoint_fields_roundtrip_codes_and_scales() {
         &st.ckpt_meta(),
         |k| fields.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing {k}")),
         |k| u8s.get(k).cloned().ok_or_else(|| anyhow::anyhow!("missing u8 {k}")),
+        |k| anyhow::bail!("unexpected bf16 plane {k}"),
     )
     .unwrap();
     assert_eq!(back.variant_name(), "mlorc_q8");
